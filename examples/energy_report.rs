@@ -1,0 +1,116 @@
+//! Full energy report: regenerates the paper's energy results from the
+//! calibrated PE model — Table 8 / Fig. 2 (per-iteration energy), Fig. 8
+//! (PE breakdown by format), Fig. 9 (LNS datapath components), Fig. 10
+//! (GPT 1B–1T scaling), and the Table 10 energy row (LUT sweep).
+//!
+//!   cargo run --release --example energy_report
+
+use lns_madam::hw::{gpt_workloads, table8_workloads, EnergyModel, PeFormat};
+use lns_madam::lns::{ConvertMode, LnsFormat};
+use lns_madam::util::bench::print_table;
+
+fn main() {
+    let em = EnergyModel::paper();
+    let formats = [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp16,
+        PeFormat::Fp32,
+    ];
+
+    // ---- Table 8 / Fig. 2 -------------------------------------------------
+    let mut rows = Vec::new();
+    for w in table8_workloads() {
+        let mut row = vec![w.name.clone()];
+        for f in formats {
+            row.push(format!("{:.2}", em.workload_mj(f, w.total_macs())));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Table 8 / Fig. 2: per-iteration training energy (mJ)",
+        &["Model", "LNS", "FP8", "FP16", "FP32"],
+        &rows,
+    );
+    let lns = em.pe_mac_fj(PeFormat::Lns(ConvertMode::ExactLut));
+    println!(
+        "paper anchors: LNS is 2.2x/4.6x/11x vs FP8/FP16/FP32; model gives {:.1}x/{:.1}x/{:.1}x",
+        em.pe_mac_fj(PeFormat::Fp8) / lns,
+        em.pe_mac_fj(PeFormat::Fp16) / lns,
+        em.pe_mac_fj(PeFormat::Fp32) / lns,
+    );
+    println!(
+        "energy saved vs FP32: {:.1}% (paper: >90%)",
+        (1.0 - lns / em.pe_mac_fj(PeFormat::Fp32)) * 100.0
+    );
+
+    // ---- Fig. 8: PE breakdown ----------------------------------------------
+    let mut rows = Vec::new();
+    for f in formats {
+        let b = em.pe_breakdown(f);
+        let total = b.total();
+        let mut row = vec![b.label.clone(), format!("{total:.1}")];
+        for (name, v) in &b.parts {
+            row.push(format!("{name} {:.0}%", v / total * 100.0));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 8: PE energy breakdown per MAC (fJ, % by component)",
+        &["format", "total fJ", "c1", "c2", "c3", "c4", "c5"],
+        &rows,
+    );
+
+    // ---- Fig. 9: LNS datapath components ------------------------------------
+    let b = em.lns_datapath_breakdown(LnsFormat::PAPER8, ConvertMode::ExactLut);
+    let rows: Vec<Vec<String>> = b
+        .parts
+        .iter()
+        .map(|(n, v)| vec![n.clone(), format!("{v:.2}"), format!("{:.1}%", v / b.total() * 100.0)])
+        .collect();
+    print_table(
+        "Fig. 9: LNS datapath energy per MAC by component",
+        &["component", "fJ", "share"],
+        &rows,
+    );
+
+    // ---- Table 10 energy row -------------------------------------------------
+    let paper = [12.29, 14.71, 17.24, 19.02];
+    let modes = [
+        ConvertMode::Mitchell,
+        ConvertMode::Hybrid { lut_bits: 1 },
+        ConvertMode::Hybrid { lut_bits: 2 },
+        ConvertMode::ExactLut,
+    ];
+    let rows: Vec<Vec<String>> = modes
+        .iter()
+        .zip(paper.iter())
+        .map(|(m, p)| {
+            vec![
+                format!("LUT={}", m.lut_entries(LnsFormat::PAPER8)),
+                format!("{:.2}", em.datapath_mac_fj(PeFormat::Lns(*m))),
+                format!("{p:.2}"),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 10 energy row: conversion approximation (fJ/op)",
+        &["config", "model", "paper"],
+        &rows,
+    );
+
+    // ---- Fig. 10: GPT scaling --------------------------------------------------
+    let mut rows = Vec::new();
+    for w in gpt_workloads() {
+        let mut row = vec![w.name.clone()];
+        for f in formats {
+            row.push(format!("{:.1}", em.workload_mj(f, w.total_macs()) / 1e3)); // J
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 10: per-iteration energy across GPT scales (J)",
+        &["Model", "LNS", "FP8", "FP16", "FP32"],
+        &rows,
+    );
+}

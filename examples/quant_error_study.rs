@@ -1,0 +1,87 @@
+//! Quantization-error study (Fig. 1 + Fig. 4): measure E r_t for GD,
+//! multiplicative, and sign-multiplicative updates across learning rates
+//! and base factors, next to the Theorem 1/2 + Lemma 1 bounds.
+//!
+//!   cargo run --release --example quant_error_study [-- --fig1]
+
+use lns_madam::optim::error::{
+    bound_gd, bound_mul, bound_sign_mul, fig4_sweep, quant_error, Learner,
+};
+use lns_madam::util::bench::print_table;
+use lns_madam::util::rng::Rng;
+
+fn fig1_illustration() {
+    // Fig. 1: same gradient applied at a small and a large weight; GD's
+    // step is swallowed by the widening gap, Madam's scales with it.
+    println!("\n=== Fig. 1 illustration (gamma = 8, 8-bit codes) ===");
+    let fmt = lns_madam::lns::LnsFormat::PAPER8;
+    let scale = fmt.scale_for_absmax(128.0);
+    for w0 in [0.5f32, 4.0, 32.0] {
+        let gap = w0 * (fmt.gap_factor() as f32 - 1.0);
+        let gd_step = 0.05f32; // eta * g
+        let madam_step = w0 * (2f32.powf(0.05) - 1.0); // eta * g in log space
+        let snap = |x: f32| fmt.decode(fmt.encode(x, scale), scale);
+        println!(
+            "  w = {w0:6.2}: gap {gap:7.3}  | GD step {gd_step:5.3} -> moved {:7.3} | Madam step {madam_step:7.3} -> moved {:7.3}",
+            (snap(w0 - gd_step) - snap(w0)).abs(),
+            (snap(w0 - madam_step) - snap(w0)).abs(),
+        );
+    }
+}
+
+fn main() {
+    let fig1 = std::env::args().any(|a| a == "--fig1");
+    if fig1 {
+        fig1_illustration();
+        return;
+    }
+
+    // Fig. 4 protocol: ResNet-scale dimension, eta sweep at gamma=2^10,
+    // gamma sweep at eta=2^-6.
+    let etas: Vec<f64> = (4..=10).map(|k| 2f64.powi(-k)).collect();
+    let gammas: Vec<f64> = (3..=12).map(|k| 2f64.powi(k)).collect();
+    let points = fig4_sweep(65_536, &etas, &gammas, 0);
+
+    let mut rows = Vec::new();
+    for p in &points {
+        rows.push(vec![
+            p.learner.name().to_string(),
+            format!("2^{:.0}", p.eta.log2()),
+            format!("2^{:.0}", p.gamma.log2()),
+            format!("{:.4e}", p.error),
+            format!("{:.4e}", p.bound),
+            if p.error <= p.bound { "ok".into() } else { "VIOLATED".into() },
+        ]);
+    }
+    print_table(
+        "Fig. 4: quantization error r_t vs theory bounds (d = 65536)",
+        &["learner", "eta", "gamma", "E r_t", "bound", "check"],
+        &rows,
+    );
+
+    // Summary ratio at the paper's operating point.
+    let mut rng = Rng::new(1);
+    let dim = 65_536;
+    let w: Vec<f64> = (0..dim)
+        .map(|_| {
+            let s = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            s * (rng.normal() * 1.5).exp2()
+        })
+        .collect();
+    // Lognormal gradient magnitudes around 1e-3 (Chmiel et al. 2021).
+    let g: Vec<f64> = (0..dim)
+        .map(|_| {
+            let s = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            s * (rng.normal() * 1.5 - 10.0).exp2()
+        })
+        .collect();
+    let (eta, gamma) = (2f64.powi(-6), 2f64.powi(10));
+    let e_gd = quant_error(Learner::Gd, &w, &g, eta, gamma, 10, &mut rng);
+    let e_mul = quant_error(Learner::Mul, &w, &g, eta, gamma, 10, &mut rng);
+    let e_sgn = quant_error(Learner::SignMul, &w, &g, eta, gamma, 10, &mut rng);
+    println!("\nAt eta=2^-6, gamma=2^10 (the Fig. 4 operating point):");
+    println!("  GD      E r = {e_gd:.4e}   (bound {:.4e})", bound_gd(&w, &g, eta, gamma));
+    println!("  MUL     E r = {e_mul:.4e}   (bound {:.4e})", bound_mul(&g, eta, gamma));
+    println!("  signMUL E r = {e_sgn:.4e}   (bound {:.4e})", bound_sign_mul(dim, eta, gamma));
+    println!("  GD / MUL error ratio: {:.1}x", e_gd / e_mul);
+}

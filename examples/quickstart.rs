@@ -1,0 +1,130 @@
+//! Quickstart: the LNS format end to end in five minutes.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Quantize a tensor through the multi-base LNS in pure rust.
+//! 2. Run the same Q_log as the AOT-compiled Pallas kernel via PJRT
+//!    and check they agree bit-for-bit.
+//! 3. Multiply two matrices on the bit-faithful Fig. 6 datapath.
+//! 4. One Madam step on LNS weights, next to the SGD step it replaces.
+
+use anyhow::Result;
+use lns_madam::lns::{
+    encode_tensor, quantize_tensor, ConvertMode, LnsFormat, MacConfig, Rounding, Scaling,
+    VectorMacUnit,
+};
+use lns_madam::optim::{Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
+use lns_madam::runtime::{artifacts_available, lit_f32, lit_scalar, to_vec_f32, Manifest, Runtime};
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let fmt = LnsFormat::PAPER8; // B = 8 bits, gamma = 8
+    println!("LNS format: {} bits, gamma {}", fmt.bits, fmt.gamma);
+    println!(
+        "  dynamic range (0, {:.1}) octaves, max relative error {:.3}%",
+        fmt.dynamic_range_log2(),
+        fmt.max_rel_error() * 100.0
+    );
+
+    // --- 1. quantize a tensor -------------------------------------------
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(4, 4, 1.0, &mut rng);
+    let q = quantize_tensor(&x, fmt, Scaling::PerTensor);
+    println!("\nQ_log round-trip (first row):");
+    for c in 0..4 {
+        println!("  {:+.6} -> {:+.6}", x.at(0, c), q.at(0, c));
+    }
+
+    // --- 2. same computation via the AOT Pallas kernel -------------------
+    let artifacts = Path::new("artifacts");
+    if artifacts_available(artifacts) {
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts)?;
+        let exe = runtime.load(&manifest, "kernel_quantize")?;
+        let mut big = Tensor::randn(1024, 1024, 1.0, &mut rng);
+        let outs = exe.run(&[
+            lit_f32(&[1024, 1024], &big.data)?,
+            lit_scalar(fmt.gamma as f32),
+            lit_scalar(fmt.max_code() as f32),
+        ])?;
+        let kernel_q = to_vec_f32(&outs[0])?;
+        lns_madam::lns::quant::quantize_slice(&mut big.data, fmt);
+        // Bit parity up to f32 log2 rounding ties: count elements whose
+        // codes disagree (must be a vanishing fraction, each by 1 code).
+        let gap = fmt.gap_factor() as f32;
+        let mut mismatches = 0usize;
+        for (a, b) in big.data.iter().zip(kernel_q.iter()) {
+            if (a - b).abs() > 1e-6 * a.abs().max(1e-12) {
+                mismatches += 1;
+                assert!(
+                    (a / b).abs().max((b / a).abs()) < gap * 1.0001,
+                    "codes differ by more than one step: {a} vs {b}"
+                );
+            }
+        }
+        println!(
+            "\nPallas kernel vs rust Q_log on 1M elements: {mismatches} rounding-tie mismatches ({:.4}%)",
+            mismatches as f64 / big.data.len() as f64 * 100.0
+        );
+        assert!((mismatches as f64 / big.data.len() as f64) < 1e-3);
+    } else {
+        println!("\n(skip PJRT check: run `make artifacts` first)");
+    }
+
+    // --- 3. the Fig. 6 datapath ------------------------------------------
+    let a = Tensor::randn(8, 32, 1.0, &mut rng);
+    let b = Tensor::randn(32, 8, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut mac = VectorMacUnit::new(MacConfig::paper());
+    let c = mac.matmul(&ea, &eb);
+    let exact = quantize_tensor(&a, fmt, Scaling::PerTensor)
+        .matmul(&quantize_tensor(&b, fmt, Scaling::PerTensor));
+    let rel = c
+        .data
+        .iter()
+        .zip(exact.data.iter())
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max)
+        / exact.abs_max();
+    println!(
+        "\nLNS vector-MAC datapath: {} MACs, {} LUT multiplies, rel err {rel:.2e}",
+        mac.counts.total_macs(),
+        mac.counts.lut_muls
+    );
+
+    // Hybrid Mitchell approximation shrinks the LUT 8x:
+    let mut cfg = MacConfig::paper();
+    cfg.convert = ConvertMode::Mitchell;
+    let mut mac1 = VectorMacUnit::new(cfg);
+    let c1 = mac1.matmul(&ea, &eb);
+    let rel1 = c1
+        .data
+        .iter()
+        .zip(exact.data.iter())
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max)
+        / exact.abs_max();
+    println!("  with Mitchell approximation (LUT=1): rel err {rel1:.2e}");
+
+    // --- 4. Madam vs SGD under the quantized weight update ---------------
+    let qu = UpdateQuantizer::lns_matched(8);
+    let mut w_sgd = vec![64.0f32, 1.0, 128.0];
+    let mut w_mad = w_sgd.clone();
+    let mut rng2 = Rng::new(0);
+    qu.apply(&mut w_sgd, &mut rng2);
+    qu.apply(&mut w_mad, &mut rng2);
+    let mut sgd = QuantizedUpdate::new(Sgd::with(1e-3, 0.0, 0.0), qu.clone());
+    let mut madam = QuantizedUpdate::new(Madam::new(2f32.powi(-4)), qu);
+    for _ in 0..20 {
+        sgd.step(0, &mut w_sgd, &[1.0, 1.0, 0.0]);
+        madam.step(0, &mut w_mad, &[1.0, 1.0, 0.0]);
+    }
+    println!("\n20 quantized-update steps, grad = 1 on w0 (64.0) and w1 (1.0):");
+    println!("  SGD   -> {w_sgd:?}   (large weight frozen: sub-gap updates swallowed)");
+    println!("  Madam -> {w_mad:?}   (both weights move proportionally)");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! End-to-end LNS-Madam training of the MLP on synthetic classification,
+//! with an FP32+SGD reference run for comparison — the "Table 4 row" of
+//! the reproduction at laptop scale.
+//!
+//!   cargo run --release --example train_mlp -- [steps] [csv_prefix]
+
+use anyhow::Result;
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::runtime::Runtime;
+
+fn run(runtime: &Runtime, format: &str, opt: OptKind, steps: usize, log: &str) -> Result<(f64, Option<f64>)> {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlp".into();
+    cfg.format = format.into();
+    cfg.optimizer = opt;
+    cfg.lr = opt.default_lr();
+    cfg.steps = steps;
+    cfg.eval_every = (steps / 4).max(1);
+    cfg.log_path = log.to_string();
+    // LNS runs use the quantized weight update at 16-bit; the FP32
+    // baseline keeps the conventional full-precision update.
+    cfg.qu_bits = if format == "lns" { 16 } else { 0 };
+    println!("\n=== {} + {} ({} steps) ===", format, opt.name(), steps);
+    let mut trainer = Trainer::new(runtime, cfg)?;
+    trainer.run()?;
+    Ok((trainer.final_loss(10), trainer.final_eval_acc()))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let prefix = args.get(1).cloned().unwrap_or_else(|| "train_mlp".into());
+
+    let runtime = Runtime::cpu()?;
+    let (lns_loss, lns_acc) = run(
+        &runtime,
+        "lns",
+        OptKind::Madam,
+        steps,
+        &format!("{prefix}_lns_madam.csv"),
+    )?;
+    let (fp8_loss, fp8_acc) = run(
+        &runtime,
+        "fp8",
+        OptKind::Sgd,
+        steps,
+        &format!("{prefix}_fp8_sgd.csv"),
+    )?;
+    let (fp32_loss, fp32_acc) = run(
+        &runtime,
+        "fp32",
+        OptKind::Sgd,
+        steps,
+        &format!("{prefix}_fp32_sgd.csv"),
+    )?;
+
+    println!("\n=== summary (final tail-10 train loss / eval acc) ===");
+    let fmt_acc = |a: Option<f64>| a.map(|v| format!("{v:.3}")).unwrap_or_else(|| "-".into());
+    println!("  LNS-Madam 8-bit : loss {lns_loss:.4}  acc {}", fmt_acc(lns_acc));
+    println!("  FP8 + SGD       : loss {fp8_loss:.4}  acc {}", fmt_acc(fp8_acc));
+    println!("  FP32 + SGD      : loss {fp32_loss:.4}  acc {}", fmt_acc(fp32_acc));
+    println!("\nloss curves: {prefix}_*.csv");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end driver: train a transformer LM with LNS-Madam through the
+//! full three-layer stack (Pallas kernels -> JAX HLO -> PJRT -> rust
+//! Madam updates) and log the loss curve. This is the repo's flagship
+//! system proof (EXPERIMENTS.md §E2E).
+//!
+//!   cargo run --release --example train_transformer -- \
+//!       [--model tfm_tiny|tfm_small|tfm_100m] [--steps N] [--format lns|fp8|fp32]
+//!       [--optimizer madam|sgd|adamw] [--lr X] [--csv path]
+//!
+//! tfm_small / tfm_100m need `make artifacts-full` / `make artifacts-100m`.
+
+use anyhow::{bail, Result};
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::hw::workload::transformer_macs;
+use lns_madam::hw::{EnergyModel, PeFormat};
+use lns_madam::lns::ConvertMode;
+use lns_madam::runtime::{Manifest, Runtime};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = TrainConfig::default();
+    cfg.model = "tfm_tiny".into();
+    cfg.steps = 300;
+    cfg.eval_every = 25;
+    let mut csv = "train_transformer.csv".to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--model" => cfg.model = args[i + 1].clone(),
+            "--steps" => cfg.steps = args[i + 1].parse()?,
+            "--format" => cfg.format = args[i + 1].clone(),
+            "--optimizer" => {
+                cfg.optimizer = OptKind::parse(&args[i + 1])?;
+                cfg.lr = cfg.optimizer.default_lr();
+            }
+            "--lr" => cfg.lr = args[i + 1].parse()?,
+            "--csv" => csv = args[i + 1].clone(),
+            other => bail!("unknown flag {other}"),
+        }
+        i += 2;
+    }
+    cfg.log_path = csv.clone();
+    cfg.qu_bits = if cfg.format == "lns" { 16 } else { 0 };
+
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+    let model = manifest
+        .model(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("model {} not lowered — run make artifacts[-full|-100m]", cfg.model))?;
+    let n_params: usize = model.params.iter().map(|p| p.elements()).sum();
+    let (d, l, ff, v, t, b) = (
+        model.raw.get("d_model").and_then(|x| x.as_usize()).unwrap_or(128),
+        model.raw.get("n_layer").and_then(|x| x.as_usize()).unwrap_or(2),
+        model.raw.get("d_ff").and_then(|x| x.as_usize()).unwrap_or(512),
+        model.raw.get("vocab").and_then(|x| x.as_usize()).unwrap_or(256),
+        model.raw.get("seq").and_then(|x| x.as_usize()).unwrap_or(64),
+        model.raw.get("batch").and_then(|x| x.as_usize()).unwrap_or(16),
+    );
+    println!(
+        "model {}: {:.2}M params (d={d}, layers={l}, vocab={v}, seq={t}, batch={b})",
+        cfg.model,
+        n_params as f64 / 1e6
+    );
+    println!(
+        "training with {} [{}], lr {}, {} steps, Q_U {} bits",
+        cfg.optimizer.name(),
+        cfg.format,
+        cfg.lr,
+        cfg.steps,
+        cfg.qu_bits
+    );
+
+    let macs_per_iter = transformer_macs(d, l, ff, v, t, b);
+    let steps = cfg.steps;
+    let mut trainer = Trainer::new(&runtime, cfg)?;
+    let start = Instant::now();
+    trainer.run()?;
+    let wall = start.elapsed().as_secs_f64();
+
+    let uniform = (v as f64).ln();
+    let final_loss = trainer.final_loss(10);
+    println!("\n=== E2E result ===");
+    println!("  steps: {steps}, wall: {wall:.1}s ({:.2} s/step)", wall / steps as f64);
+    println!("  loss: {:.4} -> {final_loss:.4}  (uniform = {uniform:.4})",
+        trainer.log.rows.first().and_then(|r| r.values.get("loss")).copied().unwrap_or(f64::NAN));
+    println!("  loss curve: {csv}");
+
+    // What this iteration would cost on the paper's accelerator:
+    let em = EnergyModel::paper();
+    println!("\n  modeled accelerator energy per iteration ({:.2} GMACs):", macs_per_iter / 1e9);
+    for f in [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp32,
+    ] {
+        println!("    {:5}: {:.3} mJ", f.name(), em.workload_mj(f, macs_per_iter));
+    }
+    Ok(())
+}

@@ -1,0 +1,267 @@
+"""AOT lowering: JAX train/eval steps -> HLO *text* artifacts + manifest.
+
+Python runs exactly once (`make artifacts`); the rust coordinator then
+loads `artifacts/*.hlo.txt` via the PJRT C API and never touches python
+again.
+
+The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly.
+
+Every artifact is described in `manifest.json` (shapes, dtypes, output
+names, model config) — the single source of truth the rust runtime
+validates against at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import lns_matmul, lns_quant, madam_update
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arr_desc(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+SCALARS_TRAIN = ["gamma_fwd", "maxexp_fwd", "gamma_bwd", "maxexp_bwd"]
+SCALARS_EVAL = ["gamma_fwd", "maxexp_fwd"]
+
+FORMATS = {
+    "lns": M.QuantSpec(fwd="lns", bwd="lns", weight_pallas=True),
+    "fp8": M.QuantSpec(fwd="fp8", bwd="fp8", weight_pallas=False),
+    "int8": M.QuantSpec(fwd="int8", bwd="int8", weight_pallas=False),
+    "fp32": M.QuantSpec(fwd="none", bwd="none", weight_pallas=False),
+}
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "models": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        # Merge with an existing manifest so incremental sets (--set 100m)
+        # extend rather than clobber the base artifacts.
+        prev = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(prev):
+            with open(prev) as f:
+                self.manifest = json.load(f)
+
+    def emit(self, name, fn, in_specs, desc):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in lowered.out_info
+        ]
+        desc.update(
+            {
+                "file": f"{name}.hlo.txt",
+                "inputs": [_arr_desc(n, s) for n, s in in_specs],
+                "output_shapes": out_shapes,
+            }
+        )
+        self.manifest["artifacts"][name] = desc
+        print(f"  wrote {path} ({len(text)} chars, {len(in_specs)} inputs)")
+
+    # -- model artifacts ---------------------------------------------------
+
+    def mlp(self, preset, fmt, what="train"):
+        cfg = M.MLP_PRESETS[preset]
+        qs = FORMATS[fmt]
+        names = cfg.param_names()
+        sizes = cfg.layer_sizes
+        p_specs = []
+        for i in range(len(sizes) - 1):
+            p_specs.append((f"w{i}", spec((sizes[i], sizes[i + 1]))))
+            p_specs.append((f"b{i}", spec((sizes[i + 1],))))
+        data = [("x", spec((cfg.batch, cfg.in_dim))), ("y", spec((cfg.batch,), I32))]
+        if what == "train":
+            fn = M.make_mlp_train_step(cfg, qs)
+            scalars = [(s, spec((), F32)) for s in SCALARS_TRAIN]
+            outputs = ["loss", "acc"] + [f"grad:{n}" for n in names]
+        else:
+            fn = M.make_mlp_eval(cfg, qs)
+            scalars = [(s, spec((), F32)) for s in SCALARS_EVAL]
+            outputs = ["loss", "acc"]
+        self.manifest["models"].setdefault(
+            preset,
+            {
+                "family": "mlp",
+                "layer_sizes": list(sizes),
+                "batch": cfg.batch,
+                "params": [_arr_desc(n, s) for n, s in p_specs],
+            },
+        )
+        self.emit(
+            f"{preset}_{fmt}_{what}",
+            fn,
+            p_specs + data + scalars,
+            {
+                "kind": what,
+                "model": preset,
+                "format": fmt,
+                "n_params": len(p_specs),
+                "outputs": outputs,
+            },
+        )
+
+    def tfm(self, preset, fmt, what="train"):
+        cfg = M.TFM_PRESETS[preset]
+        qs = FORMATS[fmt]
+        names = cfg.param_names()
+        inits = M.tfm_init(cfg)
+        p_specs = [(n, spec(p.shape, p.dtype)) for n, p in zip(names, inits)]
+        data = [
+            ("tokens", spec((cfg.batch, cfg.seq), I32)),
+            ("targets", spec((cfg.batch, cfg.seq), I32)),
+        ]
+        if what == "train":
+            fn = M.make_tfm_train_step(cfg, qs)
+            scalars = [(s, spec((), F32)) for s in SCALARS_TRAIN]
+            outputs = ["loss"] + [f"grad:{n}" for n in names]
+        else:
+            fn = M.make_tfm_eval(cfg, qs)
+            scalars = [(s, spec((), F32)) for s in SCALARS_EVAL]
+            outputs = ["loss"]
+        self.manifest["models"].setdefault(
+            preset,
+            {
+                "family": "transformer",
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_head": cfg.n_head,
+                "n_layer": cfg.n_layer,
+                "d_ff": cfg.d_ff,
+                "seq": cfg.seq,
+                "batch": cfg.batch,
+                "n_params_total": cfg.n_params(),
+                "params": [_arr_desc(n, s) for n, s in p_specs],
+            },
+        )
+        self.emit(
+            f"{preset}_{fmt}_{what}",
+            fn,
+            p_specs + data + scalars,
+            {
+                "kind": what,
+                "model": preset,
+                "format": fmt,
+                "n_params": len(p_specs),
+                "outputs": outputs,
+            },
+        )
+
+    # -- standalone kernel artifacts ----------------------------------------
+
+    def kernels(self):
+        # Q_log quantizer over a big tile (per-tensor scale computed inside).
+        def quant(x, gamma, maxexp):
+            from compile import lnsq
+
+            s = lnsq.lns_scale(x, gamma, maxexp).reshape(1, 1)
+            g = gamma.reshape(1, 1)
+            m = maxexp.reshape(1, 1)
+            return (lns_quant.lns_quantize_pallas_dyn(x, s, g, m),)
+
+        self.emit(
+            "kernel_quantize",
+            quant,
+            [("x", spec((1024, 1024))), ("gamma", spec(())), ("maxexp", spec(()))],
+            {"kind": "kernel", "outputs": ["xq"]},
+        )
+
+        # The Fig. 6 datapath matmul, exact conversion (lut_bits=3, gamma=8).
+        def dp_mm(a, b):
+            return (lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=3),)
+
+        self.emit(
+            "kernel_lns_matmul",
+            dp_mm,
+            [("a", spec((128, 128))), ("b", spec((128, 128)))],
+            {"kind": "kernel", "outputs": ["c"], "gamma": 8, "lut_bits": 3},
+        )
+
+        # Madam optimizer step kernel.
+        def madam(w, g, g2, scale):
+            return madam_update.madam_update_pallas(w, g, g2, scale)
+
+        self.emit(
+            "kernel_madam_update",
+            madam,
+            [
+                ("w", spec((512, 512))),
+                ("g", spec((512, 512))),
+                ("g2", spec((512, 512))),
+                ("scale", spec((1, 1))),
+            ],
+            {"kind": "kernel", "outputs": ["w_new", "g2_new"]},
+        )
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--set",
+        default="base",
+        choices=["base", "full", "100m"],
+        help="base: mlp+tfm_tiny; full: +tfm_small; 100m: tfm_100m only",
+    )
+    args = ap.parse_args()
+    b = Builder(args.out_dir)
+
+    if args.set in ("base", "full"):
+        b.kernels()
+        for fmt in ("lns", "fp8", "int8", "fp32"):
+            b.mlp("mlp", fmt, "train")
+        b.mlp("mlp", "lns", "eval")
+        b.mlp("mlp", "fp32", "eval")
+        for fmt in ("lns", "fp8", "fp32"):
+            b.tfm("tfm_tiny", fmt, "train")
+        b.tfm("tfm_tiny", "lns", "eval")
+        b.tfm("tfm_tiny", "fp32", "eval")
+    if args.set == "full":
+        for fmt in ("lns", "fp32"):
+            b.tfm("tfm_small", fmt, "train")
+        b.tfm("tfm_small", "lns", "eval")
+    if args.set == "100m":
+        b.tfm("tfm_100m", "lns", "train")
+        b.tfm("tfm_100m", "lns", "eval")
+
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Pallas kernel: the Fig. 6 LNS vector-MAC datapath as a tiled matmul.
+
+The paper's ASIC multiplies in LNS by *adding integer exponents*, then
+converts products back to linear format with a quotient/remainder split:
+
+    2^(p/gamma) = 2^(p>>b) * LUT[p & (gamma-1)]      (gamma = 2^b)
+
+and accumulates per-remainder-bin partial sums in a 24-bit integer
+collector, applying the LUT constant once per bin per tile. This kernel
+reproduces that structure on a TPU-shaped memory hierarchy:
+
+  * lanes            -> VPU vector dimension over the (bm, bn) tile
+  * exponent adders  -> broadcast integer add ea[:,:,None] + eb[None,:,:]
+  * per-bin adder trees -> masked reductions over the K axis, one per bin
+  * 24-bit collector -> f32 accumulator tile (sums of exact powers of two
+                        are exact within the 24-bit mantissa — the same
+                        width as the hardware collector)
+  * buffers A/B      -> BlockSpec: output-stationary over the K grid axis
+
+Operands arrive pre-encoded (sign, integer exponent) because the group
+scale is a global reduction done outside, exactly like the hardware where
+quantization-scaling lives in the PPU, not the MAC datapath.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import lnsq
+
+# Tiles sized so the (BM, BK, BN) product-exponent cube stays under ~2 MiB
+# of VMEM: 32*32*32 f32 = 128 KiB for the cube, tiny accumulator.
+BM, BK, BN = 32, 32, 32
+
+
+def _datapath_kernel(sa_ref, ea_ref, sb_ref, eb_ref, o_ref, *, gamma, lut_bits, bk_steps):
+    """Grid point (i, j, k): accumulate one K-tile of the LNS dot product."""
+    k = pl.program_id(2)
+
+    # Output-stationary init on the first K step.
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ea = ea_ref[...]  # (BM, BK) integer exponents as f32
+    eb = eb_ref[...]  # (BK, BN)
+    sgn = sa_ref[...][:, :, None] * sb_ref[...][None, :, :]
+
+    # Exponent adders: product exponent cube (BM, BK, BN).
+    p = ea[:, :, None] + eb[None, :, :]
+    q = jnp.floor(p / gamma)
+    r = p - q * gamma
+    shifted = sgn * jnp.exp2(q)  # shift-by-quotient (exact powers of two)
+
+    n_bins = min(2**lut_bits, gamma)
+    lsb_span = gamma // n_bins
+    if lsb_span > 1:
+        # Hybrid Mitchell approximation on the remainder LSBs.
+        r_msb = jnp.floor(r / lsb_span)
+        r_lsb = r - r_msb * lsb_span
+        shifted = shifted * (1.0 + r_lsb / gamma)
+        r = r_msb * lsb_span  # bin key is the MSB part
+
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for i in range(n_bins):
+        bin_sum = jnp.sum(jnp.where(r == i * lsb_span, shifted, 0.0), axis=1)
+        acc = acc + bin_sum * (2.0 ** (i * lsb_span / gamma))
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "maxexp", "lut_bits"))
+def lns_matmul_pallas(a, b, *, gamma=8, maxexp=127.0, lut_bits=3):
+    """LNS-datapath matmul of f32 (M, K) @ (K, N), tiled (BM, BK, BN).
+
+    Encodes both operands to (sign, exponent) with per-tensor scales, runs
+    the datapath kernel, and rescales the integer-domain partial sums.
+    lut_bits=log2(gamma) is the exact conversion; smaller values engage
+    the hybrid Mitchell approximation (Table 10's LUT sweep).
+    """
+    (m, kk), (_, n) = a.shape, b.shape
+    sa = lnsq.lns_scale(a, gamma, maxexp)
+    sb = lnsq.lns_scale(b, gamma, maxexp)
+    sgn_a, ea = lnsq.lns_encode(a, sa, gamma, maxexp)
+    sgn_b, eb = lnsq.lns_encode(b, sb, gamma, maxexp)
+
+    grid = (pl.cdiv(m, BM), pl.cdiv(n, BN), pl.cdiv(kk, BK))
+    out = pl.pallas_call(
+        functools.partial(
+            _datapath_kernel, gamma=gamma, lut_bits=lut_bits, bk_steps=grid[2]
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(sgn_a, ea, sgn_b, eb)
+    return out * sa * sb

@@ -1,0 +1,100 @@
+"""Pallas kernel: LNS fake-quantization (Q_log, Eq. 3 of the paper).
+
+The hot element-wise op of the format: scale, log2, round-to-nearest,
+clamp, exp2. The per-group scale is a global reduction, so it is computed
+*outside* the kernel and streamed in as a (1, 1) operand; the kernel body
+is purely local and tiles cleanly over VMEM.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see DESIGN.md §7 for the TPU mapping).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: (8, 128) is the native TPU VPU lane layout for f32; larger
+# row blocks amortize grid overhead. 2 MiB VMEM budget per operand tile.
+BLOCK_ROWS = 256
+BLOCK_COLS = 256
+
+
+def _quant_kernel(x_ref, scale_ref, o_ref, *, gamma, maxexp):
+    """One (BLOCK_ROWS, BLOCK_COLS) tile of Q_log round-trip."""
+    x = x_ref[...]
+    s = scale_ref[0, 0]
+    sgn = jnp.sign(x)
+    mag = jnp.abs(x) / s
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe) * gamma)
+    e = jnp.clip(e, 0.0, maxexp)
+    o_ref[...] = sgn * s * jnp.exp2(e / gamma)
+
+
+def _divisor_block(dim, cap):
+    """Largest power-of-two block <= cap that divides dim (>=1 always)."""
+    b = 1
+    while b * 2 <= cap and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "maxexp"))
+def lns_quantize_pallas(x, scale, *, gamma=8, maxexp=127.0):
+    """Fake-quantize a 2-D f32 array through the (B, gamma) LNS format.
+
+    x: (M, N); block sizes adapt to divide the shape exactly.
+    scale: (1, 1) f32, the shared group scale s.
+    """
+    m, n = x.shape
+    br, bc = _divisor_block(m, BLOCK_ROWS), _divisor_block(n, BLOCK_COLS)
+    grid = (m // br, n // bc)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, gamma=gamma, maxexp=maxexp),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, scale)
+
+
+def _quant_kernel_dyn(x_ref, scale_ref, gamma_ref, maxexp_ref, o_ref):
+    """Dynamic-(gamma, maxexp) tile of Q_log: format params arrive as
+    (1, 1) operands so one lowered artifact covers every sweep point."""
+    x = x_ref[...]
+    s = scale_ref[0, 0]
+    gamma = gamma_ref[0, 0]
+    maxexp = maxexp_ref[0, 0]
+    sgn = jnp.sign(x)
+    mag = jnp.abs(x) / s
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe) * gamma)
+    e = jnp.clip(e, 0.0, maxexp)
+    o_ref[...] = sgn * s * jnp.exp2(e / gamma)
+
+
+@jax.jit
+def lns_quantize_pallas_dyn(x, scale, gamma, maxexp):
+    """Like lns_quantize_pallas but gamma/maxexp are traced (1,1) scalars.
+
+    This is the Q_W path inside the L2 model: the pallas kernel lowers
+    into the same HLO as the surrounding train step.
+    """
+    m, n = x.shape
+    br, bc = _divisor_block(m, BLOCK_ROWS), _divisor_block(n, BLOCK_COLS)
+    grid = (m // br, n // bc)
+    one = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _quant_kernel_dyn,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)), one, one, one],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, scale, gamma, maxexp)

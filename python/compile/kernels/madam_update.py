@@ -1,0 +1,63 @@
+"""Pallas kernel: one Madam-on-LNS optimizer step (Algorithm 1).
+
+Updates weight magnitudes *additively in base-2 log space* — the update
+the paper performs directly on stored LNS exponents, so no linear<->log
+conversion is needed on the weight-update path. Element-wise over tiles;
+the per-tensor weight scale is computed outside and streamed in.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+BLOCK_COLS = 256
+EPS = 1e-12
+
+
+def _madam_kernel(w_ref, g_ref, g2_ref, scale_ref, wo_ref, g2o_ref, *, lr, beta, gamma, maxexp):
+    w = w_ref[...]
+    g = g_ref[...]
+    g2 = g2_ref[...]
+    s = scale_ref[0, 0]
+
+    # Second-moment EMA and normalized gradient g* = g / sqrt(g2).
+    g2n = (1.0 - beta) * g * g + beta * g2
+    gstar = g / jnp.sqrt(g2n + EPS)
+
+    # Additive step on the base-2 exponent of |w|; zeros stay zero.
+    sgn = jnp.sign(w)
+    mag = jnp.where(sgn != 0, jnp.abs(w), s)
+    e = jnp.log2(mag / s)
+    e_new = e - lr * gstar * sgn
+    e_q = jnp.clip(jnp.round(e_new * gamma), 0.0, maxexp) / gamma
+
+    wo_ref[...] = sgn * s * jnp.exp2(e_q)
+    g2o_ref[...] = g2n
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "beta", "gamma", "maxexp"))
+def madam_update_pallas(w, g, g2, scale, *, lr=2.0**-7, beta=0.9, gamma=8, maxexp=127.0):
+    """One Madam step over a 2-D weight tensor held in LNS.
+
+    w, g, g2: (M, N) f32; scale: (1, 1) f32 per-tensor weight scale.
+    Returns (w_new, g2_new).
+    """
+    m, n = w.shape
+    grid = (pl.cdiv(m, BLOCK_ROWS), pl.cdiv(n, BLOCK_COLS))
+    tile = pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(
+            _madam_kernel, lr=lr, beta=beta, gamma=gamma, maxexp=maxexp
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[tile, tile, tile, pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=(tile, tile),
+        interpret=True,
+    )(w, g, g2, scale)

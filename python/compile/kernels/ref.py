@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function here is the *definition of correct* for the corresponding
+kernel in this package; pytest checks kernel == ref to tolerance, and the
+rust `lns` module is cross-checked against the same semantics.
+"""
+
+import jax.numpy as jnp
+
+from compile import lnsq
+
+
+def quantize_ref(x, gamma, maxexp):
+    """Oracle for lns_quant: per-tensor-scale LNS fake-quantization."""
+    return lnsq.lns_quantize(x, gamma, maxexp, axis=None)
+
+
+def lns_matmul_ref(a, b, gamma, maxexp):
+    """Oracle for lns_matmul: quantize both operands to LNS (per-tensor
+    scale), then exact real matmul. The datapath kernel must match this
+    up to the 24-bit-collector rounding it models."""
+    aq = lnsq.lns_quantize(a, gamma, maxexp)
+    bq = lnsq.lns_quantize(b, gamma, maxexp)
+    return jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+
+
+def lns_matmul_datapath_ref(a, b, gamma, maxexp, lut_bits=None):
+    """Bit-faithful oracle of the Fig. 6 vector-MAC datapath, in plain jnp.
+
+    Encodes operands to integer exponents, adds exponents, splits
+    quotient/remainder, accumulates *per remainder bin*, and applies the
+    LUT constants once per bin — optionally with the hybrid Mitchell
+    approximation when lut_bits < log2(gamma).
+
+    Shapes: a (M, K), b (K, N). gamma must be a concrete python int here
+    (the LUT is built at trace time), unlike the smooth ref above.
+    """
+    gamma = int(gamma)
+    sa_scale = lnsq.lns_scale(a, gamma, maxexp)
+    sb_scale = lnsq.lns_scale(b, gamma, maxexp)
+    sgn_a, ea = lnsq.lns_encode(a, sa_scale, gamma, maxexp)
+    sgn_b, eb = lnsq.lns_encode(b, sb_scale, gamma, maxexp)
+
+    # Product exponents / signs, (M, K, N)
+    p = ea[:, :, None] + eb[None, :, :]
+    sgn = sgn_a[:, :, None] * sgn_b[None, :, :]
+
+    q = jnp.floor(p / gamma)
+    r = p - q * gamma  # remainder in [0, gamma)
+
+    # Shift-by-quotient: exact powers of two in f32 (collector is 24-bit
+    # integer in hardware; f32 addition of exact powers of two models it
+    # faithfully within the mantissa, see DESIGN.md §6).
+    shifted = sgn * jnp.exp2(q)
+
+    if lut_bits is None or 2**lut_bits >= gamma:
+        # Exact conversion: gamma-entry LUT over the full remainder.
+        bins = jnp.stack(
+            [jnp.sum(jnp.where(r == i, shifted, 0.0), axis=1) for i in range(gamma)],
+            axis=0,
+        )  # (gamma, M, N)
+        lut = jnp.exp2(jnp.arange(gamma, dtype=jnp.float32) / gamma)
+        acc = jnp.tensordot(lut, bins, axes=1)
+    else:
+        # Hybrid: MSB of the remainder -> LUT bin, LSB -> Mitchell term
+        # 2^(l/gamma) ~= 1 + l/gamma folded into the accumulated value.
+        n_bins = 2**lut_bits
+        lsb_span = gamma // n_bins
+        r_msb = jnp.floor(r / lsb_span)
+        r_lsb = r - r_msb * lsb_span
+        mitchell = shifted * (1.0 + r_lsb / gamma)
+        bins = jnp.stack(
+            [jnp.sum(jnp.where(r_msb == i, mitchell, 0.0), axis=1) for i in range(n_bins)],
+            axis=0,
+        )
+        lut = jnp.exp2(jnp.arange(n_bins, dtype=jnp.float32) * lsb_span / gamma)
+        acc = jnp.tensordot(lut, bins, axes=1)
+
+    return acc * sa_scale * sb_scale
+
+
+def madam_update_ref(w, g, g2, lr, beta, gamma, maxexp):
+    """Oracle for the madam_update kernel (Algorithm 1 on LNS).
+
+    Returns (new_w, new_g2). Weight magnitudes move in base-2 log space:
+      g2'   = (1-beta) g^2 + beta g2
+      g*    = g / sqrt(g2' + eps)
+      e'    = clamp(round((e - lr * g* * sign(w)) * gamma), 0, maxexp) / gamma
+      |w'|  = s * 2^(e')             (s = per-tensor scale of |w|)
+    Zero weights stay zero (LNS cannot re-create a sign from nothing).
+    """
+    eps = 1e-12
+    g2n = (1.0 - beta) * g * g + beta * g2
+    gstar = g / jnp.sqrt(g2n + eps)
+    scale = lnsq.lns_scale(w, gamma, maxexp)
+    sgn = jnp.sign(w)
+    mag = jnp.where(sgn != 0, jnp.abs(w), scale)
+    e = jnp.log2(mag / scale)
+    e_new = e - lr * gstar * sgn
+    e_q = jnp.clip(jnp.round(e_new * gamma), 0.0, maxexp) / gamma
+    w_new = sgn * scale * jnp.exp2(e_q)
+    return w_new, g2n

@@ -1,0 +1,192 @@
+"""Multi-base logarithmic number system (LNS) quantization in JAX.
+
+Implements the paper's Q_log (Eq. 3) plus the FP8/INT8 comparison formats,
+all as straight-through-estimator (STE) fake-quantizers suitable for
+quantization-aware training (QAT), and gradient quantizers (Q_E / Q_G)
+that quantize the *backward* signal.
+
+Conventions
+-----------
+A multi-base LNS format is (B, gamma):
+  value = sign * s * 2^(x_tilde / gamma),
+  x_tilde = clamp(round(log2(|x|/s) * gamma), 0, 2^(B-1)-1)
+where s is a positive scale shared by a group of numbers, chosen so the
+*largest* magnitude in the group maps to the top code:
+  s = max|x| / 2^((2^(B-1)-1)/gamma).
+gamma is restricted to powers of two for hardware efficiency; here it is a
+runtime scalar so one lowered artifact serves every (B, gamma) sweep.
+
+Zeros are passed through (sign 0): the hardware keeps a zero flag, and the
+quantizer must not turn 0.0 into s.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Scale selection
+# ---------------------------------------------------------------------------
+
+
+def max_exponent(bits):
+    """Top integer exponent code for a B-bit LNS format: 2^(B-1)-1."""
+    return 2.0 ** (bits - 1.0) - 1.0
+
+
+def lns_scale(x, gamma, maxexp, axis=None):
+    """Per-group scale s so that max|x| hits the top LNS code.
+
+    axis=None -> per-tensor scale; axis=int/tuple -> scale reduced over
+    that axis with keepdims (per-channel / per-feature scaling).
+    """
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    absmax = jnp.where(absmax > 0, absmax, 1.0)
+    return absmax * 2.0 ** (-maxexp / gamma)
+
+
+# ---------------------------------------------------------------------------
+# Core LNS quantize / dequantize (no STE)
+# ---------------------------------------------------------------------------
+
+
+def lns_encode(x, scale, gamma, maxexp):
+    """Real -> (sign, integer exponent). sign==0 encodes exact zero."""
+    sign = jnp.sign(x)
+    mag = jnp.abs(x) / scale
+    # log2(0) = -inf; clamp handles it, but silence the NaN path explicitly.
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.round(jnp.log2(safe) * gamma)
+    e = jnp.clip(e, 0.0, maxexp)
+    return sign, e
+
+
+def lns_decode(sign, e, scale, gamma):
+    """(sign, integer exponent) -> real. sign==0 decodes to 0."""
+    return sign * scale * jnp.exp2(e / gamma)
+
+
+def lns_quantize(x, gamma, maxexp, axis=None):
+    """Fake-quantize x through the LNS format (round-trip real->LNS->real)."""
+    scale = lns_scale(x, gamma, maxexp, axis=axis)
+    sign, e = lns_encode(x, scale, gamma, maxexp)
+    return lns_decode(sign, e, scale, gamma)
+
+
+# ---------------------------------------------------------------------------
+# FP8 (e4m3) simulation — the paper's FP8 baseline: 4-bit exp, 3-bit mantissa
+# ---------------------------------------------------------------------------
+
+
+def fp8_quantize(x, axis=None, exp_bits=4, man_bits=3):
+    """Fake-quantize to FP8 with a per-group power-of-two-free scale.
+
+    Saturating (no inf), flush-to-zero below the subnormal range, round to
+    nearest even via float32 rounding of the scaled mantissa.
+    """
+    bias = 2.0 ** (exp_bits - 1.0) - 1.0
+    max_unscaled = (2.0 - 2.0 ** (-man_bits)) * 2.0 ** (2.0 ** exp_bits - 2.0 - bias)
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    absmax = jnp.where(absmax > 0, absmax, 1.0)
+    scale = absmax / max_unscaled
+    xs = x / scale
+    sign = jnp.sign(xs)
+    mag = jnp.abs(xs)
+    safe = jnp.where(mag > 0, mag, 1.0)
+    e = jnp.floor(jnp.log2(safe))
+    e = jnp.clip(e, -bias + 1.0, None)  # subnormal floor
+    q = jnp.round(mag * jnp.exp2(-e + man_bits)) * jnp.exp2(e - man_bits)
+    q = jnp.minimum(q, max_unscaled)
+    q = jnp.where(mag > 0, q, 0.0)
+    return sign * q * scale
+
+
+# ---------------------------------------------------------------------------
+# INT (fixed-point) simulation — the BHQ-style linear baseline
+# ---------------------------------------------------------------------------
+
+
+def int_quantize(x, bits=8, axis=None):
+    """Symmetric per-group fixed-point fake-quantization."""
+    qmax = 2.0 ** (bits - 1.0) - 1.0
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    absmax = jnp.where(absmax > 0, absmax, 1.0)
+    scale = absmax / qmax
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+
+
+# ---------------------------------------------------------------------------
+# STE wrappers (forward quantizers Q_W / Q_A)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 4))
+def ste_quantize(x, kind, gamma, maxexp, axis=None):
+    """Quantize in forward, identity gradient in backward (STE).
+
+    kind: 'lns' | 'fp8' | 'int8' | 'none'. gamma/maxexp are traced scalars
+    (ignored for non-LNS kinds so one signature serves all formats).
+    """
+    return _quantize_dispatch(x, kind, gamma, maxexp, axis)
+
+
+def _quantize_dispatch(x, kind, gamma, maxexp, axis):
+    if kind == "lns":
+        return lns_quantize(x, gamma, maxexp, axis=axis)
+    if kind == "lns_pallas":
+        # Route Q_W through the L1 pallas kernel so it lowers into the
+        # same HLO artifact as the surrounding model (2-D tensors only).
+        from compile.kernels import lns_quant
+
+        assert x.ndim == 2, "pallas quantizer path expects 2-D weights"
+        scale = lns_scale(x, gamma, maxexp).reshape(1, 1)
+        g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+        m = jnp.asarray(maxexp, jnp.float32).reshape(1, 1)
+        return lns_quant.lns_quantize_pallas_dyn(x, scale, g, m)
+    if kind == "fp8":
+        return fp8_quantize(x, axis=axis)
+    if kind == "int8":
+        return int_quantize(x, bits=8, axis=axis)
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown quantizer kind: {kind}")
+
+
+def _ste_fwd(x, kind, gamma, maxexp, axis):
+    return _quantize_dispatch(x, kind, gamma, maxexp, axis), None
+
+
+def _ste_bwd(kind, axis, _res, g):
+    # Straight-through: gradient flows unchanged past the quantizer.
+    return (g, None, None)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantizers (backward quantizers Q_E / Q_G)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 4))
+def grad_quantize(x, kind, gamma, maxexp, axis=None):
+    """Identity in forward; quantizes the cotangent in backward.
+
+    Inserting `grad_quantize(h, 'lns', g, m)` after a layer output
+    implements Q_E on the activation gradient flowing back through h.
+    """
+    return x
+
+
+def _gq_fwd(x, kind, gamma, maxexp, axis):
+    return x, (gamma, maxexp)
+
+
+def _gq_bwd(kind, axis, res, g):
+    gamma, maxexp = res
+    return (_quantize_dispatch(g, kind, gamma, maxexp, axis), None, None)
+
+
+grad_quantize.defvjp(_gq_fwd, _gq_bwd)

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the tests
+import the `compile` package that lives next to this file."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,182 @@
+"""Kernel vs oracle: the CORE L1 correctness signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ref.py,
+with hypothesis sweeping shapes and value distributions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import lnsq
+from compile.kernels import lns_matmul, lns_quant, madam_update, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def randn(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# lns_quant kernel
+# ---------------------------------------------------------------------------
+
+
+class TestQuantKernel:
+    @given(
+        rows=st.sampled_from([8, 64, 256, 300]),
+        cols=st.sampled_from([8, 128, 256, 384]),
+        gamma=st.sampled_from([1, 2, 4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, rows, cols, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, rows, cols)
+        s = lnsq.lns_scale(x, gamma, 127.0).reshape(1, 1)
+        got = lns_quant.lns_quantize_pallas(x, s, gamma=gamma, maxexp=127.0)
+        want = ref.quantize_ref(x, float(gamma), 127.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    @given(
+        gamma=st.sampled_from([2.0, 8.0, 32.0]),
+        maxexp=st.sampled_from([127.0, 31.0, 511.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_dyn_kernel_matches_ref(self, gamma, maxexp, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, 128, 64)
+        s = lnsq.lns_scale(x, gamma, maxexp).reshape(1, 1)
+        g = jnp.full((1, 1), gamma, jnp.float32)
+        m = jnp.full((1, 1), maxexp, jnp.float32)
+        got = lns_quant.lns_quantize_pallas_dyn(x, s, g, m)
+        want = ref.quantize_ref(x, gamma, maxexp)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_zeros_stay_zero(self):
+        x = jnp.zeros((64, 64), jnp.float32).at[0, 0].set(1.0)
+        s = lnsq.lns_scale(x, 8, 127.0).reshape(1, 1)
+        q = lns_quant.lns_quantize_pallas(x, s)
+        assert float(q[1, 1]) == 0.0
+        assert float(q[0, 0]) == pytest.approx(1.0, rel=1e-6)
+
+    def test_odd_shapes_fall_back_to_unit_blocks(self):
+        rng = np.random.default_rng(0)
+        x = randn(rng, 7, 13)  # prime dims: block size degenerates to 1
+        s = lnsq.lns_scale(x, 8, 127.0).reshape(1, 1)
+        got = lns_quant.lns_quantize_pallas(x, s)
+        want = ref.quantize_ref(x, 8.0, 127.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_relative_error_bound(self):
+        rng = np.random.default_rng(1)
+        x = randn(rng, 128, 128)
+        s = lnsq.lns_scale(x, 8, 127.0).reshape(1, 1)
+        q = lns_quant.lns_quantize_pallas(x, s)
+        mask = jnp.abs(x) >= float(s[0, 0])
+        rel = jnp.where(mask, jnp.abs((q - x) / jnp.where(x == 0, 1.0, x)), 0.0)
+        bound = 2.0 ** (1.0 / 16.0) - 1.0  # 2^(1/(2 gamma)) - 1
+        assert float(jnp.max(rel)) <= bound + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# lns_matmul datapath kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulKernel:
+    @given(
+        m=st.sampled_from([32, 64]),
+        k=st.sampled_from([32, 96]),
+        n=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_datapath_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = randn(rng, m, k), randn(rng, k, n)
+        got = lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=3)
+        want = ref.lns_matmul_datapath_ref(a, b, 8, 127.0, lut_bits=3)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(lut_bits=st.sampled_from([0, 1, 2]), seed=st.integers(0, 2**31 - 1))
+    def test_hybrid_modes_match_ref(self, lut_bits, seed):
+        rng = np.random.default_rng(seed)
+        a, b = randn(rng, 32, 64), randn(rng, 64, 32)
+        got = lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=lut_bits)
+        want = ref.lns_matmul_datapath_ref(a, b, 8, 127.0, lut_bits=lut_bits)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_close_to_smooth_reference(self):
+        rng = np.random.default_rng(7)
+        a, b = randn(rng, 64, 128), randn(rng, 128, 64)
+        got = lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=3)
+        want = ref.lns_matmul_ref(a, b, 8.0, 127.0)
+        denom = float(jnp.max(jnp.abs(want)))
+        assert float(jnp.max(jnp.abs(got - want))) < 2e-5 * denom
+
+    def test_mitchell_error_bounded(self):
+        rng = np.random.default_rng(9)
+        a, b = randn(rng, 32, 64), randn(rng, 64, 32)
+        exact = lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=3)
+        approx = lns_matmul.lns_matmul_pallas(a, b, gamma=8, maxexp=127.0, lut_bits=0)
+        denom = float(jnp.max(jnp.abs(exact)))
+        # Mitchell worst case ~8.6% per product; sums of random signs
+        # stay well below that at the output level.
+        assert float(jnp.max(jnp.abs(approx - exact))) < 0.1 * denom
+
+
+# ---------------------------------------------------------------------------
+# madam_update kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMadamKernel:
+    @given(
+        lr=st.sampled_from([2.0**-7, 2.0**-4]),
+        beta=st.sampled_from([0.0, 0.9]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, lr, beta, seed):
+        rng = np.random.default_rng(seed)
+        w = randn(rng, 256, 256)
+        g = randn(rng, 256, 256)
+        g2 = jnp.abs(randn(rng, 256, 256)) * 0.1
+        s = lnsq.lns_scale(w, 8, 127.0).reshape(1, 1)
+        w1, g21 = madam_update.madam_update_pallas(w, g, g2, s, lr=lr, beta=beta)
+        w2, g22 = ref.madam_update_ref(w, g, g2, lr, beta, 8.0, 127.0)
+        np.testing.assert_allclose(g21, g22, rtol=1e-6, atol=1e-7)
+        # Weight codes may disagree by exactly one step where the
+        # pre-rounding value sits on a .5 tie (f32 op-order differs by
+        # an ulp between the kernel and the oracle): allow <=1 code.
+        codes1 = jnp.round(jnp.log2(jnp.abs(w1) / s[0, 0]) * 8.0)
+        codes2 = jnp.round(jnp.log2(jnp.abs(w2) / s[0, 0]) * 8.0)
+        diff = jnp.abs(codes1 - codes2)
+        assert float(jnp.max(diff)) <= 1.0
+        # And ties must be rare (<0.1% of elements).
+        assert float(jnp.mean((diff > 0).astype(jnp.float32))) < 1e-3
+        np.testing.assert_allclose(jnp.sign(w1), jnp.sign(w2))
+
+    def test_zero_weights_stay_zero(self):
+        w = jnp.zeros((256, 256), jnp.float32).at[0, 0].set(2.0)
+        g = jnp.ones((256, 256), jnp.float32)
+        g2 = jnp.zeros((256, 256), jnp.float32)
+        s = lnsq.lns_scale(w, 8, 127.0).reshape(1, 1)
+        w1, _ = madam_update.madam_update_pallas(w, g, g2, s)
+        assert float(w1[3, 3]) == 0.0
+        assert float(w1[0, 0]) != 0.0
+
+    def test_update_is_multiplicative(self):
+        # Same gradient signal, weights an octave apart -> steps an
+        # octave apart in linear space (Fig. 1).
+        w = jnp.full((256, 256), 1.0, jnp.float32).at[0, :].set(8.0)
+        g = jnp.ones((256, 256), jnp.float32)
+        g2 = jnp.ones((256, 256), jnp.float32)
+        s = lnsq.lns_scale(w, 1024, 2.0**14).reshape(1, 1)
+        w1, _ = madam_update.madam_update_pallas(
+            w, g, g2, s, lr=2.0**-4, beta=0.0, gamma=1024, maxexp=2.0**14
+        )
+        d_small = float(w[1, 0] - w1[1, 0])
+        d_big = float(w[0, 0] - w1[0, 0])
+        assert d_big / d_small == pytest.approx(8.0, rel=0.05)

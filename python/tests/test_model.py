@@ -1,0 +1,162 @@
+"""L2 model tests: shapes, gradients, quantizer placement, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lnsq
+from compile import model as M
+
+GF = jnp.float32(8.0)
+MF = jnp.float32(127.0)
+GB = jnp.float32(8.0)
+MB = jnp.float32(127.0)
+
+
+def small_mlp():
+    return M.MlpConfig(in_dim=16, hidden=(32,), classes=4, batch=8)
+
+
+def small_tfm():
+    return M.TransformerConfig(vocab=32, d_model=32, n_head=2, n_layer=1, d_ff=64, seq=16, batch=2)
+
+
+class TestMlp:
+    def test_shapes(self):
+        cfg = small_mlp()
+        params = M.mlp_init(cfg)
+        assert len(params) == 2 * (len(cfg.layer_sizes) - 1)
+        x = jnp.zeros((8, 16), jnp.float32)
+        logits = M.mlp_forward(params, x, M.QuantSpec("lns", "lns"), GF, MF, GB, MB)
+        assert logits.shape == (8, 4)
+
+    def test_train_step_outputs(self):
+        cfg = small_mlp()
+        step = M.make_mlp_train_step(cfg, M.QuantSpec("lns", "lns"))
+        params = M.mlp_init(cfg)
+        x = jnp.ones((8, 16), jnp.float32)
+        y = jnp.zeros((8,), jnp.int32)
+        out = step(*params, x, y, GF, MF, GB, MB)
+        assert len(out) == 2 + len(params)
+        for p, g in zip(params, out[2:]):
+            assert p.shape == g.shape
+
+    def test_fp32_grads_match_autodiff_without_quant(self):
+        cfg = small_mlp()
+        spec = M.QuantSpec("none", "none", weight_pallas=False)
+        params = M.mlp_init(cfg)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 4, size=(8,)).astype(np.int32))
+        loss, grads = jax.value_and_grad(M.mlp_loss)(params, x, y, spec, GF, MF, GB, MB)
+        # Finite-difference check one weight.
+        eps = 1e-3
+        p2 = [p.at[0, 0].add(eps) if i == 0 else p for i, p in enumerate(params)]
+        lp = M.mlp_loss(p2, x, y, spec, GF, MF, GB, MB)
+        p3 = [p.at[0, 0].add(-eps) if i == 0 else p for i, p in enumerate(params)]
+        lm = M.mlp_loss(p3, x, y, spec, GF, MF, GB, MB)
+        fd = (lp - lm) / (2 * eps)
+        assert float(grads[0][0, 0]) == pytest.approx(float(fd), rel=0.05, abs=1e-4)
+
+    def test_grads_are_qg_quantized(self):
+        cfg = small_mlp()
+        step = M.make_mlp_train_step(cfg, M.QuantSpec("lns", "lns"))
+        params = M.mlp_init(cfg)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 4, size=(8,)).astype(np.int32))
+        out = step(*params, x, y, GF, MF, GB, MB)
+        gw0 = out[2]
+        # Q_G output must be a fixed point of the quantizer.
+        requant = lnsq.lns_quantize(gw0, GB, MB)
+        np.testing.assert_allclose(gw0, requant, rtol=1e-5, atol=1e-8)
+
+    def test_training_reduces_loss(self):
+        cfg = small_mlp()
+        spec = M.QuantSpec("lns", "lns")
+        params = M.mlp_init(cfg)
+        rng = np.random.default_rng(2)
+        proj = rng.normal(size=(16, 4)).astype(np.float32)
+        xs = rng.normal(size=(64, 16)).astype(np.float32)
+        ys = np.argmax(xs @ proj, axis=1).astype(np.int32)
+        x, y = jnp.asarray(xs), jnp.asarray(ys)
+        value_grad = jax.jit(
+            lambda ps: jax.value_and_grad(M.mlp_loss)(ps, x, y, spec, GF, MF, GB, MB)
+        )
+        first, _ = value_grad(params)
+        for _ in range(40):
+            _, grads = value_grad(params)
+            params = [p - 0.2 * g for p, g in zip(params, grads)]
+        last, _ = value_grad(params)
+        assert float(last) < float(first) * 0.7
+
+
+class TestTransformer:
+    def test_param_inventory_matches_init(self):
+        cfg = small_tfm()
+        params = M.tfm_init(cfg)
+        names = cfg.param_names()
+        assert len(params) == len(names)
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == cfg.n_params()
+
+    def test_forward_shape_and_causality(self):
+        cfg = small_tfm()
+        params = M.tfm_init(cfg)
+        spec = M.QuantSpec("none", "none", weight_pallas=False)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, 32, size=(2, 16)).astype(np.int32))
+        logits = M.tfm_forward(params, toks, cfg, spec, GF, MF, GB, MB)
+        assert logits.shape == (2, 16, 32)
+        # Causality: changing a late token must not affect early logits.
+        toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % 32)
+        logits2 = M.tfm_forward(params, toks2, cfg, spec, GF, MF, GB, MB)
+        np.testing.assert_allclose(logits[:, :-1], logits2[:, :-1], atol=1e-5)
+
+    def test_train_step_runs_quantized(self):
+        cfg = small_tfm()
+        step = M.make_tfm_train_step(cfg, M.QuantSpec("lns", "lns"))
+        params = M.tfm_init(cfg)
+        rng = np.random.default_rng(4)
+        toks = jnp.asarray(rng.integers(0, 32, size=(2, 16)).astype(np.int32))
+        tgts = jnp.asarray(rng.integers(0, 32, size=(2, 16)).astype(np.int32))
+        out = step(*params, toks, tgts, GF, MF, GB, MB)
+        assert len(out) == 1 + len(params)
+        assert np.isfinite(float(out[0]))
+        # Loss at init ~ ln(vocab).
+        assert float(out[0]) == pytest.approx(np.log(32), rel=0.2)
+
+    def test_loss_decreases_under_sgd(self):
+        cfg = small_tfm()
+        spec = M.QuantSpec("lns", "lns")
+        params = M.tfm_init(cfg)
+        rng = np.random.default_rng(5)
+        # Deterministic repeating sequence: highly learnable.
+        base = np.arange(16) % 8
+        toks = jnp.asarray(np.stack([base, (base + 1) % 8]).astype(np.int32))
+        tgts = jnp.asarray(np.stack([(base + 1) % 8, (base + 2) % 8]).astype(np.int32))
+        grad_fn = jax.jit(
+            lambda ps: jax.value_and_grad(M.tfm_loss)(
+                ps, toks, tgts, cfg, spec, GF, MF, GB, MB
+            )
+        )
+        first, _ = grad_fn(params)
+        for _ in range(30):
+            _, g = grad_fn(params)
+            params = [p - 0.5 * gi for p, gi in zip(params, g)]
+        last, _ = grad_fn(params)
+        assert float(last) < float(first) * 0.8
+
+
+class TestFormats:
+    @pytest.mark.parametrize("fmt", ["lns", "fp8", "int8", "none"])
+    def test_all_formats_trace(self, fmt):
+        cfg = small_mlp()
+        spec = M.QuantSpec(fmt, fmt, weight_pallas=(fmt == "lns"))
+        step = M.make_mlp_train_step(cfg, spec)
+        params = M.mlp_init(cfg)
+        x = jnp.ones((8, 16), jnp.float32)
+        y = jnp.zeros((8,), jnp.int32)
+        out = step(*params, x, y, GF, MF, GB, MB)
+        assert np.isfinite(float(out[0]))

@@ -1,0 +1,133 @@
+"""Properties of the L2 quantizer library (lnsq)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import lnsq
+
+settings.register_profile("quant", max_examples=30, deadline=None)
+settings.load_profile("quant")
+
+
+def randn(seed, *shape, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+class TestLnsQuantize:
+    @given(
+        gamma=st.sampled_from([1.0, 2.0, 4.0, 8.0, 16.0, 32.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_idempotent(self, gamma, seed):
+        x = randn(seed, 64, 64)
+        q1 = lnsq.lns_quantize(x, gamma, 127.0)
+        q2 = lnsq.lns_quantize(q1, gamma, 127.0)
+        np.testing.assert_allclose(q1, q2, rtol=1e-6)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_sign_preserved(self, seed):
+        x = randn(seed, 32, 32)
+        q = lnsq.lns_quantize(x, 8.0, 127.0)
+        assert bool(jnp.all(jnp.sign(q) == jnp.sign(x)))
+
+    @given(gamma=st.sampled_from([4.0, 8.0, 16.0]), seed=st.integers(0, 2**31 - 1))
+    def test_relative_error_bound(self, gamma, seed):
+        x = randn(seed, 64, 64)
+        q = lnsq.lns_quantize(x, gamma, 127.0)
+        s = lnsq.lns_scale(x, gamma, 127.0)
+        mask = jnp.abs(x) >= s
+        rel = jnp.where(mask, jnp.abs((q - x) / jnp.where(x == 0, 1.0, x)), 0.0)
+        bound = 2.0 ** (1.0 / (2.0 * gamma)) - 1.0
+        assert float(jnp.max(rel)) <= bound + 1e-6
+
+    def test_absmax_exact(self):
+        x = jnp.asarray([[0.5, -3.25], [1.0, 2.0]], jnp.float32)
+        q = lnsq.lns_quantize(x, 8.0, 127.0)
+        assert float(q[0, 1]) == pytest.approx(-3.25, rel=1e-6)
+
+    def test_dynamic_range_clamps_small_values(self):
+        # gamma=32 at 8 bits -> range (0, ~4 octaves): tiny values clamp
+        # to the smallest code, not to zero.
+        x = jnp.asarray([[1.0, 1e-6]], jnp.float32)
+        q = lnsq.lns_quantize(x, 32.0, 127.0)
+        smallest = 1.0 * 2.0 ** (-127.0 / 32.0)
+        assert float(q[0, 1]) == pytest.approx(smallest, rel=1e-5)
+
+    def test_per_axis_scaling(self):
+        x = jnp.asarray([[1.0, 1000.0], [0.5, 500.0]], jnp.float32)
+        q = lnsq.lns_quantize(x, 8.0, 127.0, axis=0)
+        assert float(q[0, 0]) == pytest.approx(1.0, rel=1e-3)
+        assert float(q[1, 0]) == pytest.approx(0.5, rel=0.05)
+
+
+class TestFp8:
+    def test_representable_exact(self):
+        x = jnp.asarray([[1.0, 1.5, -2.0, 0.5, 240.0]], jnp.float32)
+        q = lnsq.fp8_quantize(x)
+        np.testing.assert_allclose(q, x, rtol=1e-6)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_rel_error_half_ulp(self, seed):
+        x = randn(seed, 32, 32)
+        q = lnsq.fp8_quantize(x)
+        absmax = float(jnp.max(jnp.abs(x)))
+        scale = absmax / 240.0
+        mask = jnp.abs(x) > scale * 2.0**-6  # normals only
+        rel = jnp.where(mask, jnp.abs((q - x) / jnp.where(x == 0, 1.0, x)), 0.0)
+        assert float(jnp.max(rel)) <= 2.0**-4 + 1e-6
+
+    def test_zero(self):
+        assert float(lnsq.fp8_quantize(jnp.zeros((2, 2)))[0, 0]) == 0.0
+
+
+class TestInt8:
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_on_grid(self, seed):
+        x = randn(seed, 16, 16)
+        q = lnsq.int_quantize(x, bits=8)
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        steps = q / scale
+        np.testing.assert_allclose(steps, jnp.round(steps), atol=1e-3)
+
+
+class TestSte:
+    def test_forward_quantizes_backward_identity(self):
+        x = randn(3, 8, 8)
+        g, m = jnp.float32(8.0), jnp.float32(127.0)
+
+        def f(x):
+            return jnp.sum(lnsq.ste_quantize(x, "lns", g, m, None) ** 2)
+
+        grads = jax.grad(f)(x)
+        # STE: d/dx sum(q(x)^2) = 2 q(x) (identity through quantizer).
+        np.testing.assert_allclose(grads, 2 * lnsq.lns_quantize(x, g, m), rtol=1e-5)
+
+    def test_grad_quantize_forward_identity(self):
+        x = randn(4, 8, 8)
+        g, m = jnp.float32(8.0), jnp.float32(127.0)
+        y = lnsq.grad_quantize(x, "lns", g, m, None)
+        np.testing.assert_allclose(y, x)
+
+    def test_grad_quantize_quantizes_cotangent(self):
+        x = randn(5, 8, 8)
+        g, m = jnp.float32(8.0), jnp.float32(127.0)
+
+        def f(x):
+            return jnp.sum(lnsq.grad_quantize(x, "lns", g, m, None) * x)
+
+        grads = jax.grad(f)(x)
+        # Cotangent entering grad_quantize is x (from the product rule's
+        # first term) plus x from the second -> quantized(x) + x.
+        want = lnsq.lns_quantize(x, g, m) + x
+        np.testing.assert_allclose(grads, want, rtol=1e-5)
+
+    def test_pallas_path_matches_jnp_path(self):
+        x = randn(6, 64, 64)
+        g, m = jnp.float32(8.0), jnp.float32(127.0)
+        a = lnsq.ste_quantize(x, "lns", g, m, None)
+        b = lnsq.ste_quantize(x, "lns_pallas", g, m, None)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)

@@ -1,0 +1,43 @@
+//! Fig. 10: per-iteration energy across GPT model scales (1B -> 1T
+//! parameters, Narayanan et al. scaling). Paper shape: the LNS
+//! advantage (~11x vs FP32, ~2.2x vs FP8) is scale-independent — the
+//! lines stay parallel on the log-log plot.
+//!
+//!   cargo bench --bench fig10_gpt_scaling
+
+use lns_madam::hw::{gpt_workloads, EnergyModel, PeFormat};
+use lns_madam::lns::ConvertMode;
+use lns_madam::util::bench::print_table;
+
+fn main() {
+    let em = EnergyModel::paper();
+    let formats = [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp16,
+        PeFormat::Fp32,
+    ];
+
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    for w in gpt_workloads() {
+        let lns_j = em.workload_mj(formats[0], w.total_macs()) / 1e3;
+        let fp32_j = em.workload_mj(PeFormat::Fp32, w.total_macs()) / 1e3;
+        ratios.push(fp32_j / lns_j);
+        let mut row = vec![w.name.clone(), format!("{:.2e}", w.total_macs())];
+        for f in formats {
+            row.push(format!("{:.2}", em.workload_mj(f, w.total_macs()) / 1e3));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 10: per-iteration energy across GPT scales (J)",
+        &["Model", "MACs/iter", "LNS", "FP8", "FP16", "FP32"],
+        &rows,
+    );
+
+    let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = ratios.iter().cloned().fold(0.0, f64::max);
+    println!("\nFP32/LNS ratio across scales: {min:.2} .. {max:.2} (scale-independent)");
+    assert!((max - min).abs() < 1e-9, "energy ratio must not depend on scale");
+}

@@ -1,0 +1,73 @@
+//! Fig. 4: quantization error of GD vs multiplicative vs sign-
+//! multiplicative weight updates under stochastic-rounded Q_log,
+//! swept over learning rate (gamma = 2^10 fixed) and base factor
+//! (eta = 2^-6 fixed), with the Theorem 1/2 + Lemma 1 bounds printed
+//! alongside. Paper shape: multiplicative updates sit orders of
+//! magnitude below GD; all errors shrink as gamma grows.
+//!
+//!   cargo bench --bench fig4_quant_error
+
+use lns_madam::optim::error::{fig4_sweep, quant_error, Learner};
+use lns_madam::util::bench::{print_table, Bencher};
+use lns_madam::util::rng::Rng;
+
+fn main() {
+    let etas: Vec<f64> = (4..=10).map(|k| 2f64.powi(-k)).collect();
+    let gammas: Vec<f64> = (3..=12).map(|k| 2f64.powi(k)).collect();
+    let points = fig4_sweep(16_384, &etas, &gammas, 0);
+
+    // Panel 1: vary eta at gamma = 2^10.
+    let mut rows = Vec::new();
+    for &eta in &etas {
+        let mut row = vec![format!("2^{:.0}", eta.log2())];
+        for learner in [Learner::Gd, Learner::Mul, Learner::SignMul] {
+            let p = points
+                .iter()
+                .find(|p| p.learner == learner && p.eta == eta && p.gamma == 1024.0)
+                .unwrap();
+            row.push(format!("{:.2e}", p.error));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 4 (left): E r_t vs eta (gamma = 2^10, d = 16384)",
+        &["eta", "GD", "MUL", "signMUL"],
+        &rows,
+    );
+
+    // Panel 2: vary gamma at eta = 2^-6.
+    let eta_fixed = 2f64.powi(-6);
+    let mut rows = Vec::new();
+    for &gamma in &gammas {
+        let mut row = vec![format!("2^{:.0}", gamma.log2())];
+        for learner in [Learner::Gd, Learner::Mul, Learner::SignMul] {
+            let p = points
+                .iter()
+                .find(|p| {
+                    p.learner == learner && p.gamma == gamma && (p.eta - eta_fixed).abs() < 1e-12
+                })
+                .unwrap();
+            row.push(format!("{:.2e}", p.error));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 4 (right): E r_t vs gamma (eta = 2^-6, d = 16384)",
+        &["gamma", "GD", "MUL", "signMUL"],
+        &rows,
+    );
+
+    // Bound check summary.
+    let violated = points.iter().filter(|p| p.error > p.bound * 1.0001).count();
+    println!("\ntheory bounds (Thm 1/2, Lemma 1): {violated}/{} points violated", points.len());
+    assert_eq!(violated, 0, "a bound was violated");
+
+    // Timing of the measurement primitive.
+    let mut rng = Rng::new(1);
+    let w: Vec<f64> = (0..4096).map(|_| rng.normal().exp2()).collect();
+    let g: Vec<f64> = (0..4096).map(|_| rng.normal() * 1e-3).collect();
+    let b = Bencher::quick();
+    b.bench("quant_error (d=4096, 1 trial)", || {
+        quant_error(Learner::Mul, &w, &g, 0.01, 1024.0, 1, &mut rng)
+    });
+}

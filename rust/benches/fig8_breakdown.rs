@@ -1,0 +1,50 @@
+//! Fig. 8: PE energy breakdown per MAC for LNS / FP8 / FP16 / FP32.
+//! Paper shape: FP arithmetic dominates the FP datapaths' energy; the
+//! LNS PE's datapath share is small, with operand delivery (buffers,
+//! collector) taking over.
+//!
+//!   cargo bench --bench fig8_breakdown
+
+use lns_madam::hw::{EnergyModel, PeFormat};
+use lns_madam::lns::ConvertMode;
+use lns_madam::util::bench::print_table;
+
+fn main() {
+    let em = EnergyModel::paper();
+    let formats = [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp16,
+        PeFormat::Fp32,
+    ];
+
+    let mut rows = Vec::new();
+    for f in formats {
+        let b = em.pe_breakdown(f);
+        let total = b.total();
+        let mut row = vec![b.label.clone(), format!("{total:.1}")];
+        for (name, v) in &b.parts {
+            row.push(format!("{name}: {v:.1} ({:.0}%)", v / total * 100.0));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Fig. 8: PE energy per MAC by component (fJ)",
+        &["format", "total", "datapath", "bufferB", "bufferA", "collector", "ppu"],
+        &rows,
+    );
+
+    // The paper's qualitative claims, asserted:
+    let share = |f: PeFormat| {
+        let b = em.pe_breakdown(f);
+        b.parts[0].1 / b.total()
+    };
+    let lns_share = share(PeFormat::Lns(ConvertMode::ExactLut));
+    let fp32_share = share(PeFormat::Fp32);
+    println!(
+        "\ndatapath share of PE energy: LNS {:.0}%, FP32 {:.0}% (paper: FP arithmetic dominates)",
+        lns_share * 100.0,
+        fp32_share * 100.0
+    );
+    assert!(fp32_share > 0.6 && lns_share < 0.35);
+}

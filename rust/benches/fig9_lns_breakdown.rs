@@ -1,0 +1,56 @@
+//! Fig. 9: LNS PE datapath component breakdown, plus op-count
+//! verification from the bit-faithful simulator (the component shares
+//! must match what the datapath actually executes per MAC).
+//!
+//!   cargo bench --bench fig9_lns_breakdown
+
+use lns_madam::hw::EnergyModel;
+use lns_madam::lns::{
+    encode_tensor, ConvertMode, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit,
+};
+use lns_madam::util::bench::print_table;
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+
+fn main() {
+    let em = EnergyModel::paper();
+    let fmt = LnsFormat::PAPER8;
+
+    for mode in [
+        ConvertMode::ExactLut,
+        ConvertMode::Hybrid { lut_bits: 1 },
+        ConvertMode::Mitchell,
+    ] {
+        let b = em.lns_datapath_breakdown(fmt, mode);
+        let rows: Vec<Vec<String>> = b
+            .parts
+            .iter()
+            .map(|(n, v)| {
+                vec![n.clone(), format!("{v:.2}"), format!("{:.1}%", v / b.total() * 100.0)]
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 9: LNS datapath energy per MAC — {}", b.label),
+            &["component", "fJ", "share"],
+            &rows,
+        );
+    }
+
+    // Cross-check energy-model op assumptions against the simulator.
+    let mut rng = Rng::new(3);
+    let a = Tensor::randn(16, 64, 1.0, &mut rng);
+    let bt = Tensor::randn(64, 16, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&bt, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut mac = VectorMacUnit::new(MacConfig::paper());
+    let _ = mac.matmul(&ea, &eb);
+    let macs = mac.counts.total_macs() as f64;
+    println!("\nsimulator op counts per MAC (16x64x16 GEMM):");
+    println!("  exp adds      {:.3}", mac.counts.exp_adds as f64 / macs);
+    println!("  shifts        {:.3}", mac.counts.shifts as f64 / macs);
+    println!("  collector     {:.3}", mac.counts.collector_adds as f64 / macs);
+    println!("  lut muls      {:.3}", mac.counts.lut_muls as f64 / macs);
+    // Exact mode: 8 LUT multiplies per output element / 64 MACs each.
+    assert!((mac.counts.lut_muls as f64 / macs - 8.0 / 64.0).abs() < 1e-9);
+    assert_eq!(mac.counts.exp_adds, mac.counts.shifts);
+}

@@ -1,0 +1,131 @@
+//! Hot-path microbenchmarks — the §Perf baseline/after numbers in
+//! EXPERIMENTS.md come from here.
+//!
+//! L3 coverage: Q_log quantize/encode throughput (runs per weight
+//! update), the Madam + Q_U update step, the datapath simulator, and
+//! the end-to-end PJRT train-step latency split into gradient compute
+//! (PJRT) vs weight update (rust) so the coordinator's overhead share
+//! is visible.
+//!
+//!   make artifacts && cargo bench --bench hotpath
+
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::lns::quant::quantize_slice;
+use lns_madam::lns::{
+    encode_tensor, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit,
+};
+use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, QuantizedUpdate, UpdateQuantizer};
+use lns_madam::runtime::{artifacts_available, Runtime};
+use lns_madam::util::bench::Bencher;
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(0);
+
+    // --- L3 numeric hot paths -------------------------------------------
+    let n = 1 << 20;
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let fmt = LnsFormat::PAPER8;
+    let s = b.bench("quantize_slice 1M f32 (Q_log roundtrip)", || {
+        let mut xs = base.clone();
+        quantize_slice(&mut xs, fmt);
+        xs
+    });
+    println!("  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+
+    let t = Tensor::from_vec(1024, 1024, base.clone());
+    let s = b.bench("encode_tensor 1M f32 (sign/code planes)", || {
+        encode_tensor(&t, fmt, Scaling::PerTensor, Rounding::Nearest, None)
+    });
+    println!("  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+
+    // Madam + Q_U step over a 1M-element tensor: composed (baseline)
+    // vs fused (optimized) — the §Perf before/after pair.
+    let grads: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-2).collect();
+    let mut opt = QuantizedUpdate::new(Madam::new(0.0078125), UpdateQuantizer::lns_matched(16));
+    let mut weights = base.clone();
+    let s = b.bench("madam+Q_U composed 1M params (baseline)", || {
+        opt.step(0, &mut weights, &grads);
+    });
+    println!("  -> {:.1} Mparam/s", s.throughput(n as f64) / 1e6);
+
+    let qu_fmt = match UpdateQuantizer::lns_matched(16) {
+        UpdateQuantizer::Lns(f) => f,
+        _ => unreachable!(),
+    };
+    let mut fused = FusedMadamQu::new(0.0078125, qu_fmt);
+    let mut weights2 = base.clone();
+    let s_f = b.bench("madam+Q_U fused 1M params (optimized)", || {
+        fused.step(0, &mut weights2, &grads);
+    });
+    println!(
+        "  -> {:.1} Mparam/s ({:.1}x vs composed)",
+        s_f.throughput(n as f64) / 1e6,
+        s.mean_ns / s_f.mean_ns
+    );
+
+    // Datapath simulator.
+    let a = Tensor::randn(64, 128, 1.0, &mut rng);
+    let bt = Tensor::randn(128, 64, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&bt, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let s = b.bench("datapath sim matmul 64x128x64", || {
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        mac.matmul(&ea, &eb)
+    });
+    println!(
+        "  -> {:.1} MMACs/s",
+        s.throughput((64 * 128 * 64) as f64) / 1e6
+    );
+
+    // --- end-to-end train step (PJRT grad + rust update) -----------------
+    if !artifacts_available(Path::new("artifacts")) {
+        println!("(skipping PJRT hotpath: run `make artifacts`)");
+        return;
+    }
+    let runtime = Runtime::cpu().expect("pjrt");
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlp".into();
+    cfg.format = "lns".into();
+    cfg.optimizer = OptKind::Madam;
+    cfg.steps = 1;
+    let mut trainer = Trainer::new(&runtime, cfg).expect("trainer");
+    // Warm up the executable.
+    for _ in 0..3 {
+        trainer.step().unwrap();
+    }
+    let iters = 30;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        trainer.step().unwrap();
+    }
+    let per_step = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("e2e mlp_lns train step: {:.2} ms", per_step * 1e3);
+
+    // Split: PJRT-side gradient compute vs rust-side update, measured
+    // by timing update-only on cached gradients.
+    let n_params: usize = trainer.params.iter().map(|p| p.data.len()).sum();
+    let fake_grads: Vec<Vec<f32>> = trainer
+        .params
+        .iter()
+        .map(|p| vec![1e-3f32; p.data.len()])
+        .collect();
+    // Use the same fused optimizer the trainer itself runs.
+    let mut opt = FusedMadamQu::new(0.0078125, qu_fmt);
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        for (i, g) in fake_grads.iter().enumerate() {
+            opt.step(i, &mut trainer.params[i].data, g);
+        }
+    }
+    let upd = t1.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "  rust weight-update (fused) share: {:.2} ms ({:.1}% of step, {n_params} params)",
+        upd * 1e3,
+        upd / per_step * 100.0
+    );
+}

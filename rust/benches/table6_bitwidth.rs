@@ -1,0 +1,65 @@
+//! Table 6: LNS-Madam vs the BHQ-style INT baseline as the *activation
+//! gradient* bitwidth shrinks 8 -> 4. Forward stays 8-bit. Paper shape:
+//! both track each other within ~a point at 7–8 bits; LNS holds up
+//! better in the 4–5 bit regime (logarithmic spacing suits the
+//! long-tailed gradient distribution).
+//!
+//!   cargo bench --bench table6_bitwidth
+
+use lns_madam::lns::{LnsFormat, Scaling};
+use lns_madam::model::sweep::{run_sweep, SweepRun};
+use lns_madam::model::{QuantKind, TrainQuant};
+use lns_madam::optim::{Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
+use lns_madam::util::bench::print_table;
+
+fn mean_acc(quant: TrainQuant, mk_opt: impl Fn() -> Box<dyn Optimizer>) -> String {
+    let mut accs = Vec::new();
+    for seed in 0..3 {
+        let cfg = SweepRun { steps: 200, seed, quant, ..Default::default() };
+        let mut opt = mk_opt();
+        let r = run_sweep(&cfg, opt.as_mut());
+        if r.diverged {
+            return "diverged".into();
+        }
+        accs.push(r.eval_acc);
+    }
+    format!("{:.2}", accs.iter().sum::<f32>() / accs.len() as f32 * 100.0)
+}
+
+fn main() {
+    let mut lns_row = vec!["LNS-Madam".to_string()];
+    let mut bhq_row = vec!["BHQ-style INT + SGD".to_string()];
+    for bits in [4u32, 5, 6, 7, 8] {
+        // Scale gamma down with bitwidth to keep the gradient dynamic
+        // range usable (the paper's matched-range rule in reverse).
+        let gamma = match bits {
+            4 => 1,
+            5 => 2,
+            6 => 2,
+            7 => 4,
+            _ => 8,
+        };
+        let lns_bwd = QuantKind::Lns { fmt: LnsFormat::new(bits, gamma), scaling: Scaling::PerTensor };
+        let lns_q = TrainQuant { forward: QuantKind::lns8(), backward: lns_bwd };
+        lns_row.push(mean_acc(lns_q, || {
+            Box::new(QuantizedUpdate::new(Madam::new(2f32.powi(-4)), UpdateQuantizer::lns_matched(16)))
+        }));
+
+        let int_q = TrainQuant {
+            forward: QuantKind::Int { bits: 8 },
+            backward: QuantKind::Int { bits },
+        };
+        bhq_row.push(mean_acc(int_q, || {
+            Box::new(QuantizedUpdate::new(
+                Sgd::with(0.1, 0.9, 0.0),
+                UpdateQuantizer::Int { bits: 16, stochastic: true },
+            ))
+        }));
+    }
+    print_table(
+        "Table 6: activation-gradient bitwidth sweep (eval acc %, synthetic proxy)",
+        &["method", "4-bit", "5-bit", "6-bit", "7-bit", "8-bit"],
+        &vec![lns_row, bhq_row],
+    );
+    println!("\npaper shape: comparable at 7-8 bits; LNS degrades more gracefully at 4-5\n");
+}

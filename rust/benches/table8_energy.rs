@@ -1,0 +1,74 @@
+//! Table 8 / Fig. 2: per-iteration training energy for the evaluation
+//! models across number formats, priced by the calibrated PE model, and
+//! verified against the paper's published anchors. Also times the
+//! bit-faithful datapath simulator (the op-count source of truth).
+//!
+//!   cargo bench --bench table8_energy
+
+use lns_madam::hw::{table8_workloads, EnergyModel, PeFormat};
+use lns_madam::lns::{
+    encode_tensor, ConvertMode, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit,
+};
+use lns_madam::util::bench::{print_table, Bencher};
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+
+fn main() {
+    let em = EnergyModel::paper();
+    let formats = [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp16,
+        PeFormat::Fp32,
+    ];
+
+    // Paper Table 8 values (mJ) for side-by-side comparison.
+    let paper: &[(&str, [f64; 4])] = &[
+        ("ResNet-18", [0.54, 1.22, 2.50, 5.99]),
+        ("ResNet-50", [0.99, 2.25, 4.59, 11.03]),
+        ("BERT-Base", [7.99, 18.23, 37.21, 89.35]),
+        ("BERT-Large", [27.85, 63.58, 129.74, 311.58]),
+    ];
+
+    let mut rows = Vec::new();
+    for (w, (pname, pvals)) in table8_workloads().iter().zip(paper.iter()) {
+        assert_eq!(&w.name, pname);
+        let mut row = vec![w.name.clone()];
+        for (f, pv) in formats.iter().zip(pvals.iter()) {
+            row.push(format!("{:.2} ({pv})", em.workload_mj(*f, w.total_macs())));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Table 8: per-iteration energy, model (paper) in mJ",
+        &["Model", "LNS", "FP8", "FP16", "FP32"],
+        &rows,
+    );
+
+    // Who-wins/by-how-much check: the LNS-vs-FP ratios.
+    let lns = em.pe_mac_fj(PeFormat::Lns(ConvertMode::ExactLut));
+    for (f, want) in [(PeFormat::Fp8, 2.2), (PeFormat::Fp16, 4.6), (PeFormat::Fp32, 11.0)] {
+        let got = em.pe_mac_fj(f) / lns;
+        println!("ratio {} / LNS = {:.2} (paper {want})", f.name(), got);
+        assert!((got - want).abs() / want < 0.25, "ratio drifted");
+    }
+
+    // Datapath simulator throughput (MACs/s) — the energy model's
+    // op counts come from here, so its speed bounds every hw bench.
+    let fmt = LnsFormat::PAPER8;
+    let mut rng = Rng::new(0);
+    let a = Tensor::randn(64, 128, 1.0, &mut rng);
+    let bt = Tensor::randn(128, 64, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&bt, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let b = Bencher::default();
+    let stats = b.bench("datapath matmul 64x128x64", || {
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        mac.matmul(&ea, &eb)
+    });
+    let macs = (64 * 128 * 64) as f64;
+    println!(
+        "datapath simulator: {:.1} MMACs/s",
+        stats.throughput(macs) / 1e6
+    );
+}

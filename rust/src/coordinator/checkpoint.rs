@@ -1,0 +1,192 @@
+//! Checkpointing: save/restore the coordinator's parameter state.
+//!
+//! Format: a small self-describing binary — magic, version, tensor
+//! count, then per tensor (name, shape, f32 payload), followed by a
+//! JSON trailer with run metadata. Integrity is guarded by a FNV-1a
+//! checksum over the payload so a truncated file fails loudly instead
+//! of resuming training from garbage.
+
+use crate::coordinator::trainer::Param;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"LNSMADAM";
+const VERSION: u32 = 1;
+
+fn fnv1a(data: &[u8], seed: u64) -> u64 {
+    let mut h = seed ^ 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize parameters + metadata to `path`.
+pub fn save(path: &Path, params: &[Param], step: usize, meta: &BTreeMap<String, String>) -> Result<()> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(step as u64).to_le_bytes());
+    let mut checksum = 0u64;
+    for p in params {
+        let name = p.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&(p.shape.len() as u32).to_le_bytes());
+        for &d in &p.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(p.data.as_ptr() as *const u8, p.data.len() * 4)
+        };
+        out.extend_from_slice(&(p.data.len() as u64).to_le_bytes());
+        out.extend_from_slice(bytes);
+        checksum = fnv1a(bytes, checksum);
+    }
+    out.extend_from_slice(&checksum.to_le_bytes());
+    let meta_json = Json::Obj(
+        meta.iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    )
+    .dump();
+    out.extend_from_slice(&(meta_json.len() as u64).to_le_bytes());
+    out.extend_from_slice(meta_json.as_bytes());
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+/// Deserialize a checkpoint. Returns (params, step, metadata).
+pub fn load(path: &Path) -> Result<(Vec<Param>, usize, BTreeMap<String, String>)> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > buf.len() {
+            bail!("truncated checkpoint at byte {}", *pos);
+        }
+        let s = &buf[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 8)? != MAGIC {
+        bail!("not an LNS-Madam checkpoint");
+    }
+    let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let mut params = Vec::with_capacity(n_tensors);
+    let mut checksum = 0u64;
+    for _ in 0..n_tensors {
+        let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
+        let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let count = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+        if count != shape.iter().product::<usize>() {
+            bail!("tensor '{name}': count {count} != shape {shape:?}");
+        }
+        let bytes = take(&mut pos, count * 4)?;
+        checksum = fnv1a(bytes, checksum);
+        let mut data = vec![0f32; count];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        params.push(Param { name, shape, data });
+    }
+    let want = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+    if want != checksum {
+        bail!("checksum mismatch: stored {want:#x}, computed {checksum:#x}");
+    }
+    let mlen = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let meta_json = std::str::from_utf8(take(&mut pos, mlen)?)?;
+    let meta = Json::parse(meta_json)
+        .map_err(|e| anyhow::anyhow!("metadata: {e}"))?
+        .as_obj()
+        .map(|m| {
+            m.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok((params, step, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_params() -> Vec<Param> {
+        vec![
+            Param { name: "w0".into(), shape: vec![2, 3], data: vec![1.0, -2.5, 0.0, 3.25, 4.0, -0.125] },
+            Param { name: "b0".into(), shape: vec![3], data: vec![0.5, 0.0, -1.0] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("lns_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        let mut meta = BTreeMap::new();
+        meta.insert("optimizer".to_string(), "madam".to_string());
+        save(&path, &mk_params(), 42, &meta).unwrap();
+        let (params, step, meta2) = load(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(meta2.get("optimizer").map(String::as_str), Some("madam"));
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].shape, vec![2, 3]);
+        assert_eq!(params[0].data, mk_params()[0].data);
+        assert_eq!(params[1].name, "b0");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = std::env::temp_dir().join("lns_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        save(&path, &mk_params(), 1, &BTreeMap::new()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn corruption_detected_by_checksum() {
+        let dir = std::env::temp_dir().join("lns_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        save(&path, &mk_params(), 1, &BTreeMap::new()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte inside the first tensor.
+        let idx = 40;
+        bytes[idx] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path);
+        assert!(err.is_err(), "corrupted checkpoint must not load");
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = std::env::temp_dir().join("lns_ckpt_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

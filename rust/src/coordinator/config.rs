@@ -1,0 +1,164 @@
+//! Typed training configuration, loaded from the TOML-subset files in
+//! `configs/` or assembled programmatically by benches.
+
+use crate::util::config::Config;
+use anyhow::{bail, Result};
+
+/// Which optimizer drives the weight update (Section 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+    AdamW,
+    Madam,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Result<OptKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sgd" => OptKind::Sgd,
+            "adam" => OptKind::Adam,
+            "adamw" => OptKind::AdamW,
+            "madam" => OptKind::Madam,
+            other => bail!("unknown optimizer '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Adam => "adam",
+            OptKind::AdamW => "adamw",
+            OptKind::Madam => "madam",
+        }
+    }
+
+    /// The paper's default learning rates (Section 6.1.1 / Appendix .5).
+    pub fn default_lr(&self) -> f32 {
+        match self {
+            OptKind::Sgd => 0.1,
+            OptKind::Adam | OptKind::AdamW => 3e-4,
+            OptKind::Madam => 0.0078125, // 2^-7
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model preset name in the artifact manifest (e.g. "mlp", "tfm_tiny").
+    pub model: String,
+    /// Forward/backward number format artifact: lns | fp8 | int8 | fp32.
+    pub format: String,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub optimizer: OptKind,
+    pub lr: f32,
+    /// Forward quantizer (gamma, bits) — runtime scalars into the artifact.
+    pub gamma_fwd: f32,
+    pub bits_fwd: u32,
+    /// Backward quantizer.
+    pub gamma_bwd: f32,
+    pub bits_bwd: u32,
+    /// Weight-update quantizer Q_U bitwidth; 0 = full precision update.
+    pub qu_bits: u32,
+    /// Where artifacts live.
+    pub artifacts_dir: String,
+    /// Metrics output path ("" = stdout only).
+    pub log_path: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp".into(),
+            format: "lns".into(),
+            steps: 200,
+            eval_every: 50,
+            seed: 0,
+            optimizer: OptKind::Madam,
+            lr: OptKind::Madam.default_lr(),
+            gamma_fwd: 8.0,
+            bits_fwd: 8,
+            gamma_bwd: 8.0,
+            bits_bwd: 8,
+            qu_bits: 16,
+            artifacts_dir: "artifacts".into(),
+            log_path: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Max exponent code for a bitwidth: 2^(B-1)-1 (the scalar the
+    /// artifacts take alongside gamma).
+    pub fn maxexp(bits: u32) -> f32 {
+        ((1u64 << (bits - 1)) - 1) as f32
+    }
+
+    pub fn from_file(path: &str) -> Result<TrainConfig> {
+        let cfg = Config::load(path)?;
+        let mut t = TrainConfig::default();
+        t.model = cfg.str_or("train", "model", &t.model);
+        t.format = cfg.str_or("train", "format", &t.format);
+        t.steps = cfg.i64_or("train", "steps", t.steps as i64) as usize;
+        t.eval_every = cfg.i64_or("train", "eval_every", t.eval_every as i64) as usize;
+        t.seed = cfg.i64_or("train", "seed", t.seed as i64) as u64;
+        t.optimizer = OptKind::parse(&cfg.str_or("train", "optimizer", t.optimizer.name()))?;
+        t.lr = cfg.f64_or("train", "lr", t.optimizer.default_lr() as f64) as f32;
+        t.gamma_fwd = cfg.f64_or("quant", "gamma_fwd", t.gamma_fwd as f64) as f32;
+        t.bits_fwd = cfg.i64_or("quant", "bits_fwd", t.bits_fwd as i64) as u32;
+        t.gamma_bwd = cfg.f64_or("quant", "gamma_bwd", t.gamma_bwd as f64) as f32;
+        t.bits_bwd = cfg.i64_or("quant", "bits_bwd", t.bits_bwd as i64) as u32;
+        t.qu_bits = cfg.i64_or("quant", "qu_bits", t.qu_bits as i64) as u32;
+        t.artifacts_dir = cfg.str_or("paths", "artifacts", &t.artifacts_dir);
+        t.log_path = cfg.str_or("paths", "log", &t.log_path);
+        Ok(t)
+    }
+
+    pub fn train_artifact(&self) -> String {
+        format!("{}_{}_train", self.model, self.format)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("{}_{}_eval", self.model, self.format)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_settings() {
+        let t = TrainConfig::default();
+        assert_eq!(t.optimizer, OptKind::Madam);
+        assert!((t.lr - 2f32.powi(-7)).abs() < 1e-9);
+        assert_eq!(t.gamma_fwd, 8.0);
+        assert_eq!(TrainConfig::maxexp(8), 127.0);
+    }
+
+    #[test]
+    fn parses_file() {
+        let dir = std::env::temp_dir().join("lns_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.toml");
+        std::fs::write(
+            &p,
+            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\n[quant]\ngamma_fwd = 16\n",
+        )
+        .unwrap();
+        let t = TrainConfig::from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(t.model, "tfm_tiny");
+        assert_eq!(t.optimizer, OptKind::Sgd);
+        assert_eq!(t.steps, 10);
+        assert_eq!(t.gamma_fwd, 16.0);
+        assert_eq!(t.train_artifact(), "tfm_tiny_lns_train");
+    }
+
+    #[test]
+    fn rejects_unknown_optimizer() {
+        assert!(OptKind::parse("lamb").is_err());
+    }
+}

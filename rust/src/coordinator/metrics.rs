@@ -1,0 +1,145 @@
+//! Structured metrics logging: per-step rows, CSV/JSON export, and a
+//! small summary used by EXPERIMENTS.md tables.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+
+#[derive(Clone, Debug)]
+pub struct MetricRow {
+    pub step: usize,
+    pub values: BTreeMap<String, f64>,
+}
+
+#[derive(Default)]
+pub struct MetricsLog {
+    pub run_name: String,
+    pub rows: Vec<MetricRow>,
+}
+
+impl MetricsLog {
+    pub fn new(run_name: &str) -> Self {
+        MetricsLog { run_name: run_name.to_string(), rows: Vec::new() }
+    }
+
+    pub fn record(&mut self, step: usize, pairs: &[(&str, f64)]) {
+        let mut values = BTreeMap::new();
+        for (k, v) in pairs {
+            values.insert(k.to_string(), *v);
+        }
+        self.rows.push(MetricRow { step, values });
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.rows.iter().rev().find_map(|r| r.values.get(key).copied())
+    }
+
+    /// Mean of the final `n` recorded values for `key`.
+    pub fn tail_mean(&self, key: &str, n: usize) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .rows
+            .iter()
+            .rev()
+            .filter_map(|r| r.values.get(key).copied())
+            .take(n)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut keys: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for k in r.values.keys() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        let mut out = String::from("step");
+        for k in &keys {
+            out.push(',');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.step.to_string());
+            for k in &keys {
+                out.push(',');
+                if let Some(v) = r.values.get(k) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj: BTreeMap<String, Json> = r
+                    .values
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect();
+                obj.insert("step".into(), Json::Num(r.step as f64));
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("run".into(), Json::Str(self.run_name.clone()));
+        top.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+
+    pub fn save_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = MetricsLog::new("t");
+        log.record(0, &[("loss", 2.5), ("acc", 0.1)]);
+        log.record(10, &[("loss", 1.5)]);
+        let csv = log.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        // Keys are alphabetical (BTreeMap) -> acc before loss.
+        assert_eq!(lines[0], "step,acc,loss");
+        assert_eq!(lines[1], "0,0.1,2.5");
+        assert_eq!(lines[2], "10,,1.5");
+    }
+
+    #[test]
+    fn tail_mean_and_last() {
+        let mut log = MetricsLog::new("t");
+        for i in 0..10 {
+            log.record(i, &[("loss", i as f64)]);
+        }
+        assert_eq!(log.last("loss"), Some(9.0));
+        assert_eq!(log.tail_mean("loss", 2), Some(8.5));
+        assert_eq!(log.last("nope"), None);
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut log = MetricsLog::new("run1");
+        log.record(1, &[("x", 0.5)]);
+        let j = log.to_json();
+        let s = j.dump();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("run").unwrap().as_str(), Some("run1"));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: configuration, synthetic data, metrics, and the
+//! training loop that owns weight state and applies the (quantized)
+//! weight update in rust while PJRT artifacts compute fwd/bwd.
+
+pub mod checkpoint;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod trainer;
+
+pub use config::{OptKind, TrainConfig};
+pub use data::{CharCorpus, SyntheticClassification};
+pub use metrics::MetricsLog;
+pub use trainer::{Param, Trainer};

@@ -1,0 +1,306 @@
+//! The training coordinator: owns LNS weight state in rust, runs the
+//! compiled fwd/bwd artifact for gradients, and applies the (quantized)
+//! weight update — exactly the paper's split where the weight update
+//! happens *outside the PEs* through the global buffer (Section 5).
+//!
+//! Python never runs here: `Trainer` consumes only `artifacts/`.
+
+use crate::coordinator::config::{OptKind, TrainConfig};
+use crate::coordinator::data::{CharCorpus, SyntheticClassification};
+use crate::coordinator::metrics::MetricsLog;
+use crate::optim::{Adam, FusedMadamQu, Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_scalar_f32, to_vec_f32, Executable, Manifest, Runtime};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Data source feeding the train step, matched to the model family.
+enum DataSource {
+    Classification(SyntheticClassification),
+    Lm(CharCorpus),
+}
+
+/// A parameter tensor owned by the coordinator.
+pub struct Param {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub params: Vec<Param>,
+    pub log: MetricsLog,
+    train_exe: Executable,
+    eval_exe: Option<Executable>,
+    opt: Box<dyn Optimizer>,
+    data: DataSource,
+    /// Data input shapes (after params, before scalars).
+    data_specs: Vec<(String, Vec<usize>, String)>,
+    rng: Rng,
+    pub steps_done: usize,
+}
+
+fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
+    let qu = if cfg.qu_bits == 0 {
+        UpdateQuantizer::None
+    } else {
+        UpdateQuantizer::lns_matched(cfg.qu_bits)
+    };
+    match cfg.optimizer {
+        OptKind::Sgd => Box::new(QuantizedUpdate::new(Sgd::with(cfg.lr, 0.9, 1e-4), qu)),
+        OptKind::Adam => Box::new(QuantizedUpdate::new(Adam::new(cfg.lr), qu)),
+        OptKind::AdamW => Box::new(QuantizedUpdate::new(Adam::adamw(cfg.lr, 0.01), qu)),
+        OptKind::Madam => match qu {
+            // Hot path: fused Madam+Q_U (one log2 + one exp2 per param,
+            // threaded) — see optim::fused and EXPERIMENTS.md §Perf.
+            UpdateQuantizer::Lns(fmt) => Box::new(FusedMadamQu::new(cfg.lr, fmt)),
+            other => Box::new(QuantizedUpdate::new(Madam::new(cfg.lr), other)),
+        },
+    }
+}
+
+impl Trainer {
+    /// Build a trainer from config + a shared runtime.
+    pub fn new(runtime: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let train_name = cfg.train_artifact();
+        let train_exe = runtime
+            .load(&manifest, &train_name)
+            .with_context(|| format!("loading train artifact {train_name}"))?;
+        let eval_exe = manifest
+            .artifact(&cfg.eval_artifact())
+            .map(|_| runtime.load(&manifest, &cfg.eval_artifact()))
+            .transpose()?;
+
+        let info = &train_exe.info;
+        let n_params = info.n_params;
+        if n_params == 0 || n_params >= info.inputs.len() {
+            bail!("{train_name}: bad n_params {n_params}");
+        }
+
+        // Initialize parameters in rust, mirroring the python init so
+        // both paths start from comparable distributions.
+        let mut rng = Rng::new(cfg.seed);
+        let mut params = Vec::new();
+        for spec in &info.inputs[..n_params] {
+            let n = spec.elements();
+            let data = init_param(&spec.name, &spec.shape, &mut rng);
+            debug_assert_eq!(data.len(), n);
+            params.push(Param { name: spec.name.clone(), shape: spec.shape.clone(), data });
+        }
+
+        // Everything between params and the trailing scalars is data.
+        let data_specs: Vec<(String, Vec<usize>, String)> = info.inputs[n_params..]
+            .iter()
+            .filter(|s| !s.is_scalar())
+            .map(|s| (s.name.clone(), s.shape.clone(), s.dtype.clone()))
+            .collect();
+
+        let model_info = manifest
+            .model(&cfg.model)
+            .ok_or_else(|| anyhow::anyhow!("model '{}' not in manifest", cfg.model))?;
+        let data = match model_info.family.as_str() {
+            "mlp" => {
+                let dim = data_specs[0].1[1];
+                DataSource::Classification(SyntheticClassification::new(dim, 16, 0.7, cfg.seed))
+            }
+            "transformer" => {
+                let vocab = model_info
+                    .raw
+                    .get("vocab")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(256);
+                DataSource::Lm(CharCorpus::new(vocab, 4, cfg.seed))
+            }
+            other => bail!("unknown model family '{other}'"),
+        };
+
+        let opt = build_optimizer(&cfg);
+        let run_name = format!("{}_{}_{}", cfg.model, cfg.format, cfg.optimizer.name());
+        Ok(Trainer {
+            cfg,
+            params,
+            log: MetricsLog::new(&run_name),
+            train_exe,
+            eval_exe,
+            opt,
+            data,
+            data_specs,
+            rng,
+            steps_done: 0,
+        })
+    }
+
+    fn scalar_args(&self, train: bool) -> Vec<xla::Literal> {
+        let gf = self.cfg.gamma_fwd;
+        let mf = TrainConfig::maxexp(self.cfg.bits_fwd);
+        if train {
+            vec![
+                lit_scalar(gf),
+                lit_scalar(mf),
+                lit_scalar(self.cfg.gamma_bwd),
+                lit_scalar(TrainConfig::maxexp(self.cfg.bits_bwd)),
+            ]
+        } else {
+            vec![lit_scalar(gf), lit_scalar(mf)]
+        }
+    }
+
+    fn sample_batch(&mut self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        match &mut self.data {
+            DataSource::Classification(ds) => {
+                let (bsz, _dim) = (self.data_specs[0].1[0], self.data_specs[0].1[1]);
+                let (xs, ys) = ds.batch(bsz);
+                lits.push(lit_f32(&self.data_specs[0].1, &xs)?);
+                lits.push(lit_i32(&self.data_specs[1].1, &ys)?);
+            }
+            DataSource::Lm(ds) => {
+                let (bsz, seq) = (self.data_specs[0].1[0], self.data_specs[0].1[1]);
+                let (tokens, targets) = ds.batch(bsz, seq);
+                lits.push(lit_i32(&self.data_specs[0].1, &tokens)?);
+                lits.push(lit_i32(&self.data_specs[1].1, &targets)?);
+            }
+        }
+        Ok(lits)
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .map(|p| lit_f32(&p.shape, &p.data))
+            .collect()
+    }
+
+    /// One training step: fwd/bwd on PJRT, weight update in rust.
+    /// Returns (loss, accuracy-if-reported).
+    pub fn step(&mut self) -> Result<(f32, Option<f32>)> {
+        let mut inputs = self.param_literals()?;
+        inputs.extend(self.sample_batch()?);
+        inputs.extend(self.scalar_args(true));
+        let outputs = self.train_exe.run(&inputs)?;
+
+        let has_acc = self.train_exe.info.outputs.get(1).map(|s| s == "acc").unwrap_or(false);
+        let loss = to_scalar_f32(&outputs[0])?;
+        let acc = if has_acc { Some(to_scalar_f32(&outputs[1])?) } else { None };
+        let grad_offset = if has_acc { 2 } else { 1 };
+        if outputs.len() != grad_offset + self.params.len() {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outputs.len(),
+                grad_offset + self.params.len()
+            );
+        }
+        for (i, p) in self.params.iter_mut().enumerate() {
+            let g = to_vec_f32(&outputs[grad_offset + i])?;
+            self.opt.step(i, &mut p.data, &g);
+        }
+        let mut pairs: Vec<(&str, f64)> = vec![("loss", loss as f64)];
+        if let Some(a) = acc {
+            pairs.push(("acc", a as f64));
+        }
+        self.log.record(self.steps_done, &pairs);
+        self.steps_done += 1;
+        Ok((loss, acc))
+    }
+
+    /// Held-out evaluation through the eval artifact (if lowered).
+    pub fn evaluate(&mut self) -> Result<Option<(f32, Option<f32>)>> {
+        if self.eval_exe.is_none() {
+            return Ok(None);
+        }
+        let mut inputs = self.param_literals()?;
+        inputs.extend(self.sample_batch()?);
+        inputs.extend(self.scalar_args(false));
+        let exe = self.eval_exe.as_ref().unwrap();
+        let outputs = exe.run(&inputs)?;
+        let loss = to_scalar_f32(&outputs[0])?;
+        let acc = if outputs.len() > 1 {
+            Some(to_scalar_f32(&outputs[1])?)
+        } else {
+            None
+        };
+        Ok(Some((loss, acc)))
+    }
+
+    /// Run the configured number of steps with periodic eval + logging.
+    pub fn run(&mut self) -> Result<()> {
+        for step in 0..self.cfg.steps {
+            let (loss, _acc) = self.step()?;
+            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                if let Some((el, ea)) = self.evaluate()? {
+                    let mut pairs: Vec<(&str, f64)> = vec![("eval_loss", el as f64)];
+                    if let Some(a) = ea {
+                        pairs.push(("eval_acc", a as f64));
+                    }
+                    self.log.record(step, &pairs);
+                    println!(
+                        "step {:>5}  loss {loss:.4}  eval_loss {el:.4}{}",
+                        step + 1,
+                        ea.map(|a| format!("  eval_acc {a:.3}")).unwrap_or_default()
+                    );
+                }
+            }
+        }
+        if !self.cfg.log_path.is_empty() {
+            self.log.save_csv(&self.cfg.log_path)?;
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the last `n` steps (reported in EXPERIMENTS.md).
+    pub fn final_loss(&self, n: usize) -> f64 {
+        self.log.tail_mean("loss", n).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_eval_acc(&self) -> Option<f64> {
+        self.log.last("eval_acc")
+    }
+
+    /// Extra entropy source for components that need it (kept on the
+    /// trainer so runs stay reproducible from one seed).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// He-style init matching `python/compile/model.py`.
+fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    let base = name.rsplit('.').next().unwrap_or(name);
+    if base.starts_with('b') || base.ends_with("_b") || base == "pos_emb" && false {
+        return vec![0.0; n];
+    }
+    match base {
+        // LayerNorm scales start at one, biases at zero.
+        s if s.ends_with("_s") => vec![1.0; n],
+        s if s.ends_with("_b") => vec![0.0; n],
+        "tok_emb" | "pos_emb" | "head" => (0..n).map(|_| rng.normal_f32() * 0.02).collect(),
+        s if s.starts_with('w') && shape.len() == 2 => {
+            let std = (2.0 / shape[0] as f32).sqrt();
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        }
+        s if s.starts_with('b') => vec![0.0; n],
+        _ if shape.len() == 2 => {
+            let std = (2.0 / (shape[0] + shape[1]) as f32).sqrt();
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        }
+        _ => vec![0.0; n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_param_shapes() {
+        let mut rng = Rng::new(0);
+        assert!(init_param("l0.ln1_s", &[8], &mut rng).iter().all(|&x| x == 1.0));
+        assert!(init_param("b0", &[8], &mut rng).iter().all(|&x| x == 0.0));
+        let w = init_param("w0", &[64, 32], &mut rng);
+        let var: f32 = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        assert!((var - 2.0 / 64.0).abs() < 0.01, "he variance {var}");
+    }
+}

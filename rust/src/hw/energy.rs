@@ -1,0 +1,321 @@
+//! Per-operation energy model of the LNS-Madam PE (Section 5, Fig. 6).
+//!
+//! The paper measures post-synthesis power in a sub-16 nm process at
+//! 0.6 V / 1.05 GHz. We cannot synthesize silicon here, so this model
+//! prices each datapath component with per-op energies (fJ) whose
+//! magnitudes follow standard scaled-CMOS estimates (Horowitz,
+//! ISSCC'14, scaled to the paper's node) and are *calibrated* so the
+//! paper's own anchors hold:
+//!
+//!  * Table 10 energy row: LNS datapath 12.29..19.02 fJ/op as the LUT
+//!    grows 1 -> 8 entries,
+//!  * Fig. 8 / Table 8 ratios: PE-level LNS : FP8 : FP16 : FP32
+//!    ~= 1 : 2.2 : 4.6 : 11.
+//!
+//! Energy per MAC = datapath(format) + operand-delivery overhead that
+//! scales with operand *bits* (BufferA/B reads amortized per the
+//! output-stationary local-A-stationary dataflow, collector access,
+//! PPU share). All figures are fJ.
+
+use crate::lns::convert::ConvertMode;
+use crate::lns::format::LnsFormat;
+
+/// Number formats the PE can be synthesized for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PeFormat {
+    /// LNS datapath with the given conversion mode (paper: gamma = 8).
+    Lns(ConvertMode),
+    Fp8,
+    Fp16,
+    Fp32,
+    Int8,
+}
+
+impl PeFormat {
+    pub fn name(&self) -> String {
+        match self {
+            PeFormat::Lns(ConvertMode::ExactLut) => "LNS".into(),
+            PeFormat::Lns(ConvertMode::Mitchell) => "LNS-LUT1".into(),
+            PeFormat::Lns(ConvertMode::Hybrid { lut_bits }) => {
+                format!("LNS-LUT{}", 1u32 << lut_bits)
+            }
+            PeFormat::Lns(ConvertMode::Reference) => "LNS-ref".into(),
+            PeFormat::Fp8 => "FP8".into(),
+            PeFormat::Fp16 => "FP16".into(),
+            PeFormat::Fp32 => "FP32".into(),
+            PeFormat::Int8 => "INT8".into(),
+        }
+    }
+
+    /// Operand width in bits (per input element).
+    pub fn bits(&self) -> u32 {
+        match self {
+            PeFormat::Lns(_) | PeFormat::Fp8 | PeFormat::Int8 => 8,
+            PeFormat::Fp16 => 16,
+            PeFormat::Fp32 => 32,
+        }
+    }
+}
+
+/// Datapath component energies (fJ per event) for the LNS MAC lane.
+#[derive(Clone, Copy, Debug)]
+pub struct LnsDatapathCosts {
+    /// 8-bit exponent adder (the "multiplier").
+    pub exp_add: f64,
+    /// Sign XOR.
+    pub sign_xor: f64,
+    /// Shift-by-quotient into 24-bit.
+    pub shift: f64,
+    /// 24-bit add in the per-bin adder tree.
+    pub tree_add: f64,
+    /// Collector (latch array) access share per MAC.
+    pub collector: f64,
+    /// Mitchell correction add (hybrid modes only).
+    pub mitchell_add: f64,
+    /// One 24x8 LUT-constant multiply (amortized over the vector).
+    pub lut_mul: f64,
+}
+
+impl Default for LnsDatapathCosts {
+    fn default() -> Self {
+        // Calibrated so exact-LUT (8 bins, VS=32) lands at ~19.0 fJ/op
+        // and Mitchell (1 bin) at ~12.3 fJ/op, bracketing Table 10.
+        LnsDatapathCosts {
+            exp_add: 1.6,
+            sign_xor: 0.1,
+            shift: 2.7,
+            tree_add: 5.6,
+            collector: 1.0,
+            mitchell_add: 0.9,
+            lut_mul: 35.0,
+        }
+    }
+}
+
+/// FP/INT datapath per-MAC energies (fJ), scaled-CMOS estimates
+/// calibrated against the paper's PE-level ratios.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineDatapathCosts {
+    pub fp8_mac: f64,
+    pub fp16_mac: f64,
+    pub fp32_mac: f64,
+    pub int8_mac: f64,
+}
+
+impl Default for BaselineDatapathCosts {
+    fn default() -> Self {
+        BaselineDatapathCosts {
+            fp8_mac: 146.0,
+            fp16_mac: 303.0,
+            fp32_mac: 789.0,
+            int8_mac: 56.0,
+        }
+    }
+}
+
+/// Operand-delivery overhead per MAC: buffer reads (amortized by the
+/// multi-level dataflow of Table 1), collector traffic, PPU share.
+/// Scales with operand bits — wider formats move more bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct DeliveryCosts {
+    /// fJ per operand *bit* per MAC, both operands combined.
+    pub per_bit: f64,
+}
+
+impl Default for DeliveryCosts {
+    fn default() -> Self {
+        DeliveryCosts { per_bit: 10.0 }
+    }
+}
+
+/// The assembled PE energy model.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyModel {
+    pub lns: LnsDatapathCosts,
+    pub baseline: BaselineDatapathCosts,
+    pub delivery: DeliveryCosts,
+    /// Vector lanes sharing one set of LUT multiplies (Table 1: 32).
+    pub vector_size: u32,
+}
+
+/// Per-MAC energy decomposed by PE component (Fig. 8 / Fig. 9 axes).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub label: String,
+    /// (component, fJ) pairs.
+    pub parts: Vec<(String, f64)>,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.parts.iter().map(|(_, v)| v).sum()
+    }
+}
+
+impl EnergyModel {
+    pub fn paper() -> Self {
+        EnergyModel { vector_size: 32, ..Default::default() }
+    }
+
+    fn vs(&self) -> f64 {
+        if self.vector_size == 0 {
+            32.0
+        } else {
+            self.vector_size as f64
+        }
+    }
+
+    /// LNS datapath energy per MAC for a conversion mode (Fig. 9 parts).
+    pub fn lns_datapath_breakdown(&self, fmt: LnsFormat, mode: ConvertMode) -> EnergyBreakdown {
+        let c = &self.lns;
+        let bins = mode.lut_entries(fmt).max(1) as f64;
+        let hybrid = bins < fmt.gamma as f64;
+        let mut parts = vec![
+            ("exponent add".to_string(), c.exp_add),
+            ("sign xor".to_string(), c.sign_xor),
+            ("shift".to_string(), c.shift),
+            ("adder tree".to_string(), c.tree_add),
+            ("collector".to_string(), c.collector),
+        ];
+        if hybrid {
+            parts.push(("mitchell add".to_string(), c.mitchell_add));
+        }
+        parts.push(("LUT multiply".to_string(), bins * c.lut_mul / self.vs()));
+        EnergyBreakdown { label: PeFormat::Lns(mode).name(), parts }
+    }
+
+    /// Datapath-only energy per MAC (the Table 10 "fJ / op" row).
+    pub fn datapath_mac_fj(&self, format: PeFormat) -> f64 {
+        match format {
+            PeFormat::Lns(mode) => self
+                .lns_datapath_breakdown(LnsFormat::PAPER8, mode)
+                .total(),
+            PeFormat::Fp8 => self.baseline.fp8_mac,
+            PeFormat::Fp16 => self.baseline.fp16_mac,
+            PeFormat::Fp32 => self.baseline.fp32_mac,
+            PeFormat::Int8 => self.baseline.int8_mac,
+        }
+    }
+
+    /// Operand-delivery overhead per MAC.
+    pub fn delivery_mac_fj(&self, format: PeFormat) -> f64 {
+        self.delivery.per_bit * format.bits() as f64
+    }
+
+    /// Full PE energy per MAC (Fig. 8 axis).
+    pub fn pe_mac_fj(&self, format: PeFormat) -> f64 {
+        self.datapath_mac_fj(format) + self.delivery_mac_fj(format)
+    }
+
+    /// PE-level breakdown for Fig. 8: datapath vs operand delivery,
+    /// with delivery split by the Table-1 dataflow shares.
+    pub fn pe_breakdown(&self, format: PeFormat) -> EnergyBreakdown {
+        let delivery = self.delivery_mac_fj(format);
+        // BufferA is read once per 16 cycles, BufferB every cycle shared
+        // across 32 lanes; collector writes once per lane per cycle.
+        // Shares chosen to reflect that traffic pattern.
+        let parts = vec![
+            ("datapath".to_string(), self.datapath_mac_fj(format)),
+            ("bufferB".to_string(), delivery * 0.45),
+            ("bufferA".to_string(), delivery * 0.20),
+            ("collector".to_string(), delivery * 0.25),
+            ("ppu".to_string(), delivery * 0.10),
+        ];
+        EnergyBreakdown { label: format.name(), parts }
+    }
+
+    /// Energy for a workload of `macs` MACs, in millijoules.
+    pub fn workload_mj(&self, format: PeFormat, macs: f64) -> f64 {
+        self.pe_mac_fj(format) * macs * 1e-12 // fJ -> mJ
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table10_energy_anchors() {
+        // Paper Table 10: 12.29 / 14.71 / 17.24 / 19.02 fJ per op for
+        // LUT entries 1/2/4/8. Model must land within 15% of each and
+        // be strictly increasing.
+        let m = EnergyModel::paper();
+        let want = [
+            (PeFormat::Lns(ConvertMode::Mitchell), 12.29),
+            (PeFormat::Lns(ConvertMode::Hybrid { lut_bits: 1 }), 14.71),
+            (PeFormat::Lns(ConvertMode::Hybrid { lut_bits: 2 }), 17.24),
+            (PeFormat::Lns(ConvertMode::ExactLut), 19.02),
+        ];
+        let mut prev = 0.0;
+        for (fmt, paper) in want {
+            let got = m.datapath_mac_fj(fmt);
+            assert!(
+                (got - paper).abs() / paper < 0.15,
+                "{}: {got} vs paper {paper}",
+                fmt.name()
+            );
+            assert!(got > prev);
+            prev = got;
+        }
+    }
+
+    #[test]
+    fn pe_ratios_match_paper() {
+        // Section 6.2: LNS is 2.2x / 4.6x / 11x more energy-efficient
+        // than FP8 / FP16 / FP32 at the PE level. Accept +-20%.
+        let m = EnergyModel::paper();
+        let lns = m.pe_mac_fj(PeFormat::Lns(ConvertMode::ExactLut));
+        for (fmt, ratio) in [
+            (PeFormat::Fp8, 2.2),
+            (PeFormat::Fp16, 4.6),
+            (PeFormat::Fp32, 11.0),
+        ] {
+            let got = m.pe_mac_fj(fmt) / lns;
+            assert!(
+                (got - ratio).abs() / ratio < 0.2,
+                "{}: ratio {got} vs paper {ratio}",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fig9_lut_multiply_scales_with_bins() {
+        let m = EnergyModel::paper();
+        let b1 = m.lns_datapath_breakdown(LnsFormat::PAPER8, ConvertMode::Mitchell);
+        let b8 = m.lns_datapath_breakdown(LnsFormat::PAPER8, ConvertMode::ExactLut);
+        let lut1 = b1.parts.iter().find(|(n, _)| n == "LUT multiply").unwrap().1;
+        let lut8 = b8.parts.iter().find(|(n, _)| n == "LUT multiply").unwrap().1;
+        assert!((lut8 / lut1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delivery_scales_with_bits() {
+        let m = EnergyModel::paper();
+        assert_eq!(
+            m.delivery_mac_fj(PeFormat::Fp32),
+            4.0 * m.delivery_mac_fj(PeFormat::Fp8)
+        );
+    }
+
+    #[test]
+    fn breakdown_total_equals_pe_mac() {
+        let m = EnergyModel::paper();
+        for fmt in [
+            PeFormat::Lns(ConvertMode::ExactLut),
+            PeFormat::Fp8,
+            PeFormat::Fp32,
+        ] {
+            let b = m.pe_breakdown(fmt);
+            assert!((b.total() - m.pe_mac_fj(fmt)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn workload_units() {
+        let m = EnergyModel::paper();
+        // 1e12 MACs at ~100 fJ/MAC ~= 100 mJ, sanity of unit conversion.
+        let mj = m.workload_mj(PeFormat::Lns(ConvertMode::ExactLut), 1e12);
+        assert!(mj > 50.0 && mj < 200.0, "{mj}");
+    }
+}

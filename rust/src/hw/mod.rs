@@ -1,0 +1,14 @@
+//! Hardware model of the LNS-Madam accelerator (Section 5).
+//!
+//! [`energy`] prices each PE component per operation (calibrated to the
+//! paper's published anchors), [`pe`] models the Fig. 5 PE micro-
+//! architecture and its dataflow, and [`workload`] counts MACs for the
+//! evaluation models so Table 8 / Figs. 2, 8, 9, 10 can be regenerated.
+
+pub mod energy;
+pub mod pe;
+pub mod workload;
+
+pub use energy::{EnergyBreakdown, EnergyModel, PeFormat};
+pub use pe::{Pass, PeConfig};
+pub use workload::{gpt_workloads, table8_workloads, Workload};

@@ -1,0 +1,138 @@
+//! Workload op-count models: MACs per training iteration for the
+//! evaluation models (Table 8, Fig. 2) and the GPT scaling study
+//! (Fig. 10, after Narayanan et al.'s throughput-efficient scaling).
+//!
+//! A training iteration = forward + backward(input) + backward(weight),
+//! i.e. ~3x the forward MACs (the paper's PE processes all three passes
+//! through the same buffers, Table 2).
+
+/// A named workload with its per-iteration forward MAC count.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    /// Forward-pass MACs for one iteration (batch included).
+    pub fwd_macs: f64,
+    /// Passes counted per iteration (3 = fwd + bwd-input + bwd-weight).
+    pub passes: f64,
+}
+
+impl Workload {
+    pub fn total_macs(&self) -> f64 {
+        self.fwd_macs * self.passes
+    }
+}
+
+/// The four Table-8 evaluation workloads. Forward MAC counts are the
+/// standard published numbers (batch 1, ImageNet 224x224 for ResNets;
+/// sequence 128 for BERT) — chosen because they reproduce the paper's
+/// relative model-to-model energy ratios.
+pub fn table8_workloads() -> Vec<Workload> {
+    vec![
+        Workload { name: "ResNet-18".into(), fwd_macs: 1.82e9, passes: 3.0 },
+        Workload { name: "ResNet-50".into(), fwd_macs: 4.1e9, passes: 3.0 },
+        // BERT fwd MACs ~= params * seq tokens (GEMM-dominated).
+        Workload { name: "BERT-Base".into(), fwd_macs: 110e6 * 128.0, passes: 3.0 },
+        Workload { name: "BERT-Large".into(), fwd_macs: 340e6 * 128.0, passes: 3.0 },
+    ]
+}
+
+/// GPT-style model sizes for Fig. 10 (1B..1T parameters). MACs per
+/// iteration follow the 6*P*T FLOPs rule => 3*P*T MACs (fwd+bwd), with
+/// sequence/batch from Narayanan et al.'s scaling configuration.
+pub fn gpt_workloads() -> Vec<Workload> {
+    let configs: &[(&str, f64)] = &[
+        ("GPT-1B", 1e9),
+        ("GPT-4B", 4e9),
+        ("GPT-18B", 18e9),
+        ("GPT-39B", 39e9),
+        ("GPT-76B", 76e9),
+        ("GPT-145B", 145e9),
+        ("GPT-310B", 310e9),
+        ("GPT-530B", 530e9),
+        ("GPT-1T", 1e12),
+    ];
+    let tokens_per_iter = 2048.0; // seq length, batch folded out (per-sample)
+    configs
+        .iter()
+        .map(|(name, p)| Workload {
+            name: name.to_string(),
+            fwd_macs: p * tokens_per_iter,
+            passes: 3.0,
+        })
+        .collect()
+}
+
+/// MACs for one quantized-GEMM training iteration of the *reproduction*
+/// models (used to report measured-system energy next to paper-model
+/// energy in EXPERIMENTS.md).
+pub fn mlp_macs(layer_sizes: &[usize], batch: usize) -> f64 {
+    let fwd: f64 = layer_sizes
+        .windows(2)
+        .map(|w| (w[0] * w[1] * batch) as f64)
+        .sum();
+    fwd * 3.0
+}
+
+/// Transformer per-iteration MACs (GEMMs only, attention included).
+pub fn transformer_macs(
+    d_model: usize,
+    n_layer: usize,
+    d_ff: usize,
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+) -> f64 {
+    let t = (seq * batch) as f64;
+    let d = d_model as f64;
+    let proj = 4.0 * d * d; // wq wk wv wo
+    let ff = 2.0 * d * d_ff as f64;
+    let attn = 2.0 * d * seq as f64; // qk^T and att*v per token
+    let per_layer = proj + ff + attn;
+    let head = d * vocab as f64;
+    (per_layer * n_layer as f64 + head) * t * 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_model_ordering() {
+        let w = table8_workloads();
+        // Energy ordering in Table 8: R18 < R50 < BERT-B < BERT-L.
+        for pair in w.windows(2) {
+            assert!(pair[0].total_macs() < pair[1].total_macs());
+        }
+    }
+
+    #[test]
+    fn bert_ratio_roughly_matches_paper() {
+        // Table 8 LNS column: BERT-Large / BERT-Base = 27.85/7.99 ~ 3.5;
+        // our MAC model gives params ratio 340/110 ~ 3.1. Same shape.
+        let w = table8_workloads();
+        let ratio = w[3].total_macs() / w[2].total_macs();
+        assert!((ratio - 3.49).abs() < 0.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gpt_scaling_spans_three_decades() {
+        let w = gpt_workloads();
+        let first = w.first().unwrap().total_macs();
+        let last = w.last().unwrap().total_macs();
+        assert!((last / first - 1000.0).abs() / 1000.0 < 0.01);
+    }
+
+    #[test]
+    fn mlp_mac_count() {
+        // 2 GEMMs: 4*8 and 8*2, batch 3, x3 passes.
+        let macs = mlp_macs(&[4, 8, 2], 3);
+        assert_eq!(macs, ((4 * 8 + 8 * 2) * 3 * 3) as f64);
+    }
+
+    #[test]
+    fn transformer_macs_positive_and_scales() {
+        let small = transformer_macs(128, 2, 512, 256, 64, 16);
+        let big = transformer_macs(256, 4, 1024, 256, 64, 16);
+        assert!(small > 0.0 && big > 4.0 * small);
+    }
+}

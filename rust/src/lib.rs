@@ -1,0 +1,27 @@
+//! # LNS-Madam — low-precision training in a logarithmic number system
+//!
+//! Reproduction of *LNS-Madam: Low-Precision Training in Logarithmic
+//! Number System using Multiplicative Weight Update* (Zhao et al., 2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): Q_log
+//!   quantization, the Fig. 6 LNS-datapath matmul, the Madam step.
+//! * **L2** — JAX quantized models (`python/compile/model.py`), AOT
+//!   lowered once to HLO-text artifacts (`make artifacts`).
+//! * **L3** — this crate: the [`lns`] number-format substrate, the
+//!   [`optim`] quantized-weight-update optimizers (Madam, Algorithm 1),
+//!   the [`hw`] energy model of the PE, the [`runtime`] PJRT loader,
+//!   and the [`coordinator`] that owns LNS weight state and trains
+//!   models through the compiled artifacts. Python never runs on the
+//!   training path.
+//!
+//! See DESIGN.md for the experiment index (every paper table/figure →
+//! bench target) and EXPERIMENTS.md for measured results.
+
+pub mod coordinator;
+pub mod hw;
+pub mod lns;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,197 @@
+//! LNS -> integer (linear) conversion: exact LUT+shift, Mitchell, and the
+//! paper's hybrid approximation (Section 2.2–2.3, Appendix .3).
+//!
+//! The core identity for gamma = 2^b:
+//!
+//!   2^(p/gamma) = 2^(p >> b) * 2^((p & (gamma-1)) / gamma)
+//!               = (LUT[p & (gamma-1)] << (p >> b))
+//!
+//! so conversion is a table lookup on the remainder LSBs plus a shift by
+//! the quotient MSBs. The hybrid scheme splits the remainder again:
+//! its MSBs index a smaller LUT, its LSBs use Mitchell's approximation
+//! 2^(l/gamma) ~= 1 + l/gamma, trading LUT area for a bounded error.
+
+use crate::lns::format::LnsFormat;
+
+/// Conversion strategy between logarithmic and linear domains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvertMode {
+    /// Full-precision `exp2` (reference; no hardware analogue).
+    Reference,
+    /// gamma-entry LUT + shift: bit-exact per Eq. (2).
+    ExactLut,
+    /// Pure Mitchell approximation on the whole remainder (LUT size 1).
+    Mitchell,
+    /// Hybrid: `lut_bits` MSBs of the remainder via LUT, rest Mitchell.
+    /// `Hybrid { lut_bits: b }` == ExactLut when 2^lut_bits >= gamma.
+    Hybrid { lut_bits: u32 },
+}
+
+impl ConvertMode {
+    /// Number of LUT entries this mode costs in hardware.
+    pub fn lut_entries(&self, fmt: LnsFormat) -> u32 {
+        match self {
+            ConvertMode::Reference => 0,
+            ConvertMode::ExactLut => fmt.gamma,
+            ConvertMode::Mitchell => 1,
+            ConvertMode::Hybrid { lut_bits } => 1 << lut_bits.min(&fmt.remainder_bits()),
+        }
+    }
+}
+
+/// Precomputed converter for one format+mode: the object the datapath
+/// holds per MAC unit.
+#[derive(Clone, Debug)]
+pub struct Converter {
+    pub fmt: LnsFormat,
+    pub mode: ConvertMode,
+    /// LUT of 2^(i * span / gamma) for the remainder-MSB bins.
+    lut: Vec<f64>,
+    /// Remainder LSB span per LUT bin (1 == exact).
+    span: u32,
+}
+
+impl Converter {
+    pub fn new(fmt: LnsFormat, mode: ConvertMode) -> Self {
+        let gamma = fmt.gamma;
+        let (entries, span) = match mode {
+            ConvertMode::Reference => (0u32, 1u32),
+            ConvertMode::ExactLut => (gamma, 1),
+            ConvertMode::Mitchell => (1, gamma),
+            ConvertMode::Hybrid { lut_bits } => {
+                let bits = lut_bits.min(fmt.remainder_bits());
+                (1 << bits, gamma >> bits)
+            }
+        };
+        let lut = (0..entries)
+            .map(|i| ((i * span) as f64 / gamma as f64).exp2())
+            .collect();
+        Converter { fmt, mode, lut, span }
+    }
+
+    /// Convert a product exponent `p` (sum of two codes, so up to
+    /// 2*max_code) from log domain to linear, per the selected mode.
+    /// Returns the unscaled magnitude 2^(p/gamma) (approximated).
+    #[inline]
+    pub fn convert(&self, p: u32) -> f64 {
+        let gamma = self.fmt.gamma;
+        match self.mode {
+            ConvertMode::Reference => (p as f64 / gamma as f64).exp2(),
+            _ => {
+                let q = p >> self.fmt.remainder_bits(); // quotient (shift)
+                let r = p & (gamma - 1); // remainder
+                let r_msb = r / self.span;
+                let r_lsb = r % self.span;
+                // LUT on remainder MSBs; Mitchell on remainder LSBs.
+                let base = self.lut[r_msb as usize];
+                let mitchell = 1.0 + r_lsb as f64 / gamma as f64;
+                (q as f64).exp2() * base * mitchell
+            }
+        }
+    }
+
+    /// Worst-case relative error of this mode over all remainders.
+    pub fn max_rel_error(&self) -> f64 {
+        let gamma = self.fmt.gamma;
+        let mut worst = 0.0f64;
+        for p in 0..(2 * self.fmt.max_code() + 1) {
+            let exact = (p as f64 / gamma as f64).exp2();
+            let got = self.convert(p);
+            worst = worst.max(((got - exact) / exact).abs());
+        }
+        worst
+    }
+}
+
+/// Mitchell's bound: max over l in [0, span) of (1+l/g) / 2^(l/g) - 1.
+/// Used by tests to check the measured error against theory.
+pub fn mitchell_bound(gamma: u32, span: u32) -> f64 {
+    let g = gamma as f64;
+    let mut worst = 0.0f64;
+    // The maximum of (1+t)/2^t over t in [0, span/g) is at t = 1/ln2 - 1
+    // if inside the interval, else at the right edge; scan finely.
+    let steps = 10_000;
+    for i in 0..steps {
+        let t = (span as f64 / g) * i as f64 / steps as f64;
+        let err = (1.0 + t) / t.exp2() - 1.0;
+        worst = worst.max(err.abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn exact_lut_is_exact() {
+        for gamma in [1u32, 2, 4, 8, 16, 32] {
+            let fmt = LnsFormat::new(8, gamma);
+            let conv = Converter::new(fmt, ConvertMode::ExactLut);
+            for p in 0..(2 * fmt.max_code() + 1) {
+                let exact = (p as f64 / gamma as f64).exp2();
+                let got = conv.convert(p);
+                assert!(
+                    ((got - exact) / exact).abs() < 1e-12,
+                    "gamma={gamma} p={p}: {got} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_with_full_bits_equals_exact() {
+        let fmt = LnsFormat::new(8, 8);
+        let full = Converter::new(fmt, ConvertMode::Hybrid { lut_bits: 3 });
+        let exact = Converter::new(fmt, ConvertMode::ExactLut);
+        for p in 0..255 {
+            assert_eq!(full.convert(p), exact.convert(p));
+        }
+    }
+
+    #[test]
+    fn lut_sizes_match_paper_table10() {
+        // Table 10 sweeps LUT entries {1, 2, 4, 8} at gamma=8.
+        let fmt = LnsFormat::new(8, 8);
+        assert_eq!(ConvertMode::Mitchell.lut_entries(fmt), 1);
+        assert_eq!(ConvertMode::Hybrid { lut_bits: 1 }.lut_entries(fmt), 2);
+        assert_eq!(ConvertMode::Hybrid { lut_bits: 2 }.lut_entries(fmt), 4);
+        assert_eq!(ConvertMode::Hybrid { lut_bits: 3 }.lut_entries(fmt), 8);
+        assert_eq!(ConvertMode::ExactLut.lut_entries(fmt), 8);
+    }
+
+    #[test]
+    fn approx_error_within_mitchell_bound_and_monotone() {
+        let fmt = LnsFormat::new(8, 8);
+        let mut prev = f64::INFINITY;
+        for (mode, span) in [
+            (ConvertMode::Mitchell, 8u32),
+            (ConvertMode::Hybrid { lut_bits: 1 }, 4),
+            (ConvertMode::Hybrid { lut_bits: 2 }, 2),
+            (ConvertMode::Hybrid { lut_bits: 3 }, 1),
+        ] {
+            let conv = Converter::new(fmt, mode);
+            let err = conv.max_rel_error();
+            let bound = mitchell_bound(fmt.gamma, span) + 1e-9;
+            assert!(err <= bound, "{mode:?}: err {err} > bound {bound}");
+            assert!(err <= prev + 1e-12, "error should shrink with LUT size");
+            prev = err;
+        }
+        // Exact mode has zero error.
+        assert!(Converter::new(fmt, ConvertMode::ExactLut).max_rel_error() < 1e-12);
+    }
+
+    #[test]
+    fn quotient_remainder_split_property() {
+        // For gamma a power of 2: p = (p>>b)*gamma + (p & (gamma-1)).
+        property(1000, |g| {
+            let b = g.usize_in(0, 5) as u32;
+            let gamma = 1u32 << b;
+            let p = g.usize_in(0, 1 << 12) as u32;
+            let q = p >> b;
+            let r = p & (gamma - 1);
+            crate::prop_assert!(g, q * gamma + r == p, "p={p} gamma={gamma}");
+        });
+    }
+}

@@ -1,0 +1,345 @@
+//! Bit-faithful simulator of the Fig. 6 LNS-Madam Vector MAC Unit.
+//!
+//! Given LNS-encoded operands, the unit:
+//!   1. multiplies by *adding* 7-bit exponent codes (8-bit sum w/ carry)
+//!      and XOR-ing signs,
+//!   2. splits each product exponent into quotient (MSB) / remainder
+//!      (LSB, `b = log2(gamma)` bits),
+//!   3. shifts +/-1 by the quotient and accumulates into one signed
+//!      integer partial sum **per remainder bin** (the per-bin adder
+//!      trees + 24-bit accumulation collector),
+//!   4. after the reduction, multiplies each bin by its LUT constant
+//!      2^(r/gamma) and sums — one multiply per bin per output, not per
+//!      element (this is the entire energy win of the design),
+//!   5. optionally applies the hybrid Mitchell approximation, which in
+//!      hardware folds `1 + l/gamma` into the shifted addend.
+//!
+//! Every step counts the hardware ops it performs so the energy model
+//! (`hw::energy`) can price a workload from first principles.
+
+use crate::lns::convert::{ConvertMode, Converter};
+use crate::lns::format::LnsFormat;
+use crate::lns::quant::LnsTensor;
+use crate::util::tensor::Tensor;
+
+/// Hardware op counters for one simulated GEMM.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Exponent additions (one per MAC).
+    pub exp_adds: u64,
+    /// Sign XORs (one per MAC).
+    pub sign_xors: u64,
+    /// Shift operations (one per MAC).
+    pub shifts: u64,
+    /// Integer adds into the per-bin collectors (one per MAC).
+    pub collector_adds: u64,
+    /// LUT-constant multiplies (n_bins per output element).
+    pub lut_muls: u64,
+    /// Mitchell adjustment adds (one per MAC when hybrid span > 1).
+    pub mitchell_adds: u64,
+    /// Final linear-domain accumulations of bin results.
+    pub final_adds: u64,
+}
+
+impl OpCounts {
+    pub fn total_macs(&self) -> u64 {
+        self.exp_adds
+    }
+
+    pub fn add(&mut self, other: &OpCounts) {
+        self.exp_adds += other.exp_adds;
+        self.sign_xors += other.sign_xors;
+        self.shifts += other.shifts;
+        self.collector_adds += other.collector_adds;
+        self.lut_muls += other.lut_muls;
+        self.mitchell_adds += other.mitchell_adds;
+        self.final_adds += other.final_adds;
+    }
+}
+
+/// Microarchitectural parameters of the PE datapath (Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct MacConfig {
+    pub format: LnsFormat,
+    pub convert: ConvertMode,
+    /// Accumulator width in bits (24 in the paper). The collector
+    /// saturates rather than wraps — matches a guarded accumulator.
+    pub acc_bits: u32,
+    /// Vector lanes per MAC unit (32 in the paper); affects only the
+    /// op-count bookkeeping granularity, not the math.
+    pub vector_size: u32,
+}
+
+impl MacConfig {
+    pub fn paper() -> Self {
+        MacConfig {
+            format: LnsFormat::PAPER8,
+            convert: ConvertMode::ExactLut,
+            acc_bits: 24,
+            vector_size: 32,
+        }
+    }
+}
+
+/// The simulated vector MAC unit.
+pub struct VectorMacUnit {
+    pub cfg: MacConfig,
+    conv: Converter,
+    pub counts: OpCounts,
+}
+
+impl VectorMacUnit {
+    pub fn new(cfg: MacConfig) -> Self {
+        let conv = Converter::new(cfg.format, cfg.convert);
+        VectorMacUnit { cfg, conv, counts: OpCounts::default() }
+    }
+
+    fn n_bins(&self) -> u32 {
+        self.conv.mode.lut_entries(self.cfg.format).max(1)
+    }
+
+    fn span(&self) -> u32 {
+        self.cfg.format.gamma / self.n_bins()
+    }
+
+    /// Dot product of two LNS-encoded vectors given as (sign, code)
+    /// slices. Returns the *unscaled* integer-domain result; the caller
+    /// multiplies by the operand scales (the PPU's job).
+    ///
+    /// Collector model: product exponents span up to 2*max_code (2^31.75
+    /// in value) — far wider than the 24-bit collector — so the hardware
+    /// accumulates in a *block-exponent* window anchored at the largest
+    /// product in the vector: addends more than (acc_bits - headroom)
+    /// binades below the max are swamped and drop out, exactly the
+    /// precision loss a fixed-width guarded accumulator exhibits.
+    pub fn dot(&mut self, sa: &[i8], ea: &[u32], sb: &[i8], eb: &[u32]) -> f64 {
+        debug_assert_eq!(sa.len(), sb.len());
+        let gamma = self.cfg.format.gamma;
+        let b = self.cfg.format.remainder_bits();
+        let n_bins = self.n_bins();
+        let span = self.span();
+
+        // Pass 1 (hardware: max-exponent detect for the block window).
+        let mut q_max: i64 = -1;
+        for i in 0..sa.len() {
+            if sa[i] != 0 && sb[i] != 0 {
+                q_max = q_max.max(((ea[i] + eb[i]) >> b) as i64);
+            }
+        }
+        if q_max < 0 {
+            // All-zero vector: still count the lane ops, result is 0.
+            self.counts.exp_adds += sa.len() as u64;
+            self.counts.sign_xors += sa.len() as u64;
+            return 0.0;
+        }
+        // Carry headroom for n lanes, leaving frac_bits of precision
+        // below the largest product inside the acc_bits-wide collector.
+        let headroom = 64 - (sa.len() as u64).leading_zeros() as i64;
+        let frac_bits = (self.cfg.acc_bits as i64 - 1 - headroom).max(0);
+
+        // Per-remainder-bin integer collectors, in units of
+        // 2^(q_max - frac_bits) / gamma. Hybrid mode scales each addend
+        // by (gamma + lsb) instead of gamma — an integer-exact way to
+        // fold Mitchell's (1 + lsb/gamma) into the adder tree.
+        let mut bins = vec![0i64; n_bins as usize];
+        for i in 0..sa.len() {
+            self.counts.exp_adds += 1;
+            self.counts.sign_xors += 1;
+            if sa[i] == 0 || sb[i] == 0 {
+                continue; // zero flag: lane contributes nothing
+            }
+            let p = ea[i] + eb[i]; // 8-bit adder with carry-out
+            let sign = (sa[i] as i64) * (sb[i] as i64);
+            let q = (p >> b) as i64;
+            let r = p & (gamma - 1);
+            let r_msb = r / span;
+            let r_lsb = r % span;
+            self.counts.shifts += 1;
+            let rel = q - q_max + frac_bits; // shift within the window
+            if rel < 0 {
+                // Swamped: too small for the collector's precision.
+                self.counts.collector_adds += 1;
+                continue;
+            }
+            let mut addend = sign << rel;
+            if span > 1 {
+                self.counts.mitchell_adds += 1;
+                addend *= gamma as i64 + r_lsb as i64;
+            } else {
+                addend *= gamma as i64;
+            }
+            self.counts.collector_adds += 1;
+            bins[r_msb as usize] += addend;
+        }
+
+        // LUT multiply per bin + final accumulation (PPU side).
+        let window = ((q_max - frac_bits) as f64).exp2();
+        let mut acc = 0.0f64;
+        for (i, &bin) in bins.iter().enumerate() {
+            self.counts.lut_muls += 1;
+            self.counts.final_adds += 1;
+            let lut = ((i as u32 * span) as f64 / gamma as f64).exp2();
+            acc += bin as f64 / gamma as f64 * lut;
+        }
+        acc * window
+    }
+
+    /// Full GEMM over encoded tensors: C[m,n] = sum_k A[m,k] * B[k,n],
+    /// applying group scales per output element. This is the semantics
+    /// the Pallas kernel `lns_matmul.py` must match (cross-layer test).
+    pub fn matmul(&mut self, a: &LnsTensor, b: &LnsTensor) -> Tensor {
+        assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+        assert_eq!(a.format, b.format);
+        let mut out = Tensor::zeros(a.rows, b.cols);
+        // Gather B columns once (the hardware reads BufferB once per
+        // cycle and reuses across 32 lanes — column-major staging).
+        let mut col_signs = vec![0i8; b.rows];
+        let mut col_codes = vec![0u32; b.rows];
+        for j in 0..b.cols {
+            for k in 0..b.rows {
+                col_signs[k] = b.signs[k * b.cols + j];
+                col_codes[k] = b.codes[k * b.cols + j];
+            }
+            for i in 0..a.rows {
+                let row = i * a.cols;
+                let unscaled = self.dot(
+                    &a.signs[row..row + a.cols],
+                    &a.codes[row..row + a.cols],
+                    &col_signs,
+                    &col_codes,
+                );
+                // PPU scaling: per-group scales of both operands.
+                let sa = a.scale_at(i, 0);
+                let sb = b.scale_at(0, j);
+                out.data[i * b.cols + j] = (unscaled * sa as f64 * sb as f64) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::format::Rounding;
+    use crate::lns::quant::{encode_tensor, quantize_tensor, Scaling};
+    use crate::util::rng::Rng;
+
+    fn enc(t: &Tensor, fmt: LnsFormat) -> LnsTensor {
+        encode_tensor(t, fmt, Scaling::PerTensor, Rounding::Nearest, None)
+    }
+
+    #[test]
+    fn datapath_matches_decoded_matmul_exact_mode() {
+        let mut rng = Rng::new(2);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(8, 16, 1.0, &mut rng);
+        let b = Tensor::randn(16, 8, 1.0, &mut rng);
+        let (ea, eb) = (enc(&a, fmt), enc(&b, fmt));
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        let got = mac.matmul(&ea, &eb);
+        // Reference: decode then exact matmul.
+        let want = ea.decode().matmul(&eb.decode());
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn quantized_matmul_tracks_real_matmul() {
+        let mut rng = Rng::new(7);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(16, 32, 1.0, &mut rng);
+        let b = Tensor::randn(32, 16, 1.0, &mut rng);
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        let got = mac.matmul(&enc(&a, fmt), &enc(&b, fmt));
+        let aq = quantize_tensor(&a, fmt, Scaling::PerTensor);
+        let bq = quantize_tensor(&b, fmt, Scaling::PerTensor);
+        let want = aq.matmul(&bq);
+        let scale = want.abs_max();
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - w).abs() <= 1e-3 * scale, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn op_counts_per_mac() {
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::from_vec(2, 4, vec![1.0; 8]);
+        let b = Tensor::from_vec(4, 2, vec![1.0; 8]);
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        let _ = mac.matmul(&enc(&a, fmt), &enc(&b, fmt));
+        // 2*2 outputs * 4 MACs each = 16 MACs.
+        assert_eq!(mac.counts.exp_adds, 16);
+        assert_eq!(mac.counts.shifts, 16);
+        assert_eq!(mac.counts.collector_adds, 16);
+        // Exact LUT: gamma(=8) bins per output element => 4*8 lut muls.
+        assert_eq!(mac.counts.lut_muls, 32);
+        assert_eq!(mac.counts.mitchell_adds, 0);
+    }
+
+    #[test]
+    fn hybrid_mode_still_close() {
+        let mut rng = Rng::new(11);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(8, 32, 1.0, &mut rng);
+        let b = Tensor::randn(32, 8, 1.0, &mut rng);
+        let want = {
+            let mut mac = VectorMacUnit::new(MacConfig::paper());
+            mac.matmul(&enc(&a, fmt), &enc(&b, fmt))
+        };
+        for lut_bits in [0u32, 1, 2] {
+            let mut cfg = MacConfig::paper();
+            cfg.convert = ConvertMode::Hybrid { lut_bits };
+            let mut mac = VectorMacUnit::new(cfg);
+            let got = mac.matmul(&enc(&a, fmt), &enc(&b, fmt));
+            // Mitchell worst case is ~8.6% per element; the summed
+            // output of random signs stays well inside 15%.
+            let denom = want.abs_max();
+            for (g, w) in got.data.iter().zip(want.data.iter()) {
+                assert!(
+                    (g - w).abs() <= 0.15 * denom,
+                    "lut_bits={lut_bits}: {g} vs {w}"
+                );
+            }
+            assert!(mac.counts.mitchell_adds > 0);
+        }
+    }
+
+    #[test]
+    fn zero_lanes_contribute_nothing() {
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::from_vec(1, 4, vec![1.0, 0.0, 2.0, 0.0]);
+        let b = Tensor::from_vec(4, 1, vec![3.0, 100.0, 0.5, -100.0]);
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        let got = mac.matmul(&enc(&a, fmt), &enc(&b, fmt));
+        let aq = quantize_tensor(&a, fmt, Scaling::PerTensor);
+        let bq = quantize_tensor(&b, fmt, Scaling::PerTensor);
+        let want = aq.matmul(&bq).data[0];
+        assert!((got.data[0] - want).abs() < 1e-3 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn narrow_collector_swamps_small_addends() {
+        // With a tiny collector, small products accumulated against a
+        // dominant one get dropped (block-window underflow) — the
+        // characteristic error of a fixed-width accumulator. It must
+        // never wrap to a wrong sign, and must keep the dominant term.
+        let fmt = LnsFormat::new(8, 8);
+        let n = 64;
+        let mut av = vec![1e-3f32; n];
+        av[0] = 1.0; // dominant product
+        let a = Tensor::from_vec(1, n, av);
+        let b = Tensor::from_vec(n, 1, vec![1.0; n]);
+        let mut cfg = MacConfig::paper();
+        cfg.acc_bits = 8;
+        let mut mac = VectorMacUnit::new(cfg);
+        let got = mac.matmul(&enc(&a, fmt), &enc(&b, fmt)).data[0];
+        assert!(got > 0.9 && got < 1.2, "dominant term must survive: {got}");
+
+        // A wide collector keeps the small terms too.
+        let mut mac24 = VectorMacUnit::new(MacConfig::paper());
+        let wide = mac24.matmul(&enc(&a, fmt), &enc(&b, fmt)).data[0];
+        assert!(wide > got, "wide {wide} should exceed narrow {got}");
+    }
+}

@@ -1,0 +1,225 @@
+//! Multi-base LNS format definition and scalar encode/decode.
+//!
+//! A number is `sign * s * 2^(e / gamma)` with integer exponent code
+//! `e in [0, 2^(B-1)-1]`, base factor `gamma = 2^b` (Section 2.1 of the
+//! paper), and a group scale `s` chosen so the largest magnitude in the
+//! group maps to the top code. One bit holds the sign; zero is a special
+//! flag (hardware keeps a zero lane; here `LnsValue::ZERO`).
+
+/// A (bitwidth, base-factor) LNS format. `gamma` must be a power of two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LnsFormat {
+    /// Total bitwidth B (1 sign bit + B-1 exponent bits).
+    pub bits: u32,
+    /// Base factor gamma = 2^b; the log-base is 2^(1/gamma).
+    pub gamma: u32,
+}
+
+impl LnsFormat {
+    pub const fn new(bits: u32, gamma: u32) -> Self {
+        assert!(bits >= 2 && bits <= 24, "bitwidth out of supported range");
+        assert!(gamma.is_power_of_two(), "gamma must be a power of two");
+        LnsFormat { bits, gamma }
+    }
+
+    /// The paper's hardware configuration: B = 8, gamma = 8.
+    pub const PAPER8: LnsFormat = LnsFormat::new(8, 8);
+
+    /// Top exponent code 2^(B-1) - 1.
+    #[inline]
+    pub fn max_code(&self) -> u32 {
+        (1u32 << (self.bits - 1)) - 1
+    }
+
+    /// log2 units of dynamic range: (0, (2^(B-1)-1)/gamma) — Table 3.
+    #[inline]
+    pub fn dynamic_range_log2(&self) -> f64 {
+        self.max_code() as f64 / self.gamma as f64
+    }
+
+    /// Quantization gap around code e, in relative terms:
+    /// values at adjacent codes differ by the factor 2^(1/gamma).
+    #[inline]
+    pub fn gap_factor(&self) -> f64 {
+        (1.0 / self.gamma as f64).exp2()
+    }
+
+    /// Worst-case relative round-trip error with round-to-nearest:
+    /// 2^(1/(2*gamma)) - 1.
+    #[inline]
+    pub fn max_rel_error(&self) -> f64 {
+        (1.0 / (2.0 * self.gamma as f64)).exp2() - 1.0
+    }
+
+    /// Number of remainder bins b = log2(gamma) for the LSB/MSB split.
+    #[inline]
+    pub fn remainder_bits(&self) -> u32 {
+        self.gamma.trailing_zeros()
+    }
+
+    /// Scale s so that max|x| = absmax maps onto the top code.
+    #[inline]
+    pub fn scale_for_absmax(&self, absmax: f32) -> f32 {
+        let absmax = if absmax > 0.0 { absmax } else { 1.0 };
+        absmax * (-(self.max_code() as f32) / self.gamma as f32).exp2()
+    }
+}
+
+/// One LNS-encoded scalar: sign in {-1, 0, +1}, exponent code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LnsValue {
+    pub sign: i8,
+    pub code: u32,
+}
+
+impl LnsValue {
+    pub const ZERO: LnsValue = LnsValue { sign: 0, code: 0 };
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.sign == 0
+    }
+}
+
+/// Rounding mode for encoding (Appendix .1 uses stochastic rounding for
+/// the theory; deterministic nearest is what ships in hardware).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    Nearest,
+    Stochastic,
+}
+
+impl LnsFormat {
+    /// Encode `x` with group scale `s` and round-to-nearest.
+    #[inline]
+    pub fn encode(&self, x: f32, scale: f32) -> LnsValue {
+        if x == 0.0 || !x.is_finite() {
+            return LnsValue::ZERO;
+        }
+        // Ties-to-even to match XLA/jnp rounding (cross-layer bit parity).
+        let e = ((x.abs() / scale).log2() * self.gamma as f32).round_ties_even();
+        let code = e.clamp(0.0, self.max_code() as f32) as u32;
+        LnsValue { sign: if x > 0.0 { 1 } else { -1 }, code }
+    }
+
+    /// Encode with stochastic rounding driven by `u ~ U[0,1)`.
+    #[inline]
+    pub fn encode_stochastic(&self, x: f32, scale: f32, u: f32) -> LnsValue {
+        if x == 0.0 || !x.is_finite() {
+            return LnsValue::ZERO;
+        }
+        let e = (x.abs() / scale).log2() * self.gamma as f32;
+        let floor = e.floor();
+        let frac = e - floor;
+        let rounded = if u < frac { floor + 1.0 } else { floor };
+        let code = rounded.clamp(0.0, self.max_code() as f32) as u32;
+        LnsValue { sign: if x > 0.0 { 1 } else { -1 }, code }
+    }
+
+    /// Decode back to a real number.
+    #[inline]
+    pub fn decode(&self, v: LnsValue, scale: f32) -> f32 {
+        if v.is_zero() {
+            return 0.0;
+        }
+        v.sign as f32 * scale * (v.code as f32 / self.gamma as f32).exp2()
+    }
+
+    /// Round-trip fake-quantization of one scalar.
+    #[inline]
+    pub fn quantize(&self, x: f32, scale: f32) -> f32 {
+        self.decode(self.encode(x, scale), scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_format_constants() {
+        let f = LnsFormat::PAPER8;
+        assert_eq!(f.max_code(), 127);
+        assert_eq!(f.remainder_bits(), 3);
+        // Table 3 row gamma=8: dynamic range (0, 15.9).
+        assert!((f.dynamic_range_log2() - 15.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table3_dynamic_ranges() {
+        // Table 3: (gamma, dynamic range top) with B = 8.
+        for (gamma, top) in [(1, 127.0), (2, 63.5), (4, 31.8), (8, 15.9), (16, 7.9), (32, 4.0)] {
+            let f = LnsFormat::new(8, gamma);
+            assert!(
+                (f.dynamic_range_log2() - top).abs() < 0.06,
+                "gamma={gamma}: got {}",
+                f.dynamic_range_log2()
+            );
+        }
+    }
+
+    #[test]
+    fn encode_decode_top_code_is_absmax() {
+        let f = LnsFormat::PAPER8;
+        let s = f.scale_for_absmax(3.75);
+        let v = f.encode(3.75, s);
+        assert_eq!(v.code, f.max_code());
+        assert!((f.decode(v, s) - 3.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_roundtrips() {
+        let f = LnsFormat::PAPER8;
+        assert_eq!(f.quantize(0.0, 1.0), 0.0);
+        assert!(f.encode(f32::NAN, 1.0).is_zero());
+    }
+
+    #[test]
+    fn sign_preserved() {
+        let f = LnsFormat::PAPER8;
+        let s = f.scale_for_absmax(1.0);
+        assert!(f.quantize(-0.5, s) < 0.0);
+        assert!(f.quantize(0.5, s) > 0.0);
+    }
+
+    #[test]
+    fn relative_error_bound_nearest() {
+        let f = LnsFormat::new(8, 8);
+        let s = f.scale_for_absmax(1.0);
+        let bound = f.max_rel_error() as f32 + 1e-6;
+        // In-range magnitudes (above the smallest representable s*2^0).
+        for i in 1..1000 {
+            let x = 1.0f32 * i as f32 / 1000.0;
+            if x < s {
+                continue;
+            }
+            let q = f.quantize(x, s);
+            assert!(
+                ((q - x) / x).abs() <= bound,
+                "x={x} q={q} rel={}",
+                ((q - x) / x).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let f = LnsFormat::new(8, 8);
+        let s = f.scale_for_absmax(2.0);
+        let x = 1.2345f32;
+        let exact_log = (x / s).log2() * f.gamma as f32;
+        let mut mean_log = 0.0f64;
+        let n = 40_000;
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..n {
+            let v = f.encode_stochastic(x, s, rng.uniform_f32());
+            mean_log += v.code as f64;
+        }
+        mean_log /= n as f64;
+        // E[SR(e)] = e in log space (Appendix Proposition 1 setup).
+        assert!(
+            (mean_log - exact_log as f64).abs() < 0.02,
+            "mean {mean_log} vs {exact_log}"
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! The multi-base logarithmic number system (LNS) substrate.
+//!
+//! This module is the rust-native implementation of the paper's number
+//! format (Sections 2–3): representation ([`format`]), group-scaled
+//! quantization ([`quant`]), log-to-linear conversion including the
+//! hybrid Mitchell approximation ([`convert`]), the bit-faithful Fig. 6
+//! vector-MAC datapath ([`datapath`]), and the baseline formats the
+//! paper compares against ([`softfloat`]).
+
+pub mod convert;
+pub mod datapath;
+pub mod format;
+pub mod quant;
+pub mod softfloat;
+
+pub use convert::{ConvertMode, Converter};
+pub use datapath::{MacConfig, OpCounts, VectorMacUnit};
+pub use format::{LnsFormat, LnsValue, Rounding};
+pub use quant::{encode_tensor, quantize_tensor, LnsTensor, Scaling};
+pub use softfloat::{FixedPoint, MiniFloat};

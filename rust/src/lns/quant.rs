@@ -1,0 +1,230 @@
+//! Vectorized Q_log quantization over slices and tensors (Section 3).
+//!
+//! Implements per-tensor, per-row and per-column group scaling (the
+//! paper's per-channel scaling for ResNet and per-feature scaling for
+//! BERT), deterministic and stochastic rounding, and the encoded form
+//! used by the datapath simulator.
+
+use crate::lns::format::{LnsFormat, LnsValue, Rounding};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// How group scales are shared across a 2-D tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scaling {
+    PerTensor,
+    /// One scale per row (per-channel for (out, in) conv-style weights).
+    PerRow,
+    /// One scale per column (per-feature for activations).
+    PerCol,
+}
+
+/// An LNS-encoded tensor: sign/code planes plus the group scales.
+#[derive(Clone, Debug)]
+pub struct LnsTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub signs: Vec<i8>,
+    pub codes: Vec<u32>,
+    pub scaling: Scaling,
+    /// One entry (PerTensor) or rows/cols entries.
+    pub scales: Vec<f32>,
+    pub format: LnsFormat,
+}
+
+impl LnsTensor {
+    #[inline]
+    pub fn scale_at(&self, r: usize, c: usize) -> f32 {
+        match self.scaling {
+            Scaling::PerTensor => self.scales[0],
+            Scaling::PerRow => self.scales[r],
+            Scaling::PerCol => self.scales[c],
+        }
+    }
+
+    /// Decode the whole tensor back to f32.
+    pub fn decode(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let i = r * self.cols + c;
+                out.data[i] = self.format.decode(
+                    LnsValue { sign: self.signs[i], code: self.codes[i] },
+                    self.scale_at(r, c),
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Compute group scales for `t` under `scaling`.
+pub fn group_scales(t: &Tensor, fmt: LnsFormat, scaling: Scaling) -> Vec<f32> {
+    match scaling {
+        Scaling::PerTensor => vec![fmt.scale_for_absmax(t.abs_max())],
+        Scaling::PerRow => (0..t.rows)
+            .map(|r| {
+                let m = t.data[r * t.cols..(r + 1) * t.cols]
+                    .iter()
+                    .fold(0.0f32, |m, &x| m.max(x.abs()));
+                fmt.scale_for_absmax(m)
+            })
+            .collect(),
+        Scaling::PerCol => {
+            let mut maxes = vec![0.0f32; t.cols];
+            for r in 0..t.rows {
+                for c in 0..t.cols {
+                    maxes[c] = maxes[c].max(t.at(r, c).abs());
+                }
+            }
+            maxes.into_iter().map(|m| fmt.scale_for_absmax(m)).collect()
+        }
+    }
+}
+
+/// Encode a tensor into LNS planes.
+pub fn encode_tensor(
+    t: &Tensor,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    rounding: Rounding,
+    rng: Option<&mut Rng>,
+) -> LnsTensor {
+    let scales = group_scales(t, fmt, scaling);
+    let mut signs = vec![0i8; t.len()];
+    let mut codes = vec![0u32; t.len()];
+    let mut local_rng;
+    let rng = match rng {
+        Some(r) => r,
+        None => {
+            local_rng = Rng::new(0);
+            &mut local_rng
+        }
+    };
+    for r in 0..t.rows {
+        for c in 0..t.cols {
+            let i = r * t.cols + c;
+            let s = match scaling {
+                Scaling::PerTensor => scales[0],
+                Scaling::PerRow => scales[r],
+                Scaling::PerCol => scales[c],
+            };
+            let v = match rounding {
+                Rounding::Nearest => fmt.encode(t.data[i], s),
+                Rounding::Stochastic => fmt.encode_stochastic(t.data[i], s, rng.uniform_f32()),
+            };
+            signs[i] = v.sign;
+            codes[i] = v.code;
+        }
+    }
+    LnsTensor {
+        rows: t.rows,
+        cols: t.cols,
+        signs,
+        codes,
+        scaling,
+        scales,
+        format: fmt,
+    }
+}
+
+/// Fake-quantize (round-trip) a tensor: Q_log with deterministic rounding.
+pub fn quantize_tensor(t: &Tensor, fmt: LnsFormat, scaling: Scaling) -> Tensor {
+    encode_tensor(t, fmt, scaling, Rounding::Nearest, None).decode()
+}
+
+/// Fake-quantize a flat slice in place with per-tensor scaling.
+pub fn quantize_slice(xs: &mut [f32], fmt: LnsFormat) {
+    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let s = fmt.scale_for_absmax(absmax);
+    for x in xs.iter_mut() {
+        *x = fmt.quantize(*x, s);
+    }
+}
+
+/// Fake-quantize with stochastic rounding (the theory setting of §4.2).
+pub fn quantize_slice_stochastic(xs: &mut [f32], fmt: LnsFormat, rng: &mut Rng) {
+    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let s = fmt.scale_for_absmax(absmax);
+    for x in xs.iter_mut() {
+        let v = fmt.encode_stochastic(*x, s, rng.uniform_f32());
+        *x = fmt.decode(v, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn per_tensor_roundtrip_bound() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(16, 16, 1.0, &mut rng);
+        let fmt = LnsFormat::new(8, 8);
+        let q = quantize_tensor(&t, fmt, Scaling::PerTensor);
+        let bound = fmt.max_rel_error() as f32 + 1e-6;
+        let smallest = fmt.scale_for_absmax(t.abs_max());
+        for (a, b) in t.data.iter().zip(q.data.iter()) {
+            if a.abs() >= smallest {
+                assert!(((a - b) / a).abs() <= bound, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_row_uses_row_maxima() {
+        let t = Tensor::from_vec(2, 2, vec![1.0, 0.5, 100.0, 50.0]);
+        let fmt = LnsFormat::new(8, 8);
+        let enc = encode_tensor(&t, fmt, Scaling::PerRow, Rounding::Nearest, None);
+        // Each row's max must land on the top code.
+        assert_eq!(enc.codes[0], fmt.max_code());
+        assert_eq!(enc.codes[2], fmt.max_code());
+        let dec = enc.decode();
+        assert!((dec.at(1, 0) - 100.0).abs() / 100.0 < 1e-5);
+    }
+
+    #[test]
+    fn per_col_scaling_independent() {
+        let t = Tensor::from_vec(2, 2, vec![1.0, 1000.0, 0.5, 500.0]);
+        let fmt = LnsFormat::new(8, 8);
+        let q = quantize_tensor(&t, fmt, Scaling::PerCol);
+        // Column 0's small values survive despite column 1's magnitude.
+        assert!((q.at(0, 0) - 1.0).abs() < 0.05);
+        assert!((q.at(1, 0) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn quantize_is_idempotent_property() {
+        // Q(Q(x)) == Q(x): codes are fixed points of the quantizer.
+        property(300, |g| {
+            let n = g.usize_in(2, 40);
+            let mut xs: Vec<f32> = (0..n).map(|_| g.lns_value()).collect();
+            let fmt = LnsFormat::new(8, 8);
+            quantize_slice(&mut xs, fmt);
+            let once = xs.clone();
+            quantize_slice(&mut xs, fmt);
+            for (a, b) in once.iter().zip(xs.iter()) {
+                crate::prop_assert!(g, (a - b).abs() <= 1e-6 * a.abs().max(1e-20), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn stochastic_quantize_unbiased_mean() {
+        let fmt = LnsFormat::new(8, 8);
+        let mut rng = Rng::new(3);
+        let x = 0.777f32;
+        let mut mean = 0.0f64;
+        let n = 20_000;
+        for _ in 0..n {
+            let mut v = [x, 1.0]; // second element pins absmax
+            quantize_slice_stochastic(&mut v, fmt, &mut rng);
+            mean += v[0] as f64;
+        }
+        mean /= n as f64;
+        // Unbiased in log space => nearly unbiased in linear space for
+        // small gaps; allow a small multiplicative tolerance.
+        assert!((mean / x as f64 - 1.0).abs() < 5e-3, "mean={mean}");
+    }
+}

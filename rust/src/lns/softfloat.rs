@@ -1,0 +1,191 @@
+//! Software float/fixed-point quantizers for the baseline formats the
+//! paper compares against: FP8 (e4m3 / e5m2), FP16, BF16, and symmetric
+//! fixed-point INT-B (the BHQ-style linear baseline of Tables 5–6).
+//!
+//! All are *fake quantizers*: f32 -> format -> f32, saturating, with
+//! flush-to-zero below the subnormal range (matching the python-side
+//! `lnsq.fp8_quantize` so cross-layer tests can compare bit patterns).
+
+/// A minifloat format: `ebits` exponent bits, `mbits` mantissa bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MiniFloat {
+    pub ebits: u32,
+    pub mbits: u32,
+}
+
+impl MiniFloat {
+    pub const E4M3: MiniFloat = MiniFloat { ebits: 4, mbits: 3 };
+    pub const E5M2: MiniFloat = MiniFloat { ebits: 5, mbits: 2 };
+    pub const FP16: MiniFloat = MiniFloat { ebits: 5, mbits: 10 };
+    pub const BF16: MiniFloat = MiniFloat { ebits: 8, mbits: 7 };
+
+    pub fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest finite magnitude (saturating format, no inf encoding).
+    pub fn max_value(&self) -> f32 {
+        let frac = 2.0 - (-(self.mbits as f32)).exp2();
+        frac * ((1 << self.ebits) as f32 - 2.0 - self.bias() as f32).exp2()
+    }
+
+    /// Smallest normal magnitude 2^(1 - bias).
+    pub fn min_normal(&self) -> f32 {
+        (1.0 - self.bias() as f32).exp2()
+    }
+
+    /// Round-to-nearest-even quantization of one f32.
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x == 0.0 || !x.is_finite() {
+            return 0.0;
+        }
+        let sign = x.signum();
+        let mag = x.abs();
+        if mag >= self.max_value() {
+            return sign * self.max_value();
+        }
+        // Exponent of the containing binade, clamped to normal range so
+        // the subnormal region quantizes on the fixed 2^(1-bias) grid.
+        let e = mag.log2().floor().max(1.0 - self.bias() as f32);
+        let ulp = (e - self.mbits as f32).exp2();
+        let q = (mag / ulp).round_ties_even() * ulp;
+        if q == 0.0 {
+            return 0.0;
+        }
+        sign * q
+    }
+
+    /// Quantize a slice with a shared scale mapping absmax to max_value
+    /// (the scaled-FP8 training recipe of Wang et al. 2018).
+    pub fn quantize_scaled(&self, xs: &mut [f32]) {
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            return;
+        }
+        let scale = absmax / self.max_value();
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x / scale) * scale;
+        }
+    }
+}
+
+/// Symmetric fixed-point quantizer with `bits` total (1 sign bit).
+#[derive(Clone, Copy, Debug)]
+pub struct FixedPoint {
+    pub bits: u32,
+}
+
+impl FixedPoint {
+    pub fn qmax(&self) -> f32 {
+        ((1u64 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Per-group scaled quantization (absmax -> qmax).
+    pub fn quantize_scaled(&self, xs: &mut [f32]) {
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            return;
+        }
+        let scale = absmax / self.qmax();
+        for x in xs.iter_mut() {
+            *x = (*x / scale).round().clamp(-self.qmax(), self.qmax()) * scale;
+        }
+    }
+
+    /// Stochastic-rounding variant (what FP8-weight-update papers use).
+    pub fn quantize_scaled_stochastic(&self, xs: &mut [f32], rng: &mut crate::util::rng::Rng) {
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            return;
+        }
+        let scale = absmax / self.qmax();
+        for x in xs.iter_mut() {
+            let v = *x / scale;
+            let f = v.floor();
+            let up = rng.uniform_f32() < (v - f);
+            *x = (f + if up { 1.0 } else { 0.0 }).clamp(-self.qmax(), self.qmax()) * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn e4m3_constants() {
+        let f = MiniFloat::E4M3;
+        assert_eq!(f.bias(), 7);
+        // Saturating e4m3 max: 1.875 * 2^7 = 240 (no-inf convention).
+        assert!((f.max_value() - 240.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exact_values_fixed_points() {
+        let f = MiniFloat::E4M3;
+        for x in [1.0f32, 1.5, 2.0, 0.5, -3.0, 240.0] {
+            assert_eq!(f.quantize(x), x, "representable {x} must be exact");
+        }
+    }
+
+    #[test]
+    fn rel_error_bound_normals() {
+        let f = MiniFloat::E4M3;
+        let bound = 0.5 * (-(f.mbits as f32)).exp2(); // half ulp relative
+        property(500, |g| {
+            let x = g.f32_in(0.02, 200.0);
+            let q = f.quantize(x);
+            crate::prop_assert!(
+                g,
+                ((q - x) / x).abs() <= bound + 1e-6,
+                "x={x} q={q}"
+            );
+        });
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(MiniFloat::E4M3.quantize(1e9), 240.0);
+        assert_eq!(MiniFloat::E4M3.quantize(-1e9), -240.0);
+    }
+
+    #[test]
+    fn fp16_finer_than_fp8() {
+        let x = 1.2345f32;
+        let e8 = (MiniFloat::E4M3.quantize(x) - x).abs();
+        let e16 = (MiniFloat::FP16.quantize(x) - x).abs();
+        assert!(e16 < e8);
+    }
+
+    #[test]
+    fn int_quantizer_grid() {
+        let q = FixedPoint { bits: 8 };
+        let mut xs = vec![1.0f32, -0.5, 0.25, 0.1];
+        q.quantize_scaled(&mut xs);
+        // absmax (1.0) maps exactly.
+        assert!((xs[0] - 1.0).abs() < 1e-6);
+        // Everything lands on the 1/127 grid.
+        for x in xs {
+            let steps = x * 127.0;
+            assert!((steps - steps.round()).abs() < 1e-4, "{x}");
+        }
+    }
+
+    #[test]
+    fn int_stochastic_unbiased() {
+        let q = FixedPoint { bits: 8 };
+        let mut rng = Rng::new(4);
+        let x = 0.3333f32;
+        let mut mean = 0.0f64;
+        let n = 20_000;
+        for _ in 0..n {
+            let mut v = [x, 1.0];
+            q.quantize_scaled_stochastic(&mut v, &mut rng);
+            mean += v[0] as f64;
+        }
+        mean /= n as f64;
+        assert!((mean - x as f64).abs() < 1e-3, "mean={mean}");
+    }
+}

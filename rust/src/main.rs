@@ -1,0 +1,176 @@
+//! lns-madam CLI — the L3 leader entrypoint.
+//!
+//!   lns-madam train [--config path] [--model M] [--format F]
+//!                   [--optimizer O] [--steps N] [--lr X]
+//!                   [--gamma-fwd G] [--gamma-bwd G] [--qu-bits B]
+//!   lns-madam info            # list artifacts + models
+//!   lns-madam energy          # Table 8 energy report
+//!   lns-madam quant-error     # Fig. 4 quantization-error study
+//!
+//! Arg parsing is hand-rolled (no clap offline); flags are --key value.
+
+use anyhow::{bail, Result};
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::hw::{table8_workloads, EnergyModel, PeFormat};
+use lns_madam::lns::ConvertMode;
+use lns_madam::optim::error::fig4_sweep;
+use lns_madam::runtime::{Manifest, Runtime};
+use lns_madam::util::bench::print_table;
+use std::path::Path;
+
+fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 >= args.len() {
+                bail!("flag --{key} needs a value");
+            }
+            out.push((key.to_string(), args[i + 1].clone()));
+            i += 2;
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut cfg = TrainConfig::default();
+    for (k, v) in &flags {
+        if k == "config" {
+            cfg = TrainConfig::from_file(v)?;
+        }
+    }
+    for (k, v) in &flags {
+        match k.as_str() {
+            "config" => {}
+            "model" => cfg.model = v.clone(),
+            "format" => cfg.format = v.clone(),
+            "optimizer" => {
+                cfg.optimizer = OptKind::parse(v)?;
+                cfg.lr = cfg.optimizer.default_lr();
+            }
+            "steps" => cfg.steps = v.parse()?,
+            "lr" => cfg.lr = v.parse()?,
+            "gamma-fwd" => cfg.gamma_fwd = v.parse()?,
+            "gamma-bwd" => cfg.gamma_bwd = v.parse()?,
+            "bits-fwd" => cfg.bits_fwd = v.parse()?,
+            "bits-bwd" => cfg.bits_bwd = v.parse()?,
+            "qu-bits" => cfg.qu_bits = v.parse()?,
+            "seed" => cfg.seed = v.parse()?,
+            "artifacts" => cfg.artifacts_dir = v.clone(),
+            "log" => cfg.log_path = v.clone(),
+            "eval-every" => cfg.eval_every = v.parse()?,
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    println!(
+        "training {} [{}] with {} (lr {}), {} steps, Q_U {} bits",
+        cfg.model, cfg.format, cfg.optimizer.name(), cfg.lr, cfg.steps, cfg.qu_bits
+    );
+    let runtime = Runtime::cpu()?;
+    let mut trainer = Trainer::new(&runtime, cfg)?;
+    trainer.run()?;
+    println!(
+        "done: final loss (tail-10 mean) = {:.4}{}",
+        trainer.final_loss(10),
+        trainer
+            .final_eval_acc()
+            .map(|a| format!(", eval acc = {a:.3}"))
+            .unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let dir = flags
+        .iter()
+        .find(|(k, _)| k == "artifacts")
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    let mut rows = Vec::new();
+    for name in manifest.artifact_names() {
+        let a = manifest.artifact(&name).unwrap();
+        rows.push(vec![
+            name,
+            a.kind,
+            a.model.unwrap_or_default(),
+            a.format.unwrap_or_default(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    print_table(
+        "artifacts",
+        &["name", "kind", "model", "format", "inputs", "outputs"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_energy() -> Result<()> {
+    let model = EnergyModel::paper();
+    let formats = [
+        PeFormat::Lns(ConvertMode::ExactLut),
+        PeFormat::Fp8,
+        PeFormat::Fp16,
+        PeFormat::Fp32,
+    ];
+    let mut rows = Vec::new();
+    for w in table8_workloads() {
+        let mut row = vec![w.name.clone()];
+        for f in formats {
+            row.push(format!("{:.2}", model.workload_mj(f, w.total_macs())));
+        }
+        rows.push(row);
+    }
+    print_table(
+        "Table 8: per-iteration training energy (mJ)",
+        &["Model", "LNS", "FP8", "FP16", "FP32"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_quant_error() -> Result<()> {
+    let etas: Vec<f64> = (4..=10).map(|k| 2f64.powi(-k)).collect();
+    let gammas: Vec<f64> = (3..=12).map(|k| 2f64.powi(k)).collect();
+    let points = fig4_sweep(4096, &etas, &gammas, 0);
+    let mut rows = Vec::new();
+    for p in points {
+        rows.push(vec![
+            p.learner.name().to_string(),
+            format!("{:.6}", p.eta),
+            format!("{}", p.gamma),
+            format!("{:.3e}", p.error),
+            format!("{:.3e}", p.bound),
+        ]);
+    }
+    print_table(
+        "Fig. 4: quantization error by learner (stochastic-rounding Q_log)",
+        &["learner", "eta", "gamma", "E r_t", "theory bound"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("energy") => cmd_energy(),
+        Some("quant-error") => cmd_quant_error(),
+        _ => {
+            eprintln!("usage: lns-madam <train|info|energy|quant-error> [flags]");
+            std::process::exit(2);
+        }
+    }
+}

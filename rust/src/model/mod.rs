@@ -1,0 +1,348 @@
+//! Pure-rust quantized MLP (forward + backward), mirroring the L2 JAX
+//! model's QAT semantics.
+//!
+//! Why it exists: the accuracy sweeps (Tables 3, 5, 6; Fig. 7) explore
+//! dozens of (format, bitwidth, gamma, optimizer) points. The PJRT
+//! artifacts cover the flagship configurations; this mirror lets every
+//! sweep point train natively in rust with identical quantizer
+//! placement (Q_W, Q_A forward; Q_E, Q_G backward — Fig. 3), and is
+//! validated against the PJRT path in `rust/tests/integration.rs`.
+
+use crate::lns::format::LnsFormat;
+use crate::lns::quant::{quantize_tensor, Scaling};
+use crate::lns::softfloat::{FixedPoint, MiniFloat};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+pub mod sweep;
+
+/// A quantizer assignment for one side of training.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantKind {
+    /// Multi-base LNS with group scaling.
+    Lns { fmt: LnsFormat, scaling: Scaling },
+    /// FP8 e4m3 with per-tensor scale.
+    Fp8,
+    /// Symmetric fixed point (the INT/BHQ-style baseline).
+    Int { bits: u32 },
+    /// Full precision (no quantization).
+    None,
+}
+
+impl QuantKind {
+    pub fn lns8() -> Self {
+        QuantKind::Lns { fmt: LnsFormat::PAPER8, scaling: Scaling::PerTensor }
+    }
+
+    pub fn apply(&self, t: &Tensor) -> Tensor {
+        match self {
+            QuantKind::None => t.clone(),
+            QuantKind::Lns { fmt, scaling } => quantize_tensor(t, *fmt, *scaling),
+            QuantKind::Fp8 => {
+                let mut data = t.data.clone();
+                MiniFloat::E4M3.quantize_scaled(&mut data);
+                Tensor::from_vec(t.rows, t.cols, data)
+            }
+            QuantKind::Int { bits } => {
+                let mut data = t.data.clone();
+                FixedPoint { bits: *bits }.quantize_scaled(&mut data);
+                Tensor::from_vec(t.rows, t.cols, data)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            QuantKind::None => "fp32".into(),
+            QuantKind::Lns { fmt, .. } => format!("lns{}g{}", fmt.bits, fmt.gamma),
+            QuantKind::Fp8 => "fp8".into(),
+            QuantKind::Int { bits } => format!("int{bits}"),
+        }
+    }
+}
+
+/// Fig. 3 quantizer placement for the whole train step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainQuant {
+    /// Q_W and Q_A (forward).
+    pub forward: QuantKind,
+    /// Q_E (activation grads) and Q_G (weight grads).
+    pub backward: QuantKind,
+}
+
+impl TrainQuant {
+    pub fn fp32() -> Self {
+        TrainQuant { forward: QuantKind::None, backward: QuantKind::None }
+    }
+
+    pub fn lns8() -> Self {
+        TrainQuant { forward: QuantKind::lns8(), backward: QuantKind::lns8() }
+    }
+}
+
+/// The MLP: GEMM + bias + ReLU stack with softmax cross-entropy loss.
+pub struct MlpModel {
+    pub sizes: Vec<usize>,
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+/// Forward cache for backprop.
+pub struct ForwardCache {
+    /// Quantized layer inputs (x_q for each GEMM).
+    inputs: Vec<Tensor>,
+    /// Quantized weights used.
+    wq: Vec<Tensor>,
+    /// Pre-activations.
+    z: Vec<Tensor>,
+    /// Softmax probabilities.
+    pub probs: Tensor,
+}
+
+impl MlpModel {
+    pub fn init(sizes: &[usize], rng: &mut Rng) -> Self {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in sizes.windows(2) {
+            let std = (2.0 / w[0] as f32).sqrt();
+            weights.push(Tensor::randn(w[0], w[1], std, rng));
+            biases.push(vec![0.0; w[1]]);
+        }
+        MlpModel { sizes: sizes.to_vec(), weights, biases }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Forward pass with Q_W/Q_A; returns logits + cache.
+    pub fn forward(&self, x: &Tensor, q: &TrainQuant) -> ForwardCache {
+        let mut h = x.clone();
+        let mut inputs = Vec::new();
+        let mut wqs = Vec::new();
+        let mut zs = Vec::new();
+        for (l, w) in self.weights.iter().enumerate() {
+            let hq = q.forward.apply(&h);
+            let wq = q.forward.apply(w);
+            let mut z = hq.matmul(&wq);
+            for r in 0..z.rows {
+                for c in 0..z.cols {
+                    *z.at_mut(r, c) += self.biases[l][c];
+                }
+            }
+            inputs.push(hq);
+            wqs.push(wq);
+            zs.push(z.clone());
+            h = if l + 1 < self.weights.len() {
+                z.map(|v| v.max(0.0))
+            } else {
+                z
+            };
+        }
+        let probs = softmax(&h);
+        ForwardCache { inputs, wq: wqs, z: zs, probs }
+    }
+
+    /// Mean cross-entropy of cached probs vs labels.
+    pub fn loss(&self, cache: &ForwardCache, labels: &[usize]) -> f32 {
+        let mut total = 0.0;
+        for (r, &y) in labels.iter().enumerate() {
+            total -= cache.probs.at(r, y).max(1e-12).ln();
+        }
+        total / labels.len() as f32
+    }
+
+    pub fn accuracy(&self, cache: &ForwardCache, labels: &[usize]) -> f32 {
+        let mut correct = 0;
+        for (r, &y) in labels.iter().enumerate() {
+            let row = &cache.probs.data[r * cache.probs.cols..(r + 1) * cache.probs.cols];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == y {
+                correct += 1;
+            }
+        }
+        correct as f32 / labels.len() as f32
+    }
+
+    /// Backward pass with Q_E/Q_G; returns (weight grads, bias grads).
+    pub fn backward(
+        &self,
+        cache: &ForwardCache,
+        labels: &[usize],
+        q: &TrainQuant,
+    ) -> (Vec<Tensor>, Vec<Vec<f32>>) {
+        let batch = labels.len() as f32;
+        // dL/dz_last = (probs - onehot)/batch.
+        let mut dz = cache.probs.clone();
+        for (r, &y) in labels.iter().enumerate() {
+            *dz.at_mut(r, y) -= 1.0;
+        }
+        dz = dz.map(|v| v / batch);
+
+        let mut wgrads = vec![Tensor::zeros(1, 1); self.n_layers()];
+        let mut bgrads = vec![Vec::new(); self.n_layers()];
+        for l in (0..self.n_layers()).rev() {
+            // Q_E on the activation gradient entering this layer's GEMMs.
+            let dzq = q.backward.apply(&dz);
+            // Weight grad: x_q^T @ dz, then Q_G.
+            let gw = cache.inputs[l].t_matmul(&dzq);
+            wgrads[l] = q.backward.apply(&gw);
+            // Bias grad: column sums of dz (kept FP32 like the paper's
+            // non-GEMM ops).
+            let mut gb = vec![0.0f32; dz.cols];
+            for r in 0..dz.rows {
+                for c in 0..dz.cols {
+                    gb[c] += dz.at(r, c);
+                }
+            }
+            bgrads[l] = gb;
+            if l > 0 {
+                // dh = dz @ w_q^T, masked by ReLU'(z_{l-1}), then Q_E.
+                let dh = dzq.matmul_t(&cache.wq[l]);
+                let mask = &cache.z[l - 1];
+                dz = dh.zip(mask, |g, z| if z > 0.0 { g } else { 0.0 });
+            }
+        }
+        (wgrads, bgrads)
+    }
+}
+
+fn softmax(logits: &Tensor) -> Tensor {
+    let mut out = logits.clone();
+    for r in 0..out.rows {
+        let row = &mut out.data[r * out.cols..(r + 1) * out.cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_batch(rng: &mut Rng, n: usize, d: usize, classes: usize) -> (Tensor, Vec<usize>) {
+        let x = Tensor::randn(n, d, 1.0, rng);
+        let y = (0..n).map(|_| rng.below(classes)).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn loss_at_init_is_log_classes() {
+        let mut rng = Rng::new(1);
+        let model = MlpModel::init(&[8, 16, 4], &mut rng);
+        let (x, y) = tiny_batch(&mut rng, 64, 8, 4);
+        let cache = model.forward(&x, &TrainQuant::fp32());
+        let loss = model.loss(&cache, &y);
+        // Random labels: loss at init sits at/above the ln(C) entropy
+        // floor (He-init logits have nonzero variance) but is bounded.
+        let floor = (4.0f32).ln();
+        assert!(loss > floor - 0.3 && loss < 4.0, "loss {loss}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_fp32() {
+        let mut rng = Rng::new(2);
+        let mut model = MlpModel::init(&[4, 6, 3], &mut rng);
+        let (x, y) = tiny_batch(&mut rng, 8, 4, 3);
+        let q = TrainQuant::fp32();
+        let cache = model.forward(&x, &q);
+        let (wg, bg) = model.backward(&cache, &y, &q);
+
+        let eps = 1e-3f32;
+        for (l, idx) in [(0usize, 5usize), (1usize, 3usize)] {
+            let orig = model.weights[l].data[idx];
+            model.weights[l].data[idx] = orig + eps;
+            let lp = {
+                let c = model.forward(&x, &q);
+                model.loss(&c, &y)
+            };
+            model.weights[l].data[idx] = orig - eps;
+            let lm = {
+                let c = model.forward(&x, &q);
+                model.loss(&c, &y)
+            };
+            model.weights[l].data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = wg[l].data[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 * fd.abs().max(0.1),
+                "layer {l} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+        // Bias grads too.
+        let orig = model.biases[0][2];
+        model.biases[0][2] = orig + eps;
+        let lp = model.loss(&model.forward(&x, &q), &y);
+        model.biases[0][2] = orig - eps;
+        let lm = model.loss(&model.forward(&x, &q), &y);
+        model.biases[0][2] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!((fd - bg[0][2]).abs() < 2e-2 * fd.abs().max(0.1));
+    }
+
+    #[test]
+    fn quantized_forward_close_to_fp32() {
+        let mut rng = Rng::new(3);
+        let model = MlpModel::init(&[16, 32, 4], &mut rng);
+        let (x, _) = tiny_batch(&mut rng, 16, 16, 4);
+        let fp = model.forward(&x, &TrainQuant::fp32());
+        let ln = model.forward(&x, &TrainQuant::lns8());
+        let mut max_rel = 0.0f32;
+        for (a, b) in fp.probs.data.iter().zip(ln.probs.data.iter()) {
+            max_rel = max_rel.max((a - b).abs());
+        }
+        assert!(max_rel < 0.2, "prob divergence {max_rel}");
+    }
+
+    #[test]
+    fn training_reduces_loss_lns8() {
+        use crate::optim::{Optimizer, Sgd};
+        let mut rng = Rng::new(4);
+        let mut model = MlpModel::init(&[8, 32, 4], &mut rng);
+        // Separable synthetic data: class = argmax of 4 fixed projections.
+        let proj = Tensor::randn(8, 4, 1.0, &mut rng);
+        let x = Tensor::randn(256, 8, 1.0, &mut rng);
+        let scores = x.matmul(&proj);
+        let y: Vec<usize> = (0..256)
+            .map(|r| {
+                (0..4)
+                    .max_by(|&a, &b| scores.at(r, a).partial_cmp(&scores.at(r, b)).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let q = TrainQuant::lns8();
+        let mut opt = Sgd::with(0.3, 0.9, 0.0);
+        let first = {
+            let c = model.forward(&x, &q);
+            model.loss(&c, &y)
+        };
+        for _ in 0..60 {
+            let cache = model.forward(&x, &q);
+            let (wg, bg) = model.backward(&cache, &y, &q);
+            for l in 0..model.n_layers() {
+                let g = wg[l].data.clone();
+                opt.step(l, &mut model.weights[l].data, &g);
+                let gb = bg[l].clone();
+                opt.step(100 + l, &mut model.biases[l], &gb);
+            }
+        }
+        let last = {
+            let c = model.forward(&x, &q);
+            model.loss(&c, &y)
+        };
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+}

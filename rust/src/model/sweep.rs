@@ -1,0 +1,300 @@
+//! Format/optimizer sweep harness over the pure-rust model mirror.
+//!
+//! The paper's accuracy tables explore dozens of configuration points;
+//! this harness trains the rust MLP on the synthetic classification
+//! task for each point and reports held-out accuracy — the engine
+//! behind the Table 3/5/6 and Fig. 7 benches.
+
+use crate::coordinator::data::SyntheticClassification;
+use crate::lns::datapath::{MacConfig, VectorMacUnit};
+use crate::lns::format::Rounding;
+use crate::lns::quant::{encode_tensor, Scaling};
+use crate::model::{MlpModel, TrainQuant};
+use crate::optim::Optimizer;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// One sweep point's configuration.
+pub struct SweepRun {
+    pub sizes: Vec<usize>,
+    pub batch: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub quant: TrainQuant,
+    /// Route forward GEMMs through the Fig. 6 datapath simulator with
+    /// this MAC config (Table 10's approximation-aware training).
+    pub datapath: Option<MacConfig>,
+}
+
+impl Default for SweepRun {
+    fn default() -> Self {
+        SweepRun {
+            sizes: vec![32, 64, 64, 8],
+            batch: 64,
+            steps: 150,
+            seed: 0,
+            quant: TrainQuant::fp32(),
+            datapath: None,
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub final_loss: f32,
+    pub eval_acc: f32,
+    pub diverged: bool,
+}
+
+/// Forward pass with the datapath simulator on every GEMM (quantizes
+/// operands per the MAC's format internally).
+fn forward_datapath(
+    model: &MlpModel,
+    x: &Tensor,
+    mac: &mut VectorMacUnit,
+) -> Tensor {
+    let fmt = mac.cfg.format;
+    let mut h = x.clone();
+    for (l, w) in model.weights.iter().enumerate() {
+        let hq = encode_tensor(&h, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let wq = encode_tensor(w, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let mut z = mac.matmul(&hq, &wq);
+        for r in 0..z.rows {
+            for c in 0..z.cols {
+                *z.at_mut(r, c) += model.biases[l][c];
+            }
+        }
+        h = if l + 1 < model.weights.len() {
+            z.map(|v| v.max(0.0))
+        } else {
+            z
+        };
+    }
+    h
+}
+
+fn softmax_loss_acc(logits: &Tensor, labels: &[usize]) -> (f32, f32) {
+    let mut loss = 0.0;
+    let mut correct = 0;
+    for (r, &y) in labels.iter().enumerate() {
+        let row = &logits.data[r * logits.cols..(r + 1) * logits.cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let sum: f32 = row.iter().map(|&v| (v - max).exp()).sum();
+        loss -= (row[y] - max) - sum.ln();
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == y {
+            correct += 1;
+        }
+    }
+    (loss / labels.len() as f32, correct as f32 / labels.len() as f32)
+}
+
+/// Train one sweep point; returns final loss + held-out accuracy.
+pub fn run_sweep(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut model = MlpModel::init(&cfg.sizes, &mut rng);
+    let classes = *cfg.sizes.last().unwrap();
+    let mut data = SyntheticClassification::new(cfg.sizes[0], classes, 0.6, cfg.seed);
+    let mut diverged = false;
+
+    for _ in 0..cfg.steps {
+        let (xs, ys) = data.batch(cfg.batch);
+        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
+        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
+        let cache = model.forward(&x, &cfg.quant);
+        let loss = model.loss(&cache, &y);
+        if !loss.is_finite() {
+            diverged = true;
+            break;
+        }
+        let (wg, bg) = model.backward(&cache, &y, &cfg.quant);
+        for l in 0..model.n_layers() {
+            if wg[l].data.iter().any(|v| !v.is_finite()) {
+                diverged = true;
+                break;
+            }
+            opt.step(l, &mut model.weights[l].data, &wg[l].data);
+            opt.step(1000 + l, &mut model.biases[l], &bg[l]);
+        }
+        if diverged {
+            break;
+        }
+    }
+
+    // Held-out evaluation (fresh batches; forward only, same quantizers
+    // for weights/activations as training — standard QAT eval).
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    let evals = 5;
+    for _ in 0..evals {
+        let (xs, ys) = data.batch(cfg.batch);
+        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
+        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
+        let logits = match cfg.datapath {
+            Some(mac_cfg) => {
+                let mut mac = VectorMacUnit::new(mac_cfg);
+                forward_datapath(&model, &x, &mut mac)
+            }
+            None => {
+                let cache = model.forward(&x, &cfg.quant);
+                cache.probs.map(|p| p.max(1e-12).ln()) // log-probs as logits
+            }
+        };
+        let (l, a) = softmax_loss_acc(&logits, &y);
+        loss_sum += l;
+        acc_sum += a;
+    }
+    SweepResult {
+        final_loss: if diverged { f32::NAN } else { loss_sum / evals as f32 },
+        eval_acc: if diverged { f32::NAN } else { acc_sum / evals as f32 },
+        diverged,
+    }
+}
+
+/// Train with the datapath in the forward path (approximation-aware
+/// training, Appendix .4): forward logits come from the MAC simulator,
+/// gradients from the STE-style backward of the plain quantized model.
+pub fn run_sweep_datapath(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResult {
+    let mac_cfg = cfg.datapath.expect("datapath config required");
+    let mut rng = Rng::new(cfg.seed);
+    let mut model = MlpModel::init(&cfg.sizes, &mut rng);
+    let classes = *cfg.sizes.last().unwrap();
+    let mut data = SyntheticClassification::new(cfg.sizes[0], classes, 0.6, cfg.seed);
+    let mut mac = VectorMacUnit::new(mac_cfg);
+    let mut diverged = false;
+
+    for _ in 0..cfg.steps {
+        let (xs, ys) = data.batch(cfg.batch);
+        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
+        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
+        // Backward through the smooth quantized model (STE view of the
+        // approximator); forward statistics come from the datapath.
+        let cache = model.forward(&x, &cfg.quant);
+        if !model.loss(&cache, &y).is_finite() {
+            diverged = true;
+            break;
+        }
+        let (wg, bg) = model.backward(&cache, &y, &cfg.quant);
+        for l in 0..model.n_layers() {
+            opt.step(l, &mut model.weights[l].data, &wg[l].data);
+            opt.step(1000 + l, &mut model.biases[l], &bg[l]);
+        }
+    }
+
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    let evals = 5;
+    for _ in 0..evals {
+        let (xs, ys) = data.batch(cfg.batch);
+        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
+        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
+        let logits = forward_datapath(&model, &x, &mut mac);
+        let (l, a) = softmax_loss_acc(&logits, &y);
+        loss_sum += l;
+        acc_sum += a;
+    }
+    SweepResult {
+        final_loss: if diverged { f32::NAN } else { loss_sum / evals as f32 },
+        eval_acc: if diverged { f32::NAN } else { acc_sum / evals as f32 },
+        diverged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::format::LnsFormat;
+    use crate::lns::ConvertMode;
+    use crate::model::QuantKind;
+    use crate::optim::Sgd;
+
+    #[test]
+    fn fp32_baseline_learns() {
+        let cfg = SweepRun { steps: 120, ..Default::default() };
+        let mut opt = Sgd::with(0.1, 0.9, 0.0);
+        let r = run_sweep(&cfg, &mut opt);
+        assert!(!r.diverged);
+        assert!(r.eval_acc > 0.5, "acc {}", r.eval_acc);
+    }
+
+    #[test]
+    fn lns8_close_to_fp32() {
+        let mut opt = Sgd::with(0.1, 0.9, 0.0);
+        let fp32 = run_sweep(&SweepRun { steps: 120, ..Default::default() }, &mut opt);
+        let mut opt2 = Sgd::with(0.1, 0.9, 0.0);
+        let lns = run_sweep(
+            &SweepRun { steps: 120, quant: TrainQuant::lns8(), ..Default::default() },
+            &mut opt2,
+        );
+        assert!(!lns.diverged);
+        assert!(
+            lns.eval_acc > fp32.eval_acc - 0.12,
+            "lns {} vs fp32 {}",
+            lns.eval_acc,
+            fp32.eval_acc
+        );
+    }
+
+    #[test]
+    fn datapath_eval_close_to_smooth_eval() {
+        let quant = TrainQuant::lns8();
+        let mk = || {
+            SweepRun {
+                steps: 100,
+                quant,
+                datapath: Some(MacConfig {
+                    format: LnsFormat::PAPER8,
+                    convert: ConvertMode::ExactLut,
+                    acc_bits: 24,
+                    vector_size: 32,
+                }),
+                ..Default::default()
+            }
+        };
+        let mut opt = Sgd::with(0.1, 0.9, 0.0);
+        let r = run_sweep_datapath(&mk(), &mut opt);
+        assert!(!r.diverged);
+        assert!(r.eval_acc > 0.4, "datapath eval acc {}", r.eval_acc);
+    }
+
+    #[test]
+    fn gamma1_degrades() {
+        // Table 3's gamma=1 row: coarse quantization gap wrecks training
+        // relative to gamma=8.
+        let mut o1 = Sgd::with(0.1, 0.9, 0.0);
+        let g1 = run_sweep(
+            &SweepRun {
+                steps: 120,
+                quant: TrainQuant {
+                    forward: QuantKind::Lns {
+                        fmt: LnsFormat::new(8, 1),
+                        scaling: crate::lns::Scaling::PerTensor,
+                    },
+                    backward: QuantKind::Lns {
+                        fmt: LnsFormat::new(8, 1),
+                        scaling: crate::lns::Scaling::PerTensor,
+                    },
+                },
+                ..Default::default()
+            },
+            &mut o1,
+        );
+        let mut o8 = Sgd::with(0.1, 0.9, 0.0);
+        let g8 = run_sweep(
+            &SweepRun { steps: 120, quant: TrainQuant::lns8(), ..Default::default() },
+            &mut o8,
+        );
+        assert!(
+            g1.diverged || g1.eval_acc < g8.eval_acc - 0.03,
+            "gamma=1 acc {} vs gamma=8 acc {}",
+            g1.eval_acc,
+            g8.eval_acc
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Madam on LNS — Algorithm 1 of the paper.
+//!
+//! Madam updates weight *exponents* additively:
+//!
+//!   g2   <- (1-beta) g^2 + beta g2
+//!   g*   <- g / sqrt(g2)
+//!   W~   <- W~ - lr * g* ⊙ sign(W)        (W~ = log2 |W|)
+//!
+//! which is exactly the multiplicative update W <- W ⊙ 2^(-lr g* sign W)
+//! expressed in the space the weights are stored in. Two equivalent
+//! implementations are provided and tested against each other:
+//!
+//! * [`Madam`] — operates on f32 weight buffers (what the coordinator
+//!   feeds PJRT); log/exp round-trips happen on every step.
+//! * [`MadamLns`] — owns the weights *as integer LNS codes* and updates
+//!   them with pure integer arithmetic; no log-to-linear conversion on
+//!   the weight-update path, matching the paper's energy argument.
+
+use crate::lns::format::LnsFormat;
+use crate::optim::Optimizer;
+use std::collections::BTreeMap;
+
+pub const MADAM_DEFAULT_LR: f32 = 0.0078125; // 2^-7, the paper's robust lr
+const EPS: f32 = 1e-12;
+
+pub struct Madam {
+    pub lr: f32,
+    pub beta: f32,
+    /// Clamp on |lr * g*| in log2 units, mirroring Bernstein et al.'s
+    /// bounded multiplicative step (keeps single outliers from blowing
+    /// a weight across the whole dynamic range).
+    pub max_step: f32,
+    g2: BTreeMap<usize, Vec<f32>>,
+}
+
+impl Madam {
+    pub fn new(lr: f32) -> Self {
+        Madam { lr, beta: 0.9, max_step: 1.0, g2: BTreeMap::new() }
+    }
+}
+
+impl Optimizer for Madam {
+    fn step(&mut self, idx: usize, w: &mut [f32], g: &[f32]) {
+        assert_eq!(w.len(), g.len());
+        let g2 = self.g2.entry(idx).or_insert_with(|| vec![0.0; w.len()]);
+        for i in 0..w.len() {
+            g2[i] = (1.0 - self.beta) * g[i] * g[i] + self.beta * g2[i];
+            if w[i] == 0.0 {
+                continue; // multiplicative updates cannot leave zero
+            }
+            let gstar = g[i] / (g2[i] + EPS).sqrt();
+            let sign = w[i].signum();
+            let step = (self.lr * gstar * sign).clamp(-self.max_step, self.max_step);
+            // W~ <- W~ - step  in base-2 log space of |w|.
+            let e = w[i].abs().log2() - step;
+            w[i] = sign * e.exp2();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "madam"
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Madam over native LNS storage: weights are (sign, code) planes with a
+/// fixed per-tensor scale; the update rounds the step onto the integer
+/// code grid directly (stochastic or nearest), so the weight never
+/// exists in linear format during the update.
+pub struct MadamLns {
+    pub lr: f32,
+    pub beta: f32,
+    pub fmt: LnsFormat,
+    g2: BTreeMap<usize, Vec<f32>>,
+}
+
+impl MadamLns {
+    pub fn new(lr: f32, fmt: LnsFormat) -> Self {
+        MadamLns { lr, beta: 0.9, fmt, g2: BTreeMap::new() }
+    }
+
+    /// One step over code planes. `codes`/`signs` are the stored LNS
+    /// weights; `scale` their group scale; `g` the (dequantized) weight
+    /// gradient. Update: code <- clamp(round(code - lr*gamma*g**sign)).
+    pub fn step_codes(
+        &mut self,
+        idx: usize,
+        signs: &[i8],
+        codes: &mut [u32],
+        _scale: f32,
+        g: &[f32],
+    ) {
+        let g2 = self.g2.entry(idx).or_insert_with(|| vec![0.0; g.len()]);
+        let gamma = self.fmt.gamma as f32;
+        let max_code = self.fmt.max_code();
+        for i in 0..codes.len() {
+            g2[i] = (1.0 - self.beta) * g[i] * g[i] + self.beta * g2[i];
+            if signs[i] == 0 {
+                continue;
+            }
+            let gstar = g[i] / (g2[i] + EPS).sqrt();
+            // Step measured in code units: lr log2-units * gamma.
+            let delta = (self.lr * gstar * signs[i] as f32 * gamma).round() as i64;
+            let code = (codes[i] as i64 - delta).clamp(0, max_code as i64);
+            codes[i] = code as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::format::Rounding;
+    use crate::lns::quant::{encode_tensor, Scaling};
+    use crate::util::rng::Rng;
+    use crate::util::tensor::Tensor;
+
+    #[test]
+    fn update_magnitude_proportional_to_weight() {
+        // Fig. 1's point: same gradient, bigger weight => bigger step.
+        let mut opt = Madam::new(0.01);
+        let mut w = vec![0.1f32, 10.0];
+        let g = vec![1.0f32, 1.0];
+        let before = w.clone();
+        opt.step(0, &mut w, &g);
+        let d0 = (before[0] - w[0]).abs();
+        let d1 = (before[1] - w[1]).abs();
+        assert!(d1 / d0 > 50.0, "d0={d0} d1={d1}");
+        // But the *log-space* step is identical.
+        let l0 = (before[0].log2() - w[0].log2()).abs();
+        let l1 = (before[1].log2() - w[1].log2()).abs();
+        assert!((l0 - l1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn descends_when_sign_and_grad_agree() {
+        // Descent direction: w moves opposite the gradient. Positive w,
+        // positive g: |w| shrinks. Negative w, positive g: w must move
+        // more negative (multiplicative updates never cross zero).
+        let mut opt = Madam::new(0.1);
+        let mut w = vec![2.0f32];
+        opt.step(0, &mut w, &[1.0]);
+        assert!(w[0] < 2.0 && w[0] > 0.0);
+        let mut w = vec![-2.0f32];
+        opt.step(0, &mut w, &[1.0]);
+        assert!(w[0] < -2.0, "w went {} (should move away from zero)", w[0]);
+    }
+
+    #[test]
+    fn sign_never_flips_and_zero_stays_zero() {
+        let mut opt = Madam::new(0.5);
+        let mut w = vec![1.0f32, -1.0, 0.0];
+        for step in 0..100 {
+            let g = vec![if step % 2 == 0 { 5.0 } else { -5.0 }; 3];
+            opt.step(0, &mut w, &g);
+        }
+        assert!(w[0] > 0.0);
+        assert!(w[1] < 0.0);
+        assert_eq!(w[2], 0.0);
+    }
+
+    #[test]
+    fn converges_on_abs_target() {
+        // Minimize 0.5(w - 3)^2 starting from the right sign.
+        let mut opt = Madam::new(0.05);
+        let mut w = vec![0.5f32];
+        for _ in 0..2000 {
+            let g = vec![w[0] - 3.0];
+            opt.step(0, &mut w, &g);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05, "w={}", w[0]);
+    }
+
+    #[test]
+    fn lns_native_matches_float_madam_on_grid() {
+        // Start from weights already on the LNS grid; run both impls
+        // one step with the same gradient; the float version re-quantized
+        // must equal the integer-native version within one code.
+        let fmt = LnsFormat::new(16, 1 << 10); // fine grid, wide range
+        let mut rng = Rng::new(8);
+        let w0 = Tensor::randn(4, 8, 1.0, &mut rng).map(|x| x + x.signum() * 0.2);
+        let enc = encode_tensor(&w0, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let scale = enc.scales[0];
+        let w_grid = enc.decode();
+
+        let g: Vec<f32> = (0..w_grid.len()).map(|_| rng.normal_f32()).collect();
+
+        // Float Madam then re-encode.
+        let mut mf = Madam::new(MADAM_DEFAULT_LR);
+        mf.beta = 0.9;
+        let mut wf = w_grid.data.clone();
+        mf.step(0, &mut wf, &g);
+        let re = encode_tensor(
+            &Tensor::from_vec(4, 8, wf),
+            fmt,
+            Scaling::PerTensor,
+            Rounding::Nearest,
+            None,
+        );
+
+        // Integer-native Madam. NOTE: uses the same scale (frozen).
+        let mut mi = MadamLns::new(MADAM_DEFAULT_LR, fmt);
+        let mut codes = enc.codes.clone();
+        mi.step_codes(0, &enc.signs, &mut codes, scale, &g);
+
+        // Re-encoding after a float step re-derives the scale from the
+        // new absmax; codes can shift globally by the scale delta. Undo
+        // it by comparing code *differences* against the frozen-scale
+        // integer path.
+        let shift = (re.scales[0] / scale).log2() * fmt.gamma as f32;
+        let mut max_err = 0i64;
+        for i in 0..codes.len() {
+            if enc.signs[i] == 0 {
+                continue;
+            }
+            let float_code = re.codes[i] as i64 + shift.round() as i64;
+            max_err = max_err.max((float_code - codes[i] as i64).abs());
+        }
+        assert!(max_err <= 1, "max code disagreement {max_err}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Learning algorithms and quantized weight update (Section 4).
+//!
+//! The paper's central claim: which optimizer you run *interacts with*
+//! the number system the weights are stored in. [`Optimizer`] is the
+//! common interface; [`quantized::QuantizedUpdate`] wraps any optimizer
+//! with the Q_U logarithmic quantizer (Eq. 4); [`madam::Madam`] is
+//! Algorithm 1, the multiplicative update that keeps quantization error
+//! bounded independent of weight magnitude (Theorem 2 / Lemma 1);
+//! [`error`] measures those errors empirically (Fig. 4).
+
+pub mod adam;
+pub mod error;
+pub mod fused;
+pub mod madam;
+pub mod quantized;
+pub mod sgd;
+
+pub use adam::{Adam, AdamW};
+pub use fused::FusedMadamQu;
+pub use madam::{Madam, MadamLns};
+pub use quantized::{QuantizedUpdate, UpdateQuantizer};
+pub use sgd::Sgd;
+
+/// A stateful optimizer over a list of parameter tensors. `idx` is the
+/// tensor's position in the parameter list (state is keyed on it).
+pub trait Optimizer {
+    fn step(&mut self, idx: usize, w: &mut [f32], g: &[f32]);
+    fn name(&self) -> &'static str;
+    /// Learning rate accessor (benches sweep it).
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+}

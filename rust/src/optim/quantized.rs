@@ -1,0 +1,181 @@
+//! Quantized weight update (Eq. 4): W_{t+1} = Q_U( U(W_t, grad) ).
+//!
+//! [`UpdateQuantizer`] is Q_U — a logarithmic (or fixed-point, for the
+//! FP8-baseline comparison) quantizer applied to the weights *after*
+//! every optimizer step, so the stored weights never leave the format's
+//! grid. The paper keeps Q_U's dynamic range pinned to the weight
+//! format's (0, 15.9) while growing the bitwidth, i.e. gamma scales as
+//! 2^(B-8) * 8 — [`UpdateQuantizer::lns_matched`] encodes that rule.
+
+use crate::lns::format::LnsFormat;
+use crate::lns::quant::{quantize_slice, quantize_slice_stochastic};
+use crate::lns::softfloat::FixedPoint;
+use crate::optim::Optimizer;
+use crate::util::rng::Rng;
+
+/// The Q_U quantization function applied after each update.
+#[derive(Clone, Debug)]
+pub enum UpdateQuantizer {
+    /// Full-precision weight update (the conventional FP32-copy regime).
+    None,
+    /// Logarithmic Q_U with deterministic rounding.
+    Lns(LnsFormat),
+    /// Logarithmic Q_U with stochastic rounding (the theory setting).
+    LnsStochastic(LnsFormat),
+    /// Fixed-point Q_U (with stochastic rounding, as FP8-paper practice).
+    Int { bits: u32, stochastic: bool },
+}
+
+impl UpdateQuantizer {
+    /// The paper's rule for Table 5/Fig. 7: a B-bit Q_U whose dynamic
+    /// range matches the 8-bit/gamma=8 weight format (0, 15.875):
+    /// gamma_U = (2^(B-1)-1) / 15.875 rounded to a power of two.
+    pub fn lns_matched(bits: u32) -> UpdateQuantizer {
+        let base = LnsFormat::new(8, 8);
+        let target_range = base.dynamic_range_log2();
+        let raw = ((1u64 << (bits - 1)) - 1) as f64 / target_range;
+        let gamma = (raw.log2().round() as u32).min(30);
+        UpdateQuantizer::Lns(LnsFormat::new(bits, 1 << gamma))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            UpdateQuantizer::None => "fp32".into(),
+            UpdateQuantizer::Lns(f) => format!("lns{}g{}", f.bits, f.gamma),
+            UpdateQuantizer::LnsStochastic(f) => format!("lns{}g{}-sr", f.bits, f.gamma),
+            UpdateQuantizer::Int { bits, stochastic } => {
+                format!("int{}{}", bits, if *stochastic { "-sr" } else { "" })
+            }
+        }
+    }
+
+    pub fn apply(&self, w: &mut [f32], rng: &mut Rng) {
+        match self {
+            UpdateQuantizer::None => {}
+            UpdateQuantizer::Lns(fmt) => quantize_slice(w, *fmt),
+            UpdateQuantizer::LnsStochastic(fmt) => quantize_slice_stochastic(w, *fmt, rng),
+            UpdateQuantizer::Int { bits, stochastic } => {
+                let fp = FixedPoint { bits: *bits };
+                if *stochastic {
+                    fp.quantize_scaled_stochastic(w, rng);
+                } else {
+                    fp.quantize_scaled(w);
+                }
+            }
+        }
+    }
+}
+
+/// Wraps any optimizer with Q_U: the stored weights are re-quantized
+/// after every step (Eq. 4).
+pub struct QuantizedUpdate<O: Optimizer> {
+    pub inner: O,
+    pub qu: UpdateQuantizer,
+    rng: Rng,
+}
+
+impl<O: Optimizer> QuantizedUpdate<O> {
+    pub fn new(inner: O, qu: UpdateQuantizer) -> Self {
+        QuantizedUpdate { inner, qu, rng: Rng::new(0xDA7A) }
+    }
+}
+
+impl<O: Optimizer> Optimizer for QuantizedUpdate<O> {
+    fn step(&mut self, idx: usize, w: &mut [f32], g: &[f32]) {
+        self.inner.step(idx, w, g);
+        self.qu.apply(w, &mut self.rng);
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn lr(&self) -> f32 {
+        self.inner.lr()
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.inner.set_lr(lr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::madam::Madam;
+    use crate::optim::sgd::Sgd;
+
+    #[test]
+    fn matched_gamma_preserves_dynamic_range() {
+        // Table row: 8-bit -> gamma 8; 12-bit -> gamma 128; 16-bit -> 2048.
+        for (bits, gamma) in [(8u32, 8u32), (10, 32), (12, 128), (14, 512), (16, 2048)] {
+            match UpdateQuantizer::lns_matched(bits) {
+                UpdateQuantizer::Lns(f) => {
+                    assert_eq!(f.gamma, gamma, "bits={bits}");
+                    let dr = f.dynamic_range_log2();
+                    assert!(
+                        (dr - 15.875).abs() / 15.875 < 0.01,
+                        "bits={bits}: range {dr}"
+                    );
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn small_sgd_updates_vanish_under_coarse_qu() {
+        // The motivating failure (Fig. 1): GD steps smaller than the
+        // local quantization gap are discarded by Q_log entirely for
+        // large weights. Pre-quantize so weights start on the grid.
+        // w[2] anchors the group absmax (zero grad, exactly on-grid);
+        // w[0] is a large weight whose GD step is far below its gap.
+        let qu = UpdateQuantizer::lns_matched(8);
+        let mut rng = Rng::new(1);
+        let mut w = vec![50.0f32, 1.0, 128.0];
+        qu.apply(&mut w, &mut rng);
+        let w0 = w.clone();
+        let mut opt = QuantizedUpdate::new(Sgd::with(1e-4, 0.0, 0.0), qu);
+        for _ in 0..10 {
+            opt.step(0, &mut w, &[1.0, 0.0, 0.0]);
+        }
+        // Gap at |w|~50 with gamma=8 is ~4.4; the 1e-4 steps round away.
+        assert_eq!(w[0], w0[0], "sub-gap GD update must be swallowed");
+        assert_eq!(w[1], w0[1], "zero-grad weight must be a Q_U fixed point");
+        assert_eq!(w[2], w0[2]);
+    }
+
+    #[test]
+    fn madam_updates_survive_coarse_qu() {
+        // Madam's log-space step of lr=2^-7 * gamma=8 = 0.0625 codes...
+        // individually sub-gap, but with lr 2^-4 it moves >= 1 code.
+        let mut opt = QuantizedUpdate::new(Madam::new(0.0625), UpdateQuantizer::lns_matched(8));
+        let mut w = vec![100.0f32, 0.1];
+        let w0 = w.clone();
+        for _ in 0..5 {
+            opt.step(0, &mut w, &[1.0, 1.0]);
+        }
+        // Both large and small weights shrink by the same log factor.
+        let r0 = w[0] / w0[0];
+        let r1 = w[1] / w0[1];
+        assert!(r0 < 0.9 && r1 < 0.9, "r0={r0} r1={r1}");
+        assert!((r0 / r1 - 1.0).abs() < 0.1, "proportional: {r0} vs {r1}");
+    }
+
+    #[test]
+    fn quantized_weights_stay_on_grid() {
+        let fmt = LnsFormat::new(8, 8);
+        let mut opt = QuantizedUpdate::new(Sgd::new(0.1), UpdateQuantizer::Lns(fmt));
+        let mut w = vec![1.0f32, -0.5, 0.25];
+        for step in 0..20 {
+            let g: Vec<f32> = w.iter().map(|x| x * 0.1 + step as f32 * 0.01).collect();
+            opt.step(0, &mut w, &g);
+            // Re-quantizing must be a no-op (grid fixed point).
+            let mut w2 = w.clone();
+            quantize_slice(&mut w2, fmt);
+            for (a, b) in w.iter().zip(w2.iter()) {
+                assert!((a - b).abs() <= 1e-6 * a.abs().max(1e-12));
+            }
+        }
+    }
+}

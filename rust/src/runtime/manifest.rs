@@ -1,0 +1,161 @@
+//! `artifacts/manifest.json` — the python->rust artifact contract.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one positional input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub format: Option<String>,
+    /// How many leading inputs are parameters (train/eval artifacts).
+    pub n_params: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Model metadata (parameter inventory etc.).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub family: String,
+    pub params: Vec<IoSpec>,
+    pub raw: Json,
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(Manifest { dir: dir.to_path_buf(), raw })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.raw
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<ArtifactInfo> {
+        let a = self.raw.at(&["artifacts", name])?;
+        let inputs = a
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .filter_map(parse_iospec)
+            .collect::<Vec<_>>();
+        let outputs = a
+            .get("outputs")
+            .and_then(|o| o.as_arr())
+            .map(|v| v.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Some(ArtifactInfo {
+            file: a.get("file")?.as_str()?.to_string(),
+            kind: a.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+            model: a.get("model").and_then(|m| m.as_str()).map(String::from),
+            format: a.get("format").and_then(|m| m.as_str()).map(String::from),
+            n_params: a.get("n_params").and_then(|n| n.as_usize()).unwrap_or(0),
+            inputs,
+            outputs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<ModelInfo> {
+        let m = self.raw.at(&["models", name])?;
+        let params = m
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .filter_map(parse_iospec)
+            .collect::<Vec<_>>();
+        Some(ModelInfo {
+            family: m.get("family")?.as_str()?.to_string(),
+            params,
+            raw: m.clone(),
+        })
+    }
+}
+
+fn parse_iospec(j: &Json) -> Option<IoSpec> {
+    Some(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect(),
+        dtype: j.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_fixture() {
+        let dir = std::env::temp_dir().join("lns_madam_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"t": {"file": "t.hlo.txt", "kind": "train",
+                "model": "mlp", "format": "lns", "n_params": 2,
+                "inputs": [{"name": "w0", "shape": [4, 2], "dtype": "float32"},
+                           {"name": "b0", "shape": [2], "dtype": "float32"},
+                           {"name": "gamma", "shape": [], "dtype": "float32"}],
+                "outputs": ["loss", "grad:w0", "grad:b0"]}},
+              "models": {"mlp": {"family": "mlp",
+                "params": [{"name": "w0", "shape": [4, 2], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifact_names(), vec!["t".to_string()]);
+        let a = m.artifact("t").unwrap();
+        assert_eq!(a.n_params, 2);
+        assert_eq!(a.inputs[0].elements(), 8);
+        assert!(a.inputs[2].is_scalar());
+        assert_eq!(a.outputs.len(), 3);
+        let model = m.model("mlp").unwrap();
+        assert_eq!(model.family, "mlp");
+        assert_eq!(model.params[0].shape, vec![4, 2]);
+    }
+
+    #[test]
+    fn missing_artifact_is_none() {
+        let dir = std::env::temp_dir().join("lns_madam_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": {}}"#).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("nope").is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO text from
+//! `artifacts/*.hlo.txt` -> `HloModuleProto::from_text_file` ->
+//! `PjRtClient::compile` -> `execute`. The [`Manifest`] produced by
+//! `python/compile/aot.py` is validated at load time so shape drift
+//! between the python compile path and the rust request path is caught
+//! before the first step, not as a PJRT crash mid-train.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, IoSpec, Manifest};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shared PJRT client (CPU). Clone-cheap handle semantics are provided
+/// by the underlying crate, but we keep one per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<Executable> {
+        let info = manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = manifest.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Executable { name: name.to_string(), info: info.clone(), exe })
+    }
+
+    /// Load every artifact whose name passes `filter`.
+    pub fn load_all(
+        &self,
+        manifest: &Manifest,
+        filter: impl Fn(&str) -> bool,
+    ) -> Result<HashMap<String, Executable>> {
+        let mut out = HashMap::new();
+        for name in manifest.artifact_names() {
+            if filter(&name) {
+                out.insert(name.clone(), self.load(manifest, &name)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A compiled artifact plus its manifest contract.
+pub struct Executable {
+    pub name: String,
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional literals; validates count and element
+    /// counts against the manifest, returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(self.info.inputs.iter()) {
+            let n = lit.element_count();
+            if n != spec.elements() {
+                bail!(
+                    "{}: input '{}' expects shape {:?} ({} elems), literal has {}",
+                    self.name,
+                    spec.name,
+                    spec.shape,
+                    spec.elements(),
+                    n
+                );
+            }
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.name))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    let v = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    v.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    let v = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    v.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Rank-0 f32 literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Pull an f32 vector out of a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+/// Pull the first scalar out of a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+        .context("extracting f32 scalar")
+}
+
+/// Convenience: does the artifacts directory exist with a manifest?
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}

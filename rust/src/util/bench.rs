@@ -1,0 +1,158 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not
+//! vendored in this environment).
+//!
+//! Each `cargo bench` target is a plain binary (`harness = false`) that
+//! uses [`Bencher`] for timing and prints the paper table/figure it
+//! regenerates. Methodology: warmup, then adaptive batching so each
+//! sample is >= ~1ms, report mean / median / p95 over samples.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1e6 {
+        format!("{:7.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2} ms", ns / 1e6)
+    } else {
+        format!("{:7.2} s ", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 100,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            max_samples: 30,
+        }
+    }
+
+    /// Time `f`, printing a criterion-like line. Returns the stats.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup and batch-size calibration.
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+            iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / iters.max(1) as f64;
+        let batch = ((1e6 / per_iter).ceil() as u64).max(1); // ~1ms per sample
+
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure && samples.len() < self.max_samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n],
+            samples: n,
+            iters_per_sample: batch,
+        };
+        println!(
+            "bench {:40} mean {}  median {}  p95 {}  ({} samples x {} iters)",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            stats.samples,
+            stats.iters_per_sample,
+        );
+        stats
+    }
+}
+
+/// Render an aligned ASCII table (paper-table reproduction output).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:w$} | ", c, w = widths[i]));
+        }
+        s
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", line(&header_cells));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let b = Bencher::quick();
+        let s = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.samples > 0);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal dense f32 tensor used by the pure-rust model mirror and the
+//! datapath simulator. Row-major, 1-D/2-D views, no broadcasting magic —
+//! the heavy math runs in the PJRT artifacts; this exists for the
+//! experiments that sweep number formats without recompiling HLO.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32() * std).collect();
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// C = A @ B (naive with k-blocked inner loop; fine at experiment sizes).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut out = Tensor::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B where self is (m, n): result (n, k).
+    pub fn t_matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let mut out = Tensor::zeros(self.cols, b.cols);
+        for r in 0..self.rows {
+            let arow = &self.data[r * self.cols..(r + 1) * self.cols];
+            let brow = &b.data[r * b.cols..(r + 1) * b.cols];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T where b is (k, n): result (m, k).
+    pub fn matmul_t(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let mut out = Tensor::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+            for j in 0..b.rows {
+                let brow = &b.data[j * b.cols..(j + 1) * b.cols];
+                let mut acc = 0.0f32;
+                for (a, bv) in arow.iter().zip(brow.iter()) {
+                    acc += a * bv;
+                }
+                out.data[i * b.rows + j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn l2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(4, 6, 1.0, &mut rng);
+        let b = Tensor::randn(4, 3, 1.0, &mut rng);
+        let atb = a.t_matmul(&b); // (6, 3)
+        for i in 0..6 {
+            for j in 0..3 {
+                let mut acc = 0.0;
+                for r in 0..4 {
+                    acc += a.at(r, i) * b.at(r, j);
+                }
+                assert!((atb.at(i, j) - acc).abs() < 1e-4);
+            }
+        }
+        let c = Tensor::randn(5, 6, 1.0, &mut rng);
+        let act = a.matmul_t(&c); // (4, 5)
+        for i in 0..4 {
+            for j in 0..5 {
+                let mut acc = 0.0;
+                for k in 0..6 {
+                    acc += a.at(i, k) * c.at(j, k);
+                }
+                assert!((act.at(i, j) - acc).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,183 @@
+//! Cross-layer integration tests: the rust LNS substrate against the
+//! AOT-compiled Pallas kernels through PJRT, and the full Trainer loop.
+//!
+//! These need `make artifacts` to have run; they skip (pass trivially
+//! with a notice) when artifacts/ is absent so `cargo test` stays green
+//! in a fresh checkout.
+
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::lns::quant::quantize_slice;
+use lns_madam::lns::{encode_tensor, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit};
+use lns_madam::optim::MadamLns;
+use lns_madam::runtime::{artifacts_available, lit_f32, lit_scalar, to_vec_f32, Manifest, Runtime};
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+use std::path::Path;
+
+fn setup() -> Option<(Runtime, Manifest)> {
+    let dir = Path::new("artifacts");
+    if !artifacts_available(dir) {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    let runtime = Runtime::cpu().expect("pjrt cpu client");
+    let manifest = Manifest::load(dir).expect("manifest");
+    Some((runtime, manifest))
+}
+
+#[test]
+fn pallas_quantize_kernel_matches_rust_substrate() {
+    let Some((runtime, manifest)) = setup() else { return };
+    let exe = runtime.load(&manifest, "kernel_quantize").unwrap();
+    let mut rng = Rng::new(99);
+    let mut x = Tensor::randn(1024, 1024, 1.0, &mut rng);
+    let fmt = LnsFormat::PAPER8;
+    let out = exe
+        .run(&[
+            lit_f32(&[1024, 1024], &x.data).unwrap(),
+            lit_scalar(fmt.gamma as f32),
+            lit_scalar(fmt.max_code() as f32),
+        ])
+        .unwrap();
+    let kernel_q = to_vec_f32(&out[0]).unwrap();
+    quantize_slice(&mut x.data, fmt);
+    let gap = fmt.gap_factor() as f32;
+    let mut mismatches = 0;
+    for (a, b) in x.data.iter().zip(kernel_q.iter()) {
+        if (a - b).abs() > 1e-6 * a.abs().max(1e-12) {
+            mismatches += 1;
+            // A mismatch may only be a one-code rounding tie.
+            assert!((a / b).abs().max((b / a).abs()) <= gap * 1.0001, "{a} vs {b}");
+        }
+    }
+    assert!(
+        (mismatches as f64) < 1e-3 * kernel_q.len() as f64,
+        "{mismatches} mismatches"
+    );
+}
+
+#[test]
+fn pallas_datapath_matmul_matches_rust_mac_unit() {
+    let Some((runtime, manifest)) = setup() else { return };
+    let exe = runtime.load(&manifest, "kernel_lns_matmul").unwrap();
+    let mut rng = Rng::new(7);
+    let a = Tensor::randn(128, 128, 1.0, &mut rng);
+    let b = Tensor::randn(128, 128, 1.0, &mut rng);
+    let out = exe
+        .run(&[
+            lit_f32(&[128, 128], &a.data).unwrap(),
+            lit_f32(&[128, 128], &b.data).unwrap(),
+        ])
+        .unwrap();
+    let kernel_c = to_vec_f32(&out[0]).unwrap();
+
+    let fmt = LnsFormat::PAPER8;
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut mac = VectorMacUnit::new(MacConfig::paper());
+    let rust_c = mac.matmul(&ea, &eb);
+
+    let denom = rust_c.abs_max();
+    let mut max_rel = 0.0f32;
+    for (k, r) in kernel_c.iter().zip(rust_c.data.iter()) {
+        max_rel = max_rel.max((k - r).abs() / denom);
+    }
+    // Tie-level encode differences + f32-vs-block-integer accumulation:
+    // agreement must be within the format's own rounding noise.
+    assert!(max_rel < 5e-2, "kernel vs rust datapath: rel {max_rel}");
+    assert_eq!(mac.counts.total_macs(), 128 * 128 * 128);
+}
+
+#[test]
+fn pallas_madam_kernel_matches_rust_code_update() {
+    let Some((runtime, manifest)) = setup() else { return };
+    let exe = runtime.load(&manifest, "kernel_madam_update").unwrap();
+    let fmt = LnsFormat::PAPER8;
+    let mut rng = Rng::new(13);
+    // Weights pre-quantized onto the LNS grid (the stored format).
+    let mut w = Tensor::randn(512, 512, 1.0, &mut rng);
+    quantize_slice(&mut w.data, fmt);
+    let g = Tensor::randn(512, 512, 1.0, &mut rng);
+    let g2 = Tensor::zeros(512, 512);
+    let scale = fmt.scale_for_absmax(w.abs_max());
+
+    let out = exe
+        .run(&[
+            lit_f32(&[512, 512], &w.data).unwrap(),
+            lit_f32(&[512, 512], &g.data).unwrap(),
+            lit_f32(&[512, 512], &g2.data).unwrap(),
+            lit_f32(&[1, 1], &[scale]).unwrap(),
+        ])
+        .unwrap();
+    let kernel_w = to_vec_f32(&out[0]).unwrap();
+
+    // Rust: integer-native Madam over the encoded planes.
+    let enc = encode_tensor(&w, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut codes = enc.codes.clone();
+    let mut madam = MadamLns::new(2f32.powi(-7), fmt);
+    madam.step_codes(0, &enc.signs, &mut codes, scale, &g.data);
+
+    let mut disagreements = 0u32;
+    for i in 0..codes.len() {
+        if enc.signs[i] == 0 {
+            assert_eq!(kernel_w[i], 0.0);
+            continue;
+        }
+        let kcode = ((kernel_w[i].abs() / scale).log2() * fmt.gamma as f32).round() as i64;
+        let diff = (kcode - codes[i] as i64).abs();
+        assert!(diff <= 1, "i={i}: kernel code {kcode} vs rust {}", codes[i]);
+        if diff > 0 {
+            disagreements += 1;
+        }
+    }
+    // Rounding ties only — a tiny fraction.
+    assert!((disagreements as f64) < 2e-3 * codes.len() as f64, "{disagreements}");
+}
+
+#[test]
+fn trainer_reduces_loss_on_mlp_lns() {
+    let Some((runtime, _)) = setup() else { return };
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlp".into();
+    cfg.format = "lns".into();
+    cfg.optimizer = OptKind::Madam;
+    cfg.lr = cfg.optimizer.default_lr();
+    cfg.steps = 120;
+    cfg.eval_every = 0;
+    let mut trainer = Trainer::new(&runtime, cfg).unwrap();
+    let (first, _) = trainer.step().unwrap();
+    let mut tail = Vec::new();
+    for _ in 0..119 {
+        let (loss, _) = trainer.step().unwrap();
+        tail.push(loss);
+    }
+    let last: f32 = tail[tail.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(first.is_finite());
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+}
+
+#[test]
+fn trainer_shape_validation_catches_bad_input() {
+    let Some((runtime, manifest)) = setup() else { return };
+    let exe = runtime.load(&manifest, "kernel_quantize").unwrap();
+    // Wrong element count must fail before reaching PJRT.
+    let bad = lit_f32(&[8, 8], &vec![0.0; 64]).unwrap();
+    let err = exe.run(&[bad, lit_scalar(8.0), lit_scalar(127.0)]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn all_formats_train_one_step() {
+    let Some((runtime, _)) = setup() else { return };
+    for format in ["lns", "fp8", "int8", "fp32"] {
+        let mut cfg = TrainConfig::default();
+        cfg.model = "mlp".into();
+        cfg.format = format.into();
+        cfg.steps = 1;
+        cfg.eval_every = 0;
+        let mut trainer = Trainer::new(&runtime, cfg).unwrap();
+        let (loss, acc) = trainer.step().unwrap();
+        assert!(loss.is_finite(), "{format}: loss {loss}");
+        assert!(acc.unwrap() >= 0.0);
+    }
+}
