@@ -82,12 +82,88 @@ fn main() {
         s.throughput((64 * 128 * 64) as f64) / 1e6
     );
 
+    // Sequential vs parallel datapath at GEMM scale (512^3): the
+    // Parallelism knob must deliver wall-clock speedup with op counts
+    // (and outputs) bit-identical to the sequential order.
+    {
+        let dim = 512usize;
+        let a = Tensor::randn(dim, dim, 1.0, &mut rng);
+        let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
+        let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let eb = encode_tensor(&bt, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let macs = (dim * dim * dim) as f64;
+
+        let mut seq = VectorMacUnit::new(MacConfig::paper());
+        let t0 = Instant::now();
+        let out_seq = seq.matmul(&ea, &eb);
+        let seq_s = t0.elapsed().as_secs_f64();
+        println!(
+            "datapath sim matmul {dim}^3 sequential: {:.2} s  ({:.1} MMACs/s)",
+            seq_s,
+            macs / seq_s / 1e6
+        );
+
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut par = VectorMacUnit::new(MacConfig::paper_parallel());
+        let t1 = Instant::now();
+        let out_par = par.matmul(&ea, &eb);
+        let par_s = t1.elapsed().as_secs_f64();
+        println!(
+            "datapath sim matmul {dim}^3 parallel ({workers} workers): {:.2} s  ({:.1} MMACs/s, {:.2}x speedup)",
+            par_s,
+            macs / par_s / 1e6,
+            seq_s / par_s
+        );
+
+        assert_eq!(
+            seq.counts, par.counts,
+            "parallel datapath op counts must be bit-identical to sequential"
+        );
+        assert_eq!(out_seq.data, out_par.data, "parallel outputs must match");
+        assert_eq!(seq.counts.total_macs(), (dim * dim * dim) as u64);
+        if workers >= 4 && seq_s / par_s < 2.0 {
+            println!(
+                "WARNING: parallel speedup {:.2}x below the 2x target on {workers} cores",
+                seq_s / par_s
+            );
+        }
+    }
+
+    // Tiled f32 GEMM throughput (the Tensor hot path under every
+    // sweep and the model mirror).
+    {
+        let dim = 512usize;
+        let a = Tensor::randn(dim, dim, 1.0, &mut rng);
+        let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
+        let s = b.bench("tensor matmul 512^3 (tiled)", || a.matmul(&bt));
+        println!(
+            "  -> {:.2} GFLOP/s",
+            s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
+        );
+        let s = b.bench("tensor t_matmul 512^3 (tiled)", || a.t_matmul(&bt));
+        println!(
+            "  -> {:.2} GFLOP/s",
+            s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
+        );
+        let s = b.bench("tensor matmul_t 512^3 (tiled)", || a.matmul_t(&bt));
+        println!(
+            "  -> {:.2} GFLOP/s",
+            s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
+        );
+    }
+
     // --- end-to-end train step (PJRT grad + rust update) -----------------
     if !artifacts_available(Path::new("artifacts")) {
         println!("(skipping PJRT hotpath: run `make artifacts`)");
         return;
     }
-    let runtime = Runtime::cpu().expect("pjrt");
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("(skipping PJRT hotpath: runtime unavailable: {e})");
+            return;
+        }
+    };
     let mut cfg = TrainConfig::default();
     cfg.model = "mlp".into();
     cfg.format = "lns".into();

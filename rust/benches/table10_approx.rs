@@ -34,12 +34,7 @@ fn main() {
                 steps: 150,
                 seed,
                 quant: TrainQuant::lns8(),
-                datapath: Some(MacConfig {
-                    format: fmt,
-                    convert: *mode,
-                    acc_bits: 24,
-                    vector_size: 32,
-                }),
+                datapath: Some(MacConfig { convert: *mode, ..MacConfig::paper_parallel() }),
                 ..Default::default()
             };
             let mut opt = Sgd::with(0.1, 0.9, 0.0);

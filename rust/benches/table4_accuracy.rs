@@ -35,7 +35,13 @@ fn main() {
         eprintln!("table4_accuracy: artifacts missing; run `make artifacts`");
         return;
     }
-    let runtime = Runtime::cpu().expect("pjrt");
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("table4_accuracy: PJRT unavailable ({e}); skipping");
+            return;
+        }
+    };
     let mut rows = Vec::new();
 
     // Vision stand-in: synthetic classification MLP, 300 steps.

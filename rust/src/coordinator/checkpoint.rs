@@ -70,38 +70,62 @@ pub fn load(path: &Path) -> Result<(Vec<Param>, usize, BTreeMap<String, String>)
         .with_context(|| format!("opening {}", path.display()))?
         .read_to_end(&mut buf)?;
     let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > buf.len() {
+    fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+        // `*pos <= buf.len()` always holds, so this cannot overflow the
+        // way `*pos + n` could with an untrusted, huge `n`.
+        if n > buf.len() - *pos {
             bail!("truncated checkpoint at byte {}", *pos);
         }
         let s = &buf[*pos..*pos + n];
         *pos += n;
         Ok(s)
-    };
-    if take(&mut pos, 8)? != MAGIC {
+    }
+    let buf = buf.as_slice();
+    if take(buf, &mut pos, 8)? != MAGIC {
         bail!("not an LNS-Madam checkpoint");
     }
-    let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let version = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap());
     if version != VERSION {
         bail!("unsupported checkpoint version {version}");
     }
-    let n_tensors = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let n_tensors = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
+    let step = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap()) as usize;
+    // Headers are untrusted: bound every count by what the file could
+    // possibly hold before reserving memory for it (each tensor needs
+    // >= 16 header bytes, each dim 8), so a crafted header fails with
+    // a clean error instead of aborting on a huge allocation.
+    if n_tensors > buf.len() / 16 {
+        bail!("implausible tensor count {n_tensors} for {} bytes", buf.len());
+    }
     let mut params = Vec::with_capacity(n_tensors);
     let mut checksum = 0u64;
     for _ in 0..n_tensors {
-        let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
-        let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let nlen = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(buf, &mut pos, nlen)?.to_vec())?;
+        let rank = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
+        if rank > (buf.len() - pos) / 8 {
+            bail!("tensor '{name}': implausible rank {rank}");
+        }
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            shape.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+            shape.push(u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap()) as usize);
         }
-        let count = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-        if count != shape.iter().product::<usize>() {
+        let count = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap()) as usize;
+        // Checked product: dims like [2^33, 2^33] must not wrap into a
+        // small value that happens to match `count`.
+        let expected = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d));
+        if expected != Some(count) {
             bail!("tensor '{name}': count {count} != shape {shape:?}");
         }
-        let bytes = take(&mut pos, count * 4)?;
+        // `count` is untrusted: a crafted value near usize::MAX would
+        // wrap in `count * 4` past the truncation check and then abort
+        // in the allocation below. Fail cleanly instead.
+        let Some(byte_len) = count.checked_mul(4) else {
+            bail!("tensor '{name}': implausible element count {count}");
+        };
+        let bytes = take(buf, &mut pos, byte_len)?;
         checksum = fnv1a(bytes, checksum);
         let mut data = vec![0f32; count];
         for (i, ch) in bytes.chunks_exact(4).enumerate() {
@@ -109,12 +133,12 @@ pub fn load(path: &Path) -> Result<(Vec<Param>, usize, BTreeMap<String, String>)
         }
         params.push(Param { name, shape, data });
     }
-    let want = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+    let want = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap());
     if want != checksum {
         bail!("checksum mismatch: stored {want:#x}, computed {checksum:#x}");
     }
-    let mlen = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-    let meta_json = std::str::from_utf8(take(&mut pos, mlen)?)?;
+    let mlen = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap()) as usize;
+    let meta_json = std::str::from_utf8(take(buf, &mut pos, mlen)?)?;
     let meta = Json::parse(meta_json)
         .map_err(|e| anyhow::anyhow!("metadata: {e}"))?
         .as_obj()
@@ -179,6 +203,31 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load(&path);
         assert!(err.is_err(), "corrupted checkpoint must not load");
+    }
+
+    #[test]
+    fn implausible_count_rejected_cleanly() {
+        // A crafted header whose tensor claims usize::MAX elements must
+        // produce a clean error, not a capacity-overflow abort.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name len
+        bytes.push(b'w');
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // dim
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // count
+        let dir = std::env::temp_dir().join("lns_ckpt_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("implausible"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]

@@ -67,6 +67,12 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Metrics output path ("" = stdout only).
     pub log_path: String,
+    /// Host-thread knob for the rust-side hot paths: 0 = auto (one
+    /// worker per core), 1 = sequential, n = exactly n workers. The
+    /// trainer feeds it to the fused Madam+Q_U optimizer's worker
+    /// count; datapath-driving tools map the same convention onto the
+    /// simulator via `lns::Parallelism::from_knob`.
+    pub parallelism: usize,
 }
 
 impl Default for TrainConfig {
@@ -86,6 +92,7 @@ impl Default for TrainConfig {
             qu_bits: 16,
             artifacts_dir: "artifacts".into(),
             log_path: String::new(),
+            parallelism: 0,
         }
     }
 }
@@ -114,6 +121,7 @@ impl TrainConfig {
         t.qu_bits = cfg.i64_or("quant", "qu_bits", t.qu_bits as i64) as u32;
         t.artifacts_dir = cfg.str_or("paths", "artifacts", &t.artifacts_dir);
         t.log_path = cfg.str_or("paths", "log", &t.log_path);
+        t.parallelism = cfg.i64_or("train", "parallelism", t.parallelism as i64).max(0) as usize;
         Ok(t)
     }
 
@@ -140,13 +148,22 @@ mod tests {
     }
 
     #[test]
+    fn parallelism_knob_follows_shared_convention() {
+        use crate::lns::Parallelism;
+        let t = TrainConfig::default();
+        // The config default (0) means auto under the shared knob
+        // convention the trainer and simulator both use.
+        assert_eq!(Parallelism::from_knob(t.parallelism), Parallelism::Auto);
+    }
+
+    #[test]
     fn parses_file() {
         let dir = std::env::temp_dir().join("lns_cfg_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("t.toml");
         std::fs::write(
             &p,
-            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\n[quant]\ngamma_fwd = 16\n",
+            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\nparallelism = 2\n[quant]\ngamma_fwd = 16\n",
         )
         .unwrap();
         let t = TrainConfig::from_file(p.to_str().unwrap()).unwrap();
@@ -154,6 +171,7 @@ mod tests {
         assert_eq!(t.optimizer, OptKind::Sgd);
         assert_eq!(t.steps, 10);
         assert_eq!(t.gamma_fwd, 16.0);
+        assert_eq!(t.parallelism, 2);
         assert_eq!(t.train_artifact(), "tfm_tiny_lns_train");
     }
 

@@ -54,7 +54,15 @@ fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
         OptKind::Madam => match qu {
             // Hot path: fused Madam+Q_U (one log2 + one exp2 per param,
             // threaded) — see optim::fused and EXPERIMENTS.md §Perf.
-            UpdateQuantizer::Lns(fmt) => Box::new(FusedMadamQu::new(cfg.lr, fmt)),
+            // The config's parallelism knob sets the worker count;
+            // 0 (auto) keeps the optimizer's own core-count default.
+            UpdateQuantizer::Lns(fmt) => {
+                let mut fused = FusedMadamQu::new(cfg.lr, fmt);
+                if cfg.parallelism >= 1 {
+                    fused.threads = cfg.parallelism;
+                }
+                Box::new(fused)
+            }
             other => Box::new(QuantizedUpdate::new(Madam::new(cfg.lr), other)),
         },
     }
@@ -293,6 +301,17 @@ fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn build_optimizer_picks_fused_madam_for_lns_qu() {
+        let mut cfg = TrainConfig::default();
+        cfg.parallelism = 2; // any explicit worker count must be accepted
+        let opt = build_optimizer(&cfg);
+        assert_eq!(opt.name(), "madam-fused");
+        cfg.qu_bits = 0; // full-precision update: composed path
+        let opt = build_optimizer(&cfg);
+        assert_eq!(opt.name(), "madam");
+    }
 
     #[test]
     fn init_param_shapes() {

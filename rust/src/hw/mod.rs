@@ -11,4 +11,4 @@ pub mod workload;
 
 pub use energy::{EnergyBreakdown, EnergyModel, PeFormat};
 pub use pe::{Pass, PeConfig};
-pub use workload::{gpt_workloads, table8_workloads, Workload};
+pub use workload::{gpt_workloads, measure_gemm_opcounts, table8_workloads, Workload};

@@ -62,6 +62,35 @@ pub fn gpt_workloads() -> Vec<Workload> {
         .collect()
 }
 
+/// Run one (m x k) @ (k x n) GEMM through the bit-faithful Fig. 6
+/// simulator and return the op counts it actually executed — the
+/// measured (rather than closed-form) input to the energy model.
+///
+/// `cfg.parallelism` controls how many host threads the simulation
+/// uses; the counts are guaranteed identical at every setting, so
+/// energy sweeps can run wide without perturbing their own numbers.
+pub fn measure_gemm_opcounts(
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: crate::lns::MacConfig,
+    seed: u64,
+) -> crate::lns::OpCounts {
+    use crate::lns::format::Rounding;
+    use crate::lns::quant::{encode_tensor, Scaling};
+    use crate::util::rng::Rng;
+    use crate::util::tensor::Tensor;
+
+    let mut rng = Rng::new(seed);
+    let a = Tensor::randn(m, k, 1.0, &mut rng);
+    let b = Tensor::randn(k, n, 1.0, &mut rng);
+    let ea = encode_tensor(&a, cfg.format, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, cfg.format, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut mac = crate::lns::VectorMacUnit::new(cfg);
+    let _ = mac.matmul(&ea, &eb);
+    mac.counts
+}
+
 /// MACs for one quantized-GEMM training iteration of the *reproduction*
 /// models (used to report measured-system energy next to paper-model
 /// energy in EXPERIMENTS.md).
@@ -120,6 +149,20 @@ mod tests {
         let first = w.first().unwrap().total_macs();
         let last = w.last().unwrap().total_macs();
         assert!((last / first - 1000.0).abs() / 1000.0 < 0.01);
+    }
+
+    #[test]
+    fn measured_opcounts_match_closed_form_and_parallelism() {
+        use crate::lns::{MacConfig, Parallelism};
+        let (m, k, n) = (13, 24, 9);
+        let seq = measure_gemm_opcounts(m, k, n, MacConfig::paper(), 7);
+        assert_eq!(seq.total_macs(), (m * k * n) as u64);
+        // Exact-LUT mode: gamma LUT multiplies per output element.
+        assert_eq!(seq.lut_muls, (m * n * 8) as u64);
+        let mut cfg = MacConfig::paper();
+        cfg.parallelism = Parallelism::Threads(4);
+        let par = measure_gemm_opcounts(m, k, n, cfg, 7);
+        assert_eq!(par, seq, "energy-model op totals must not depend on threading");
     }
 
     #[test]

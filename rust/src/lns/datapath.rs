@@ -57,6 +57,50 @@ impl OpCounts {
     }
 }
 
+/// How the simulated GEMM is distributed across host CPU threads.
+///
+/// Parallelism never changes the math: every output element runs the
+/// same per-lane kernel, and per-thread [`OpCounts`] are merged with
+/// [`OpCounts::add`], so op totals (and therefore the energy model's
+/// prices) are bit-identical to the sequential order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Single-threaded, hardware-faithful reference order.
+    Sequential,
+    /// A fixed worker count (clamped to at least 1).
+    Threads(usize),
+    /// One worker per available core.
+    Auto,
+}
+
+impl Parallelism {
+    /// Resolve to a concrete worker count on this host.
+    pub fn worker_count(&self) -> usize {
+        match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Threads(n) => (*n).max(1),
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    /// Parse a CLI/config knob: 0 = auto, 1 = sequential, n = threads.
+    pub fn from_knob(n: usize) -> Parallelism {
+        match n {
+            0 => Parallelism::Auto,
+            1 => Parallelism::Sequential,
+            n => Parallelism::Threads(n),
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::Sequential
+    }
+}
+
 /// Microarchitectural parameters of the PE datapath (Table 1).
 #[derive(Clone, Copy, Debug)]
 pub struct MacConfig {
@@ -68,6 +112,9 @@ pub struct MacConfig {
     /// Vector lanes per MAC unit (32 in the paper); affects only the
     /// op-count bookkeeping granularity, not the math.
     pub vector_size: u32,
+    /// Host-thread distribution of the simulated GEMM (not a hardware
+    /// parameter: op counts and outputs are identical at any setting).
+    pub parallelism: Parallelism,
 }
 
 impl MacConfig {
@@ -77,8 +124,27 @@ impl MacConfig {
             convert: ConvertMode::ExactLut,
             acc_bits: 24,
             vector_size: 32,
+            parallelism: Parallelism::Sequential,
         }
     }
+
+    /// The paper configuration with the simulator spread across all
+    /// available cores.
+    pub fn paper_parallel() -> Self {
+        MacConfig { parallelism: Parallelism::Auto, ..MacConfig::paper() }
+    }
+}
+
+/// Scalar parameters the dot kernel needs, extracted from
+/// `MacConfig` + `Converter` so worker threads can share them without
+/// borrowing the mutable unit.
+#[derive(Clone, Copy, Debug)]
+struct DotParams {
+    gamma: u32,
+    remainder_bits: u32,
+    n_bins: u32,
+    span: u32,
+    acc_bits: u32,
 }
 
 /// The simulated vector MAC unit.
@@ -102,6 +168,16 @@ impl VectorMacUnit {
         self.cfg.format.gamma / self.n_bins()
     }
 
+    fn dot_params(&self) -> DotParams {
+        DotParams {
+            gamma: self.cfg.format.gamma,
+            remainder_bits: self.cfg.format.remainder_bits(),
+            n_bins: self.n_bins(),
+            span: self.span(),
+            acc_bits: self.cfg.acc_bits,
+        }
+    }
+
     /// Dot product of two LNS-encoded vectors given as (sign, code)
     /// slices. Returns the *unscaled* integer-domain result; the caller
     /// multiplies by the operand scales (the PPU's job).
@@ -113,84 +189,31 @@ impl VectorMacUnit {
     /// binades below the max are swamped and drop out, exactly the
     /// precision loss a fixed-width guarded accumulator exhibits.
     pub fn dot(&mut self, sa: &[i8], ea: &[u32], sb: &[i8], eb: &[u32]) -> f64 {
-        debug_assert_eq!(sa.len(), sb.len());
-        let gamma = self.cfg.format.gamma;
-        let b = self.cfg.format.remainder_bits();
-        let n_bins = self.n_bins();
-        let span = self.span();
-
-        // Pass 1 (hardware: max-exponent detect for the block window).
-        let mut q_max: i64 = -1;
-        for i in 0..sa.len() {
-            if sa[i] != 0 && sb[i] != 0 {
-                q_max = q_max.max(((ea[i] + eb[i]) >> b) as i64);
-            }
-        }
-        if q_max < 0 {
-            // All-zero vector: still count the lane ops, result is 0.
-            self.counts.exp_adds += sa.len() as u64;
-            self.counts.sign_xors += sa.len() as u64;
-            return 0.0;
-        }
-        // Carry headroom for n lanes, leaving frac_bits of precision
-        // below the largest product inside the acc_bits-wide collector.
-        let headroom = 64 - (sa.len() as u64).leading_zeros() as i64;
-        let frac_bits = (self.cfg.acc_bits as i64 - 1 - headroom).max(0);
-
-        // Per-remainder-bin integer collectors, in units of
-        // 2^(q_max - frac_bits) / gamma. Hybrid mode scales each addend
-        // by (gamma + lsb) instead of gamma — an integer-exact way to
-        // fold Mitchell's (1 + lsb/gamma) into the adder tree.
-        let mut bins = vec![0i64; n_bins as usize];
-        for i in 0..sa.len() {
-            self.counts.exp_adds += 1;
-            self.counts.sign_xors += 1;
-            if sa[i] == 0 || sb[i] == 0 {
-                continue; // zero flag: lane contributes nothing
-            }
-            let p = ea[i] + eb[i]; // 8-bit adder with carry-out
-            let sign = (sa[i] as i64) * (sb[i] as i64);
-            let q = (p >> b) as i64;
-            let r = p & (gamma - 1);
-            let r_msb = r / span;
-            let r_lsb = r % span;
-            self.counts.shifts += 1;
-            let rel = q - q_max + frac_bits; // shift within the window
-            if rel < 0 {
-                // Swamped: too small for the collector's precision.
-                self.counts.collector_adds += 1;
-                continue;
-            }
-            let mut addend = sign << rel;
-            if span > 1 {
-                self.counts.mitchell_adds += 1;
-                addend *= gamma as i64 + r_lsb as i64;
-            } else {
-                addend *= gamma as i64;
-            }
-            self.counts.collector_adds += 1;
-            bins[r_msb as usize] += addend;
-        }
-
-        // LUT multiply per bin + final accumulation (PPU side).
-        let window = ((q_max - frac_bits) as f64).exp2();
-        let mut acc = 0.0f64;
-        for (i, &bin) in bins.iter().enumerate() {
-            self.counts.lut_muls += 1;
-            self.counts.final_adds += 1;
-            let lut = ((i as u32 * span) as f64 / gamma as f64).exp2();
-            acc += bin as f64 / gamma as f64 * lut;
-        }
-        acc * window
+        dot_kernel(&self.dot_params(), sa, ea, sb, eb, &mut self.counts)
     }
 
     /// Full GEMM over encoded tensors: C[m,n] = sum_k A[m,k] * B[k,n],
     /// applying group scales per output element. This is the semantics
     /// the Pallas kernel `lns_matmul.py` must match (cross-layer test).
+    ///
+    /// Work distribution follows `cfg.parallelism`: rows of A are
+    /// partitioned across scoped threads, each accumulating a local
+    /// [`OpCounts`] that is merged into `self.counts` afterwards. Both
+    /// the output tensor and the op totals are bit-identical to the
+    /// sequential order at every setting.
     pub fn matmul(&mut self, a: &LnsTensor, b: &LnsTensor) -> Tensor {
         assert_eq!(a.cols, b.rows, "matmul shape mismatch");
         assert_eq!(a.format, b.format);
+        let workers = self.cfg.parallelism.worker_count().min(a.rows.max(1));
+        if workers <= 1 || b.cols == 0 {
+            return self.matmul_sequential(a, b);
+        }
+        self.matmul_parallel(a, b, workers)
+    }
+
+    fn matmul_sequential(&mut self, a: &LnsTensor, b: &LnsTensor) -> Tensor {
         let mut out = Tensor::zeros(a.rows, b.cols);
+        let params = self.dot_params();
         // Gather B columns once (the hardware reads BufferB once per
         // cycle and reuses across 32 lanes — column-major staging).
         let mut col_signs = vec![0i8; b.rows];
@@ -202,11 +225,13 @@ impl VectorMacUnit {
             }
             for i in 0..a.rows {
                 let row = i * a.cols;
-                let unscaled = self.dot(
+                let unscaled = dot_kernel(
+                    &params,
                     &a.signs[row..row + a.cols],
                     &a.codes[row..row + a.cols],
                     &col_signs,
                     &col_codes,
+                    &mut self.counts,
                 );
                 // PPU scaling: per-group scales of both operands.
                 let sa = a.scale_at(i, 0);
@@ -216,6 +241,151 @@ impl VectorMacUnit {
         }
         out
     }
+
+    fn matmul_parallel(&mut self, a: &LnsTensor, b: &LnsTensor, workers: usize) -> Tensor {
+        let params = self.dot_params();
+        // Stage all of B column-major once, shared read-only across
+        // workers (the BufferB staging of the sequential path, hoisted).
+        let mut bt_signs = vec![0i8; b.rows * b.cols];
+        let mut bt_codes = vec![0u32; b.rows * b.cols];
+        for k in 0..b.rows {
+            for j in 0..b.cols {
+                bt_signs[j * b.rows + k] = b.signs[k * b.cols + j];
+                bt_codes[j * b.rows + k] = b.codes[k * b.cols + j];
+            }
+        }
+        let bts = bt_signs.as_slice();
+        let btc = bt_codes.as_slice();
+
+        let mut out = Tensor::zeros(a.rows, b.cols);
+        let chunk_rows = a.rows.div_ceil(workers);
+        let per_thread: Vec<OpCounts> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ci, out_chunk) in out.data.chunks_mut(chunk_rows * b.cols).enumerate() {
+                let row0 = ci * chunk_rows;
+                handles.push(s.spawn(move || {
+                    let mut counts = OpCounts::default();
+                    let rows_here = out_chunk.len() / b.cols;
+                    for dr in 0..rows_here {
+                        let i = row0 + dr;
+                        let row = i * a.cols;
+                        for j in 0..b.cols {
+                            let col = j * b.rows;
+                            let unscaled = dot_kernel(
+                                &params,
+                                &a.signs[row..row + a.cols],
+                                &a.codes[row..row + a.cols],
+                                &bts[col..col + b.rows],
+                                &btc[col..col + b.rows],
+                                &mut counts,
+                            );
+                            let sa = a.scale_at(i, 0);
+                            let sb = b.scale_at(0, j);
+                            out_chunk[dr * b.cols + j] =
+                                (unscaled * sa as f64 * sb as f64) as f32;
+                        }
+                    }
+                    counts
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("datapath worker panicked"))
+                .collect()
+        });
+        // Deterministic merge in thread order; totals are order-
+        // independent sums, so they match the sequential run exactly.
+        for c in &per_thread {
+            self.counts.add(c);
+        }
+        out
+    }
+}
+
+/// The per-output-element dot kernel — shared verbatim by the
+/// sequential and parallel paths so results cannot diverge.
+fn dot_kernel(
+    p: &DotParams,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    counts: &mut OpCounts,
+) -> f64 {
+    debug_assert_eq!(sa.len(), sb.len());
+    let gamma = p.gamma;
+    let b = p.remainder_bits;
+    let n_bins = p.n_bins;
+    let span = p.span;
+
+    // Pass 1 (hardware: max-exponent detect for the block window).
+    let mut q_max: i64 = -1;
+    for i in 0..sa.len() {
+        if sa[i] != 0 && sb[i] != 0 {
+            q_max = q_max.max(((ea[i] + eb[i]) >> b) as i64);
+        }
+    }
+    if q_max < 0 {
+        // All-zero vector: still count the lane ops, result is 0.
+        counts.exp_adds += sa.len() as u64;
+        counts.sign_xors += sa.len() as u64;
+        return 0.0;
+    }
+    // Carry headroom for n lanes, leaving frac_bits of precision
+    // below the largest product inside the acc_bits-wide collector.
+    let headroom = 64 - (sa.len() as u64).leading_zeros() as i64;
+    let frac_bits = (p.acc_bits as i64 - 1 - headroom).max(0);
+    // Collector saturation rail: the modeled accumulator holds
+    // acc_bits signed integer bits (bin units carry an extra gamma
+    // factor from the folded Mitchell scaling). Sums clamp here
+    // instead of wrapping — a guarded accumulator never flips sign.
+    let cap = (gamma as i64) << (p.acc_bits as i64 - 1).clamp(0, 48);
+
+    // Per-remainder-bin integer collectors, in units of
+    // 2^(q_max - frac_bits) / gamma. Hybrid mode scales each addend
+    // by (gamma + lsb) instead of gamma — an integer-exact way to
+    // fold Mitchell's (1 + lsb/gamma) into the adder tree.
+    let mut bins = vec![0i64; n_bins as usize];
+    for i in 0..sa.len() {
+        counts.exp_adds += 1;
+        counts.sign_xors += 1;
+        if sa[i] == 0 || sb[i] == 0 {
+            continue; // zero flag: lane contributes nothing
+        }
+        let pexp = ea[i] + eb[i]; // 8-bit adder with carry-out
+        let sign = (sa[i] as i64) * (sb[i] as i64);
+        let q = (pexp >> b) as i64;
+        let r = pexp & (gamma - 1);
+        let r_msb = r / span;
+        let r_lsb = r % span;
+        counts.shifts += 1;
+        let rel = q - q_max + frac_bits; // shift within the window
+        if rel < 0 {
+            // Swamped: too small for the collector's precision.
+            counts.collector_adds += 1;
+            continue;
+        }
+        let mut addend = sign << rel;
+        if span > 1 {
+            counts.mitchell_adds += 1;
+            addend *= gamma as i64 + r_lsb as i64;
+        } else {
+            addend *= gamma as i64;
+        }
+        counts.collector_adds += 1;
+        bins[r_msb as usize] = (bins[r_msb as usize] + addend).clamp(-cap, cap);
+    }
+
+    // LUT multiply per bin + final accumulation (PPU side).
+    let window = ((q_max - frac_bits) as f64).exp2();
+    let mut acc = 0.0f64;
+    for (i, &bin) in bins.iter().enumerate() {
+        counts.lut_muls += 1;
+        counts.final_adds += 1;
+        let lut = ((i as u32 * span) as f64 / gamma as f64).exp2();
+        acc += bin as f64 / gamma as f64 * lut;
+    }
+    acc * window
 }
 
 #[cfg(test)]
@@ -341,5 +511,133 @@ mod tests {
         let mut mac24 = VectorMacUnit::new(MacConfig::paper());
         let wide = mac24.matmul(&enc(&a, fmt), &enc(&b, fmt)).data[0];
         assert!(wide > got, "wide {wide} should exceed narrow {got}");
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical_to_sequential() {
+        let mut rng = Rng::new(21);
+        let fmt = LnsFormat::PAPER8;
+        // Odd sizes so row chunks are ragged across workers.
+        let a = Tensor::randn(37, 53, 1.0, &mut rng);
+        let b = Tensor::randn(53, 29, 1.0, &mut rng);
+        let (ea, eb) = (enc(&a, fmt), enc(&b, fmt));
+
+        let mut seq = VectorMacUnit::new(MacConfig::paper());
+        let want = seq.matmul(&ea, &eb);
+
+        for workers in [2usize, 3, 8, 64] {
+            let mut cfg = MacConfig::paper();
+            cfg.parallelism = Parallelism::Threads(workers);
+            let mut par = VectorMacUnit::new(cfg);
+            let got = par.matmul(&ea, &eb);
+            assert_eq!(got.data, want.data, "outputs differ at {workers} workers");
+            assert_eq!(par.counts, seq.counts, "op counts differ at {workers} workers");
+        }
+
+        // Auto must also agree, whatever the host core count.
+        let mut auto = VectorMacUnit::new(MacConfig::paper_parallel());
+        let got = auto.matmul(&ea, &eb);
+        assert_eq!(got.data, want.data);
+        assert_eq!(auto.counts, seq.counts);
+    }
+
+    #[test]
+    fn parallel_hybrid_mode_identical_too() {
+        let mut rng = Rng::new(22);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(17, 31, 1.0, &mut rng);
+        let b = Tensor::randn(31, 11, 1.0, &mut rng);
+        let (ea, eb) = (enc(&a, fmt), enc(&b, fmt));
+        let mut cfg = MacConfig::paper();
+        cfg.convert = ConvertMode::Hybrid { lut_bits: 1 };
+        let mut seq = VectorMacUnit::new(cfg);
+        let want = seq.matmul(&ea, &eb);
+        cfg.parallelism = Parallelism::Threads(4);
+        let mut par = VectorMacUnit::new(cfg);
+        let got = par.matmul(&ea, &eb);
+        assert_eq!(got.data, want.data);
+        assert_eq!(par.counts, seq.counts);
+    }
+
+    #[test]
+    fn parallelism_knob_parses_and_resolves() {
+        assert_eq!(Parallelism::from_knob(0), Parallelism::Auto);
+        assert_eq!(Parallelism::from_knob(1), Parallelism::Sequential);
+        assert_eq!(Parallelism::from_knob(6), Parallelism::Threads(6));
+        assert_eq!(Parallelism::Sequential.worker_count(), 1);
+        assert_eq!(Parallelism::Threads(0).worker_count(), 1);
+        assert_eq!(Parallelism::Threads(5).worker_count(), 5);
+        assert!(Parallelism::Auto.worker_count() >= 1);
+    }
+
+    #[test]
+    fn collector_saturates_not_wraps_on_adversarial_same_sign() {
+        // Adversarial input: 127 lanes, all at the top code, all the
+        // same sign. In Mitchell mode every addend carries the folded
+        // (gamma + lsb)/gamma factor (here 14/8), so the bin total is
+        // ~1.74x the acc_bits rail — a wrapping accumulator would go
+        // negative; the guarded collector must clamp at the rail.
+        let fmt = LnsFormat::PAPER8;
+        let n = 127;
+        let a = Tensor::from_vec(1, n, vec![1.0; n]);
+        let b = Tensor::from_vec(n, 1, vec![1.0; n]);
+        let mut cfg = MacConfig::paper();
+        cfg.convert = ConvertMode::Mitchell;
+        let mut mac = VectorMacUnit::new(cfg);
+        let got = mac.matmul(&enc(&a, fmt), &enc(&b, fmt)).data[0];
+
+        // Unsaturated Mitchell value: each 1.0*1.0 product has code sum
+        // 254 -> q=31, lsb=6, approximated as (1 + 6/8) * 2^31 against
+        // the exact 2^31.75, i.e. 1.75 * 2^-0.75 per product.
+        let ideal_mitchell = n as f32 * 1.75 * (-0.75f32).exp2(); // ~132.2
+        // Saturated prediction: the single bin clamps at gamma*2^23 in
+        // bin units -> 2^23 * window(2^15) * scales(2^-31.75) = 2^6.25.
+        let predicted = (6.25f32).exp2(); // ~76.1
+        assert!(got > 0.0, "saturated sum must keep its sign: {got}");
+        assert!(
+            (got - predicted).abs() < 1.0,
+            "got {got}, predicted saturation rail {predicted}"
+        );
+        assert!(
+            got < 0.7 * ideal_mitchell,
+            "clamp did not engage: {got} vs unsaturated {ideal_mitchell}"
+        );
+
+        // The same input through the exact-LUT path sits just below the
+        // rail (127 * gamma * 2^16 < gamma * 2^23) and must pass
+        // through unclamped: the result is n almost exactly.
+        let mut exact = VectorMacUnit::new(MacConfig::paper());
+        let e = exact.matmul(&enc(&a, fmt), &enc(&b, fmt)).data[0];
+        assert!((e - n as f32).abs() < 0.05 * n as f32, "exact path {e} vs {n}");
+    }
+
+    #[test]
+    fn dot_zero_and_sign_handling() {
+        let mut mac = VectorMacUnit::new(MacConfig::paper());
+        let max = mac.cfg.format.max_code();
+
+        // All-zero lanes: result 0, lane ops still counted.
+        let z = mac.dot(&[0, 0, 0], &[5, 5, 5], &[1, 1, 1], &[5, 5, 5]);
+        assert_eq!(z, 0.0);
+        assert_eq!(mac.counts.exp_adds, 3);
+        assert_eq!(mac.counts.sign_xors, 3);
+        assert_eq!(mac.counts.collector_adds, 0);
+
+        // Sign algebra: (+a)(+b) + (-a)(+b) cancels exactly.
+        let mut mac2 = VectorMacUnit::new(MacConfig::paper());
+        let s = mac2.dot(&[1, -1], &[max, max], &[1, 1], &[max, max]);
+        assert_eq!(s, 0.0);
+
+        // (-a)(-b) is positive, (+a)(-b) negative.
+        let mut mac3 = VectorMacUnit::new(MacConfig::paper());
+        assert!(mac3.dot(&[-1], &[max], &[-1], &[max]) > 0.0);
+        assert!(mac3.dot(&[1], &[max], &[-1], &[max]) < 0.0);
+
+        // A zero lane next to a huge lane contributes nothing.
+        let mut mac4 = VectorMacUnit::new(MacConfig::paper());
+        let only = mac4.dot(&[1, 0], &[10, max], &[1, 1], &[10, max]);
+        let mut mac5 = VectorMacUnit::new(MacConfig::paper());
+        let alone = mac5.dot(&[1], &[10], &[1], &[10]);
+        assert_eq!(only, alone);
     }
 }

@@ -14,7 +14,7 @@ pub mod quant;
 pub mod softfloat;
 
 pub use convert::{ConvertMode, Converter};
-pub use datapath::{MacConfig, OpCounts, VectorMacUnit};
+pub use datapath::{MacConfig, OpCounts, Parallelism, VectorMacUnit};
 pub use format::{LnsFormat, LnsValue, Rounding};
 pub use quant::{encode_tensor, quantize_tensor, LnsTensor, Scaling};
 pub use softfloat::{FixedPoint, MiniFloat};

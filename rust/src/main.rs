@@ -3,16 +3,18 @@
 //!   lns-madam train [--config path] [--model M] [--format F]
 //!                   [--optimizer O] [--steps N] [--lr X]
 //!                   [--gamma-fwd G] [--gamma-bwd G] [--qu-bits B]
+//!                   [--parallelism P]   # 0 = auto, 1 = sequential
 //!   lns-madam info            # list artifacts + models
-//!   lns-madam energy          # Table 8 energy report
+//!   lns-madam energy [--parallelism P]   # Table 8 energy report +
+//!                                        # measured datapath profile
 //!   lns-madam quant-error     # Fig. 4 quantization-error study
 //!
 //! Arg parsing is hand-rolled (no clap offline); flags are --key value.
 
 use anyhow::{bail, Result};
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
-use lns_madam::hw::{table8_workloads, EnergyModel, PeFormat};
-use lns_madam::lns::ConvertMode;
+use lns_madam::hw::{measure_gemm_opcounts, table8_workloads, EnergyModel, PeFormat};
+use lns_madam::lns::{ConvertMode, MacConfig, Parallelism};
 use lns_madam::optim::error::fig4_sweep;
 use lns_madam::runtime::{Manifest, Runtime};
 use lns_madam::util::bench::print_table;
@@ -61,6 +63,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "bits-bwd" => cfg.bits_bwd = v.parse()?,
             "qu-bits" => cfg.qu_bits = v.parse()?,
             "seed" => cfg.seed = v.parse()?,
+            "parallelism" => cfg.parallelism = v.parse()?,
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "log" => cfg.log_path = v.clone(),
             "eval-every" => cfg.eval_every = v.parse()?,
@@ -115,7 +118,15 @@ fn cmd_info(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_energy() -> Result<()> {
+fn cmd_energy(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut par = Parallelism::Auto;
+    for (k, v) in &flags {
+        match k.as_str() {
+            "parallelism" => par = Parallelism::from_knob(v.parse()?),
+            other => bail!("unknown flag --{other}"),
+        }
+    }
     let model = EnergyModel::paper();
     let formats = [
         PeFormat::Lns(ConvertMode::ExactLut),
@@ -136,6 +147,22 @@ fn cmd_energy() -> Result<()> {
         &["Model", "LNS", "FP8", "FP16", "FP32"],
         &rows,
     );
+
+    // Measured (not closed-form) op profile: one representative GEMM
+    // tile through the bit-faithful simulator, distributed per the
+    // --parallelism knob. Op totals are identical at any setting.
+    let mac_cfg = MacConfig { parallelism: par, ..MacConfig::paper() };
+    let (m, k, n) = (128, 128, 128);
+    let counts = measure_gemm_opcounts(m, k, n, mac_cfg, 0);
+    let macs = counts.total_macs() as f64;
+    println!(
+        "\nmeasured datapath profile, {m}x{k}x{n} GEMM ({:?}, {} MACs):",
+        mac_cfg.parallelism,
+        counts.total_macs()
+    );
+    println!("  shifts/MAC         {:.3}", counts.shifts as f64 / macs);
+    println!("  collector adds/MAC {:.3}", counts.collector_adds as f64 / macs);
+    println!("  lut muls/MAC       {:.3}", counts.lut_muls as f64 / macs);
     Ok(())
 }
 
@@ -166,7 +193,7 @@ fn main() -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
-        Some("energy") => cmd_energy(),
+        Some("energy") => cmd_energy(&args[1..]),
         Some("quant-error") => cmd_quant_error(),
         _ => {
             eprintln!("usage: lns-madam <train|info|energy|quant-error> [flags]");

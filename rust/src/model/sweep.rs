@@ -251,8 +251,7 @@ mod tests {
                 datapath: Some(MacConfig {
                     format: LnsFormat::PAPER8,
                     convert: ConvertMode::ExactLut,
-                    acc_bits: 24,
-                    vector_size: 32,
+                    ..MacConfig::paper()
                 }),
                 ..Default::default()
             }

@@ -5,6 +5,13 @@
 
 use crate::util::rng::Rng;
 
+/// GEMM tile sizes. A (TILE_K x TILE_J) f32 panel is 64 KiB — sized to
+/// sit in L2 with room for the streaming operand; TILE_I bounds the
+/// output working set of the transposed variant.
+const TILE_I: usize = 64;
+const TILE_J: usize = 128;
+const TILE_K: usize = 128;
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub rows: usize,
@@ -45,59 +52,92 @@ impl Tensor {
         self.data.is_empty()
     }
 
-    /// C = A @ B (naive with k-blocked inner loop; fine at experiment sizes).
+    /// C = A @ B, cache-blocked: the k and j loops are tiled so a
+    /// (KB x JB) panel of B stays resident in L1/L2 while every row of
+    /// A streams over it, instead of re-reading all of B per A row.
+    /// Zero lanes of A are skipped (LNS tensors are often sparse at
+    /// low bitwidths).
     pub fn matmul(&self, b: &Tensor) -> Tensor {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
-        let mut out = Tensor::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            let arow = &self.data[i * self.cols..(i + 1) * self.cols];
-            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * bv;
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Tensor::zeros(m, n);
+        for j0 in (0..n).step_by(TILE_J) {
+            let j1 = (j0 + TILE_J).min(n);
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                for i in 0..m {
+                    let arow = &self.data[i * k + k0..i * k + k1];
+                    let orow = &mut out.data[i * n + j0..i * n + j1];
+                    for (dk, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let kk = k0 + dk;
+                        let brow = &b.data[kk * n + j0..kk * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                            *o += a * bv;
+                        }
+                    }
                 }
             }
         }
         out
     }
 
-    /// C = A^T @ B where self is (m, n): result (n, k).
+    /// C = A^T @ B where self is (m, n): result (n, k). Blocked over
+    /// the output rows (i) and columns (j) so the (IB x JB) output
+    /// block stays hot while the shared r dimension streams.
     pub fn t_matmul(&self, b: &Tensor) -> Tensor {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
-        let mut out = Tensor::zeros(self.cols, b.cols);
-        for r in 0..self.rows {
-            let arow = &self.data[r * self.cols..(r + 1) * self.cols];
-            let brow = &b.data[r * b.cols..(r + 1) * b.cols];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * bv;
+        let (r_dim, n, p) = (self.rows, self.cols, b.cols);
+        let mut out = Tensor::zeros(n, p);
+        for i0 in (0..n).step_by(TILE_I) {
+            let i1 = (i0 + TILE_I).min(n);
+            for j0 in (0..p).step_by(TILE_J) {
+                let j1 = (j0 + TILE_J).min(p);
+                for r in 0..r_dim {
+                    let arow = &self.data[r * n + i0..r * n + i1];
+                    let brow = &b.data[r * p + j0..r * p + j1];
+                    for (di, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let i = i0 + di;
+                        let orow = &mut out.data[i * p + j0..i * p + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                            *o += a * bv;
+                        }
+                    }
                 }
             }
         }
         out
     }
 
-    /// C = A @ B^T where b is (k, n): result (m, k).
+    /// C = A @ B^T where b is (k, n): result (m, k). Blocked over the
+    /// rows of B (j) and the shared dimension (k): each (JB x KB)
+    /// panel of B is reused across all rows of A before moving on.
     pub fn matmul_t(&self, b: &Tensor) -> Tensor {
         assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
-        let mut out = Tensor::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = &self.data[i * self.cols..(i + 1) * self.cols];
-            for j in 0..b.rows {
-                let brow = &b.data[j * b.cols..(j + 1) * b.cols];
-                let mut acc = 0.0f32;
-                for (a, bv) in arow.iter().zip(brow.iter()) {
-                    acc += a * bv;
+        let (m, k, q) = (self.rows, self.cols, b.rows);
+        let mut out = Tensor::zeros(m, q);
+        for j0 in (0..q).step_by(TILE_J) {
+            let j1 = (j0 + TILE_J).min(q);
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                for i in 0..m {
+                    let arow = &self.data[i * k + k0..i * k + k1];
+                    let orow = &mut out.data[i * q + j0..i * q + j1];
+                    for (dj, o) in orow.iter_mut().enumerate() {
+                        let j = j0 + dj;
+                        let brow = &b.data[j * k + k0..j * k + k1];
+                        let mut acc = 0.0f32;
+                        for (a, bv) in arow.iter().zip(brow.iter()) {
+                            acc += a * bv;
+                        }
+                        *o += acc;
+                    }
                 }
-                out.data[i * b.rows + j] = acc;
             }
         }
         out
@@ -179,5 +219,104 @@ mod tests {
         let a = Tensor::zeros(2, 3);
         let b = Tensor::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "t_matmul shape mismatch")]
+    fn t_matmul_shape_mismatch_panics() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(3, 3);
+        let _ = a.t_matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_t shape mismatch")]
+    fn matmul_t_shape_mismatch_panics() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(2, 4);
+        let _ = a.matmul_t(&b);
+    }
+
+    /// Plain triple-loop references for validating the tiled kernels.
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                out.data[i * b.cols + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, tol: f32) {
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        let denom = want.abs_max().max(1.0);
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - w).abs() <= tol * denom, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_matches_naive_across_tile_boundaries() {
+        // Sizes straddle the 64/128 tile edges (including exact
+        // multiples and off-by-one tails).
+        let mut rng = Rng::new(17);
+        for (m, k, n) in [(1, 1, 1), (3, 129, 5), (130, 64, 131), (65, 257, 127), (128, 128, 128)]
+        {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn tiled_t_matmul_matches_naive_across_tile_boundaries() {
+        let mut rng = Rng::new(18);
+        for (r, n, p) in [(129, 65, 131), (64, 130, 3), (257, 127, 129)] {
+            let a = Tensor::randn(r, n, 1.0, &mut rng);
+            let b = Tensor::randn(r, p, 1.0, &mut rng);
+            // A^T as an explicit transpose, then the naive product.
+            let mut at = Tensor::zeros(n, r);
+            for i in 0..r {
+                for j in 0..n {
+                    *at.at_mut(j, i) = a.at(i, j);
+                }
+            }
+            assert_close(&a.t_matmul(&b), &naive_matmul(&at, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_t_matches_naive_across_tile_boundaries() {
+        let mut rng = Rng::new(19);
+        for (m, k, q) in [(65, 129, 130), (3, 257, 127), (130, 64, 65)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(q, k, 1.0, &mut rng);
+            let mut bt = Tensor::zeros(k, q);
+            for i in 0..q {
+                for j in 0..k {
+                    *bt.at_mut(j, i) = b.at(i, j);
+                }
+            }
+            assert_close(&a.matmul_t(&b), &naive_matmul(&a, &bt), 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_skip_preserves_results() {
+        // The sparsity fast path must not change outputs.
+        let mut rng = Rng::new(20);
+        let mut a = Tensor::randn(70, 140, 1.0, &mut rng);
+        for (i, v) in a.data.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Tensor::randn(140, 66, 1.0, &mut rng);
+        assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
     }
 }

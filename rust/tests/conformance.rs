@@ -1,0 +1,251 @@
+//! Conformance suite for the LNS substrate (no artifacts required).
+//!
+//! Verifies, through the public API only:
+//!  * Q_log round-trip error is bounded by the format's `gap_factor`
+//!    for random tensors across bitwidths, scalings and both rounding
+//!    modes (property-tested);
+//!  * the Fig. 6 datapath simulator agrees with the exact
+//!    `Tensor::matmul` reference on quantized inputs within the
+//!    paper's Mitchell approximation bound, in exact-LUT and every
+//!    hybrid mode;
+//!  * per-thread `OpCounts` merge to exactly the sequential totals at
+//!    any `Parallelism` setting;
+//!  * shape-mismatch inputs panic instead of producing garbage.
+
+use lns_madam::lns::convert::mitchell_bound;
+use lns_madam::lns::{
+    encode_tensor, ConvertMode, LnsFormat, MacConfig, Parallelism, Rounding, Scaling,
+    VectorMacUnit,
+};
+use lns_madam::prop_assert;
+use lns_madam::util::proptest::property;
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Q_log round-trip property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn roundtrip_error_bounded_by_gap_factor_across_formats_and_roundings() {
+    // Nearest rounding lands within half a code (ratio <= gap^0.5);
+    // stochastic rounding within one code (ratio < gap). Both are
+    // bounded by gap_factor, which is the contract asserted here.
+    for (bits, gamma) in [(4u32, 2u32), (6, 4), (8, 8), (8, 16), (12, 64), (16, 2048)] {
+        let fmt = LnsFormat::new(bits, gamma);
+        let bound = fmt.gap_factor() as f32 * 1.0001; // f32 slack
+        for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+            for scaling in [Scaling::PerTensor, Scaling::PerRow] {
+                property(60, |g| {
+                    let rows = g.usize_in(1, 5);
+                    let cols = g.usize_in(1, 7);
+                    let data: Vec<f32> =
+                        (0..rows * cols).map(|_| g.lns_value()).collect();
+                    let t = Tensor::from_vec(rows, cols, data);
+                    let enc = encode_tensor(&t, fmt, scaling, rounding, Some(&mut g.rng));
+                    let dec = enc.decode();
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let x = t.at(r, c);
+                            let q = dec.at(r, c);
+                            let scale = enc.scale_at(r, c);
+                            if x.abs() < scale {
+                                // Below the bottom code: clamps, not a
+                                // round-trip — outside the contract.
+                                continue;
+                            }
+                            let ratio = (q / x).abs().max((x / q).abs());
+                            prop_assert!(
+                                g,
+                                ratio <= bound,
+                                "bits={bits} gamma={gamma} {rounding:?} {scaling:?}: \
+                                 x={x} q={q} ratio={ratio} bound={bound}"
+                            );
+                            prop_assert!(
+                                g,
+                                q.signum() == x.signum(),
+                                "sign flipped: x={x} q={q}"
+                            );
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Datapath vs exact reference, within the Mitchell bound
+// ---------------------------------------------------------------------------
+
+/// (mode, remainder-LSB span at gamma = 8).
+const MODES: [(ConvertMode, u32); 4] = [
+    (ConvertMode::ExactLut, 1),
+    (ConvertMode::Hybrid { lut_bits: 2 }, 2),
+    (ConvertMode::Hybrid { lut_bits: 1 }, 4),
+    (ConvertMode::Mitchell, 8),
+];
+
+#[test]
+fn datapath_matmul_within_mitchell_bound_of_tensor_matmul() {
+    let mut rng = Rng::new(404);
+    let fmt = LnsFormat::PAPER8;
+    let a = Tensor::randn(24, 48, 1.0, &mut rng);
+    let b = Tensor::randn(48, 20, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+
+    // Exact reference: decode to the quantized grid, multiply exactly.
+    let aq = ea.decode();
+    let bq = eb.decode();
+    let reference = aq.matmul(&bq);
+    // Worst-case accumulation of per-product relative error.
+    let abs_ref = aq.map(f32::abs).matmul(&bq.map(f32::abs));
+    // Slack for the 24-bit block-window accumulator (swamped lanes).
+    let slack = 1e-3 * reference.abs_max().max(1.0);
+
+    for (mode, span) in MODES {
+        let mut cfg = MacConfig::paper();
+        cfg.convert = mode;
+        let mut mac = VectorMacUnit::new(cfg);
+        let got = mac.matmul(&ea, &eb);
+        let bound = mitchell_bound(fmt.gamma, span) as f32;
+        for i in 0..reference.data.len() {
+            let err = (got.data[i] - reference.data[i]).abs();
+            let budget = bound * abs_ref.data[i] + slack;
+            assert!(
+                err <= budget,
+                "{mode:?}: elem {i} err {err} > bound {budget} \
+                 (got {}, ref {})",
+                got.data[i],
+                reference.data[i]
+            );
+        }
+        assert_eq!(mac.counts.total_macs(), (24 * 48 * 20) as u64);
+    }
+}
+
+#[test]
+fn hybrid_error_shrinks_as_lut_grows() {
+    let mut rng = Rng::new(405);
+    let fmt = LnsFormat::PAPER8;
+    let a = Tensor::randn(16, 64, 1.0, &mut rng);
+    let b = Tensor::randn(64, 16, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let reference = ea.decode().matmul(&eb.decode());
+
+    let mut errs = Vec::new();
+    for (mode, _) in MODES {
+        let mut cfg = MacConfig::paper();
+        cfg.convert = mode;
+        let mut mac = VectorMacUnit::new(cfg);
+        let got = mac.matmul(&ea, &eb);
+        let l1: f64 = got
+            .data
+            .iter()
+            .zip(reference.data.iter())
+            .map(|(g, r)| (g - r).abs() as f64)
+            .sum();
+        errs.push(l1);
+    }
+    // MODES is ordered exact -> coarsest; aggregate error must not
+    // shrink as the LUT loses entries. Per-product Mitchell error is
+    // not pointwise monotone in the span (the (1+t)/2^t curve turns
+    // over near t ~ 0.44), so allow a small statistical slack.
+    for w in errs.windows(2) {
+        assert!(
+            w[0] <= w[1] * 1.1 + 1e-9,
+            "error not monotone in LUT size: {errs:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallelism conformance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_op_counts_and_outputs_match_sequential_exactly() {
+    let mut rng = Rng::new(406);
+    let fmt = LnsFormat::PAPER8;
+    // Ragged sizes so worker chunks are uneven.
+    let a = Tensor::randn(45, 33, 1.0, &mut rng);
+    let b = Tensor::randn(33, 27, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+
+    for (mode, _) in MODES {
+        let mut cfg = MacConfig::paper();
+        cfg.convert = mode;
+        let mut seq = VectorMacUnit::new(cfg);
+        let want = seq.matmul(&ea, &eb);
+        for par in [
+            Parallelism::Threads(2),
+            Parallelism::Threads(5),
+            Parallelism::Auto,
+        ] {
+            let mut cfg_p = cfg;
+            cfg_p.parallelism = par;
+            let mut mac = VectorMacUnit::new(cfg_p);
+            let got = mac.matmul(&ea, &eb);
+            assert_eq!(got.data, want.data, "{mode:?} {par:?}: outputs diverged");
+            assert_eq!(
+                mac.counts, seq.counts,
+                "{mode:?} {par:?}: op counts diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_counts_accumulate_across_calls() {
+    // A reused unit must keep summing counts over multiple parallel
+    // GEMMs, exactly like the sequential unit does.
+    let mut rng = Rng::new(407);
+    let fmt = LnsFormat::PAPER8;
+    let a = Tensor::randn(10, 12, 1.0, &mut rng);
+    let b = Tensor::randn(12, 8, 1.0, &mut rng);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut cfg = MacConfig::paper();
+    cfg.parallelism = Parallelism::Threads(3);
+    let mut mac = VectorMacUnit::new(cfg);
+    let _ = mac.matmul(&ea, &eb);
+    let _ = mac.matmul(&ea, &eb);
+    assert_eq!(mac.counts.total_macs(), 2 * (10 * 12 * 8) as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Shape-mismatch edges
+// ---------------------------------------------------------------------------
+
+#[test]
+#[should_panic(expected = "matmul shape mismatch")]
+fn tensor_matmul_shape_mismatch_panics() {
+    let _ = Tensor::zeros(2, 3).matmul(&Tensor::zeros(4, 2));
+}
+
+#[test]
+#[should_panic(expected = "t_matmul shape mismatch")]
+fn tensor_t_matmul_shape_mismatch_panics() {
+    let _ = Tensor::zeros(2, 3).t_matmul(&Tensor::zeros(4, 2));
+}
+
+#[test]
+#[should_panic(expected = "matmul_t shape mismatch")]
+fn tensor_matmul_t_shape_mismatch_panics() {
+    let _ = Tensor::zeros(2, 3).matmul_t(&Tensor::zeros(4, 2));
+}
+
+#[test]
+#[should_panic(expected = "matmul shape mismatch")]
+fn datapath_matmul_shape_mismatch_panics() {
+    let fmt = LnsFormat::PAPER8;
+    let a = Tensor::zeros(2, 3);
+    let b = Tensor::zeros(4, 2);
+    let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let mut mac = VectorMacUnit::new(MacConfig::paper());
+    let _ = mac.matmul(&ea, &eb);
+}

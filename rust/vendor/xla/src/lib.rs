@@ -1,0 +1,306 @@
+//! Offline stub of the `xla-rs` PJRT surface.
+//!
+//! The real `xla` crate links the PJRT C API and a CPU plugin; neither
+//! is available in this build environment. This stub provides the exact
+//! types and signatures the `lns_madam::runtime` layer compiles against:
+//!
+//! * [`Literal`] is **fully functional** — a typed host buffer with
+//!   shape, supporting `vec1` / `scalar` / `reshape` / `to_vec` — so
+//!   everything up to the device boundary (shape validation, manifest
+//!   contracts) works and is testable.
+//! * [`PjRtClient::cpu`] returns an error: no PJRT plugin is linked, so
+//!   nothing can compile or execute HLO. Swapping this path dependency
+//!   for a real `xla-rs` checkout restores execution without touching
+//!   `lns_madam` source.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs's; only `Debug`/`Display` are consumed.
+#[derive(Clone, Debug)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> Self {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this build uses the offline xla stub \
+     (vendor/xla). Link a real xla-rs checkout to execute artifacts.";
+
+// ---------------------------------------------------------------------------
+// Element types
+// ---------------------------------------------------------------------------
+
+/// Primitive element dtype of a [`Literal`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U8,
+    Pred,
+}
+
+impl ElementType {
+    pub fn byte_size(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::F64 | ElementType::S64 => 8,
+            ElementType::U8 | ElementType::Pred => 1,
+        }
+    }
+}
+
+/// Rust types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_bytes(&self, out: &mut Vec<u8>);
+    fn from_bytes(b: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn to_bytes(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn from_bytes(b: &[u8]) -> Self {
+                <$t>::from_le_bytes(b.try_into().expect("element byte width"))
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(u8, ElementType::U8);
+
+// ---------------------------------------------------------------------------
+// Literal: a typed host-side buffer (functional)
+// ---------------------------------------------------------------------------
+
+/// A typed, shaped host buffer — the value type crossing the runtime
+/// boundary. Fully functional in the stub.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * T::TY.byte_size());
+        for x in data {
+            x.to_bytes(&mut bytes);
+        }
+        Literal { ty: T::TY, dims: vec![data.len() as i64], data: bytes }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        let mut bytes = Vec::with_capacity(T::TY.byte_size());
+        x.to_bytes(&mut bytes);
+        Literal { ty: T::TY, dims: vec![], data: bytes }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d.max(0) as usize).product()
+    }
+
+    /// Reinterpret with new dimensions; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: usize = dims.iter().map(|&d| d.max(0) as usize).product();
+        if n != self.element_count() {
+            return Err(XlaError::new(format!(
+                "reshape: {:?} ({} elems) incompatible with {:?} ({} elems)",
+                self.dims,
+                self.element_count(),
+                dims,
+                n
+            )));
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(XlaError::new(format!(
+                "to_vec: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let w = self.ty.byte_size();
+        Ok(self.data.chunks_exact(w).map(T::from_bytes).collect())
+    }
+
+    /// First element, typed.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if T::TY != self.ty {
+            return Err(XlaError::new(format!(
+                "get_first_element: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let w = self.ty.byte_size();
+        if self.data.len() < w {
+            return Err(XlaError::new("get_first_element: empty literal"));
+        }
+        Ok(T::from_bytes(&self.data[..w]))
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples, so a
+    /// non-tuple literal is returned as a single-element vector.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO + PJRT surface (non-functional in the stub)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module. The stub only checks the file exists.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(XlaError::new(format!("no such HLO file: {}", path.display())));
+        }
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let l = Literal::vec1(&[0i32; 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank0_with_one_element() {
+        let l = Literal::scalar(8.0f32);
+        assert!(l.dims().is_empty());
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 8.0);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.msg.contains("stub"), "{}", err.msg);
+    }
+}
