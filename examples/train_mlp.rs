@@ -2,26 +2,32 @@
 //! with an FP32+SGD reference run for comparison — the "Table 4 row" of
 //! the reproduction at laptop scale.
 //!
+//! Runs on the PJRT backend when artifacts are available and on the
+//! pure-Rust native backend otherwise (`--backend` in the CLI picks
+//! explicitly).
+//!
 //!   cargo run --release --example train_mlp -- [steps] [csv_prefix]
 
 use anyhow::Result;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
-use lns_madam::runtime::Runtime;
 
-fn run(runtime: &Runtime, format: &str, opt: OptKind, steps: usize, log: &str) -> Result<(f64, Option<f64>)> {
-    let mut cfg = TrainConfig::default();
-    cfg.model = "mlp".into();
-    cfg.format = format.into();
-    cfg.optimizer = opt;
-    cfg.lr = opt.default_lr();
-    cfg.steps = steps;
-    cfg.eval_every = (steps / 4).max(1);
-    cfg.log_path = log.to_string();
+fn run(format: &str, opt: OptKind, steps: usize, log: &str) -> Result<(f64, Option<f64>)> {
     // LNS runs use the quantized weight update at 16-bit; the FP32
     // baseline keeps the conventional full-precision update.
-    cfg.qu_bits = if format == "lns" { 16 } else { 0 };
+    let cfg = TrainConfig {
+        model: "mlp".into(),
+        format: format.into(),
+        optimizer: opt,
+        lr: opt.default_lr(),
+        steps,
+        eval_every: (steps / 4).max(1),
+        log_path: log.to_string(),
+        qu_bits: if format == "lns" { 16 } else { 0 },
+        ..TrainConfig::default()
+    };
     println!("\n=== {} + {} ({} steps) ===", format, opt.name(), steps);
-    let mut trainer = Trainer::new(runtime, cfg)?;
+    let mut trainer = Trainer::new(cfg)?;
+    println!("backend: {}", trainer.backend_name());
     trainer.run()?;
     Ok((trainer.final_loss(10), trainer.final_eval_acc()))
 }
@@ -31,23 +37,19 @@ fn main() -> Result<()> {
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
     let prefix = args.get(1).cloned().unwrap_or_else(|| "train_mlp".into());
 
-    let runtime = Runtime::cpu()?;
     let (lns_loss, lns_acc) = run(
-        &runtime,
         "lns",
         OptKind::Madam,
         steps,
         &format!("{prefix}_lns_madam.csv"),
     )?;
     let (fp8_loss, fp8_acc) = run(
-        &runtime,
         "fp8",
         OptKind::Sgd,
         steps,
         &format!("{prefix}_fp8_sgd.csv"),
     )?;
     let (fp32_loss, fp32_acc) = run(
-        &runtime,
         "fp32",
         OptKind::Sgd,
         steps,

@@ -1,29 +1,35 @@
-//! End-to-end driver: train a transformer LM with LNS-Madam through the
-//! full three-layer stack (Pallas kernels -> JAX HLO -> PJRT -> rust
-//! Madam updates) and log the loss curve. This is the repo's flagship
-//! system proof (EXPERIMENTS.md §E2E).
+//! End-to-end driver: train a language model with LNS-Madam and log the
+//! loss curve. With artifacts this runs the full three-layer stack
+//! (Pallas kernels -> JAX HLO -> PJRT -> rust Madam updates); without
+//! them the backend-generic trainer drives the native char-LM mirror,
+//! so the example works offline (EXPERIMENTS.md §E2E).
 //!
 //!   cargo run --release --example train_transformer -- \
 //!       [--model tfm_tiny|tfm_small|tfm_100m] [--steps N] [--format lns|fp8|fp32]
 //!       [--optimizer madam|sgd|adamw] [--lr X] [--csv path]
+//!       [--backend auto|native|pjrt]
 //!
-//! tfm_small / tfm_100m need `make artifacts-full` / `make artifacts-100m`.
+//! tfm_small / tfm_100m on PJRT need `make artifacts-full` / `-100m`.
 
 use anyhow::{bail, Result};
+use lns_madam::backend::native::{builtin_presets, PresetSpec};
+use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
 use lns_madam::hw::workload::transformer_macs;
 use lns_madam::hw::{EnergyModel, PeFormat};
 use lns_madam::lns::ConvertMode;
-use lns_madam::runtime::{Manifest, Runtime};
+use lns_madam::runtime::{artifacts_available, Manifest};
 use std::path::Path;
 use std::time::Instant;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut cfg = TrainConfig::default();
-    cfg.model = "tfm_tiny".into();
-    cfg.steps = 300;
-    cfg.eval_every = 25;
+    let mut cfg = TrainConfig {
+        model: "tfm_tiny".into(),
+        steps: 300,
+        eval_every: 25,
+        ..TrainConfig::default()
+    };
     let mut csv = "train_transformer.csv".to_string();
     let mut i = 0;
     while i < args.len() {
@@ -37,6 +43,7 @@ fn main() -> Result<()> {
             }
             "--lr" => cfg.lr = args[i + 1].parse()?,
             "--csv" => csv = args[i + 1].clone(),
+            "--backend" => cfg.backend = BackendKind::parse(&args[i + 1])?,
             other => bail!("unknown flag {other}"),
         }
         i += 2;
@@ -44,37 +51,63 @@ fn main() -> Result<()> {
     cfg.log_path = csv.clone();
     cfg.qu_bits = if cfg.format == "lns" { 16 } else { 0 };
 
-    let runtime = Runtime::cpu()?;
-    let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
-    let model = manifest
-        .model(&cfg.model)
-        .ok_or_else(|| anyhow::anyhow!("model {} not lowered — run make artifacts[-full|-100m]", cfg.model))?;
-    let n_params: usize = model.params.iter().map(|p| p.elements()).sum();
+    // Model dims for the energy report: manifest metadata when lowered,
+    // the matching native preset's values otherwise.
+    let preset = builtin_presets().iter().find(|p| p.name == cfg.model);
+    let (pd, pff, pv, pt, pb) = match preset {
+        Some(p) => match p.spec {
+            PresetSpec::CharLm { vocab, seq, d_model, d_ff } => {
+                (d_model, d_ff, vocab, seq, p.batch)
+            }
+            PresetSpec::Mlp(_) => bail!("{} is not a transformer-family model", cfg.model),
+        },
+        None => (128, 512, 256, 64, 16),
+    };
+    // Layer count of the paper transformer at this scale (the native
+    // char-LM mirror is single-block; the energy model prices the
+    // full architecture).
+    let pl = match cfg.model.as_str() {
+        "tfm_small" => 4,
+        "tfm_100m" => 12,
+        _ => 2,
+    };
+    let raw = artifacts_available(Path::new(&cfg.artifacts_dir))
+        .then(|| Manifest::load(Path::new(&cfg.artifacts_dir)).ok())
+        .flatten()
+        .and_then(|m| m.model(&cfg.model).map(|info| info.raw));
+    let dim = |key: &str, default: usize| {
+        raw.as_ref()
+            .and_then(|r| r.get(key).and_then(|x| x.as_usize()))
+            .unwrap_or(default)
+    };
     let (d, l, ff, v, t, b) = (
-        model.raw.get("d_model").and_then(|x| x.as_usize()).unwrap_or(128),
-        model.raw.get("n_layer").and_then(|x| x.as_usize()).unwrap_or(2),
-        model.raw.get("d_ff").and_then(|x| x.as_usize()).unwrap_or(512),
-        model.raw.get("vocab").and_then(|x| x.as_usize()).unwrap_or(256),
-        model.raw.get("seq").and_then(|x| x.as_usize()).unwrap_or(64),
-        model.raw.get("batch").and_then(|x| x.as_usize()).unwrap_or(16),
+        dim("d_model", pd),
+        dim("n_layer", pl),
+        dim("d_ff", pff),
+        dim("vocab", pv),
+        dim("seq", pt),
+        dim("batch", pb),
     );
+
+    let steps = cfg.steps;
+    let mut trainer = Trainer::new(cfg)?;
+    let n_params: usize = trainer.params.iter().map(|p| p.data.len()).sum();
     println!(
-        "model {}: {:.2}M params (d={d}, layers={l}, vocab={v}, seq={t}, batch={b})",
-        cfg.model,
-        n_params as f64 / 1e6
+        "model {}: {:.2}M params (d={d}, layers={l}, vocab={v}, seq={t}, batch={b}), backend {}",
+        trainer.cfg.model,
+        n_params as f64 / 1e6,
+        trainer.backend_name()
     );
     println!(
         "training with {} [{}], lr {}, {} steps, Q_U {} bits",
-        cfg.optimizer.name(),
-        cfg.format,
-        cfg.lr,
-        cfg.steps,
-        cfg.qu_bits
+        trainer.cfg.optimizer.name(),
+        trainer.cfg.format,
+        trainer.cfg.lr,
+        steps,
+        trainer.cfg.qu_bits
     );
 
     let macs_per_iter = transformer_macs(d, l, ff, v, t, b);
-    let steps = cfg.steps;
-    let mut trainer = Trainer::new(&runtime, cfg)?;
     let start = Instant::now();
     trainer.run()?;
     let wall = start.elapsed().as_secs_f64();

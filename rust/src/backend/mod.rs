@@ -1,0 +1,133 @@
+//! Execution backends: where fwd/bwd runs.
+//!
+//! The coordinator owns LNS weight state and the quantized update; the
+//! *gradient producer* is pluggable behind [`ExecBackend`]:
+//!
+//! * [`PjrtBackend`] — the original path: AOT-compiled HLO artifacts
+//!   executed through PJRT (needs `make artifacts` + a real xla-rs).
+//! * [`NativeBackend`] — pure-Rust forward/backward over the
+//!   [`crate::model`] zoo with identical Fig. 3 quantizer placement
+//!   (Q_W/Q_A forward, Q_E/Q_G backward), so the full LNS-Madam loop
+//!   runs offline with no artifacts and no PJRT plugin.
+//!
+//! Both produce the same `(loss, acc, grads)` contract against the
+//! coordinator's flat [`Param`] storage, so the optimizer, checkpoints,
+//! and metrics are backend-agnostic.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use anyhow::{bail, Result};
+
+/// A parameter tensor owned by the coordinator.
+pub struct Param {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Which execution backend drives fwd/bwd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT if artifacts + a real runtime are available, else native.
+    Auto,
+    /// Pure-Rust fwd/bwd (always available, no artifacts needed).
+    Native,
+    /// Compiled HLO artifacts through PJRT (errors when unavailable).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            other => bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Model family a backend trains — decides the data path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// Classification MLP fed by `SyntheticClassification`.
+    Mlp,
+    /// Next-token char LM fed by `CharCorpus` (the manifest's
+    /// `transformer` family).
+    CharLm,
+}
+
+/// What the backend needs from the coordinator: which parameters to
+/// own, and the shape of the data batches to feed each step.
+#[derive(Clone, Debug)]
+pub struct ModelContract {
+    pub family: ModelFamily,
+    /// Parameter inventory (name, shape) in positional order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// `[batch, in_dim]` (classification) or `[batch, seq]` (LM).
+    pub data_shape: [usize; 2],
+    /// Number of classes (classification) or vocab size (LM).
+    pub n_out: usize,
+}
+
+/// One sampled batch, backend-agnostic.
+pub enum Batch {
+    Classification {
+        /// `[batch, in_dim]`.
+        shape: [usize; 2],
+        /// Row-major features, `batch * in_dim` elements.
+        xs: Vec<f32>,
+        ys: Vec<i32>,
+    },
+    Lm {
+        /// `[batch, seq]`.
+        shape: [usize; 2],
+        tokens: Vec<i32>,
+        targets: Vec<i32>,
+    },
+}
+
+/// Result of one fwd/bwd step.
+pub struct StepOutput {
+    pub loss: f32,
+    pub acc: Option<f32>,
+    /// One flat gradient per parameter, positionally aligned.
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// A gradient producer: runs fwd/bwd (and fwd-only eval) over the
+/// coordinator's parameters. The weight update never happens here —
+/// that stays in the coordinator, identical across backends.
+pub trait ExecBackend {
+    fn name(&self) -> &'static str;
+
+    /// Parameter inventory + data shapes this backend trains.
+    fn contract(&self) -> &ModelContract;
+
+    /// One fwd/bwd pass: `(loss, acc?, grads)`.
+    fn train_step(&mut self, params: &[Param], batch: &Batch) -> Result<StepOutput>;
+
+    /// Whether [`ExecBackend::eval_step`] can ever return results
+    /// (false when no eval artifact was lowered). Checked before
+    /// sampling an eval batch so the seeded data stream is not
+    /// consumed for an eval that never runs.
+    fn has_eval(&self) -> bool {
+        true
+    }
+
+    /// Held-out forward pass; `Ok(None)` when the backend has no eval
+    /// path (e.g. no eval artifact was lowered).
+    fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>>;
+}

@@ -1,0 +1,237 @@
+//! Native execution backend: pure-Rust fwd/bwd over the model zoo.
+//!
+//! No artifacts, no PJRT — the [`crate::model`] implementations compute
+//! gradients with the same Fig. 3 quantizer placement the compiled HLO
+//! uses, so every training scenario (and the flagship accuracy bench)
+//! runs offline. Model shapes come from the artifact manifest when one
+//! is present (keeping the two backends positionally comparable for
+//! parity tests) and from the built-in preset table otherwise.
+
+use crate::backend::{Batch, ExecBackend, ModelContract, ModelFamily, Param, StepOutput};
+use crate::coordinator::config::TrainConfig;
+use crate::model::charlm::CharLmModel;
+use crate::model::{train_quant, NativeMlp, NativeModel, TrainQuant};
+use crate::runtime::{artifacts_available, Manifest};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Architecture of one built-in preset.
+pub enum PresetSpec {
+    /// Layer sizes of the classification MLP.
+    Mlp(&'static [usize]),
+    /// Char-LM dimensions.
+    CharLm { vocab: usize, seq: usize, d_model: usize, d_ff: usize },
+}
+
+/// One built-in model preset (mirrors `python/compile/model.py`).
+/// A single table drives both `lns-madam info` and model construction,
+/// so the advertised shapes can never drift from what trains.
+pub struct Preset {
+    pub name: &'static str,
+    pub spec: PresetSpec,
+    pub batch: usize,
+    /// Extra annotation for the info listing ("" = none).
+    pub note: &'static str,
+}
+
+impl Preset {
+    pub fn family(&self) -> &'static str {
+        match self.spec {
+            PresetSpec::Mlp(_) => "mlp",
+            PresetSpec::CharLm { .. } => "transformer",
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let arch = match self.spec {
+            PresetSpec::Mlp(sizes) => sizes
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join("-"),
+            PresetSpec::CharLm { vocab, seq, d_model, d_ff } => {
+                format!("char-LM v{vocab} s{seq} d{d_model} ff{d_ff}")
+            }
+        };
+        let note = if self.note.is_empty() { String::new() } else { format!(" {}", self.note) };
+        format!("{arch}, batch {}{note}", self.batch)
+    }
+
+    fn build(&self) -> Box<dyn NativeModel> {
+        match self.spec {
+            PresetSpec::Mlp(sizes) => Box::new(NativeMlp::new(sizes.to_vec())),
+            PresetSpec::CharLm { vocab, seq, d_model, d_ff } => {
+                Box::new(CharLmModel::new(vocab, seq, d_model, d_ff))
+            }
+        }
+    }
+}
+
+const PRESETS: &[Preset] = &[
+    Preset { name: "mlp", spec: PresetSpec::Mlp(&[256, 512, 512, 16]), batch: 128, note: "" },
+    Preset {
+        name: "mlp_wide",
+        spec: PresetSpec::Mlp(&[256, 1024, 1024, 1024, 16]),
+        batch: 128,
+        note: "",
+    },
+    Preset {
+        name: "mlp_tiny",
+        spec: PresetSpec::Mlp(&[16, 32, 16]),
+        batch: 32,
+        note: "(tests/CI)",
+    },
+    Preset {
+        name: "tfm_tiny",
+        spec: PresetSpec::CharLm { vocab: 256, seq: 64, d_model: 128, d_ff: 512 },
+        batch: 16,
+        note: "",
+    },
+    Preset {
+        name: "tfm_small",
+        spec: PresetSpec::CharLm { vocab: 256, seq: 128, d_model: 256, d_ff: 1024 },
+        batch: 16,
+        note: "",
+    },
+    Preset {
+        name: "tfm_100m",
+        spec: PresetSpec::CharLm { vocab: 8192, seq: 256, d_model: 768, d_ff: 3072 },
+        batch: 8,
+        note: "",
+    },
+    Preset {
+        name: "charlm_tiny",
+        spec: PresetSpec::CharLm { vocab: 32, seq: 16, d_model: 16, d_ff: 32 },
+        batch: 8,
+        note: "(tests/CI)",
+    },
+];
+
+/// The presets available without a manifest, for `lns-madam info`.
+pub fn builtin_presets() -> &'static [Preset] {
+    PRESETS
+}
+
+fn builtin_model(name: &str) -> Result<(Box<dyn NativeModel>, usize)> {
+    let preset = PRESETS.iter().find(|p| p.name == name).ok_or_else(|| {
+        let known: Vec<&str> = PRESETS.iter().map(|p| p.name).collect();
+        anyhow::anyhow!("unknown native model '{name}' (presets: {})", known.join(", "))
+    })?;
+    Ok((preset.build(), preset.batch))
+}
+
+/// Build the native model from manifest metadata so shapes match the
+/// PJRT artifacts exactly (mlp family) or structurally (transformer
+/// family, where the native char-LM is a simplified GEMM-stack mirror).
+fn model_from_manifest(
+    manifest: &Manifest,
+    name: &str,
+) -> Result<Option<(Box<dyn NativeModel>, usize)>> {
+    let Some(info) = manifest.model(name) else {
+        return Ok(None);
+    };
+    let raw_usize = |key: &str, default: usize| -> usize {
+        info.raw.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    };
+    match info.family.as_str() {
+        "mlp" => {
+            // sizes = [w0.rows, w0.cols, w1.cols, ...] from the weight
+            // inventory; biases interleave and carry no extra shape.
+            let weights: Vec<&Vec<usize>> = info
+                .params
+                .iter()
+                .filter(|p| p.name.starts_with('w') && p.shape.len() == 2)
+                .map(|p| &p.shape)
+                .collect();
+            if weights.is_empty() {
+                bail!("model '{name}': no rank-2 weight params in manifest");
+            }
+            let mut sizes = vec![weights[0][0]];
+            for w in &weights {
+                sizes.push(w[1]);
+            }
+            let model: Box<dyn NativeModel> = Box::new(NativeMlp::new(sizes));
+            Ok(Some((model, raw_usize("batch", 128))))
+        }
+        "transformer" => {
+            let model: Box<dyn NativeModel> = Box::new(CharLmModel::new(
+                raw_usize("vocab", 256),
+                raw_usize("seq", 64),
+                raw_usize("d_model", 128),
+                raw_usize("d_ff", 512),
+            ));
+            Ok(Some((model, raw_usize("batch", 16))))
+        }
+        other => bail!("unknown model family '{other}'"),
+    }
+}
+
+pub struct NativeBackend {
+    model: Box<dyn NativeModel>,
+    quant: TrainQuant,
+    contract: ModelContract,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: &TrainConfig) -> Result<NativeBackend> {
+        let dir = Path::new(&cfg.artifacts_dir);
+        // A present-but-corrupt manifest is an error, not a silent
+        // fall-through to preset shapes — parity with PJRT depends on
+        // the manifest being authoritative whenever it exists.
+        let from_manifest = if artifacts_available(dir) {
+            let manifest = Manifest::load(dir)?;
+            model_from_manifest(&manifest, &cfg.model)?
+        } else {
+            None
+        };
+        let (model, batch) = match from_manifest {
+            Some(r) => r,
+            None => builtin_model(&cfg.model)?,
+        };
+        let quant =
+            train_quant(&cfg.format, cfg.bits_fwd, cfg.gamma_fwd, cfg.bits_bwd, cfg.gamma_bwd)?;
+        let contract = model.contract(batch);
+        Ok(NativeBackend { model, quant, contract })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_preset_constructs() {
+        for preset in builtin_presets() {
+            let (model, batch) = builtin_model(preset.name).expect(preset.name);
+            let contract = model.contract(batch);
+            assert!(!contract.params.is_empty(), "{}: empty inventory", preset.name);
+            assert_eq!(contract.data_shape[0], preset.batch);
+            // The advertised summary reflects the constructed model.
+            assert!(
+                preset.summary().contains(&format!("batch {}", preset.batch)),
+                "{}: summary drifted",
+                preset.name
+            );
+        }
+        assert!(builtin_model("nope").is_err());
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn contract(&self) -> &ModelContract {
+        &self.contract
+    }
+
+    fn train_step(&mut self, params: &[Param], batch: &Batch) -> Result<StepOutput> {
+        self.model.forward_backward(params, batch, &self.quant)
+    }
+
+    fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>> {
+        let (loss, acc) = self.model.forward_eval(params, batch, &self.quant)?;
+        Ok(Some((loss, Some(acc))))
+    }
+}

@@ -1,0 +1,228 @@
+//! PJRT execution backend: fwd/bwd through AOT-compiled HLO artifacts.
+//!
+//! This is the original `Trainer` data path, factored behind
+//! [`ExecBackend`]: parameters and batches become positional literals,
+//! the compiled train/eval executables run, and `(loss, acc, grads)`
+//! come back out. The quantizer configuration rides along as trailing
+//! runtime scalars (gamma/maxexp for forward and backward).
+
+use crate::backend::{Batch, ExecBackend, ModelContract, ModelFamily, Param, StepOutput};
+use crate::coordinator::config::TrainConfig;
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar, to_scalar_f32, to_vec_f32, Executable, Manifest, Runtime,
+};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Quantizer scalars appended after the data inputs.
+#[derive(Clone, Copy, Debug)]
+struct QuantScalars {
+    gamma_fwd: f32,
+    maxexp_fwd: f32,
+    gamma_bwd: f32,
+    maxexp_bwd: f32,
+}
+
+pub struct PjrtBackend {
+    train_exe: Executable,
+    eval_exe: Option<Executable>,
+    scalars: QuantScalars,
+    contract: ModelContract,
+    /// Artifact-declared shapes of the two data inputs (x/tokens and
+    /// y/targets), used verbatim when building literals.
+    x_shape: Vec<usize>,
+    y_shape: Vec<usize>,
+    /// Owned runtime when constructed via [`PjrtBackend::from_config`];
+    /// the loaded executables must not outlive the client.
+    _runtime: Option<Runtime>,
+}
+
+impl PjrtBackend {
+    /// Build against a shared runtime (benches construct one runtime
+    /// and many trainers).
+    pub fn new(runtime: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<PjrtBackend> {
+        Self::build(runtime, manifest, cfg)
+    }
+
+    /// Build a self-contained backend: creates the PJRT client and
+    /// loads the artifacts named by `cfg`.
+    pub fn from_config(cfg: &TrainConfig) -> Result<PjrtBackend> {
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        // `build` only borrows the runtime to compile; hand over
+        // ownership afterwards so the executables stay valid.
+        let mut backend = Self::build(&runtime, &manifest, cfg)?;
+        backend._runtime = Some(runtime);
+        Ok(backend)
+    }
+
+    fn build(runtime: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<PjrtBackend> {
+        let train_name = cfg.train_artifact();
+        let train_exe = runtime
+            .load(manifest, &train_name)
+            .with_context(|| format!("loading train artifact {train_name}"))?;
+        let eval_exe = manifest
+            .artifact(&cfg.eval_artifact())
+            .map(|_| runtime.load(manifest, &cfg.eval_artifact()))
+            .transpose()?;
+
+        let info = &train_exe.info;
+        let n_params = info.n_params;
+        if n_params == 0 || n_params >= info.inputs.len() {
+            bail!("{train_name}: bad n_params {n_params}");
+        }
+        let params: Vec<(String, Vec<usize>)> = info.inputs[..n_params]
+            .iter()
+            .map(|s| (s.name.clone(), s.shape.clone()))
+            .collect();
+        // Everything between params and the trailing scalars is data.
+        let data_specs: Vec<&crate::runtime::IoSpec> = info.inputs[n_params..]
+            .iter()
+            .filter(|s| !s.is_scalar())
+            .collect();
+        if data_specs.len() != 2 || data_specs[0].shape.len() != 2 {
+            bail!(
+                "{train_name}: expected 2 data inputs with rank-2 leading shape, got {:?}",
+                data_specs.iter().map(|s| &s.shape).collect::<Vec<_>>()
+            );
+        }
+        let data_shape = [data_specs[0].shape[0], data_specs[0].shape[1]];
+        let x_shape = data_specs[0].shape.clone();
+        let y_shape = data_specs[1].shape.clone();
+
+        let model_info = manifest
+            .model(&cfg.model)
+            .ok_or_else(|| anyhow::anyhow!("model '{}' not in manifest", cfg.model))?;
+        let (family, n_out) = match model_info.family.as_str() {
+            "mlp" => {
+                let classes = model_info
+                    .raw
+                    .get("classes")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(16);
+                (ModelFamily::Mlp, classes)
+            }
+            "transformer" => {
+                let vocab = model_info
+                    .raw
+                    .get("vocab")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(256);
+                (ModelFamily::CharLm, vocab)
+            }
+            other => bail!("unknown model family '{other}'"),
+        };
+
+        Ok(PjrtBackend {
+            train_exe,
+            eval_exe,
+            scalars: QuantScalars {
+                gamma_fwd: cfg.gamma_fwd,
+                maxexp_fwd: TrainConfig::maxexp(cfg.bits_fwd),
+                gamma_bwd: cfg.gamma_bwd,
+                maxexp_bwd: TrainConfig::maxexp(cfg.bits_bwd),
+            },
+            contract: ModelContract { family, params, data_shape, n_out },
+            x_shape,
+            y_shape,
+            _runtime: None,
+        })
+    }
+
+    fn scalar_args(&self, train: bool) -> Vec<xla::Literal> {
+        let s = self.scalars;
+        if train {
+            vec![
+                lit_scalar(s.gamma_fwd),
+                lit_scalar(s.maxexp_fwd),
+                lit_scalar(s.gamma_bwd),
+                lit_scalar(s.maxexp_bwd),
+            ]
+        } else {
+            vec![lit_scalar(s.gamma_fwd), lit_scalar(s.maxexp_fwd)]
+        }
+    }
+
+    fn inputs_for(
+        &self,
+        params: &[Param],
+        batch: &Batch,
+        train: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| lit_f32(&p.shape, &p.data))
+            .collect::<Result<_>>()?;
+        // The artifact-declared shapes are authoritative; lit_f32 /
+        // lit_i32 validate the element counts against them.
+        match batch {
+            Batch::Classification { xs, ys, .. } => {
+                inputs.push(lit_f32(&self.x_shape, xs)?);
+                inputs.push(lit_i32(&self.y_shape, ys)?);
+            }
+            Batch::Lm { tokens, targets, .. } => {
+                inputs.push(lit_i32(&self.x_shape, tokens)?);
+                inputs.push(lit_i32(&self.y_shape, targets)?);
+            }
+        }
+        inputs.extend(self.scalar_args(train));
+        Ok(inputs)
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn contract(&self) -> &ModelContract {
+        &self.contract
+    }
+
+    fn has_eval(&self) -> bool {
+        self.eval_exe.is_some()
+    }
+
+    fn train_step(&mut self, params: &[Param], batch: &Batch) -> Result<StepOutput> {
+        let inputs = self.inputs_for(params, batch, true)?;
+        let outputs = self.train_exe.run(&inputs)?;
+
+        let has_acc = self
+            .train_exe
+            .info
+            .outputs
+            .get(1)
+            .map(|s| s == "acc")
+            .unwrap_or(false);
+        let loss = to_scalar_f32(&outputs[0])?;
+        let acc = if has_acc { Some(to_scalar_f32(&outputs[1])?) } else { None };
+        let grad_offset = if has_acc { 2 } else { 1 };
+        if outputs.len() != grad_offset + params.len() {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outputs.len(),
+                grad_offset + params.len()
+            );
+        }
+        let grads = outputs[grad_offset..]
+            .iter()
+            .map(to_vec_f32)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepOutput { loss, acc, grads })
+    }
+
+    fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>> {
+        let Some(exe) = self.eval_exe.as_ref() else {
+            return Ok(None);
+        };
+        let inputs = self.inputs_for(params, batch, false)?;
+        let outputs = exe.run(&inputs)?;
+        let loss = to_scalar_f32(&outputs[0])?;
+        let acc = if outputs.len() > 1 {
+            Some(to_scalar_f32(&outputs[1])?)
+        } else {
+            None
+        };
+        Ok(Some((loss, acc)))
+    }
+}

@@ -1,6 +1,7 @@
 //! Typed training configuration, loaded from the TOML-subset files in
 //! `configs/` or assembled programmatically by benches.
 
+use crate::backend::BackendKind;
 use crate::util::config::Config;
 use anyhow::{bail, Result};
 
@@ -63,10 +64,17 @@ pub struct TrainConfig {
     pub bits_bwd: u32,
     /// Weight-update quantizer Q_U bitwidth; 0 = full precision update.
     pub qu_bits: u32,
+    /// Execution backend: auto (PJRT when available, else native),
+    /// native (pure-Rust fwd/bwd), or pjrt (compiled artifacts only).
+    pub backend: BackendKind,
     /// Where artifacts live.
     pub artifacts_dir: String,
     /// Metrics output path ("" = stdout only).
     pub log_path: String,
+    /// Checkpoint written after `run()` completes ("" = none).
+    pub ckpt_path: String,
+    /// Checkpoint to restore before training ("" = fresh init).
+    pub resume_from: String,
     /// Host-thread knob for the rust-side hot paths: 0 = auto (one
     /// worker per core), 1 = sequential, n = exactly n workers. The
     /// trainer feeds it to the fused Madam+Q_U optimizer's worker
@@ -90,8 +98,11 @@ impl Default for TrainConfig {
             gamma_bwd: 8.0,
             bits_bwd: 8,
             qu_bits: 16,
+            backend: BackendKind::Auto,
             artifacts_dir: "artifacts".into(),
             log_path: String::new(),
+            ckpt_path: String::new(),
+            resume_from: String::new(),
             parallelism: 0,
         }
     }
@@ -106,23 +117,28 @@ impl TrainConfig {
 
     pub fn from_file(path: &str) -> Result<TrainConfig> {
         let cfg = Config::load(path)?;
-        let mut t = TrainConfig::default();
-        t.model = cfg.str_or("train", "model", &t.model);
-        t.format = cfg.str_or("train", "format", &t.format);
-        t.steps = cfg.i64_or("train", "steps", t.steps as i64) as usize;
-        t.eval_every = cfg.i64_or("train", "eval_every", t.eval_every as i64) as usize;
-        t.seed = cfg.i64_or("train", "seed", t.seed as i64) as u64;
-        t.optimizer = OptKind::parse(&cfg.str_or("train", "optimizer", t.optimizer.name()))?;
-        t.lr = cfg.f64_or("train", "lr", t.optimizer.default_lr() as f64) as f32;
-        t.gamma_fwd = cfg.f64_or("quant", "gamma_fwd", t.gamma_fwd as f64) as f32;
-        t.bits_fwd = cfg.i64_or("quant", "bits_fwd", t.bits_fwd as i64) as u32;
-        t.gamma_bwd = cfg.f64_or("quant", "gamma_bwd", t.gamma_bwd as f64) as f32;
-        t.bits_bwd = cfg.i64_or("quant", "bits_bwd", t.bits_bwd as i64) as u32;
-        t.qu_bits = cfg.i64_or("quant", "qu_bits", t.qu_bits as i64) as u32;
-        t.artifacts_dir = cfg.str_or("paths", "artifacts", &t.artifacts_dir);
-        t.log_path = cfg.str_or("paths", "log", &t.log_path);
-        t.parallelism = cfg.i64_or("train", "parallelism", t.parallelism as i64).max(0) as usize;
-        Ok(t)
+        let d = TrainConfig::default();
+        let optimizer = OptKind::parse(&cfg.str_or("train", "optimizer", d.optimizer.name()))?;
+        Ok(TrainConfig {
+            model: cfg.str_or("train", "model", &d.model),
+            format: cfg.str_or("train", "format", &d.format),
+            steps: cfg.i64_or("train", "steps", d.steps as i64) as usize,
+            eval_every: cfg.i64_or("train", "eval_every", d.eval_every as i64) as usize,
+            seed: cfg.i64_or("train", "seed", d.seed as i64) as u64,
+            optimizer,
+            lr: cfg.f64_or("train", "lr", optimizer.default_lr() as f64) as f32,
+            gamma_fwd: cfg.f64_or("quant", "gamma_fwd", d.gamma_fwd as f64) as f32,
+            bits_fwd: cfg.i64_or("quant", "bits_fwd", d.bits_fwd as i64) as u32,
+            gamma_bwd: cfg.f64_or("quant", "gamma_bwd", d.gamma_bwd as f64) as f32,
+            bits_bwd: cfg.i64_or("quant", "bits_bwd", d.bits_bwd as i64) as u32,
+            qu_bits: cfg.i64_or("quant", "qu_bits", d.qu_bits as i64) as u32,
+            backend: BackendKind::parse(&cfg.str_or("train", "backend", d.backend.name()))?,
+            artifacts_dir: cfg.str_or("paths", "artifacts", &d.artifacts_dir),
+            log_path: cfg.str_or("paths", "log", &d.log_path),
+            ckpt_path: cfg.str_or("paths", "checkpoint", &d.ckpt_path),
+            resume_from: cfg.str_or("paths", "resume", &d.resume_from),
+            parallelism: cfg.i64_or("train", "parallelism", d.parallelism as i64).max(0) as usize,
+        })
     }
 
     pub fn train_artifact(&self) -> String {
@@ -178,5 +194,13 @@ mod tests {
     #[test]
     fn rejects_unknown_optimizer() {
         assert!(OptKind::parse("lamb").is_err());
+    }
+
+    #[test]
+    fn backend_parses_and_defaults_to_auto() {
+        assert_eq!(TrainConfig::default().backend, BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("PJRT").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
     }
 }

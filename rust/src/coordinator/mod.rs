@@ -1,6 +1,7 @@
 //! L3 coordinator: configuration, synthetic data, metrics, and the
 //! training loop that owns weight state and applies the (quantized)
-//! weight update in rust while PJRT artifacts compute fwd/bwd.
+//! weight update in rust while an execution backend (PJRT artifacts or
+//! the pure-Rust native path) computes fwd/bwd.
 
 pub mod checkpoint;
 pub mod config;
@@ -8,7 +9,8 @@ pub mod data;
 pub mod metrics;
 pub mod trainer;
 
+pub use crate::backend::BackendKind;
 pub use config::{OptKind, TrainConfig};
 pub use data::{CharCorpus, SyntheticClassification};
 pub use metrics::MetricsLog;
-pub use trainer::{Param, Trainer};
+pub use trainer::{resolve_backend, Param, Trainer};

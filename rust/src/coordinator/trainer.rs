@@ -1,18 +1,31 @@
-//! The training coordinator: owns LNS weight state in rust, runs the
-//! compiled fwd/bwd artifact for gradients, and applies the (quantized)
-//! weight update — exactly the paper's split where the weight update
-//! happens *outside the PEs* through the global buffer (Section 5).
+//! The training coordinator: owns LNS weight state in rust and applies
+//! the (quantized) weight update — exactly the paper's split where the
+//! weight update happens *outside the PEs* through the global buffer
+//! (Section 5).
 //!
-//! Python never runs here: `Trainer` consumes only `artifacts/`.
+//! Forward/backward runs behind [`ExecBackend`]: compiled PJRT
+//! artifacts when available, the pure-Rust native path otherwise. The
+//! optimizer, metrics, and checkpoints never see which one produced
+//! the gradients.
 
+use crate::backend::{
+    Batch, BackendKind, ExecBackend, ModelContract, ModelFamily, NativeBackend, PjrtBackend,
+    StepOutput,
+};
+use crate::coordinator::checkpoint;
 use crate::coordinator::config::{OptKind, TrainConfig};
 use crate::coordinator::data::{CharCorpus, SyntheticClassification};
 use crate::coordinator::metrics::MetricsLog;
+use crate::model::init_params;
 use crate::optim::{Adam, FusedMadamQu, Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_scalar_f32, to_vec_f32, Executable, Manifest, Runtime};
+use crate::runtime::{artifacts_available, Manifest, Runtime};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Once;
+
+pub use crate::backend::Param;
 
 /// Data source feeding the train step, matched to the model family.
 enum DataSource {
@@ -20,25 +33,33 @@ enum DataSource {
     Lm(CharCorpus),
 }
 
-/// A parameter tensor owned by the coordinator.
-pub struct Param {
-    pub name: String,
-    pub shape: Vec<usize>,
-    pub data: Vec<f32>,
-}
-
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub params: Vec<Param>,
     pub log: MetricsLog,
-    train_exe: Executable,
-    eval_exe: Option<Executable>,
+    backend: Box<dyn ExecBackend>,
     opt: Box<dyn Optimizer>,
     data: DataSource,
-    /// Data input shapes (after params, before scalars).
-    data_specs: Vec<(String, Vec<usize>, String)>,
+    contract: ModelContract,
     rng: Rng,
     pub steps_done: usize,
+}
+
+/// Build the family-matched data source. `stream_seed` folds the
+/// resume step into the base seed so a restored run draws fresh
+/// batches instead of re-consuming the sequence the original run
+/// already trained on.
+fn make_data(contract: &ModelContract, cfg_seed: u64, step: u64) -> DataSource {
+    let seed = cfg_seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    match contract.family {
+        ModelFamily::Mlp => DataSource::Classification(SyntheticClassification::new(
+            contract.data_shape[1],
+            contract.n_out,
+            0.7,
+            seed,
+        )),
+        ModelFamily::CharLm => DataSource::Lm(CharCorpus::new(contract.n_out, 4, seed)),
+    }
 }
 
 fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
@@ -68,141 +89,115 @@ fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
     }
 }
 
-impl Trainer {
-    /// Build a trainer from config + a shared runtime.
-    pub fn new(runtime: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
-        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
-        let train_name = cfg.train_artifact();
-        let train_exe = runtime
-            .load(&manifest, &train_name)
-            .with_context(|| format!("loading train artifact {train_name}"))?;
-        let eval_exe = manifest
-            .artifact(&cfg.eval_artifact())
-            .map(|_| runtime.load(&manifest, &cfg.eval_artifact()))
-            .transpose()?;
+/// Build the PJRT backend from scratch, or explain why we can't.
+fn pjrt_backend(cfg: &TrainConfig) -> Result<Box<dyn ExecBackend>> {
+    let dir = Path::new(&cfg.artifacts_dir);
+    if !artifacts_available(dir) {
+        bail!("no artifacts at '{}' (run `make artifacts`)", cfg.artifacts_dir);
+    }
+    Ok(Box::new(PjrtBackend::from_config(cfg)?))
+}
 
-        let info = &train_exe.info;
-        let n_params = info.n_params;
-        if n_params == 0 || n_params >= info.inputs.len() {
-            bail!("{train_name}: bad n_params {n_params}");
-        }
+static FALLBACK_NOTICE: Once = Once::new();
+
+/// Resolve `cfg.backend` to a live backend. `Auto` prefers PJRT and
+/// falls back to native with a one-line notice (printed once).
+pub fn resolve_backend(cfg: &TrainConfig) -> Result<Box<dyn ExecBackend>> {
+    match cfg.backend {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(cfg)?)),
+        BackendKind::Pjrt => pjrt_backend(cfg),
+        BackendKind::Auto => match pjrt_backend(cfg) {
+            Ok(b) => Ok(b),
+            Err(e) => {
+                FALLBACK_NOTICE.call_once(|| {
+                    eprintln!("note: PJRT unavailable ({e}); using the native backend");
+                });
+                Ok(Box::new(NativeBackend::new(cfg)?))
+            }
+        },
+    }
+}
+
+impl Trainer {
+    /// Build a trainer, resolving the execution backend from the
+    /// config (`auto` prefers PJRT, falls back to native).
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let backend = resolve_backend(&cfg)?;
+        Trainer::with_backend(backend, cfg)
+    }
+
+    /// Build on the PJRT path against a shared runtime (benches build
+    /// one runtime and many trainers).
+    pub fn with_pjrt(runtime: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let backend = Box::new(PjrtBackend::new(runtime, &manifest, &cfg)?);
+        Trainer::with_backend(backend, cfg)
+    }
+
+    /// Build from an already-constructed backend.
+    pub fn with_backend(backend: Box<dyn ExecBackend>, cfg: TrainConfig) -> Result<Trainer> {
+        let contract = backend.contract().clone();
 
         // Initialize parameters in rust, mirroring the python init so
-        // both paths start from comparable distributions.
+        // both execution paths start from comparable distributions.
         let mut rng = Rng::new(cfg.seed);
-        let mut params = Vec::new();
-        for spec in &info.inputs[..n_params] {
-            let n = spec.elements();
-            let data = init_param(&spec.name, &spec.shape, &mut rng);
-            debug_assert_eq!(data.len(), n);
-            params.push(Param { name: spec.name.clone(), shape: spec.shape.clone(), data });
-        }
-
-        // Everything between params and the trailing scalars is data.
-        let data_specs: Vec<(String, Vec<usize>, String)> = info.inputs[n_params..]
-            .iter()
-            .filter(|s| !s.is_scalar())
-            .map(|s| (s.name.clone(), s.shape.clone(), s.dtype.clone()))
-            .collect();
-
-        let model_info = manifest
-            .model(&cfg.model)
-            .ok_or_else(|| anyhow::anyhow!("model '{}' not in manifest", cfg.model))?;
-        let data = match model_info.family.as_str() {
-            "mlp" => {
-                let dim = data_specs[0].1[1];
-                DataSource::Classification(SyntheticClassification::new(dim, 16, 0.7, cfg.seed))
-            }
-            "transformer" => {
-                let vocab = model_info
-                    .raw
-                    .get("vocab")
-                    .and_then(|v| v.as_usize())
-                    .unwrap_or(256);
-                DataSource::Lm(CharCorpus::new(vocab, 4, cfg.seed))
-            }
-            other => bail!("unknown model family '{other}'"),
-        };
+        let params = init_params(&contract.params, &mut rng);
+        let data = make_data(&contract, cfg.seed, 0);
 
         let opt = build_optimizer(&cfg);
         let run_name = format!("{}_{}_{}", cfg.model, cfg.format, cfg.optimizer.name());
-        Ok(Trainer {
+        let mut trainer = Trainer {
             cfg,
             params,
             log: MetricsLog::new(&run_name),
-            train_exe,
-            eval_exe,
+            backend,
             opt,
             data,
-            data_specs,
+            contract,
             rng,
             steps_done: 0,
-        })
-    }
-
-    fn scalar_args(&self, train: bool) -> Vec<xla::Literal> {
-        let gf = self.cfg.gamma_fwd;
-        let mf = TrainConfig::maxexp(self.cfg.bits_fwd);
-        if train {
-            vec![
-                lit_scalar(gf),
-                lit_scalar(mf),
-                lit_scalar(self.cfg.gamma_bwd),
-                lit_scalar(TrainConfig::maxexp(self.cfg.bits_bwd)),
-            ]
-        } else {
-            vec![lit_scalar(gf), lit_scalar(mf)]
+        };
+        if !trainer.cfg.resume_from.is_empty() {
+            let path = trainer.cfg.resume_from.clone();
+            trainer
+                .restore(Path::new(&path))
+                .with_context(|| format!("resuming from {path}"))?;
         }
+        Ok(trainer)
     }
 
-    fn sample_batch(&mut self) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::new();
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn sample_batch(&mut self) -> Batch {
+        let [b, d] = self.contract.data_shape;
         match &mut self.data {
             DataSource::Classification(ds) => {
-                let (bsz, _dim) = (self.data_specs[0].1[0], self.data_specs[0].1[1]);
-                let (xs, ys) = ds.batch(bsz);
-                lits.push(lit_f32(&self.data_specs[0].1, &xs)?);
-                lits.push(lit_i32(&self.data_specs[1].1, &ys)?);
+                let (xs, ys) = ds.batch(b);
+                Batch::Classification { shape: [b, d], xs, ys }
             }
             DataSource::Lm(ds) => {
-                let (bsz, seq) = (self.data_specs[0].1[0], self.data_specs[0].1[1]);
-                let (tokens, targets) = ds.batch(bsz, seq);
-                lits.push(lit_i32(&self.data_specs[0].1, &tokens)?);
-                lits.push(lit_i32(&self.data_specs[1].1, &targets)?);
+                let (tokens, targets) = ds.batch(b, d);
+                Batch::Lm { shape: [b, d], tokens, targets }
             }
         }
-        Ok(lits)
     }
 
-    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
-        self.params
-            .iter()
-            .map(|p| lit_f32(&p.shape, &p.data))
-            .collect()
-    }
-
-    /// One training step: fwd/bwd on PJRT, weight update in rust.
-    /// Returns (loss, accuracy-if-reported).
-    pub fn step(&mut self) -> Result<(f32, Option<f32>)> {
-        let mut inputs = self.param_literals()?;
-        inputs.extend(self.sample_batch()?);
-        inputs.extend(self.scalar_args(true));
-        let outputs = self.train_exe.run(&inputs)?;
-
-        let has_acc = self.train_exe.info.outputs.get(1).map(|s| s == "acc").unwrap_or(false);
-        let loss = to_scalar_f32(&outputs[0])?;
-        let acc = if has_acc { Some(to_scalar_f32(&outputs[1])?) } else { None };
-        let grad_offset = if has_acc { 2 } else { 1 };
-        if outputs.len() != grad_offset + self.params.len() {
+    /// One training step on an explicit batch: fwd/bwd on the backend,
+    /// weight update in rust. Exposed so tests can drive two trainers
+    /// with identical data.
+    pub fn step_on(&mut self, batch: &Batch) -> Result<(f32, Option<f32>)> {
+        let StepOutput { loss, acc, grads } = self.backend.train_step(&self.params, batch)?;
+        if grads.len() != self.params.len() {
             bail!(
-                "train step returned {} outputs, expected {}",
-                outputs.len(),
-                grad_offset + self.params.len()
+                "train step returned {} grads, expected {}",
+                grads.len(),
+                self.params.len()
             );
         }
-        for (i, p) in self.params.iter_mut().enumerate() {
-            let g = to_vec_f32(&outputs[grad_offset + i])?;
-            self.opt.step(i, &mut p.data, &g);
+        for (i, (p, g)) in self.params.iter_mut().zip(grads.iter()).enumerate() {
+            self.opt.step(i, &mut p.data, g);
         }
         let mut pairs: Vec<(&str, f64)> = vec![("loss", loss as f64)];
         if let Some(a) = acc {
@@ -213,39 +208,40 @@ impl Trainer {
         Ok((loss, acc))
     }
 
-    /// Held-out evaluation through the eval artifact (if lowered).
-    pub fn evaluate(&mut self) -> Result<Option<(f32, Option<f32>)>> {
-        if self.eval_exe.is_none() {
-            return Ok(None);
-        }
-        let mut inputs = self.param_literals()?;
-        inputs.extend(self.sample_batch()?);
-        inputs.extend(self.scalar_args(false));
-        let exe = self.eval_exe.as_ref().unwrap();
-        let outputs = exe.run(&inputs)?;
-        let loss = to_scalar_f32(&outputs[0])?;
-        let acc = if outputs.len() > 1 {
-            Some(to_scalar_f32(&outputs[1])?)
-        } else {
-            None
-        };
-        Ok(Some((loss, acc)))
+    /// One training step on a freshly sampled batch.
+    pub fn step(&mut self) -> Result<(f32, Option<f32>)> {
+        let batch = self.sample_batch();
+        self.step_on(&batch)
     }
 
-    /// Run the configured number of steps with periodic eval + logging.
+    /// Held-out evaluation (if the backend has an eval path). Checks
+    /// before sampling so a missing eval path never consumes the
+    /// seeded data stream.
+    pub fn evaluate(&mut self) -> Result<Option<(f32, Option<f32>)>> {
+        if !self.backend.has_eval() {
+            return Ok(None);
+        }
+        let batch = self.sample_batch();
+        self.backend.eval_step(&self.params, &batch)
+    }
+
+    /// Run the configured number of steps with periodic eval + logging,
+    /// then save a checkpoint if the config asks for one.
     pub fn run(&mut self) -> Result<()> {
-        for step in 0..self.cfg.steps {
+        for _ in 0..self.cfg.steps {
             let (loss, _acc) = self.step()?;
-            if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+            // Global (resume-aware) index of the step just taken, so
+            // eval rows line up with their train rows in the log.
+            let done = self.steps_done;
+            if self.cfg.eval_every > 0 && done % self.cfg.eval_every == 0 {
                 if let Some((el, ea)) = self.evaluate()? {
                     let mut pairs: Vec<(&str, f64)> = vec![("eval_loss", el as f64)];
                     if let Some(a) = ea {
                         pairs.push(("eval_acc", a as f64));
                     }
-                    self.log.record(step, &pairs);
+                    self.log.record(done - 1, &pairs);
                     println!(
-                        "step {:>5}  loss {loss:.4}  eval_loss {el:.4}{}",
-                        step + 1,
+                        "step {done:>5}  loss {loss:.4}  eval_loss {el:.4}{}",
                         ea.map(|a| format!("  eval_acc {a:.3}")).unwrap_or_default()
                     );
                 }
@@ -254,6 +250,51 @@ impl Trainer {
         if !self.cfg.log_path.is_empty() {
             self.log.save_csv(&self.cfg.log_path)?;
         }
+        if !self.cfg.ckpt_path.is_empty() {
+            let path = self.cfg.ckpt_path.clone();
+            self.save_checkpoint(Path::new(&path))?;
+        }
+        Ok(())
+    }
+
+    /// Serialize the parameter state + run metadata.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut meta = BTreeMap::new();
+        meta.insert("model".to_string(), self.cfg.model.clone());
+        meta.insert("format".to_string(), self.cfg.format.clone());
+        meta.insert("optimizer".to_string(), self.cfg.optimizer.name().to_string());
+        meta.insert("backend".to_string(), self.backend.name().to_string());
+        checkpoint::save(path, &self.params, self.steps_done, &meta)
+    }
+
+    /// Restore parameters + step counter from a checkpoint. Names and
+    /// shapes must match the current contract exactly; the optimizer's
+    /// internal state (momentum etc.) restarts fresh, and the data
+    /// stream is reseeded from the restored step so the resumed run
+    /// never re-trains on batches the original run already consumed.
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        let (params, step, _meta) = checkpoint::load(path)?;
+        if params.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} params, model expects {}",
+                params.len(),
+                self.params.len()
+            );
+        }
+        for (cur, new) in self.params.iter_mut().zip(params) {
+            if cur.name != new.name || cur.shape != new.shape {
+                bail!(
+                    "checkpoint param mismatch: {} {:?} vs expected {} {:?}",
+                    new.name,
+                    new.shape,
+                    cur.name,
+                    cur.shape
+                );
+            }
+            cur.data = new.data;
+        }
+        self.steps_done = step;
+        self.data = make_data(&self.contract, self.cfg.seed, step as u64);
         Ok(())
     }
 
@@ -273,42 +314,18 @@ impl Trainer {
     }
 }
 
-/// He-style init matching `python/compile/model.py`.
-fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Vec<f32> {
-    let n: usize = shape.iter().product();
-    let base = name.rsplit('.').next().unwrap_or(name);
-    if base.starts_with('b') || base.ends_with("_b") || base == "pos_emb" && false {
-        return vec![0.0; n];
-    }
-    match base {
-        // LayerNorm scales start at one, biases at zero.
-        s if s.ends_with("_s") => vec![1.0; n],
-        s if s.ends_with("_b") => vec![0.0; n],
-        "tok_emb" | "pos_emb" | "head" => (0..n).map(|_| rng.normal_f32() * 0.02).collect(),
-        s if s.starts_with('w') && shape.len() == 2 => {
-            let std = (2.0 / shape[0] as f32).sqrt();
-            (0..n).map(|_| rng.normal_f32() * std).collect()
-        }
-        s if s.starts_with('b') => vec![0.0; n],
-        _ if shape.len() == 2 => {
-            let std = (2.0 / (shape[0] + shape[1]) as f32).sqrt();
-            (0..n).map(|_| rng.normal_f32() * std).collect()
-        }
-        _ => vec![0.0; n],
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::init_param;
 
     #[test]
     fn build_optimizer_picks_fused_madam_for_lns_qu() {
-        let mut cfg = TrainConfig::default();
-        cfg.parallelism = 2; // any explicit worker count must be accepted
+        let cfg = TrainConfig { parallelism: 2, ..TrainConfig::default() };
         let opt = build_optimizer(&cfg);
         assert_eq!(opt.name(), "madam-fused");
-        cfg.qu_bits = 0; // full-precision update: composed path
+        // Full-precision update: composed path.
+        let cfg = TrainConfig { qu_bits: 0, ..cfg };
         let opt = build_optimizer(&cfg);
         assert_eq!(opt.name(), "madam");
     }
@@ -321,5 +338,20 @@ mod tests {
         let w = init_param("w0", &[64, 32], &mut rng);
         let var: f32 = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
         assert!((var - 2.0 / 64.0).abs() < 0.01, "he variance {var}");
+    }
+
+    #[test]
+    fn init_param_pos_emb_matches_python_tfm_init() {
+        // Regression for the old precedence-trapped condition
+        // (`.. || base == "pos_emb" && false`): python's tfm_init draws
+        // pos_emb from normal * 0.02, so the rust init must NOT zero it.
+        let mut rng = Rng::new(1);
+        let pe = init_param("pos_emb", &[64, 128], &mut rng);
+        assert!(pe.iter().any(|&x| x != 0.0), "pos_emb must not be zero-init");
+        let std = (pe.iter().map(|x| x * x).sum::<f32>() / pe.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.005, "pos_emb std {std}, want ~0.02");
+        // Bias-style names still zero out.
+        assert!(init_param("l0.ln1_b", &[8], &mut rng).iter().all(|&x| x == 0.0));
+        assert!(init_param("b3", &[8], &mut rng).iter().all(|&x| x == 0.0));
     }
 }

@@ -11,13 +11,16 @@
 //! * **L3** — this crate: the [`lns`] number-format substrate, the
 //!   [`optim`] quantized-weight-update optimizers (Madam, Algorithm 1),
 //!   the [`hw`] energy model of the PE, the [`runtime`] PJRT loader,
-//!   and the [`coordinator`] that owns LNS weight state and trains
-//!   models through the compiled artifacts. Python never runs on the
-//!   training path.
+//!   the [`backend`] execution layer (PJRT artifacts or the pure-Rust
+//!   native fwd/bwd over the [`model`] zoo), and the [`coordinator`]
+//!   that owns LNS weight state and applies the quantized update
+//!   identically through either backend. Python never runs on the
+//!   training path, and the native backend needs no artifacts at all.
 //!
 //! See DESIGN.md for the experiment index (every paper table/figure →
 //! bench target) and EXPERIMENTS.md for measured results.
 
+pub mod backend;
 pub mod coordinator;
 pub mod hw;
 pub mod lns;

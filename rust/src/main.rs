@@ -3,8 +3,10 @@
 //!   lns-madam train [--config path] [--model M] [--format F]
 //!                   [--optimizer O] [--steps N] [--lr X]
 //!                   [--gamma-fwd G] [--gamma-bwd G] [--qu-bits B]
+//!                   [--backend auto|native|pjrt]
+//!                   [--save-ckpt path] [--resume path]
 //!                   [--parallelism P]   # 0 = auto, 1 = sequential
-//!   lns-madam info            # list artifacts + models
+//!   lns-madam info            # list artifacts + native model presets
 //!   lns-madam energy [--parallelism P]   # Table 8 energy report +
 //!                                        # measured datapath profile
 //!   lns-madam quant-error     # Fig. 4 quantization-error study
@@ -12,11 +14,13 @@
 //! Arg parsing is hand-rolled (no clap offline); flags are --key value.
 
 use anyhow::{bail, Result};
+use lns_madam::backend::native::builtin_presets;
+use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
 use lns_madam::hw::{measure_gemm_opcounts, table8_workloads, EnergyModel, PeFormat};
 use lns_madam::lns::{ConvertMode, MacConfig, Parallelism};
 use lns_madam::optim::error::fig4_sweep;
-use lns_madam::runtime::{Manifest, Runtime};
+use lns_madam::runtime::{artifacts_available, Manifest, Runtime};
 use lns_madam::util::bench::print_table;
 use std::path::Path;
 
@@ -64,8 +68,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "qu-bits" => cfg.qu_bits = v.parse()?,
             "seed" => cfg.seed = v.parse()?,
             "parallelism" => cfg.parallelism = v.parse()?,
+            "backend" => cfg.backend = BackendKind::parse(v)?,
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "log" => cfg.log_path = v.clone(),
+            "save-ckpt" => cfg.ckpt_path = v.clone(),
+            "resume" => cfg.resume_from = v.clone(),
             "eval-every" => cfg.eval_every = v.parse()?,
             other => bail!("unknown flag --{other}"),
         }
@@ -74,8 +81,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
         "training {} [{}] with {} (lr {}), {} steps, Q_U {} bits",
         cfg.model, cfg.format, cfg.optimizer.name(), cfg.lr, cfg.steps, cfg.qu_bits
     );
-    let runtime = Runtime::cpu()?;
-    let mut trainer = Trainer::new(&runtime, cfg)?;
+    let mut trainer = Trainer::new(cfg)?;
+    println!("backend: {}", trainer.backend_name());
+    if trainer.steps_done > 0 {
+        println!("resumed at step {}", trainer.steps_done);
+    }
     trainer.run()?;
     println!(
         "done: final loss (tail-10 mean) = {:.4}{}",
@@ -95,24 +105,39 @@ fn cmd_info(args: &[String]) -> Result<()> {
         .find(|(k, _)| k == "artifacts")
         .map(|(_, v)| v.clone())
         .unwrap_or_else(|| "artifacts".into());
-    let manifest = Manifest::load(Path::new(&dir))?;
-    let runtime = Runtime::cpu()?;
-    println!("platform: {}", runtime.platform());
-    let mut rows = Vec::new();
-    for name in manifest.artifact_names() {
-        let a = manifest.artifact(&name).unwrap();
-        rows.push(vec![
-            name,
-            a.kind,
-            a.model.unwrap_or_default(),
-            a.format.unwrap_or_default(),
-            a.inputs.len().to_string(),
-            a.outputs.len().to_string(),
-        ]);
+    match Runtime::cpu() {
+        Ok(runtime) => println!("platform: {}", runtime.platform()),
+        Err(e) => println!("platform: none ({e})"),
     }
+    if artifacts_available(Path::new(&dir)) {
+        let manifest = Manifest::load(Path::new(&dir))?;
+        let mut rows = Vec::new();
+        for name in manifest.artifact_names() {
+            let a = manifest.artifact(&name).unwrap();
+            rows.push(vec![
+                name,
+                a.kind,
+                a.model.unwrap_or_default(),
+                a.format.unwrap_or_default(),
+                a.inputs.len().to_string(),
+                a.outputs.len().to_string(),
+            ]);
+        }
+        print_table(
+            "artifacts",
+            &["name", "kind", "model", "format", "inputs", "outputs"],
+            &rows,
+        );
+    } else {
+        println!("no artifacts at '{dir}' (run `make artifacts` for the PJRT path)");
+    }
+    let rows: Vec<Vec<String>> = builtin_presets()
+        .iter()
+        .map(|p| vec![p.name.to_string(), p.family().to_string(), p.summary()])
+        .collect();
     print_table(
-        "artifacts",
-        &["name", "kind", "model", "format", "inputs", "outputs"],
+        "native model presets (--backend native)",
+        &["name", "family", "config"],
         &rows,
     );
     Ok(())

@@ -1,0 +1,334 @@
+//! Native char-LM: embedding + GEMM stack for the `transformer`
+//! family's CharCorpus data path.
+//!
+//! Architecture (a deliberately small causal-by-construction LM — each
+//! position sees only its own token + position, which is exactly what
+//! the Markov `CharCorpus` needs):
+//!
+//!   x[b,t]  = tok_emb[tokens[b,t]] + pos_emb[t]          (gather, FP32)
+//!   h       = relu(Q_A(x) @ Q_W(w1) + b1)                (GEMM 1)
+//!   logits  = Q_A(h) @ Q_W(head)                          (GEMM 2)
+//!   loss    = mean softmax cross-entropy vs targets
+//!
+//! Backward applies Q_E to activation gradients entering each GEMM and
+//! Q_G to weight gradients, mirroring `MlpModel` (Fig. 3); embedding
+//! and bias gradients stay FP32 like the paper's non-GEMM ops.
+
+use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
+use crate::model::{softmax, NativeModel, TrainQuant};
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Result};
+
+pub struct CharLmModel {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+}
+
+impl CharLmModel {
+    pub fn new(vocab: usize, seq: usize, d_model: usize, d_ff: usize) -> Self {
+        CharLmModel { vocab, seq, d_model, d_ff }
+    }
+
+    fn check_params(&self, params: &[Param]) -> Result<()> {
+        let specs = self.param_specs();
+        if params.len() != specs.len() {
+            bail!("char-LM expects {} params, got {}", specs.len(), params.len());
+        }
+        for (p, (name, shape)) in params.iter().zip(specs.iter()) {
+            if &p.name != name || &p.shape != shape {
+                bail!(
+                    "char-LM param mismatch: got {} {:?}, expected {} {:?}",
+                    p.name,
+                    p.shape,
+                    name,
+                    shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn unpack<'a>(&self, batch: &'a Batch) -> Result<([usize; 2], &'a [i32], &'a [i32])> {
+        match batch {
+            Batch::Lm { shape, tokens, targets } => {
+                if shape[1] > self.seq {
+                    bail!("sequence {} exceeds model seq {}", shape[1], self.seq);
+                }
+                let n = shape[0] * shape[1];
+                if tokens.len() != n || targets.len() != n {
+                    bail!(
+                        "LM batch size mismatch: shape {shape:?} wants {n}, got {}/{}",
+                        tokens.len(),
+                        targets.len()
+                    );
+                }
+                Ok((*shape, tokens.as_slice(), targets.as_slice()))
+            }
+            Batch::Classification { .. } => bail!("char-LM expects an LM batch"),
+        }
+    }
+
+    /// Embed tokens: x[b*t] = tok_emb[token] + pos_emb[t].
+    fn embed(
+        &self,
+        tokens: &[i32],
+        shape: [usize; 2],
+        tok_emb: &Param,
+        pos_emb: &Param,
+    ) -> Result<Tensor> {
+        let (bsz, t) = (shape[0], shape[1]);
+        let d = self.d_model;
+        let mut x = Tensor::zeros(bsz * t, d);
+        for (bt, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= self.vocab {
+                bail!("token {tok} out of vocab {}", self.vocab);
+            }
+            let pos = bt % t;
+            let row = &mut x.data[bt * d..(bt + 1) * d];
+            let te = &tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &pos_emb.data[pos * d..(pos + 1) * d];
+            for (o, (a, b)) in row.iter_mut().zip(te.iter().zip(pe.iter())) {
+                *o = a + b;
+            }
+        }
+        Ok(x)
+    }
+
+    /// Forward pass; returns everything backward needs.
+    #[allow(clippy::type_complexity)]
+    fn forward_full(
+        &self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+    ) -> Result<(ForwardState, Vec<usize>)> {
+        self.check_params(params)?;
+        let (shape, tokens, targets) = self.unpack(batch)?;
+        let (tok_emb, pos_emb) = (&params[0], &params[1]);
+        let (w1, b1, head) = (&params[2], &params[3], &params[4]);
+
+        // apply_owned: the operands are freshly materialized, so the
+        // quantizers work in place instead of staging another copy.
+        let x = self.embed(tokens, shape, tok_emb, pos_emb)?;
+        let xq = q.forward.apply_owned(x);
+        let w1q = q
+            .forward
+            .apply_owned(Tensor::from_vec(self.d_model, self.d_ff, w1.data.clone()));
+        let mut z1 = xq.matmul(&w1q);
+        for r in 0..z1.rows {
+            for c in 0..z1.cols {
+                *z1.at_mut(r, c) += b1.data[c];
+            }
+        }
+        let h1q = q.forward.apply_owned(z1.map(|v| v.max(0.0)));
+        let headq = q
+            .forward
+            .apply_owned(Tensor::from_vec(self.d_ff, self.vocab, head.data.clone()));
+        let logits = h1q.matmul(&headq);
+        let probs = softmax(&logits);
+        let y: Vec<usize> = targets.iter().map(|&v| v as usize).collect();
+        if let Some(&bad) = y.iter().find(|&&t| t >= self.vocab) {
+            bail!("target {bad} out of vocab {}", self.vocab);
+        }
+        Ok((ForwardState { shape, tokens: tokens.to_vec(), xq, w1q, z1, h1q, headq, probs }, y))
+    }
+
+    fn loss_acc(probs: &Tensor, y: &[usize]) -> (f32, f32) {
+        let mut loss = 0.0;
+        let mut correct = 0;
+        for (r, &t) in y.iter().enumerate() {
+            loss -= probs.at(r, t).max(1e-12).ln();
+            let row = &probs.data[r * probs.cols..(r + 1) * probs.cols];
+            // total_cmp: a diverged run (NaN probs) must surface as a
+            // non-finite loss, not a comparator panic.
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            if argmax == t {
+                correct += 1;
+            }
+        }
+        (loss / y.len() as f32, correct as f32 / y.len() as f32)
+    }
+}
+
+/// Cached forward tensors for backprop.
+struct ForwardState {
+    shape: [usize; 2],
+    tokens: Vec<i32>,
+    xq: Tensor,
+    w1q: Tensor,
+    z1: Tensor,
+    h1q: Tensor,
+    headq: Tensor,
+    probs: Tensor,
+}
+
+impl NativeModel for CharLmModel {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("tok_emb".into(), vec![self.vocab, self.d_model]),
+            ("pos_emb".into(), vec![self.seq, self.d_model]),
+            ("w1".into(), vec![self.d_model, self.d_ff]),
+            ("b1".into(), vec![self.d_ff]),
+            ("head".into(), vec![self.d_ff, self.vocab]),
+        ]
+    }
+
+    fn contract(&self, batch: usize) -> ModelContract {
+        ModelContract {
+            family: ModelFamily::CharLm,
+            params: self.param_specs(),
+            data_shape: [batch, self.seq],
+            n_out: self.vocab,
+        }
+    }
+
+    fn forward_backward(
+        &self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+    ) -> Result<StepOutput> {
+        let (st, y) = self.forward_full(params, batch, q)?;
+        let (loss, acc) = Self::loss_acc(&st.probs, &y);
+
+        let n = y.len() as f32;
+        let d = self.d_model;
+        // dL/dlogits = (probs - onehot)/n, then Q_E into GEMM 2.
+        let mut dz = st.probs.clone();
+        for (r, &t) in y.iter().enumerate() {
+            *dz.at_mut(r, t) -= 1.0;
+        }
+        let dzq = q.backward.apply_owned(dz.map(|v| v / n));
+
+        // head grad: h1q^T @ dz, then Q_G.
+        let ghead = q.backward.apply_owned(st.h1q.t_matmul(&dzq));
+        // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
+        let dh1 = dzq.matmul_t(&st.headq);
+        let dh1 = dh1.zip(&st.z1, |g, z| if z > 0.0 { g } else { 0.0 });
+        let dh1q = q.backward.apply(&dh1);
+
+        // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
+        let gw1 = q.backward.apply_owned(st.xq.t_matmul(&dh1q));
+        let mut gb1 = vec![0.0f32; self.d_ff];
+        for r in 0..dh1.rows {
+            for (c, g) in gb1.iter_mut().enumerate() {
+                *g += dh1.at(r, c);
+            }
+        }
+
+        // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
+        // non-GEMM ops like the paper).
+        let dx = dh1q.matmul_t(&st.w1q);
+        let mut gtok = vec![0.0f32; self.vocab * d];
+        let mut gpos = vec![0.0f32; self.seq * d];
+        let t_len = st.shape[1];
+        for (bt, &tok) in st.tokens.iter().enumerate() {
+            let tok = tok as usize;
+            let pos = bt % t_len;
+            let row = &dx.data[bt * d..(bt + 1) * d];
+            let gt = &mut gtok[tok * d..(tok + 1) * d];
+            for (g, &v) in gt.iter_mut().zip(row.iter()) {
+                *g += v;
+            }
+            let gp = &mut gpos[pos * d..(pos + 1) * d];
+            for (g, &v) in gp.iter_mut().zip(row.iter()) {
+                *g += v;
+            }
+        }
+
+        Ok(StepOutput {
+            loss,
+            acc: Some(acc),
+            grads: vec![gtok, gpos, gw1.data, gb1, ghead.data],
+        })
+    }
+
+    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)> {
+        let (st, y) = self.forward_full(params, batch, q)?;
+        Ok(Self::loss_acc(&st.probs, &y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> CharLmModel {
+        CharLmModel::new(16, 8, 8, 16)
+    }
+
+    fn tiny_batch(model: &CharLmModel, rng: &mut Rng) -> Batch {
+        let (b, t) = (4, model.seq);
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(model.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..b * t).map(|_| rng.below(model.vocab) as i32).collect();
+        Batch::Lm { shape: [b, t], tokens, targets }
+    }
+
+    #[test]
+    fn loss_at_init_is_near_uniform() {
+        let model = tiny();
+        let mut rng = Rng::new(1);
+        let params = init_params(&model.param_specs(), &mut rng);
+        let batch = tiny_batch(&model, &mut rng);
+        let (loss, acc) = model
+            .forward_eval(&params, &batch, &TrainQuant::fp32())
+            .unwrap();
+        let uniform = (model.vocab as f32).ln();
+        assert!((loss - uniform).abs() < 0.2, "loss {loss} vs uniform {uniform}");
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_fp32() {
+        let model = tiny();
+        let mut rng = Rng::new(2);
+        let mut params = init_params(&model.param_specs(), &mut rng);
+        let batch = tiny_batch(&model, &mut rng);
+        let q = TrainQuant::fp32();
+        let out = model.forward_backward(&params, &batch, &q).unwrap();
+
+        let eps = 1e-3f32;
+        // Spot-check one coordinate in each parameter tensor.
+        for (pi, idx) in [(0usize, 9usize), (1, 5), (2, 17), (3, 3), (4, 21)] {
+            let orig = params[pi].data[idx];
+            params[pi].data[idx] = orig + eps;
+            let (lp, _) = model.forward_eval(&params, &batch, &q).unwrap();
+            params[pi].data[idx] = orig - eps;
+            let (lm, _) = model.forward_eval(&params, &batch, &q).unwrap();
+            params[pi].data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = out.grads[pi][idx];
+            // min threshold sits ~6x above the f32 central-difference
+            // noise floor at this loss scale.
+            assert!(
+                (fd - an).abs() < 2e-2 * fd.abs().max(0.1),
+                "param {pi} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn grads_align_with_param_specs() {
+        let model = tiny();
+        let mut rng = Rng::new(3);
+        let params = init_params(&model.param_specs(), &mut rng);
+        let batch = tiny_batch(&model, &mut rng);
+        let out = model
+            .forward_backward(&params, &batch, &TrainQuant::lns8())
+            .unwrap();
+        assert_eq!(out.grads.len(), params.len());
+        for (p, g) in params.iter().zip(out.grads.iter()) {
+            assert_eq!(p.data.len(), g.len(), "grad size mismatch for {}", p.name);
+        }
+    }
+}

@@ -1,20 +1,32 @@
-//! Pure-rust quantized MLP (forward + backward), mirroring the L2 JAX
-//! model's QAT semantics.
+//! Pure-rust quantized model zoo (forward + backward), mirroring the
+//! L2 JAX models' QAT semantics.
 //!
 //! Why it exists: the accuracy sweeps (Tables 3, 5, 6; Fig. 7) explore
-//! dozens of (format, bitwidth, gamma, optimizer) points. The PJRT
-//! artifacts cover the flagship configurations; this mirror lets every
-//! sweep point train natively in rust with identical quantizer
-//! placement (Q_W, Q_A forward; Q_E, Q_G backward — Fig. 3), and is
-//! validated against the PJRT path in `rust/tests/integration.rs`.
+//! dozens of (format, bitwidth, gamma, optimizer) points, and the
+//! backend-generic trainer needs a gradient producer that works with
+//! no artifacts at all. Every model here trains natively in rust with
+//! identical quantizer placement (Q_W, Q_A forward; Q_E, Q_G backward
+//! — Fig. 3) and is validated against the PJRT path in
+//! `rust/tests/integration.rs` when artifacts exist.
+//!
+//! The [`NativeModel`] trait is the backend-facing contract: a
+//! stateless fwd/bwd over the coordinator's flat [`Param`] storage.
+//! [`NativeMlp`] adapts the classification [`MlpModel`];
+//! [`charlm::CharLmModel`] covers the `transformer` family's
+//! char-LM data path.
 
+use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
 use crate::lns::format::LnsFormat;
-use crate::lns::quant::{quantize_tensor, Scaling};
+use crate::lns::quant::{quantize_slice, quantize_tensor, Scaling};
 use crate::lns::softfloat::{FixedPoint, MiniFloat};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+use anyhow::{bail, Result};
 
+pub mod charlm;
 pub mod sweep;
+
+pub use charlm::CharLmModel;
 
 /// A quantizer assignment for one side of training.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -47,6 +59,29 @@ impl QuantKind {
                 let mut data = t.data.clone();
                 FixedPoint { bits: *bits }.quantize_scaled(&mut data);
                 Tensor::from_vec(t.rows, t.cols, data)
+            }
+        }
+    }
+
+    /// Like [`QuantKind::apply`] but consumes the tensor, quantizing
+    /// in place where the format allows — the hot-path variant for
+    /// operands just materialized from flat `Param` storage (skips
+    /// the staging copy `apply` would make).
+    pub fn apply_owned(&self, mut t: Tensor) -> Tensor {
+        match self {
+            QuantKind::None => t,
+            QuantKind::Lns { fmt, scaling: Scaling::PerTensor } => {
+                quantize_slice(&mut t.data, *fmt);
+                t
+            }
+            QuantKind::Lns { fmt, scaling } => quantize_tensor(&t, *fmt, *scaling),
+            QuantKind::Fp8 => {
+                MiniFloat::E4M3.quantize_scaled(&mut t.data);
+                t
+            }
+            QuantKind::Int { bits } => {
+                FixedPoint { bits: *bits }.quantize_scaled(&mut t.data);
+                t
             }
         }
     }
@@ -156,10 +191,12 @@ impl MlpModel {
         let mut correct = 0;
         for (r, &y) in labels.iter().enumerate() {
             let row = &cache.probs.data[r * cache.probs.cols..(r + 1) * cache.probs.cols];
+            // total_cmp keeps diverged (NaN) runs reporting instead of
+            // panicking in the comparator.
             let argmax = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             if argmax == y {
@@ -212,7 +249,192 @@ impl MlpModel {
     }
 }
 
-fn softmax(logits: &Tensor) -> Tensor {
+// ---------------------------------------------------------------------------
+// NativeModel: the backend-facing contract over flat Param storage
+// ---------------------------------------------------------------------------
+
+/// A pure-Rust model the [`crate::backend::NativeBackend`] can train:
+/// a stateless fwd/bwd function over the coordinator's flat [`Param`]
+/// list, with the Fig. 3 quantizer placement applied per [`TrainQuant`].
+pub trait NativeModel: Send {
+    /// Parameter inventory (name, shape) in positional order.
+    fn param_specs(&self) -> Vec<(String, Vec<usize>)>;
+
+    /// The backend contract for a given batch size.
+    fn contract(&self, batch: usize) -> ModelContract;
+
+    /// One fwd/bwd pass; `grads` align positionally with `params`.
+    fn forward_backward(&self, params: &[Param], batch: &Batch, q: &TrainQuant)
+        -> Result<StepOutput>;
+
+    /// Forward-only held-out pass: `(loss, accuracy)`.
+    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)>;
+}
+
+/// Map a format name + quantizer knobs onto the Fig. 3 assignment the
+/// native models consume (mirror of the artifact naming convention).
+pub fn train_quant(
+    format: &str,
+    bits_fwd: u32,
+    gamma_fwd: f32,
+    bits_bwd: u32,
+    gamma_bwd: f32,
+) -> Result<TrainQuant> {
+    let kind = |bits: u32, gamma: f32| -> Result<QuantKind> {
+        Ok(match format {
+            "fp32" => QuantKind::None,
+            "fp8" => QuantKind::Fp8,
+            "int8" => QuantKind::Int { bits },
+            "lns" => {
+                // Validate before LnsFormat::new, whose asserts would
+                // abort on a bad config instead of erroring cleanly.
+                let g = gamma.round() as u32;
+                if g == 0 || !g.is_power_of_two() {
+                    bail!("lns gamma must be a power of two, got {gamma}");
+                }
+                if !(2..=24).contains(&bits) {
+                    bail!("lns bitwidth {bits} outside the supported 2..=24 range");
+                }
+                QuantKind::Lns { fmt: LnsFormat::new(bits, g), scaling: Scaling::PerTensor }
+            }
+            other => bail!("unknown format '{other}' (expected lns|fp8|int8|fp32)"),
+        })
+    };
+    Ok(TrainQuant {
+        forward: kind(bits_fwd, gamma_fwd)?,
+        backward: kind(bits_bwd, gamma_bwd)?,
+    })
+}
+
+/// Parameter init shared by every backend (mirrors
+/// `python/compile/model.py`): LayerNorm scales start at one, biases at
+/// zero; embeddings — `pos_emb` included, matching `tfm_init`'s
+/// `normal * 0.02` — and the LM head are small-normal; weights are He.
+pub fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    let base = name.rsplit('.').next().unwrap_or(name);
+    match base {
+        s if s.ends_with("_s") => vec![1.0; n],
+        s if s.ends_with("_b") => vec![0.0; n],
+        "tok_emb" | "pos_emb" | "head" => (0..n).map(|_| rng.normal_f32() * 0.02).collect(),
+        s if s.starts_with('w') && shape.len() == 2 => {
+            let std = (2.0 / shape[0] as f32).sqrt();
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        }
+        s if s.starts_with('b') => vec![0.0; n],
+        _ if shape.len() == 2 => {
+            let std = (2.0 / (shape[0] + shape[1]) as f32).sqrt();
+            (0..n).map(|_| rng.normal_f32() * std).collect()
+        }
+        _ => vec![0.0; n],
+    }
+}
+
+/// Initialize a full parameter list from an inventory.
+pub fn init_params(specs: &[(String, Vec<usize>)], rng: &mut Rng) -> Vec<Param> {
+    specs
+        .iter()
+        .map(|(name, shape)| Param {
+            name: name.clone(),
+            shape: shape.clone(),
+            data: init_param(name, shape, rng),
+        })
+        .collect()
+}
+
+/// The MLP family as a [`NativeModel`]: assembles an [`MlpModel`] view
+/// from the flat `[w0, b0, w1, b1, ...]` parameter list each step.
+pub struct NativeMlp {
+    pub sizes: Vec<usize>,
+}
+
+impl NativeMlp {
+    pub fn new(sizes: Vec<usize>) -> Self {
+        assert!(sizes.len() >= 2, "mlp needs at least one layer");
+        NativeMlp { sizes }
+    }
+
+    /// Materialize the layer view from flat storage. One copy of the
+    /// model per call — the same per-step parameter upload the PJRT
+    /// backend pays when it builds input literals; hoist it when the
+    /// params are frozen across calls (see `sweep::run_sweep`'s eval).
+    pub fn assemble(&self, params: &[Param]) -> Result<MlpModel> {
+        let n_layers = self.sizes.len() - 1;
+        if params.len() != 2 * n_layers {
+            bail!("mlp expects {} params (w/b per layer), got {}", 2 * n_layers, params.len());
+        }
+        let mut weights = Vec::with_capacity(n_layers);
+        let mut biases = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let (w, b) = (&params[2 * l], &params[2 * l + 1]);
+            if w.shape != [self.sizes[l], self.sizes[l + 1]] || b.shape != [self.sizes[l + 1]] {
+                bail!("mlp layer {l}: shape mismatch ({:?} / {:?})", w.shape, b.shape);
+            }
+            weights.push(Tensor::from_vec(self.sizes[l], self.sizes[l + 1], w.data.clone()));
+            biases.push(b.data.clone());
+        }
+        Ok(MlpModel { sizes: self.sizes.clone(), weights, biases })
+    }
+
+    fn unpack(&self, batch: &Batch) -> Result<(Tensor, Vec<usize>)> {
+        match batch {
+            Batch::Classification { shape, xs, ys } => Ok((
+                Tensor::from_vec(shape[0], shape[1], xs.clone()),
+                ys.iter().map(|&v| v as usize).collect(),
+            )),
+            Batch::Lm { .. } => bail!("mlp family expects a classification batch"),
+        }
+    }
+}
+
+impl NativeModel for NativeMlp {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut specs = Vec::new();
+        for (l, w) in self.sizes.windows(2).enumerate() {
+            specs.push((format!("w{l}"), vec![w[0], w[1]]));
+            specs.push((format!("b{l}"), vec![w[1]]));
+        }
+        specs
+    }
+
+    fn contract(&self, batch: usize) -> ModelContract {
+        ModelContract {
+            family: ModelFamily::Mlp,
+            params: self.param_specs(),
+            data_shape: [batch, self.sizes[0]],
+            n_out: *self.sizes.last().unwrap(),
+        }
+    }
+
+    fn forward_backward(
+        &self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+    ) -> Result<StepOutput> {
+        let (x, y) = self.unpack(batch)?;
+        let model = self.assemble(params)?;
+        let cache = model.forward(&x, q);
+        let loss = model.loss(&cache, &y);
+        let acc = model.accuracy(&cache, &y);
+        let (wg, bg) = model.backward(&cache, &y, q);
+        let mut grads = Vec::with_capacity(params.len());
+        for (gw, gb) in wg.into_iter().zip(bg.into_iter()) {
+            grads.push(gw.data);
+            grads.push(gb);
+        }
+        Ok(StepOutput { loss, acc: Some(acc), grads })
+    }
+
+    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)> {
+        let (x, y) = self.unpack(batch)?;
+        let model = self.assemble(params)?;
+        let cache = model.forward(&x, q);
+        Ok((model.loss(&cache, &y), model.accuracy(&cache, &y)))
+    }
+}
+
+pub(crate) fn softmax(logits: &Tensor) -> Tensor {
     let mut out = logits.clone();
     for r in 0..out.rows {
         let row = &mut out.data[r * out.cols..(r + 1) * out.cols];
@@ -344,5 +566,63 @@ mod tests {
             model.loss(&c, &y)
         };
         assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn native_mlp_matches_python_param_order() {
+        // python mlp_init lays params out [w0, b0, w1, b1, ...] — the
+        // flat inventory must match so both backends share one init
+        // stream and checkpoints stay interchangeable.
+        let m = NativeMlp::new(vec![8, 16, 4]);
+        let specs = m.param_specs();
+        let names: Vec<&str> = specs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["w0", "b0", "w1", "b1"]);
+        assert_eq!(specs[0].1, vec![8, 16]);
+        assert_eq!(specs[3].1, vec![4]);
+        let c = m.contract(32);
+        assert_eq!(c.data_shape, [32, 8]);
+        assert_eq!(c.n_out, 4);
+    }
+
+    #[test]
+    fn native_mlp_forward_backward_matches_direct_model() {
+        let m = NativeMlp::new(vec![6, 12, 4]);
+        let mut rng = Rng::new(7);
+        let params = init_params(&m.param_specs(), &mut rng);
+        let direct = m.assemble(&params).unwrap();
+        let mut drng = Rng::new(8);
+        let (x, y) = tiny_batch(&mut drng, 16, 6, 4);
+        let ys: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let batch = Batch::Classification { shape: [16, 6], xs: x.data.clone(), ys };
+        let q = TrainQuant::lns8();
+
+        let out = m.forward_backward(&params, &batch, &q).unwrap();
+        let cache = direct.forward(&x, &q);
+        assert_eq!(out.loss, direct.loss(&cache, &y));
+        let (wg, bg) = direct.backward(&cache, &y, &q);
+        assert_eq!(out.grads[0], wg[0].data);
+        assert_eq!(out.grads[1], bg[0]);
+        assert_eq!(out.grads[2], wg[1].data);
+        assert_eq!(out.grads[3], bg[1]);
+    }
+
+    #[test]
+    fn train_quant_maps_formats() {
+        let q = train_quant("lns", 8, 8.0, 8, 8.0).unwrap();
+        assert_eq!(q.forward, QuantKind::lns8());
+        let q = train_quant("fp32", 8, 8.0, 8, 8.0).unwrap();
+        assert_eq!(q.forward, QuantKind::None);
+        let q = train_quant("int8", 8, 8.0, 8, 8.0).unwrap();
+        assert_eq!(q.forward, QuantKind::Int { bits: 8 });
+        assert!(train_quant("bf16", 8, 8.0, 8, 8.0).is_err());
+    }
+
+    #[test]
+    fn mismatched_params_are_rejected() {
+        let m = NativeMlp::new(vec![6, 12, 4]);
+        let mut rng = Rng::new(9);
+        let other = NativeMlp::new(vec![4, 4]);
+        let params = init_params(&other.param_specs(), &mut rng);
+        assert!(m.assemble(&params).is_err());
     }
 }

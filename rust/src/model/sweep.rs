@@ -5,11 +5,12 @@
 //! task for each point and reports held-out accuracy — the engine
 //! behind the Table 3/5/6 and Fig. 7 benches.
 
+use crate::backend::Batch;
 use crate::coordinator::data::SyntheticClassification;
 use crate::lns::datapath::{MacConfig, VectorMacUnit};
 use crate::lns::format::Rounding;
 use crate::lns::quant::{encode_tensor, Scaling};
-use crate::model::{MlpModel, TrainQuant};
+use crate::model::{init_params, MlpModel, NativeMlp, NativeModel, TrainQuant};
 use crate::optim::Optimizer;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -85,7 +86,7 @@ fn softmax_loss_acc(logits: &Tensor, labels: &[usize]) -> (f32, f32) {
         let argmax = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if argmax == y {
@@ -96,34 +97,36 @@ fn softmax_loss_acc(logits: &Tensor, labels: &[usize]) -> (f32, f32) {
 }
 
 /// Train one sweep point; returns final loss + held-out accuracy.
+///
+/// Runs through the same [`NativeModel`] fwd/bwd the backend-generic
+/// trainer uses, so sweep points and `--backend native` runs share one
+/// implementation of the Fig. 3 quantizer placement.
 pub fn run_sweep(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResult {
+    let model = NativeMlp::new(cfg.sizes.clone());
     let mut rng = Rng::new(cfg.seed);
-    let mut model = MlpModel::init(&cfg.sizes, &mut rng);
+    let mut params = init_params(&model.param_specs(), &mut rng);
     let classes = *cfg.sizes.last().unwrap();
     let mut data = SyntheticClassification::new(cfg.sizes[0], classes, 0.6, cfg.seed);
     let mut diverged = false;
 
     for _ in 0..cfg.steps {
         let (xs, ys) = data.batch(cfg.batch);
-        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
-        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
-        let cache = model.forward(&x, &cfg.quant);
-        let loss = model.loss(&cache, &y);
-        if !loss.is_finite() {
-            diverged = true;
-            break;
-        }
-        let (wg, bg) = model.backward(&cache, &y, &cfg.quant);
-        for l in 0..model.n_layers() {
-            if wg[l].data.iter().any(|v| !v.is_finite()) {
+        let batch = Batch::Classification { shape: [cfg.batch, cfg.sizes[0]], xs, ys };
+        let out = match model.forward_backward(&params, &batch, &cfg.quant) {
+            Ok(o) => o,
+            Err(_) => {
                 diverged = true;
                 break;
             }
-            opt.step(l, &mut model.weights[l].data, &wg[l].data);
-            opt.step(1000 + l, &mut model.biases[l], &bg[l]);
-        }
-        if diverged {
+        };
+        if !out.loss.is_finite()
+            || out.grads.iter().any(|g| g.iter().any(|v| !v.is_finite()))
+        {
+            diverged = true;
             break;
+        }
+        for (i, (p, g)) in params.iter_mut().zip(out.grads.iter()).enumerate() {
+            opt.step(i, &mut p.data, g);
         }
     }
 
@@ -132,21 +135,28 @@ pub fn run_sweep(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResult {
     let mut loss_sum = 0.0;
     let mut acc_sum = 0.0;
     let evals = 5;
+    // Params are frozen during eval: materialize the layer view once.
+    let assembled = cfg
+        .datapath
+        .map(|_| model.assemble(&params).expect("sweep params match model"));
     for _ in 0..evals {
         let (xs, ys) = data.batch(cfg.batch);
-        let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
-        let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
-        let logits = match cfg.datapath {
+        let (l, a) = match cfg.datapath {
             Some(mac_cfg) => {
+                let mlp = assembled.as_ref().expect("assembled alongside datapath");
+                let x = Tensor::from_vec(cfg.batch, cfg.sizes[0], xs);
+                let y: Vec<usize> = ys.iter().map(|&v| v as usize).collect();
                 let mut mac = VectorMacUnit::new(mac_cfg);
-                forward_datapath(&model, &x, &mut mac)
+                let logits = forward_datapath(mlp, &x, &mut mac);
+                softmax_loss_acc(&logits, &y)
             }
             None => {
-                let cache = model.forward(&x, &cfg.quant);
-                cache.probs.map(|p| p.max(1e-12).ln()) // log-probs as logits
+                let batch = Batch::Classification { shape: [cfg.batch, cfg.sizes[0]], xs, ys };
+                model
+                    .forward_eval(&params, &batch, &cfg.quant)
+                    .expect("sweep params match model")
             }
         };
-        let (l, a) = softmax_loss_acc(&logits, &y);
         loss_sum += l;
         acc_sum += a;
     }

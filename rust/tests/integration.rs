@@ -5,6 +5,7 @@
 //! with a notice) when artifacts/ is absent so `cargo test` stays green
 //! in a fresh checkout.
 
+use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
 use lns_madam::lns::quant::quantize_slice;
 use lns_madam::lns::{encode_tensor, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit};
@@ -159,14 +160,16 @@ fn pallas_madam_kernel_matches_rust_code_update() {
 #[test]
 fn trainer_reduces_loss_on_mlp_lns() {
     let Some((runtime, _)) = setup() else { return };
-    let mut cfg = TrainConfig::default();
-    cfg.model = "mlp".into();
-    cfg.format = "lns".into();
-    cfg.optimizer = OptKind::Madam;
-    cfg.lr = cfg.optimizer.default_lr();
-    cfg.steps = 120;
-    cfg.eval_every = 0;
-    let mut trainer = Trainer::new(&runtime, cfg).unwrap();
+    let cfg = TrainConfig {
+        model: "mlp".into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 120,
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::with_pjrt(&runtime, cfg).unwrap();
     let (first, _) = trainer.step().unwrap();
     let mut tail = Vec::new();
     for _ in 0..119 {
@@ -192,14 +195,46 @@ fn trainer_shape_validation_catches_bad_input() {
 fn all_formats_train_one_step() {
     let Some((runtime, _)) = setup() else { return };
     for format in ["lns", "fp8", "int8", "fp32"] {
-        let mut cfg = TrainConfig::default();
-        cfg.model = "mlp".into();
-        cfg.format = format.into();
-        cfg.steps = 1;
-        cfg.eval_every = 0;
-        let mut trainer = Trainer::new(&runtime, cfg).unwrap();
+        let cfg = TrainConfig {
+            model: "mlp".into(),
+            format: format.into(),
+            steps: 1,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::with_pjrt(&runtime, cfg).unwrap();
         let (loss, acc) = trainer.step().unwrap();
         assert!(loss.is_finite(), "{format}: loss {loss}");
         assert!(acc.unwrap() >= 0.0);
+    }
+}
+
+#[test]
+fn native_matches_pjrt_at_fp32() {
+    // The two backends share init (same rng stream over the same param
+    // inventory) and data (same seed), so at fp32 the per-step losses
+    // must agree to within GEMM reduction-order noise.
+    let Some((runtime, _)) = setup() else { return };
+    let mk = || TrainConfig {
+        model: "mlp".into(),
+        format: "fp32".into(),
+        optimizer: OptKind::Sgd,
+        lr: 0.1,
+        steps: 5,
+        eval_every: 0,
+        qu_bits: 0,
+        ..TrainConfig::default()
+    };
+    let mut pjrt = Trainer::with_pjrt(&runtime, mk()).unwrap();
+    let mut native =
+        Trainer::new(TrainConfig { backend: BackendKind::Native, ..mk() }).unwrap();
+    assert_eq!(native.backend_name(), "native");
+    for step in 0..5 {
+        let (lp, _) = pjrt.step().unwrap();
+        let (ln, _) = native.step().unwrap();
+        assert!(
+            (lp - ln).abs() < 2e-3 * lp.abs().max(1.0),
+            "step {step}: pjrt loss {lp} vs native loss {ln}"
+        );
     }
 }
