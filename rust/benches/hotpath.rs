@@ -2,25 +2,228 @@
 //! EXPERIMENTS.md come from here.
 //!
 //! L3 coverage: Q_log quantize/encode throughput (runs per weight
-//! update), the Madam + Q_U update step, the datapath simulator, and
-//! the end-to-end train-step latency split into gradient compute
-//! (PJRT or the native backend) vs weight update (rust) so the
-//! coordinator's overhead share is visible.
+//! update), the Madam + Q_U update step, the datapath simulator, the
+//! end-to-end train-step latency split into gradient compute (PJRT or
+//! the native backend) vs weight update (rust), and the native
+//! training throughput sweep across thread counts, which emits the
+//! machine-readable `BENCH_native_training.json` (the repo's recorded
+//! perf trajectory — see DESIGN.md §Performance & testing).
 //!
-//!   cargo bench --bench hotpath        # no artifacts required
+//!   cargo bench --bench hotpath                          # full run
+//!   cargo bench --bench hotpath -- --native-only --smoke # CI smoke
+//!
+//! Flags: `--native-only` skips the microbench sections, `--smoke`
+//! shrinks the training sweep to tiny presets / 1 iteration, `--out P`
+//! overrides the JSON path. Unknown flags are ignored (cargo may pass
+//! its own).
 
+use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
 use lns_madam::lns::quant::quantize_slice;
 use lns_madam::lns::{
-    encode_tensor, LnsFormat, MacConfig, Rounding, Scaling, VectorMacUnit,
+    encode_tensor, LnsFormat, MacConfig, Parallelism, Rounding, Scaling, VectorMacUnit,
 };
 use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, QuantizedUpdate, UpdateQuantizer};
 use lns_madam::util::bench::Bencher;
+use lns_madam::util::json::Json;
 use lns_madam::util::rng::Rng;
 use lns_madam::util::tensor::Tensor;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// One measured native-training point.
+struct NativePoint {
+    family: &'static str,
+    preset: String,
+    format: &'static str,
+    threads: usize,
+    steps_per_sec: f64,
+    ms_per_step: f64,
+}
+
+/// Train `measure` steps at a given thread count; returns the per-step
+/// losses (for the cross-thread bit-identity assert) and steps/sec.
+fn time_native_training(
+    preset: &str,
+    format: &'static str,
+    threads: usize,
+    warmup: usize,
+    measure: usize,
+) -> (Vec<f32>, f64) {
+    let (optimizer, qu_bits) = match format {
+        "lns" => (OptKind::Madam, 16),
+        _ => (OptKind::Sgd, 0),
+    };
+    let cfg = TrainConfig {
+        model: preset.into(),
+        format: format.into(),
+        optimizer,
+        lr: optimizer.default_lr(),
+        steps: 1,
+        eval_every: 0,
+        qu_bits,
+        backend: BackendKind::Native,
+        parallelism: threads,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg).expect("native trainer");
+    let mut losses = Vec::with_capacity(warmup + measure);
+    for _ in 0..warmup {
+        losses.push(trainer.step().expect("warmup step").0);
+    }
+    let t0 = Instant::now();
+    for _ in 0..measure {
+        losses.push(trainer.step().expect("measured step").0);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (losses, measure as f64 / secs)
+}
+
+/// The native-training throughput sweep: steps/sec for the mlp and
+/// char-LM families at 1/2/4/8 threads, lns8 and fp32, written to
+/// `out_path` as JSON. Asserts that per-step losses are bit-identical
+/// across every thread count (the parallel hot path must never change
+/// the math).
+fn native_training_section(smoke: bool, out_path: &str) {
+    let host_cores = Parallelism::Auto.worker_count();
+    let presets: &[(&str, &str)] = if smoke {
+        &[("mlp", "mlp_tiny"), ("charlm", "charlm_tiny")]
+    } else {
+        &[("mlp", "mlp"), ("charlm", "tfm_tiny")]
+    };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let (warmup, measure) = if smoke { (1, 1) } else { (2, 6) };
+
+    println!("\n--- native training throughput ({host_cores} host cores) ---");
+    let mut points: Vec<NativePoint> = Vec::new();
+    for &(family, preset) in presets {
+        for format in ["lns", "fp32"] {
+            let mut reference: Option<Vec<u32>> = None;
+            for &threads in thread_counts {
+                let (losses, sps) = time_native_training(preset, format, threads, warmup, measure);
+                // Compare bit patterns so even a NaN trajectory (which
+                // parallelism must reproduce exactly) counts as equal.
+                let loss_bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+                match &reference {
+                    None => reference = Some(loss_bits),
+                    Some(want) => assert_eq!(
+                        want, &loss_bits,
+                        "{preset} {format}: losses at {threads} threads diverged from sequential"
+                    ),
+                }
+                println!(
+                    "native train {preset:12} {format:4} threads={threads}  {:8.2} steps/s  ({:.2} ms/step)",
+                    sps,
+                    1e3 / sps
+                );
+                points.push(NativePoint {
+                    family,
+                    preset: preset.to_string(),
+                    format,
+                    threads,
+                    steps_per_sec: sps,
+                    ms_per_step: 1e3 / sps,
+                });
+            }
+        }
+    }
+
+    // Headline speedup: the mlp preset at 4 threads (or the sweep's
+    // max) vs sequential, lns format — the ISSUE-3 acceptance number.
+    let sps_at = |family: &str, format: &str, threads: usize| {
+        points
+            .iter()
+            .find(|p| p.family == family && p.format == format && p.threads == threads)
+            .map(|p| p.steps_per_sec)
+    };
+    let par_threads = *thread_counts.last().unwrap().min(&4);
+    let mut speedups = BTreeMap::new();
+    for family in ["mlp", "charlm"] {
+        for format in ["lns", "fp32"] {
+            let pair = (sps_at(family, format, 1), sps_at(family, format, par_threads));
+            if let (Some(seq), Some(par)) = pair {
+                let s = par / seq;
+                println!(
+                    "speedup {family} {format}: {s:.2}x at {par_threads} threads vs sequential"
+                );
+                speedups.insert(format!("{family}_{format}_{par_threads}v1"), Json::Num(s));
+            }
+        }
+    }
+    // The 2x acceptance target only means something on a full run: the
+    // smoke sweep measures one step of a tiny preset at <= 2 threads,
+    // where spawn overhead and timer noise dominate.
+    if !smoke {
+        let pair = (sps_at("mlp", "lns", 1), sps_at("mlp", "lns", par_threads));
+        if let (Some(seq), Some(par)) = pair {
+            if par / seq < 2.0 {
+                if host_cores >= 4 {
+                    println!(
+                        "WARNING: mlp lns speedup {:.2}x below the 2x target on {host_cores} cores",
+                        par / seq
+                    );
+                } else {
+                    println!(
+                        "note: {host_cores} host cores cap the achievable speedup ({:.2}x measured)",
+                        par / seq
+                    );
+                }
+            }
+        }
+    }
+
+    // Machine-readable trajectory point.
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("native_training".into()));
+    root.insert("host_cores".to_string(), Json::Num(host_cores as f64));
+    root.insert("smoke".to_string(), Json::Bool(smoke));
+    root.insert(
+        "thread_counts".to_string(),
+        Json::Arr(thread_counts.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    root.insert(
+        "results".to_string(),
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let mut m = BTreeMap::new();
+                    m.insert("family".to_string(), Json::Str(p.family.into()));
+                    m.insert("preset".to_string(), Json::Str(p.preset.clone()));
+                    m.insert("format".to_string(), Json::Str(p.format.into()));
+                    m.insert("threads".to_string(), Json::Num(p.threads as f64));
+                    m.insert("steps_per_sec".to_string(), Json::Num(p.steps_per_sec));
+                    m.insert("ms_per_step".to_string(), Json::Num(p.ms_per_step));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("speedups".to_string(), Json::Obj(speedups));
+    let json = Json::Obj(root).dump();
+    std::fs::write(out_path, json).expect("write bench json");
+    let shown = std::fs::canonicalize(out_path)
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|_| out_path.to_string());
+    println!("wrote {shown}");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let native_only = args.iter().any(|a| a == "--native-only");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_native_training.json".to_string());
+
+    if native_only {
+        native_training_section(smoke, &out_path);
+        return;
+    }
+
     let b = Bencher::default();
     let mut rng = Rng::new(0);
 
@@ -101,7 +304,7 @@ fn main() {
             macs / seq_s / 1e6
         );
 
-        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = Parallelism::Auto.worker_count();
         let mut par = VectorMacUnit::new(MacConfig::paper_parallel());
         let t1 = Instant::now();
         let out_par = par.matmul(&ea, &eb);
@@ -199,4 +402,6 @@ fn main() {
         upd * 1e3,
         upd / per_step * 100.0
     );
+
+    native_training_section(smoke, &out_path);
 }

@@ -9,6 +9,7 @@
 
 use crate::backend::{Batch, ExecBackend, ModelContract, ModelFamily, Param, StepOutput};
 use crate::coordinator::config::TrainConfig;
+use crate::lns::Parallelism;
 use crate::model::charlm::CharLmModel;
 use crate::model::{train_quant, NativeMlp, NativeModel, TrainQuant};
 use crate::runtime::{artifacts_available, Manifest};
@@ -184,10 +185,14 @@ impl NativeBackend {
         } else {
             None
         };
-        let (model, batch) = match from_manifest {
+        let (mut model, batch) = match from_manifest {
             Some(r) => r,
             None => builtin_model(&cfg.model)?,
         };
+        // The shared parallelism knob (0 = auto, 1 = sequential, n =
+        // workers) drives the fwd/bwd GEMM threading; results are
+        // bit-identical at every setting (tests/native_training.rs).
+        model.set_parallelism(Parallelism::from_knob(cfg.parallelism).worker_count());
         let quant =
             train_quant(&cfg.format, cfg.bits_fwd, cfg.gamma_fwd, cfg.bits_bwd, cfg.gamma_bwd)?;
         let contract = model.contract(batch);

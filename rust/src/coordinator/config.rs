@@ -76,10 +76,12 @@ pub struct TrainConfig {
     /// Checkpoint to restore before training ("" = fresh init).
     pub resume_from: String,
     /// Host-thread knob for the rust-side hot paths: 0 = auto (one
-    /// worker per core), 1 = sequential, n = exactly n workers. The
-    /// trainer feeds it to the fused Madam+Q_U optimizer's worker
-    /// count; datapath-driving tools map the same convention onto the
-    /// simulator via `lns::Parallelism::from_knob`.
+    /// worker per core), 1 = sequential, n = exactly n workers.
+    /// Drives the native backend's fwd/bwd GEMMs (`NativeModel::
+    /// set_parallelism`), the fused Madam+Q_U optimizer's chunked
+    /// update, and — via `lns::Parallelism::from_knob` — the datapath
+    /// simulator. Every consumer is bit-identical at any setting, so
+    /// the knob is pure wall-clock (see DESIGN.md §Performance).
     pub parallelism: usize,
 }
 

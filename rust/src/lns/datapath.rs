@@ -20,6 +20,7 @@
 use crate::lns::convert::{ConvertMode, Converter};
 use crate::lns::format::LnsFormat;
 use crate::lns::quant::LnsTensor;
+use crate::util::pool;
 use crate::util::tensor::Tensor;
 
 /// Hardware op counters for one simulated GEMM.
@@ -258,44 +259,35 @@ impl VectorMacUnit {
         let btc = bt_codes.as_slice();
 
         let mut out = Tensor::zeros(a.rows, b.cols);
-        let chunk_rows = a.rows.div_ceil(workers);
-        let per_thread: Vec<OpCounts> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (ci, out_chunk) in out.data.chunks_mut(chunk_rows * b.cols).enumerate() {
-                let row0 = ci * chunk_rows;
-                handles.push(s.spawn(move || {
-                    let mut counts = OpCounts::default();
-                    let rows_here = out_chunk.len() / b.cols;
-                    for dr in 0..rows_here {
-                        let i = row0 + dr;
-                        let row = i * a.cols;
-                        for j in 0..b.cols {
-                            let col = j * b.rows;
-                            let unscaled = dot_kernel(
-                                &params,
-                                &a.signs[row..row + a.cols],
-                                &a.codes[row..row + a.cols],
-                                &bts[col..col + b.rows],
-                                &btc[col..col + b.rows],
-                                &mut counts,
-                            );
-                            let sa = a.scale_at(i, 0);
-                            let sb = b.scale_at(0, j);
-                            out_chunk[dr * b.cols + j] =
-                                (unscaled * sa as f64 * sb as f64) as f32;
-                        }
-                    }
-                    counts
-                }));
+        // Row bands on the shared scoped pool (`util::pool`), the same
+        // primitive every rust-side hot path uses. Per-band OpCounts
+        // come back in band order, and the merge is a deterministic
+        // order-independent sum, so totals match the sequential run
+        // exactly.
+        let per_band = pool::partition_rows(&mut out.data, a.rows, b.cols, workers, |row0, band| {
+            let mut counts = OpCounts::default();
+            let rows_here = band.len() / b.cols;
+            for dr in 0..rows_here {
+                let i = row0 + dr;
+                let row = i * a.cols;
+                for j in 0..b.cols {
+                    let col = j * b.rows;
+                    let unscaled = dot_kernel(
+                        &params,
+                        &a.signs[row..row + a.cols],
+                        &a.codes[row..row + a.cols],
+                        &bts[col..col + b.rows],
+                        &btc[col..col + b.rows],
+                        &mut counts,
+                    );
+                    let sa = a.scale_at(i, 0);
+                    let sb = b.scale_at(0, j);
+                    band[dr * b.cols + j] = (unscaled * sa as f64 * sb as f64) as f32;
+                }
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("datapath worker panicked"))
-                .collect()
+            counts
         });
-        // Deterministic merge in thread order; totals are order-
-        // independent sums, so they match the sequential run exactly.
-        for c in &per_thread {
+        for c in &per_band {
             self.counts.add(c);
         }
         out

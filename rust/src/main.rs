@@ -81,8 +81,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         "training {} [{}] with {} (lr {}), {} steps, Q_U {} bits",
         cfg.model, cfg.format, cfg.optimizer.name(), cfg.lr, cfg.steps, cfg.qu_bits
     );
+    let workers = Parallelism::from_knob(cfg.parallelism).worker_count();
     let mut trainer = Trainer::new(cfg)?;
-    println!("backend: {}", trainer.backend_name());
+    println!("backend: {} ({} worker thread(s))", trainer.backend_name(), workers);
     if trainer.steps_done > 0 {
         println!("resumed at step {}", trainer.steps_done);
     }

@@ -24,11 +24,14 @@ pub struct CharLmModel {
     pub seq: usize,
     pub d_model: usize,
     pub d_ff: usize,
+    /// Host threads for the fwd/bwd GEMMs (1 = sequential; results are
+    /// bit-identical at any setting — see `Tensor::matmul_p`).
+    pub workers: usize,
 }
 
 impl CharLmModel {
     pub fn new(vocab: usize, seq: usize, d_model: usize, d_ff: usize) -> Self {
-        CharLmModel { vocab, seq, d_model, d_ff }
+        CharLmModel { vocab, seq, d_model, d_ff, workers: 1 }
     }
 
     fn check_params(&self, params: &[Param]) -> Result<()> {
@@ -117,7 +120,7 @@ impl CharLmModel {
         let w1q = q
             .forward
             .apply_owned(Tensor::from_vec(self.d_model, self.d_ff, w1.data.clone()));
-        let mut z1 = xq.matmul(&w1q);
+        let mut z1 = xq.matmul_p(&w1q, self.workers);
         for r in 0..z1.rows {
             for c in 0..z1.cols {
                 *z1.at_mut(r, c) += b1.data[c];
@@ -127,7 +130,7 @@ impl CharLmModel {
         let headq = q
             .forward
             .apply_owned(Tensor::from_vec(self.d_ff, self.vocab, head.data.clone()));
-        let logits = h1q.matmul(&headq);
+        let logits = h1q.matmul_p(&headq, self.workers);
         let probs = softmax(&logits);
         let y: Vec<usize> = targets.iter().map(|&v| v as usize).collect();
         if let Some(&bad) = y.iter().find(|&&t| t >= self.vocab) {
@@ -209,14 +212,14 @@ impl NativeModel for CharLmModel {
         let dzq = q.backward.apply_owned(dz.map(|v| v / n));
 
         // head grad: h1q^T @ dz, then Q_G.
-        let ghead = q.backward.apply_owned(st.h1q.t_matmul(&dzq));
+        let ghead = q.backward.apply_owned(st.h1q.t_matmul_p(&dzq, self.workers));
         // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
-        let dh1 = dzq.matmul_t(&st.headq);
+        let dh1 = dzq.matmul_t_p(&st.headq, self.workers);
         let dh1 = dh1.zip(&st.z1, |g, z| if z > 0.0 { g } else { 0.0 });
         let dh1q = q.backward.apply(&dh1);
 
         // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
-        let gw1 = q.backward.apply_owned(st.xq.t_matmul(&dh1q));
+        let gw1 = q.backward.apply_owned(st.xq.t_matmul_p(&dh1q, self.workers));
         let mut gb1 = vec![0.0f32; self.d_ff];
         for r in 0..dh1.rows {
             for (c, g) in gb1.iter_mut().enumerate() {
@@ -226,7 +229,7 @@ impl NativeModel for CharLmModel {
 
         // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
         // non-GEMM ops like the paper).
-        let dx = dh1q.matmul_t(&st.w1q);
+        let dx = dh1q.matmul_t_p(&st.w1q, self.workers);
         let mut gtok = vec![0.0f32; self.vocab * d];
         let mut gpos = vec![0.0f32; self.seq * d];
         let t_len = st.shape[1];
@@ -254,6 +257,10 @@ impl NativeModel for CharLmModel {
     fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)> {
         let (st, y) = self.forward_full(params, batch, q)?;
         Ok(Self::loss_acc(&st.probs, &y))
+    }
+
+    fn set_parallelism(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 }
 

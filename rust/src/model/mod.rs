@@ -120,6 +120,9 @@ pub struct MlpModel {
     pub sizes: Vec<usize>,
     pub weights: Vec<Tensor>,
     pub biases: Vec<Vec<f32>>,
+    /// Host threads for the fwd/bwd GEMMs (1 = sequential). Any value
+    /// produces bit-identical outputs — see `Tensor::matmul_p`.
+    pub workers: usize,
 }
 
 /// Forward cache for backprop.
@@ -143,7 +146,7 @@ impl MlpModel {
             weights.push(Tensor::randn(w[0], w[1], std, rng));
             biases.push(vec![0.0; w[1]]);
         }
-        MlpModel { sizes: sizes.to_vec(), weights, biases }
+        MlpModel { sizes: sizes.to_vec(), weights, biases, workers: 1 }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -159,7 +162,7 @@ impl MlpModel {
         for (l, w) in self.weights.iter().enumerate() {
             let hq = q.forward.apply(&h);
             let wq = q.forward.apply(w);
-            let mut z = hq.matmul(&wq);
+            let mut z = hq.matmul_p(&wq, self.workers);
             for r in 0..z.rows {
                 for c in 0..z.cols {
                     *z.at_mut(r, c) += self.biases[l][c];
@@ -227,7 +230,7 @@ impl MlpModel {
             // Q_E on the activation gradient entering this layer's GEMMs.
             let dzq = q.backward.apply(&dz);
             // Weight grad: x_q^T @ dz, then Q_G.
-            let gw = cache.inputs[l].t_matmul(&dzq);
+            let gw = cache.inputs[l].t_matmul_p(&dzq, self.workers);
             wgrads[l] = q.backward.apply(&gw);
             // Bias grad: column sums of dz (kept FP32 like the paper's
             // non-GEMM ops).
@@ -240,7 +243,7 @@ impl MlpModel {
             bgrads[l] = gb;
             if l > 0 {
                 // dh = dz @ w_q^T, masked by ReLU'(z_{l-1}), then Q_E.
-                let dh = dzq.matmul_t(&cache.wq[l]);
+                let dh = dzq.matmul_t_p(&cache.wq[l], self.workers);
                 let mask = &cache.z[l - 1];
                 dz = dh.zip(mask, |g, z| if z > 0.0 { g } else { 0.0 });
             }
@@ -269,6 +272,11 @@ pub trait NativeModel: Send {
 
     /// Forward-only held-out pass: `(loss, accuracy)`.
     fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)>;
+
+    /// Set the host-thread count for the fwd/bwd GEMM hot path
+    /// (resolved from `TrainConfig::parallelism`; 1 = sequential).
+    /// Implementations guarantee bit-identical results at any setting.
+    fn set_parallelism(&mut self, workers: usize);
 }
 
 /// Map a format name + quantizer knobs onto the Fig. 3 assignment the
@@ -346,12 +354,14 @@ pub fn init_params(specs: &[(String, Vec<usize>)], rng: &mut Rng) -> Vec<Param> 
 /// from the flat `[w0, b0, w1, b1, ...]` parameter list each step.
 pub struct NativeMlp {
     pub sizes: Vec<usize>,
+    /// GEMM worker threads, forwarded into every assembled [`MlpModel`].
+    pub workers: usize,
 }
 
 impl NativeMlp {
     pub fn new(sizes: Vec<usize>) -> Self {
         assert!(sizes.len() >= 2, "mlp needs at least one layer");
-        NativeMlp { sizes }
+        NativeMlp { sizes, workers: 1 }
     }
 
     /// Materialize the layer view from flat storage. One copy of the
@@ -373,7 +383,7 @@ impl NativeMlp {
             weights.push(Tensor::from_vec(self.sizes[l], self.sizes[l + 1], w.data.clone()));
             biases.push(b.data.clone());
         }
-        Ok(MlpModel { sizes: self.sizes.clone(), weights, biases })
+        Ok(MlpModel { sizes: self.sizes.clone(), weights, biases, workers: self.workers })
     }
 
     fn unpack(&self, batch: &Batch) -> Result<(Tensor, Vec<usize>)> {
@@ -431,6 +441,10 @@ impl NativeModel for NativeMlp {
         let model = self.assemble(params)?;
         let cache = model.forward(&x, q);
         Ok((model.loss(&cache, &y), model.accuracy(&cache, &y)))
+    }
+
+    fn set_parallelism(&mut self, workers: usize) {
+        self.workers = workers.max(1);
     }
 }
 

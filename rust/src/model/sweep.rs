@@ -7,7 +7,7 @@
 
 use crate::backend::Batch;
 use crate::coordinator::data::SyntheticClassification;
-use crate::lns::datapath::{MacConfig, VectorMacUnit};
+use crate::lns::datapath::{MacConfig, Parallelism, VectorMacUnit};
 use crate::lns::format::Rounding;
 use crate::lns::quant::{encode_tensor, Scaling};
 use crate::model::{init_params, MlpModel, NativeMlp, NativeModel, TrainQuant};
@@ -25,6 +25,11 @@ pub struct SweepRun {
     /// Route forward GEMMs through the Fig. 6 datapath simulator with
     /// this MAC config (Table 10's approximation-aware training).
     pub datapath: Option<MacConfig>,
+    /// GEMM worker threads for the native fwd/bwd. Defaults to one
+    /// worker per core so every table/figure sweep rides the parallel
+    /// hot path out of the box; sweep results are bit-identical at any
+    /// setting (set 1 to force sequential).
+    pub workers: usize,
 }
 
 impl Default for SweepRun {
@@ -36,6 +41,7 @@ impl Default for SweepRun {
             seed: 0,
             quant: TrainQuant::fp32(),
             datapath: None,
+            workers: Parallelism::Auto.worker_count(),
         }
     }
 }
@@ -102,7 +108,8 @@ fn softmax_loss_acc(logits: &Tensor, labels: &[usize]) -> (f32, f32) {
 /// trainer uses, so sweep points and `--backend native` runs share one
 /// implementation of the Fig. 3 quantizer placement.
 pub fn run_sweep(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResult {
-    let model = NativeMlp::new(cfg.sizes.clone());
+    let mut model = NativeMlp::new(cfg.sizes.clone());
+    model.set_parallelism(cfg.workers);
     let mut rng = Rng::new(cfg.seed);
     let mut params = init_params(&model.param_specs(), &mut rng);
     let classes = *cfg.sizes.last().unwrap();
@@ -174,6 +181,7 @@ pub fn run_sweep_datapath(cfg: &SweepRun, opt: &mut dyn Optimizer) -> SweepResul
     let mac_cfg = cfg.datapath.expect("datapath config required");
     let mut rng = Rng::new(cfg.seed);
     let mut model = MlpModel::init(&cfg.sizes, &mut rng);
+    model.workers = cfg.workers.max(1);
     let classes = *cfg.sizes.last().unwrap();
     let mut data = SyntheticClassification::new(cfg.sizes[0], classes, 0.6, cfg.seed);
     let mut mac = VectorMacUnit::new(mac_cfg);

@@ -19,6 +19,7 @@
 use crate::lns::format::LnsFormat;
 use crate::optim::Optimizer;
 use crate::util::fastmath::{fast_exp2, fast_log2};
+use crate::util::pool;
 use std::collections::BTreeMap;
 
 const EPS: f32 = 1e-12;
@@ -116,19 +117,24 @@ impl Optimizer for FusedMadamQu {
         if w.len() < self.par_threshold || self.threads <= 1 {
             Self::kernel(w, g, g2, scale, inv_scale, lr, beta, max_step, gamma_u, max_code);
         } else {
+            // Parameter chunks on the shared scoped pool. The kernel is
+            // elementwise with a pre-computed shared scale, so chunking
+            // is bit-identical to the sequential order at any thread
+            // count (asserted by `parallel_equals_serial`).
             let chunk = w.len().div_ceil(self.threads);
-            let w_chunks = w.chunks_mut(chunk);
-            let g_chunks = g.chunks(chunk);
-            let g2_chunks = g2.chunks_mut(chunk);
-            std::thread::scope(|s| {
-                for ((wc, gc), g2c) in w_chunks.zip(g_chunks).zip(g2_chunks) {
-                    s.spawn(move || {
-                        Self::kernel(
-                            wc, gc, g2c, scale, inv_scale, lr, beta, max_step, gamma_u, max_code,
-                        );
-                    });
-                }
-            });
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.threads);
+            for ((wc, gc), g2c) in w
+                .chunks_mut(chunk)
+                .zip(g.chunks(chunk))
+                .zip(g2.chunks_mut(chunk))
+            {
+                tasks.push(Box::new(move || {
+                    Self::kernel(
+                        wc, gc, g2c, scale, inv_scale, lr, beta, max_step, gamma_u, max_code,
+                    );
+                }));
+            }
+            pool::join_all(tasks);
         }
     }
 

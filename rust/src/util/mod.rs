@@ -4,12 +4,14 @@
 //! supporting library a framework normally pulls from crates.io is
 //! implemented here instead: a JSON parser for the artifact manifest, a
 //! TOML-subset config parser, a deterministic RNG, a criterion-style
-//! bench harness, a property-testing harness, and small tensor helpers.
+//! bench harness, a property-testing harness, a scoped fork-join
+//! thread pool, and small tensor helpers.
 
 pub mod bench;
 pub mod config;
 pub mod fastmath;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod tensor;

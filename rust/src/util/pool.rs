@@ -1,0 +1,140 @@
+//! Scoped fork-join helper — the one thread-pool primitive every
+//! rust-side hot path shares (rayon is not vendored offline).
+//!
+//! Design contract, shared with `lns::datapath` and documented in
+//! DESIGN.md §Performance & testing: work is partitioned into
+//! contiguous chunks processed by `std::thread::scope` workers, each
+//! chunk runs the *same* kernel the sequential order runs, and
+//! per-chunk results come back in chunk order so any merge (e.g.
+//! `OpCounts::add`) is deterministic. Parallelism must never change
+//! results: every caller is bit-identical to its sequential order at
+//! any worker count, and tests enforce it.
+//!
+//! `workers` here is always a resolved count (see
+//! `lns::Parallelism::worker_count` for the 0=auto/1=seq/n knob);
+//! `util` stays dependency-free of the `lns` layer.
+
+/// Run the tasks concurrently and return their results in task order.
+/// The caller's thread is a worker too: it runs the first task itself
+/// while the rest run on scoped threads, so n-way parallelism costs
+/// n - 1 spawns (and a single task never pays one).
+pub fn join_all<'env, R: Send + 'env>(
+    mut tasks: Vec<Box<dyn FnOnce() -> R + Send + 'env>>,
+) -> Vec<R> {
+    if tasks.len() <= 1 {
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    let first = tasks.remove(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = tasks.into_iter().map(|t| s.spawn(t)).collect();
+        let mut results = vec![first()];
+        results.extend(
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked")),
+        );
+        results
+    })
+}
+
+/// Split `data` (a row-major buffer of `rows` rows, `row_len` elements
+/// each) into up to `workers` contiguous row bands and run
+/// `f(first_row, band)` for each on scoped threads. Returns the
+/// per-band results in band order.
+///
+/// Bands always hold whole rows, so a kernel that writes its band and
+/// reads only shared inputs is race-free by construction. With one
+/// worker (or one row, or an empty buffer) `f` runs inline exactly
+/// once over the whole buffer — the sequential order.
+pub fn partition_rows<'env, T, R, F>(
+    data: &'env mut [T],
+    rows: usize,
+    row_len: usize,
+    workers: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send + 'env,
+    F: Fn(usize, &mut [T]) -> R + Sync + 'env,
+{
+    debug_assert_eq!(data.len(), rows * row_len);
+    let workers = workers.clamp(1, rows.max(1));
+    if workers <= 1 || row_len == 0 || data.is_empty() {
+        return vec![f(0, data)];
+    }
+    let band_rows = rows.div_ceil(workers);
+    let f = &f;
+    std::thread::scope(|s| {
+        // The caller's thread processes the first band itself (after
+        // the rest are spawned), saving one spawn/join per call.
+        let mut bands = data.chunks_mut(band_rows * row_len).enumerate();
+        let (_, first) = bands.next().expect("at least one band");
+        let handles: Vec<_> = bands
+            .map(|(ci, band)| s.spawn(move || f(ci * band_rows, band)))
+            .collect();
+        let mut results = vec![f(0, first)];
+        results.extend(
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked")),
+        );
+        results
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_all_preserves_task_order() {
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        assert_eq!(join_all(tasks), vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn join_all_single_task_runs_inline() {
+        let tid = std::thread::current().id();
+        let tasks: Vec<Box<dyn FnOnce() -> bool + Send>> =
+            vec![Box::new(move || std::thread::current().id() == tid)];
+        assert_eq!(join_all(tasks), vec![true]);
+    }
+
+    #[test]
+    fn partition_rows_covers_every_row_once() {
+        // Ragged: 7 rows over 3 workers -> bands of 3/3/1.
+        let (rows, row_len) = (7usize, 5usize);
+        let mut data = vec![0u32; rows * row_len];
+        let firsts = partition_rows(&mut data, rows, row_len, 3, |row0, band| {
+            for (i, v) in band.iter_mut().enumerate() {
+                *v = (row0 * row_len + i) as u32 + 1;
+            }
+            row0
+        });
+        assert_eq!(firsts, vec![0, 3, 6]);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "element {i} written by the wrong band");
+        }
+    }
+
+    #[test]
+    fn partition_rows_clamps_workers_to_rows() {
+        let mut data = vec![0u8; 2 * 4];
+        let results = partition_rows(&mut data, 2, 4, 16, |row0, band| (row0, band.len()));
+        assert_eq!(results, vec![(0, 4), (1, 4)]);
+    }
+
+    #[test]
+    fn partition_rows_empty_and_zero_width_run_inline() {
+        let mut empty: Vec<f32> = Vec::new();
+        assert_eq!(partition_rows(&mut empty, 0, 0, 8, |_, b| b.len()), vec![0]);
+        let mut zero_width: Vec<f32> = Vec::new();
+        assert_eq!(
+            partition_rows(&mut zero_width, 5, 0, 8, |row0, b| (row0, b.len())),
+            vec![(0, 0)]
+        );
+    }
+}

@@ -3,6 +3,7 @@
 //! the heavy math runs in the PJRT artifacts; this exists for the
 //! experiments that sweep number formats without recompiling HLO.
 
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// GEMM tile sizes. A (TILE_K x TILE_J) f32 panel is 64 KiB — sized to
@@ -11,6 +12,21 @@ use crate::util::rng::Rng;
 const TILE_I: usize = 64;
 const TILE_J: usize = 128;
 const TILE_K: usize = 128;
+
+/// Minimum MACs per worker before the parallel GEMM variants actually
+/// split: scoped-thread spawn/join costs a few microseconds per
+/// worker, so the requested count is scaled down (possibly to 1) when
+/// each thread's share of the work would be smaller than that. Sized
+/// so the `*_tiny` test presets still split 2+ ways (their GEMMs are
+/// 16k+ MACs) while sub-tile GEMMs stay sequential. Purely a
+/// wall-clock guard — results are bit-identical at any worker count.
+const PAR_MACS_PER_WORKER: usize = 8 * 1024;
+
+/// Resolve the worker count actually used for a GEMM of `macs`
+/// multiply-accumulates.
+fn effective_workers(workers: usize, macs: usize) -> usize {
+    workers.min(macs / PAR_MACS_PER_WORKER).max(1)
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -58,16 +74,39 @@ impl Tensor {
     /// Zero lanes of A are skipped (LNS tensors are often sparse at
     /// low bitwidths).
     pub fn matmul(&self, b: &Tensor) -> Tensor {
+        self.matmul_p(b, 1)
+    }
+
+    /// [`Tensor::matmul`] with output rows partitioned across `workers`
+    /// scoped threads. Each band runs the same tiled band kernel the
+    /// sequential path runs, and every output element accumulates its
+    /// k-contributions in the same order at any worker count, so the
+    /// result is bit-identical to `workers == 1`.
+    pub fn matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let (m, n) = (self.rows, b.cols);
+        let workers = effective_workers(workers, m * self.cols * n);
         let mut out = Tensor::zeros(m, n);
+        pool::partition_rows(&mut out.data, m, n, workers, |row0, band| {
+            self.matmul_band(b, row0, band)
+        });
+        out
+    }
+
+    /// Tiled kernel for output rows `[row0, row0 + band.len()/n)` of
+    /// A @ B — shared verbatim by the sequential and parallel paths so
+    /// results cannot diverge.
+    fn matmul_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+        let (k, n) = (self.cols, b.cols);
+        let rows = if n == 0 { 0 } else { band.len() / n };
         for j0 in (0..n).step_by(TILE_J) {
             let j1 = (j0 + TILE_J).min(n);
             for k0 in (0..k).step_by(TILE_K) {
                 let k1 = (k0 + TILE_K).min(k);
-                for i in 0..m {
+                for di in 0..rows {
+                    let i = row0 + di;
                     let arow = &self.data[i * k + k0..i * k + k1];
-                    let orow = &mut out.data[i * n + j0..i * n + j1];
+                    let orow = &mut band[di * n + j0..di * n + j1];
                     for (dk, &a) in arow.iter().enumerate() {
                         if a == 0.0 {
                             continue;
@@ -81,29 +120,47 @@ impl Tensor {
                 }
             }
         }
-        out
     }
 
     /// C = A^T @ B where self is (m, n): result (n, k). Blocked over
     /// the output rows (i) and columns (j) so the (IB x JB) output
     /// block stays hot while the shared r dimension streams.
     pub fn t_matmul(&self, b: &Tensor) -> Tensor {
+        self.t_matmul_p(b, 1)
+    }
+
+    /// [`Tensor::t_matmul`] with output rows (the columns of A)
+    /// partitioned across `workers` scoped threads; bit-identical to
+    /// the sequential order (per-element accumulation runs over r in
+    /// ascending order in every band).
+    pub fn t_matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
-        let (r_dim, n, p) = (self.rows, self.cols, b.cols);
+        let (n, p) = (self.cols, b.cols);
+        let workers = effective_workers(workers, self.rows * n * p);
         let mut out = Tensor::zeros(n, p);
-        for i0 in (0..n).step_by(TILE_I) {
-            let i1 = (i0 + TILE_I).min(n);
+        pool::partition_rows(&mut out.data, n, p, workers, |row0, band| {
+            self.t_matmul_band(b, row0, band)
+        });
+        out
+    }
+
+    /// Tiled kernel for output rows `[row0, row0 + band.len()/p)` of
+    /// A^T @ B.
+    fn t_matmul_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+        let (r_dim, n, p) = (self.rows, self.cols, b.cols);
+        let rows = if p == 0 { 0 } else { band.len() / p };
+        for i0 in (0..rows).step_by(TILE_I) {
+            let i1 = (i0 + TILE_I).min(rows);
             for j0 in (0..p).step_by(TILE_J) {
                 let j1 = (j0 + TILE_J).min(p);
                 for r in 0..r_dim {
-                    let arow = &self.data[r * n + i0..r * n + i1];
+                    let arow = &self.data[r * n + row0 + i0..r * n + row0 + i1];
                     let brow = &b.data[r * p + j0..r * p + j1];
                     for (di, &a) in arow.iter().enumerate() {
                         if a == 0.0 {
                             continue;
                         }
-                        let i = i0 + di;
-                        let orow = &mut out.data[i * p + j0..i * p + j1];
+                        let orow = &mut band[(i0 + di) * p + j0..(i0 + di) * p + j1];
                         for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
                             *o += a * bv;
                         }
@@ -111,23 +168,43 @@ impl Tensor {
                 }
             }
         }
-        out
     }
 
     /// C = A @ B^T where b is (k, n): result (m, k). Blocked over the
     /// rows of B (j) and the shared dimension (k): each (JB x KB)
     /// panel of B is reused across all rows of A before moving on.
     pub fn matmul_t(&self, b: &Tensor) -> Tensor {
+        self.matmul_t_p(b, 1)
+    }
+
+    /// [`Tensor::matmul_t`] with output rows partitioned across
+    /// `workers` scoped threads; bit-identical to the sequential order
+    /// (per-element: k-tiles accumulate in ascending order regardless
+    /// of the row band).
+    pub fn matmul_t_p(&self, b: &Tensor, workers: usize) -> Tensor {
         assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
-        let (m, k, q) = (self.rows, self.cols, b.rows);
+        let (m, q) = (self.rows, b.rows);
+        let workers = effective_workers(workers, m * self.cols * q);
         let mut out = Tensor::zeros(m, q);
+        pool::partition_rows(&mut out.data, m, q, workers, |row0, band| {
+            self.matmul_t_band(b, row0, band)
+        });
+        out
+    }
+
+    /// Tiled kernel for output rows `[row0, row0 + band.len()/q)` of
+    /// A @ B^T.
+    fn matmul_t_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+        let (k, q) = (self.cols, b.rows);
+        let rows = if q == 0 { 0 } else { band.len() / q };
         for j0 in (0..q).step_by(TILE_J) {
             let j1 = (j0 + TILE_J).min(q);
             for k0 in (0..k).step_by(TILE_K) {
                 let k1 = (k0 + TILE_K).min(k);
-                for i in 0..m {
+                for di in 0..rows {
+                    let i = row0 + di;
                     let arow = &self.data[i * k + k0..i * k + k1];
-                    let orow = &mut out.data[i * q + j0..i * q + j1];
+                    let orow = &mut band[di * q + j0..di * q + j1];
                     for (dj, o) in orow.iter_mut().enumerate() {
                         let j = j0 + dj;
                         let brow = &b.data[j * k + k0..j * k + k1];
@@ -140,7 +217,6 @@ impl Tensor {
                 }
             }
         }
-        out
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
@@ -303,6 +379,35 @@ mod tests {
                 }
             }
             assert_close(&a.matmul_t(&b), &naive_matmul(&a, &bt), 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_variants_bit_identical_to_sequential() {
+        // The hot-path contract: row-partitioned threading never
+        // changes a single bit, for every GEMM variant, at ragged
+        // sizes that split unevenly across workers.
+        let mut rng = Rng::new(23);
+        for (m, k, n) in [(1, 7, 3), (37, 129, 53), (130, 64, 131), (8, 257, 8)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng); // (m, k)
+            let b = Tensor::randn(k, n, 1.0, &mut rng); // (k, n)
+            let c = Tensor::randn(m, n, 1.0, &mut rng); // (m, n)
+            let want = a.matmul(&b); // (m, n)
+            let want_t = a.t_matmul(&c); // A^T @ C: (k, n)
+            let want_mt = c.matmul_t(&b); // C @ B^T: (m, k)
+            for workers in [2usize, 3, 5, 64] {
+                assert_eq!(a.matmul_p(&b, workers).data, want.data, "matmul @ {workers}");
+                assert_eq!(
+                    a.t_matmul_p(&c, workers).data,
+                    want_t.data,
+                    "t_matmul @ {workers}"
+                );
+                assert_eq!(
+                    c.matmul_t_p(&b, workers).data,
+                    want_mt.data,
+                    "matmul_t @ {workers}"
+                );
+            }
         }
     }
 

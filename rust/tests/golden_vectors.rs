@@ -1,0 +1,237 @@
+//! Golden-vector tests: checked-in (input, exact, approx) tables for
+//! the softfloat baseline quantizers (`lns/softfloat.rs`), the
+//! Mitchell / hybrid log-to-linear conversion (`lns/convert.rs`), and
+//! the Q_log scalar round-trip (`lns/format.rs`).
+//!
+//! Purpose: kernel refactors must not silently change numerics. Every
+//! expected value below is a literal (computed by hand on the format's
+//! dyadic grid, or to >= 9 significant digits for transcendentals), so
+//! a behavioural change in any quantizer flips an assert even if the
+//! property suite's random draws happen to miss it. The paper's error
+//! bounds (half-ulp for minifloats, the Mitchell bound for the hybrid
+//! converter, Lemma 1's `2^(1/(2*gamma)) - 1` for Q_log) are asserted
+//! against the same checked-in numbers.
+
+use lns_madam::lns::convert::{mitchell_bound, ConvertMode, Converter};
+use lns_madam::lns::format::LnsFormat;
+use lns_madam::lns::softfloat::MiniFloat;
+
+// ---------------------------------------------------------------------------
+// softfloat: minifloat quantization golden vectors
+// ---------------------------------------------------------------------------
+
+/// (input, expected quantized value). Expected values sit exactly on
+/// the format's dyadic grid, so the assert is bit-exact equality.
+const E4M3_GOLDEN: &[(f32, f32)] = &[
+    (1.1, 1.125),          // binade [1,2): ulp 1/8, 8.8 -> 9
+    (0.1, 0.1015625),      // binade [1/16,1/8): ulp 2^-7, 12.8 -> 13
+    (3.3, 3.25),           // binade [2,4): ulp 1/4, 13.2 -> 13
+    (-0.7, -0.6875),       // binade [1/2,1): ulp 2^-4, 11.2 -> 11
+    (0.017, 0.017578125),  // binade clamp: ulp 2^-9, 8.704 -> 9
+    (0.002, 0.001953125),  // subnormal grid: 1.024 -> 1 step of 2^-9
+    (0.0009, 0.0),         // below half a subnormal step: flush to zero
+    (1.75, 1.75),          // representable: exact fixed point
+    (-2.5, -2.5),          // representable, negative
+    (240.0, 240.0),        // max finite value
+    (1e9, 240.0),          // saturates
+    (-1e9, -240.0),        // saturates, negative
+];
+
+const E5M2_GOLDEN: &[(f32, f32)] = &[
+    (1.3, 1.25),      // ulp 1/4: 5.2 -> 5
+    (0.4, 0.375),     // binade [1/4,1/2): ulp 2^-4, 6.4 -> 6
+    (1e6, 57344.0),   // saturates at 1.75 * 2^15
+    (-1e6, -57344.0), // saturates, negative
+];
+
+const FP16_GOLDEN: &[(f32, f32)] = &[
+    (1.1, 1.099609375),      // ulp 2^-10: 1126.4 -> 1126
+    (0.3, 0.300048828125),   // binade [1/4,1/2): ulp 2^-12, 1228.8 -> 1229
+];
+
+fn check_minifloat(fmt: MiniFloat, golden: &[(f32, f32)]) {
+    // Half-ulp relative bound for values in the normal range (the
+    // worst case of round-to-nearest on a 2^-mbits grid).
+    let bound = 0.5 * (-(fmt.mbits as f32)).exp2();
+    for &(x, want) in golden {
+        let got = fmt.quantize(x);
+        assert_eq!(
+            got, want,
+            "{fmt:?}: quantize({x}) = {got}, golden table says {want}"
+        );
+        let mag = x.abs();
+        if mag >= fmt.min_normal() && mag < fmt.max_value() {
+            let rel = ((got - x) / x).abs();
+            assert!(
+                rel <= bound + 1e-7,
+                "{fmt:?}: quantize({x}) rel err {rel} > half-ulp bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn minifloat_golden_vectors() {
+    check_minifloat(MiniFloat::E4M3, E4M3_GOLDEN);
+    check_minifloat(MiniFloat::E5M2, E5M2_GOLDEN);
+    check_minifloat(MiniFloat::FP16, FP16_GOLDEN);
+}
+
+// ---------------------------------------------------------------------------
+// convert: Mitchell / hybrid / exact-LUT golden vectors (gamma = 8)
+// ---------------------------------------------------------------------------
+
+/// One conversion triple: product exponent `p`, the exact value
+/// 2^(p/8), and the mode's approximation. `approx` values are exact
+/// dyadic products (Mitchell) or sqrt2/2^0.25 products good to f64;
+/// `exact` values are checked-in to >= 9 significant digits.
+struct ConvertGolden {
+    mode: ConvertMode,
+    /// Remainder LSB span of the mode at gamma = 8 (for the bound).
+    span: u32,
+    p: u32,
+    exact: f64,
+    approx: f64,
+}
+
+fn convert_golden_table() -> Vec<ConvertGolden> {
+    use ConvertMode::{ExactLut, Hybrid, Mitchell};
+    vec![
+        // Pure Mitchell: approx = 2^q * (1 + r/8) — dyadic, hand-exact.
+        ConvertGolden { mode: Mitchell, span: 8, p: 0, exact: 1.0, approx: 1.0 },
+        ConvertGolden {
+            mode: Mitchell,
+            span: 8,
+            p: 3,
+            exact: 1.296839554651, // 2^(3/8)
+            approx: 1.375,             // 1 + 3/8
+        },
+        ConvertGolden {
+            mode: Mitchell,
+            span: 8,
+            p: 11,
+            exact: 2.593679109302, // 2^(11/8)
+            approx: 2.75,              // 2 * (1 + 3/8)
+        },
+        ConvertGolden {
+            mode: Mitchell,
+            span: 8,
+            p: 21,
+            exact: 6.168843301632, // 2^(21/8)
+            approx: 6.5,              // 4 * (1 + 5/8)
+        },
+        ConvertGolden {
+            mode: Mitchell,
+            span: 8,
+            p: 254,                   // top product exponent: 2 * max_code
+            exact: 3611622601.0,      // 2^31.75 (9 significant digits)
+            approx: 3758096384.0,     // 2^31 * (1 + 6/8) = 1.75 * 2^31
+        },
+        // Hybrid, 1 LUT bit (entries {1, 2^(4/8)}, span 4).
+        ConvertGolden {
+            mode: Hybrid { lut_bits: 1 },
+            span: 4,
+            p: 6,
+            exact: 1.681792830507,  // 2^(6/8)
+            approx: 1.767766952966, // sqrt2 * (1 + 2/8)
+        },
+        ConvertGolden {
+            mode: Hybrid { lut_bits: 1 },
+            span: 4,
+            p: 13,
+            exact: 3.084421650816, // 2^(13/8)
+            approx: 3.181980515339, // 2 * sqrt2 * (1 + 1/8)
+        },
+        // Hybrid, 2 LUT bits (entries 2^(2i/8), span 2).
+        ConvertGolden {
+            mode: Hybrid { lut_bits: 2 },
+            span: 2,
+            p: 11,
+            exact: 2.593679109302,  // 2^(11/8)
+            approx: 2.675716008756, // 2 * 2^(2/8) * (1 + 1/8)
+        },
+        // Exact LUT: approximation == exact by construction.
+        ConvertGolden {
+            mode: ExactLut,
+            span: 1,
+            p: 11,
+            exact: 2.593679109302,
+            approx: 2.593679109302,
+        },
+    ]
+}
+
+#[test]
+fn mitchell_conversion_golden_vectors() {
+    let fmt = LnsFormat::new(8, 8);
+    for g in convert_golden_table() {
+        // The checked-in exact column really is 2^(p/8).
+        let true_exact = (g.p as f64 / 8.0).exp2();
+        assert!(
+            ((g.exact - true_exact) / true_exact).abs() <= 1e-6,
+            "{:?} p={}: golden exact {} vs 2^(p/8) {}",
+            g.mode,
+            g.p,
+            g.exact,
+            true_exact
+        );
+        // The converter reproduces the checked-in approximation.
+        let conv = Converter::new(fmt, g.mode);
+        let got = conv.convert(g.p);
+        assert!(
+            ((got - g.approx) / g.approx).abs() <= 1e-9,
+            "{:?} p={}: convert = {got}, golden table says {}",
+            g.mode,
+            g.p,
+            g.approx
+        );
+        // The paper's Mitchell bound holds on the checked-in numbers.
+        let bound = mitchell_bound(8, g.span) + 1e-9;
+        let rel = ((g.approx - g.exact) / g.exact).abs();
+        assert!(
+            rel <= bound,
+            "{:?} p={}: approx rel err {rel} > Mitchell bound {bound}",
+            g.mode,
+            g.p
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// format: Q_log scalar round-trip golden vectors (PAPER8, scale = 1)
+// ---------------------------------------------------------------------------
+
+/// (input, expected round-trip) for `LnsFormat::PAPER8.quantize(x, 1.0)`.
+/// Expected values are 2^(code/8) with hand-derived codes, to >= 9
+/// significant digits (f32 decode noise is ~1e-7 relative).
+const PAPER8_GOLDEN: &[(f32, f64)] = &[
+    (1.0, 1.0),                  // code 0
+    (2.0, 2.0),                  // code 8: exact octave
+    (1.5, 1.542210825408),   // code 5: 2^(5/8)
+    (3.0, 3.084421650816),   // code 13: 2^(13/8)
+    (100.0, 98.70149282611),  // code 53: 2^(53/8)
+    (0.9, 1.0),                  // code -1 clamps to 0: the scale floor
+    (1048576.0, 60096.776975),   // code 160 clamps to 127: 2^15.875
+];
+
+#[test]
+fn paper8_quantize_golden_vectors() {
+    let fmt = LnsFormat::PAPER8;
+    let bound = fmt.max_rel_error();
+    for &(x, want) in PAPER8_GOLDEN {
+        let got = fmt.quantize(x, 1.0) as f64;
+        assert!(
+            ((got - want) / want).abs() <= 1e-5,
+            "quantize({x}, 1.0) = {got}, golden table says {want}"
+        );
+        // Lemma-1 bound for in-range inputs (neither clamp engaged).
+        let in_range = x >= 1.0 && (x as f64) <= (fmt.dynamic_range_log2()).exp2();
+        if in_range {
+            let rel = ((got - x as f64) / x as f64).abs();
+            assert!(
+                rel <= bound * 1.001 + 1e-6,
+                "quantize({x}): rel err {rel} > Lemma-1 bound {bound}"
+            );
+        }
+    }
+}

@@ -15,7 +15,17 @@ use lns_madam::util::rng::Rng;
 use lns_madam::util::tensor::Tensor;
 use std::path::Path;
 
-fn setup() -> Option<(Runtime, Manifest)> {
+/// Print the standardized skip notice. CI runs this suite with
+/// `--nocapture` and grep-asserts that every test in the expected skip
+/// set emits exactly this `skipped: <test>: <reason>` shape — a
+/// silently-passing skip (or a renamed test falling out of the CI
+/// list) fails the build instead of hiding. Keep the format in sync
+/// with `.github/workflows/ci.yml`.
+fn skip(test: &str, reason: &str) {
+    eprintln!("skipped: {test}: {reason}");
+}
+
+fn setup(test: &str) -> Option<(Runtime, Manifest)> {
     // `cargo test` runs with the package root as CWD, so "artifacts"
     // resolves to rust/artifacts; fall back to the manifest dir so the
     // suite also works when invoked from the workspace root.
@@ -26,7 +36,7 @@ fn setup() -> Option<(Runtime, Manifest)> {
     } else if artifacts_available(&manifest_dir) {
         manifest_dir
     } else {
-        eprintln!("skipping integration test: run `make artifacts` first");
+        skip(test, "no artifacts (run `make artifacts` first)");
         return None;
     };
     // A fresh checkout may also lack a PJRT runtime (the vendored
@@ -34,14 +44,14 @@ fn setup() -> Option<(Runtime, Manifest)> {
     let runtime = match Runtime::cpu() {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("skipping integration test: PJRT unavailable ({e})");
+            skip(test, &format!("PJRT unavailable ({e})"));
             return None;
         }
     };
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("skipping integration test: bad manifest ({e})");
+            skip(test, &format!("bad manifest ({e})"));
             return None;
         }
     };
@@ -50,7 +60,9 @@ fn setup() -> Option<(Runtime, Manifest)> {
 
 #[test]
 fn pallas_quantize_kernel_matches_rust_substrate() {
-    let Some((runtime, manifest)) = setup() else { return };
+    let Some((runtime, manifest)) = setup("pallas_quantize_kernel_matches_rust_substrate") else {
+        return;
+    };
     let exe = runtime.load(&manifest, "kernel_quantize").unwrap();
     let mut rng = Rng::new(99);
     let mut x = Tensor::randn(1024, 1024, 1.0, &mut rng);
@@ -81,7 +93,9 @@ fn pallas_quantize_kernel_matches_rust_substrate() {
 
 #[test]
 fn pallas_datapath_matmul_matches_rust_mac_unit() {
-    let Some((runtime, manifest)) = setup() else { return };
+    let Some((runtime, manifest)) = setup("pallas_datapath_matmul_matches_rust_mac_unit") else {
+        return;
+    };
     let exe = runtime.load(&manifest, "kernel_lns_matmul").unwrap();
     let mut rng = Rng::new(7);
     let a = Tensor::randn(128, 128, 1.0, &mut rng);
@@ -113,7 +127,9 @@ fn pallas_datapath_matmul_matches_rust_mac_unit() {
 
 #[test]
 fn pallas_madam_kernel_matches_rust_code_update() {
-    let Some((runtime, manifest)) = setup() else { return };
+    let Some((runtime, manifest)) = setup("pallas_madam_kernel_matches_rust_code_update") else {
+        return;
+    };
     let exe = runtime.load(&manifest, "kernel_madam_update").unwrap();
     let fmt = LnsFormat::PAPER8;
     let mut rng = Rng::new(13);
@@ -159,7 +175,7 @@ fn pallas_madam_kernel_matches_rust_code_update() {
 
 #[test]
 fn trainer_reduces_loss_on_mlp_lns() {
-    let Some((runtime, _)) = setup() else { return };
+    let Some((runtime, _)) = setup("trainer_reduces_loss_on_mlp_lns") else { return };
     let cfg = TrainConfig {
         model: "mlp".into(),
         format: "lns".into(),
@@ -183,7 +199,9 @@ fn trainer_reduces_loss_on_mlp_lns() {
 
 #[test]
 fn trainer_shape_validation_catches_bad_input() {
-    let Some((runtime, manifest)) = setup() else { return };
+    let Some((runtime, manifest)) = setup("trainer_shape_validation_catches_bad_input") else {
+        return;
+    };
     let exe = runtime.load(&manifest, "kernel_quantize").unwrap();
     // Wrong element count must fail before reaching PJRT.
     let bad = lit_f32(&[8, 8], &vec![0.0; 64]).unwrap();
@@ -193,7 +211,7 @@ fn trainer_shape_validation_catches_bad_input() {
 
 #[test]
 fn all_formats_train_one_step() {
-    let Some((runtime, _)) = setup() else { return };
+    let Some((runtime, _)) = setup("all_formats_train_one_step") else { return };
     for format in ["lns", "fp8", "int8", "fp32"] {
         let cfg = TrainConfig {
             model: "mlp".into(),
@@ -214,7 +232,7 @@ fn native_matches_pjrt_at_fp32() {
     // The two backends share init (same rng stream over the same param
     // inventory) and data (same seed), so at fp32 the per-step losses
     // must agree to within GEMM reduction-order noise.
-    let Some((runtime, _)) = setup() else { return };
+    let Some((runtime, _)) = setup("native_matches_pjrt_at_fp32") else { return };
     let mk = || TrainConfig {
         model: "mlp".into(),
         format: "fp32".into(),

@@ -1,0 +1,243 @@
+//! Property tests for the numeric substrate (seeded pseudo-random
+//! inputs, no external deps — the harness is `util::proptest`).
+//!
+//! Three invariant families from the paper:
+//!
+//! * **Quantizer idempotence** — `Q(Q(x)) == Q(x)` for every Q_W/Q_G
+//!   format (multi-base LNS across bitwidths and gammas, FP8, INT):
+//!   quantized tensors are fixed points of their own quantizer, so the
+//!   Fig. 3 placement never compounds error across re-application.
+//! * **Madam multiplicative-update invariants** — sign preservation,
+//!   zero fixed points, the bounded log-space step, and descent-
+//!   direction monotonicity (Algorithm 1 / Fig. 1), for both the
+//!   reference `Madam` and the fused Madam+Q_U hot path.
+//! * **Lemma-1 bounded relative error** — the LNS round-trip stays
+//!   within `2^(1/(2*gamma)) - 1` of the input, checked against an
+//!   exact f64 reference encoder so the f32 production path can drift
+//!   at most one rounding-tie code from the mathematical definition.
+
+use lns_madam::lns::format::LnsFormat;
+use lns_madam::lns::Scaling;
+use lns_madam::model::QuantKind;
+use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, UpdateQuantizer};
+use lns_madam::util::proptest::property;
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+
+fn lns_kind(bits: u32, gamma: u32) -> QuantKind {
+    QuantKind::Lns { fmt: LnsFormat::new(bits, gamma), scaling: Scaling::PerTensor }
+}
+
+#[test]
+fn quantizer_idempotence_across_formats() {
+    let kinds = [
+        lns_kind(8, 8),
+        lns_kind(8, 4),
+        lns_kind(8, 16),
+        lns_kind(6, 8),
+        lns_kind(12, 128),
+        lns_kind(4, 2),
+        QuantKind::Fp8,
+        QuantKind::Int { bits: 8 },
+        QuantKind::Int { bits: 4 },
+    ];
+    for kind in kinds {
+        property(120, |g| {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(1, 8);
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0.0,                // zero lanes are fixed points too
+                    1..=4 => g.normal_f32(), // moderate magnitudes
+                    _ => g.lns_value(),      // many binades (the LNS shape)
+                })
+                .collect();
+            let t = Tensor::from_vec(rows, cols, data);
+            let once = kind.apply(&t);
+            let twice = kind.apply(&once);
+            for (a, b) in once.data.iter().zip(twice.data.iter()) {
+                // Equality up to f32 scale-recompute noise, which sits
+                // ~5 orders below any format's quantization gap.
+                assert!(
+                    (a - b).abs() <= 2e-6 * a.abs().max(1e-30),
+                    "{kind:?}: Q(Q(x)) = {b} != Q(x) = {a}"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn madam_update_sign_zero_and_direction_invariants() {
+    property(400, |g| {
+        let n = g.usize_in(1, 32);
+        let before: Vec<f32> = (0..n)
+            .map(|_| if g.usize_in(0, 9) == 0 { 0.0 } else { g.lns_value() })
+            .collect();
+        let grad: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let lr = g.f32_in(1e-4, 0.3);
+        let mut opt = Madam::new(lr);
+        let mut w = before.clone();
+        opt.step(0, &mut w, &grad);
+        for i in 0..n {
+            let (a, b) = (before[i], w[i]);
+            if a == 0.0 {
+                // Multiplicative updates cannot leave zero.
+                assert_eq!(b, 0.0, "zero weight moved to {b}");
+                continue;
+            }
+            assert!(a.signum() == b.signum(), "sign flipped: {a} -> {b}");
+            // |log2|w'| - log2|w|| <= max_step (the bounded
+            // multiplicative step), up to log/exp f32 round-trip noise.
+            let dlog = (b.abs().log2() - a.abs().log2()).abs();
+            assert!(
+                dlog <= opt.max_step + 1e-3,
+                "log-step {dlog} exceeds max_step {} (w {a} -> {b})",
+                opt.max_step
+            );
+            // Monotone descent direction: gradient aligned with the
+            // weight sign shrinks the magnitude, anti-aligned grows it.
+            if grad[i] * a.signum() > 0.0 {
+                assert!(b.abs() <= a.abs() * 1.00001, "should shrink: {a} -> {b}");
+            } else if grad[i] * a.signum() < 0.0 {
+                assert!(b.abs() >= a.abs() * 0.99999, "should grow: {a} -> {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_madam_qu_preserves_the_same_invariants() {
+    let fmt = match UpdateQuantizer::lns_matched(16) {
+        UpdateQuantizer::Lns(f) => f,
+        _ => unreachable!(),
+    };
+    property(200, |g| {
+        let n = g.usize_in(2, 64);
+        let before: Vec<f32> = (0..n)
+            .map(|_| {
+                if g.usize_in(0, 9) == 0 {
+                    0.0
+                } else {
+                    // +-5 octaves keeps every weight far inside the
+                    // ~15.9-octave Q_U range, so no range clamping.
+                    let mag = g.f64_in(-5.0, 5.0).exp2();
+                    (if g.bool() { -mag } else { mag }) as f32
+                }
+            })
+            .collect();
+        let grad: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+        let mut opt = FusedMadamQu::new(0.01, fmt);
+        opt.par_threshold = usize::MAX; // deterministic single-thread
+        let mut w = before.clone();
+        opt.step(0, &mut w, &grad);
+        // The fused step additionally rounds onto the Q_U grid: the
+        // log-space movement is bounded by max_step plus one grid gap
+        // (and the fastmath kernels' ~5e-7 noise).
+        let gap = 1.0 / fmt.gamma as f32;
+        for i in 0..n {
+            let (a, b) = (before[i], w[i]);
+            if a == 0.0 {
+                assert_eq!(b, 0.0, "zero weight moved to {b}");
+                continue;
+            }
+            assert!(a.signum() == b.signum(), "sign flipped: {a} -> {b}");
+            let dlog = (b.abs().log2() - a.abs().log2()).abs();
+            assert!(
+                dlog <= opt.max_step + 2.0 * gap + 1e-3,
+                "fused log-step {dlog} out of bounds (w {a} -> {b})"
+            );
+        }
+    });
+}
+
+/// Exact f64 reference of the Q_log round-trip (Section 3): the
+/// mathematical definition the f32 production encoder approximates.
+fn quantize_f64_reference(x: f64, scale: f64, fmt: LnsFormat) -> f64 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let e = ((x.abs() / scale).log2() * fmt.gamma as f64).round_ties_even();
+    let e = e.clamp(0.0, fmt.max_code() as f64);
+    x.signum() * scale * (e / fmt.gamma as f64).exp2()
+}
+
+#[test]
+fn lemma1_relative_error_bounded_vs_f64_reference() {
+    for fmt in [
+        LnsFormat::new(8, 8),
+        LnsFormat::new(8, 4),
+        LnsFormat::new(8, 16),
+        LnsFormat::new(6, 8),
+        LnsFormat::new(12, 128),
+        LnsFormat::new(16, 2048),
+    ] {
+        let range = fmt.dynamic_range_log2();
+        let bound = fmt.max_rel_error();
+        property(300, |g| {
+            let mag = g.f64_in(-3.0, 3.0).exp2();
+            let x = (if g.bool() { -mag } else { mag }) as f32;
+            // Place x interior to the code range: between 1 octave and
+            // (range - 1) octaves below the group absmax, so neither
+            // clamp engages and Lemma 1 applies.
+            let above = g.f64_in(1.0, range - 1.0);
+            let scale = fmt.scale_for_absmax((x.abs() as f64 * above.exp2()) as f32);
+
+            // The f64 reference satisfies the Lemma-1 bound exactly.
+            let q64 = quantize_f64_reference(x as f64, scale as f64, fmt);
+            let rel64 = ((q64 - x as f64) / x as f64).abs();
+            assert!(
+                rel64 <= bound + 1e-9,
+                "{fmt:?}: f64 reference rel err {rel64} > bound {bound} (x={x})"
+            );
+
+            // The f32 production path tracks the reference to within
+            // one code (rounding-tie flips only) and itself stays
+            // within the bound up to f32 noise.
+            let q = fmt.quantize(x, scale) as f64;
+            let ratio = (q / q64).abs();
+            let ratio = ratio.max(1.0 / ratio);
+            assert!(
+                ratio <= fmt.gap_factor() * (1.0 + 1e-6),
+                "{fmt:?}: f32 path {q} vs f64 reference {q64} differ by >1 code (x={x})"
+            );
+            // The f32 encoder places codes with f32 log2 noise, so a
+            // draw near a rounding tie may land one code off the
+            // reference; its error is still bounded by a full code gap
+            // (2^(1/gamma) - 1, twice the Lemma-1 half-gap bound).
+            let rel32 = ((q - x as f64) / x as f64).abs();
+            assert!(
+                rel32 <= (fmt.gap_factor() - 1.0) + 1e-6,
+                "{fmt:?}: f32 rel err {rel32} > one-code bound (x={x})"
+            );
+        });
+    }
+}
+
+#[test]
+fn parallel_gemm_bit_identical_property() {
+    // Random shapes x random worker counts: the row-partitioned GEMMs
+    // must equal the sequential kernels bit for bit (the contract the
+    // parallel training engine rests on).
+    property(40, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 160);
+        let n = g.usize_in(1, 40);
+        let workers = g.usize_in(2, 9);
+        let mut rng = Rng::new(0xBEEF ^ g.case as u64);
+        let a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let c = Tensor::randn(m, n, 1.0, &mut rng);
+        assert_eq!(a.matmul(&b).data, a.matmul_p(&b, workers).data, "matmul {m}x{k}x{n}");
+        assert_eq!(
+            a.t_matmul(&c).data,
+            a.t_matmul_p(&c, workers).data,
+            "t_matmul {m}x{k}x{n}"
+        );
+        assert_eq!(
+            c.matmul_t(&b).data,
+            c.matmul_t_p(&b, workers).data,
+            "matmul_t {m}x{k}x{n}"
+        );
+    });
+}
