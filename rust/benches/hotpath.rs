@@ -19,9 +19,10 @@
 
 use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::lns::kernels::{self, QuantScratch};
 use lns_madam::lns::quant::quantize_slice;
 use lns_madam::lns::{
-    encode_tensor, LnsFormat, MacConfig, Parallelism, Rounding, Scaling, VectorMacUnit,
+    encode_tensor, LnsFormat, LnsValue, MacConfig, Parallelism, Rounding, Scaling, VectorMacUnit,
 };
 use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, QuantizedUpdate, UpdateQuantizer};
 use lns_madam::util::bench::Bencher;
@@ -79,12 +80,168 @@ fn time_native_training(
     (losses, measure as f64 / secs)
 }
 
+/// Quantizer bench results, merged into the BENCH json by
+/// [`native_training_section`] (which also derives the quant share of
+/// a train step from its own e2e timings).
+struct QuantBench {
+    json: BTreeMap<String, Json>,
+    /// Fused quant time (ms) for one train step's worth of Q_W/Q_A/
+    /// Q_E/Q_G tensors, keyed by preset name.
+    step_quant_ms: BTreeMap<String, f64>,
+}
+
+/// The exact pre-kernel fake-quant path, kept verbatim as the bench
+/// baseline: allocate sign/code planes, per-element libm encode, then
+/// an allocating decode.
+fn exact_quantize_reference(t: &Tensor, fmt: LnsFormat) -> Tensor {
+    let s = fmt.scale_for_absmax(t.abs_max());
+    let mut signs = vec![0i8; t.len()];
+    let mut codes = vec![0u32; t.len()];
+    for (i, &x) in t.data.iter().enumerate() {
+        let v = fmt.encode(x, s);
+        signs[i] = v.sign;
+        codes[i] = v.code;
+    }
+    let mut out = Tensor::zeros(t.rows, t.cols);
+    for i in 0..t.len() {
+        out.data[i] = fmt.decode(LnsValue { sign: signs[i], code: codes[i] }, s);
+    }
+    out
+}
+
+/// Layer sizes + batch of an mlp-family preset, read from the live
+/// preset table so the quant-share tensor set can never drift from
+/// what actually trains.
+fn preset_mlp_shape(preset: &str) -> Option<(Vec<usize>, usize)> {
+    use lns_madam::backend::native::{builtin_presets, PresetSpec};
+    let p = builtin_presets().iter().find(|p| p.name == preset)?;
+    match p.spec {
+        PresetSpec::Mlp(sizes) => Some((sizes.to_vec(), p.batch)),
+        PresetSpec::CharLm { .. } => None,
+    }
+}
+
+/// ISSUE-4 quantizer section: exact vs fused elements/s at 1/2/4/8
+/// threads plus the per-step quant cost of the mlp presets. Asserts
+/// fused output == exact output bit for bit before any timing.
+fn quantizer_section(smoke: bool) -> QuantBench {
+    let fmt = LnsFormat::PAPER8;
+    let (dim, b) = if smoke {
+        (256usize, Bencher::quick())
+    } else {
+        (1024usize, Bencher::default())
+    };
+    let n = dim * dim;
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut rng = Rng::new(0x9A41);
+    let t = Tensor::randn(dim, dim, 1.0, &mut rng);
+
+    println!("\n--- quantizer kernels (fused vs exact reference, {n} elements) ---");
+    // Correctness first: the fused kernel must reproduce the exact
+    // reference bitwise at every thread count (hard assert — this is
+    // the contract, not a wall-clock number).
+    let want = exact_quantize_reference(&t, fmt);
+    let mut scratch = QuantScratch::default();
+    for &threads in thread_counts {
+        let mut got = t.clone();
+        kernels::quantize_rows_into(
+            &mut got.data,
+            dim,
+            dim,
+            fmt,
+            Scaling::PerTensor,
+            threads,
+            &mut scratch,
+        );
+        assert_eq!(
+            got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "fused quantizer diverged from the exact reference at {threads} threads"
+        );
+    }
+
+    let mut json = BTreeMap::new();
+    let s_exact = b.bench("quantizer exact reference (alloc + libm)", || {
+        exact_quantize_reference(&t, fmt)
+    });
+    println!("  -> {:.1} Melem/s", s_exact.throughput(n as f64) / 1e6);
+    json.insert("exact_melem_per_s".into(), Json::Num(s_exact.throughput(n as f64) / 1e6));
+
+    let mut fused_1t_ns = f64::NAN;
+    for &threads in thread_counts {
+        // Steady-state form: quantize in place (idempotent input keeps
+        // the work representative without a copy in the timed loop).
+        let mut buf = want.clone();
+        let s = b.bench(&format!("quantizer fused in-place @ {threads}T"), || {
+            kernels::quantize_rows_into(
+                &mut buf.data,
+                dim,
+                dim,
+                fmt,
+                Scaling::PerTensor,
+                threads,
+                &mut scratch,
+            );
+        });
+        println!("  -> {:.1} Melem/s", s.throughput(n as f64) / 1e6);
+        json.insert(
+            format!("fused_melem_per_s_{threads}t"),
+            Json::Num(s.throughput(n as f64) / 1e6),
+        );
+        if threads == 1 {
+            fused_1t_ns = s.mean_ns;
+            let speedup = s_exact.mean_ns / s.mean_ns;
+            println!("quantizer single-thread speedup: {speedup:.2}x (fused vs exact)");
+            json.insert("single_thread_speedup".into(), Json::Num(speedup));
+            // The >= 2x acceptance bar only means something off-smoke
+            // (smoke shapes are timer-noise territory on CI runners).
+            if !smoke && speedup < 2.0 {
+                println!("WARNING: fused quantizer speedup {speedup:.2}x below the 2x target");
+            }
+        } else if fused_1t_ns.is_finite() {
+            json.insert(format!("fused_speedup_{threads}v1"), Json::Num(fused_1t_ns / s.mean_ns));
+        }
+    }
+
+    // One train step's worth of quantization (Fig. 3: Q_W + Q_A fwd,
+    // Q_E + Q_G bwd for every GEMM) for the mlp presets, fused, one
+    // thread — native_training_section divides by its measured
+    // ms/step to report the quant share.
+    let mut step_quant_ms = BTreeMap::new();
+    for preset in ["mlp", "mlp_tiny"] {
+        let Some((sizes, batch)) = preset_mlp_shape(preset) else { continue };
+        let mut tensors: Vec<Tensor> = Vec::new();
+        for w in sizes.windows(2) {
+            tensors.push(Tensor::randn(w[0], w[1], 1.0, &mut rng)); // Q_W
+            tensors.push(Tensor::randn(batch, w[0], 1.0, &mut rng)); // Q_A
+            tensors.push(Tensor::randn(batch, w[1], 1.0, &mut rng)); // Q_E
+            tensors.push(Tensor::randn(w[0], w[1], 1.0, &mut rng)); // Q_G
+        }
+        let s = b.bench(&format!("quantizer train-step set ({preset})"), || {
+            for t in tensors.iter_mut() {
+                kernels::quantize_rows_into(
+                    &mut t.data,
+                    t.rows,
+                    t.cols,
+                    fmt,
+                    Scaling::PerTensor,
+                    1,
+                    &mut scratch,
+                );
+            }
+        });
+        step_quant_ms.insert(preset.to_string(), s.mean_ns / 1e6);
+    }
+
+    QuantBench { json, step_quant_ms }
+}
+
 /// The native-training throughput sweep: steps/sec for the mlp and
 /// char-LM families at 1/2/4/8 threads, lns8 and fp32, written to
 /// `out_path` as JSON. Asserts that per-step losses are bit-identical
 /// across every thread count (the parallel hot path must never change
 /// the math).
-fn native_training_section(smoke: bool, out_path: &str) {
+fn native_training_section(smoke: bool, out_path: &str, quant: QuantBench) {
     let host_cores = Parallelism::Auto.worker_count();
     let presets: &[(&str, &str)] = if smoke {
         &[("mlp", "mlp_tiny"), ("charlm", "charlm_tiny")]
@@ -200,6 +357,28 @@ fn native_training_section(smoke: bool, out_path: &str) {
         ),
     );
     root.insert("speedups".to_string(), Json::Obj(speedups));
+
+    // Quantizer section results + the quant share of a measured train
+    // step (fused quant time for the preset's Q_W/Q_A/Q_E/Q_G set over
+    // the lns single-thread ms/step — the Amdahl numerator this PR
+    // attacks).
+    let mut quant_json = quant.json;
+    for (preset, quant_ms) in &quant.step_quant_ms {
+        let step_ms = points
+            .iter()
+            .find(|p| &p.preset == preset && p.format == "lns" && p.threads == 1)
+            .map(|p| p.ms_per_step);
+        if let Some(step_ms) = step_ms {
+            let share = quant_ms / step_ms;
+            println!(
+                "quant share of {preset} lns step: {:.1}% ({quant_ms:.3} ms of {step_ms:.3} ms)",
+                share * 100.0
+            );
+            quant_json.insert(format!("step_share_{preset}"), Json::Num(share));
+            quant_json.insert(format!("step_quant_ms_{preset}"), Json::Num(*quant_ms));
+        }
+    }
+    root.insert("quantizer".to_string(), Json::Obj(quant_json));
     let json = Json::Obj(root).dump();
     std::fs::write(out_path, json).expect("write bench json");
     let shown = std::fs::canonicalize(out_path)
@@ -220,7 +399,10 @@ fn main() {
         .unwrap_or_else(|| "BENCH_native_training.json".to_string());
 
     if native_only {
-        native_training_section(smoke, &out_path);
+        // Offline-safe sections only: the quantizer kernels and the
+        // native training sweep (CI runs this pair on every push).
+        let quant = quantizer_section(smoke);
+        native_training_section(smoke, &out_path, quant);
         return;
     }
 
@@ -403,5 +585,6 @@ fn main() {
         upd / per_step * 100.0
     );
 
-    native_training_section(smoke, &out_path);
+    let quant = quantizer_section(smoke);
+    native_training_section(smoke, &out_path, quant);
 }

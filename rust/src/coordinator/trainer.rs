@@ -68,10 +68,21 @@ fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
     } else {
         UpdateQuantizer::lns_matched(cfg.qu_bits)
     };
+    // The shared parallelism knob also drives the Q_U pass of the
+    // composed optimizers, resolved like everywhere else (0 = auto =
+    // one worker per core); results are bit-identical at any count,
+    // and the kernels' per-worker element floor keeps small slices
+    // sequential regardless.
+    let qu_workers = crate::lns::Parallelism::from_knob(cfg.parallelism).worker_count();
+    fn composed<O: Optimizer>(inner: O, qu: UpdateQuantizer, workers: usize) -> QuantizedUpdate<O> {
+        let mut o = QuantizedUpdate::new(inner, qu);
+        o.workers = workers;
+        o
+    }
     match cfg.optimizer {
-        OptKind::Sgd => Box::new(QuantizedUpdate::new(Sgd::with(cfg.lr, 0.9, 1e-4), qu)),
-        OptKind::Adam => Box::new(QuantizedUpdate::new(Adam::new(cfg.lr), qu)),
-        OptKind::AdamW => Box::new(QuantizedUpdate::new(Adam::adamw(cfg.lr, 0.01), qu)),
+        OptKind::Sgd => Box::new(composed(Sgd::with(cfg.lr, 0.9, 1e-4), qu, qu_workers)),
+        OptKind::Adam => Box::new(composed(Adam::new(cfg.lr), qu, qu_workers)),
+        OptKind::AdamW => Box::new(composed(Adam::adamw(cfg.lr, 0.01), qu, qu_workers)),
         OptKind::Madam => match qu {
             // Hot path: fused Madam+Q_U (one log2 + one exp2 per param,
             // threaded) — see optim::fused and EXPERIMENTS.md §Perf.
@@ -84,7 +95,7 @@ fn build_optimizer(cfg: &TrainConfig) -> Box<dyn Optimizer> {
                 }
                 Box::new(fused)
             }
-            other => Box::new(QuantizedUpdate::new(Madam::new(cfg.lr), other)),
+            other => Box::new(composed(Madam::new(cfg.lr), other, qu_workers)),
         },
     }
 }

@@ -77,15 +77,19 @@ pub fn measure_gemm_opcounts(
     seed: u64,
 ) -> crate::lns::OpCounts {
     use crate::lns::format::Rounding;
-    use crate::lns::quant::{encode_tensor, Scaling};
+    use crate::lns::quant::{encode_tensor_pooled, Scaling};
     use crate::util::rng::Rng;
     use crate::util::tensor::Tensor;
 
     let mut rng = Rng::new(seed);
     let a = Tensor::randn(m, k, 1.0, &mut rng);
     let b = Tensor::randn(k, n, 1.0, &mut rng);
-    let ea = encode_tensor(&a, cfg.format, Scaling::PerTensor, Rounding::Nearest, None);
-    let eb = encode_tensor(&b, cfg.format, Scaling::PerTensor, Rounding::Nearest, None);
+    // Encode rides the MAC's worker pool (codes identical at any count).
+    let workers = cfg.parallelism.worker_count();
+    let ea =
+        encode_tensor_pooled(&a, cfg.format, Scaling::PerTensor, Rounding::Nearest, None, workers);
+    let eb =
+        encode_tensor_pooled(&b, cfg.format, Scaling::PerTensor, Rounding::Nearest, None, workers);
     let mut mac = crate::lns::VectorMacUnit::new(cfg);
     let _ = mac.matmul(&ea, &eb);
     mac.counts

@@ -1,0 +1,817 @@
+//! Fused, allocation-free, pool-parallel quantizer kernels — the
+//! Q_W/Q_A/Q_E/Q_G hot path of every train step (Fig. 3).
+//!
+//! The legacy fake-quantization route (`encode_tensor` → sign/code
+//! planes → `decode` → fresh `Tensor`) costs three allocations and two
+//! exact-libm transcendentals per element. These kernels fuse
+//! scale → encode → decode into one in-place pass per element with:
+//!
+//! * **fast log2 with a near-tie exact fallback** — codes come from
+//!   `fastmath::fast_log2`; elements whose code-space fractional part
+//!   lands within [`fastmath::log2_tie_band`] of the rounding boundary
+//!   are recomputed with exact libm, so emitted codes are
+//!   **bit-identical** to `LnsFormat::encode` (the band provably
+//!   covers the approximation error — see the proof tests in
+//!   `fastmath`). Formats whose band would reach a quarter of a code
+//!   ([`fastmath::fast_log2_usable`]) run exact libm wholesale.
+//! * **a cached decode LUT** — a format has only `max_code + 1`
+//!   distinct decode magnitudes, each computed once with the *same*
+//!   libm expression `(code / gamma).exp2()` the scalar
+//!   `LnsFormat::decode` uses, so LUT decode is bit-identical by
+//!   construction (`fast_exp2` is *not* usable here: it is only
+//!   value-close, and the contract is bit-exactness).
+//! * **pool parallelism** — row bands on `util::pool` under a ~8k
+//!   elements-per-worker floor; group scales are computed once up
+//!   front in the sequential fold order and shared read-only, and
+//!   stochastic-rounding uniforms are pre-drawn sequentially in
+//!   row-major order, so results are bit-identical at any worker
+//!   count.
+//! * **no per-call allocation** — scales and uniforms live in a
+//!   reusable [`QuantScratch`]; the LUT is cached process-wide.
+//!
+//! The contract enforced by `tests/properties.rs` (bit-identity vs the
+//! scalar encode across formats, scalings, roundings, and thread
+//! counts) and `tests/golden_vectors.rs` (checked-in near-tie codes).
+
+use crate::lns::format::{LnsFormat, Rounding};
+use crate::lns::quant::Scaling;
+use crate::util::fastmath::{fast_log2, fast_log2_usable, log2_tie_band};
+use crate::util::pool;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Minimum elements per worker before the parallel path engages —
+/// the quantizer analogue of `tensor.rs::PAR_MACS_PER_WORKER`: the
+/// per-element work is transcendental-bound, so ~8k elements comfortably
+/// out-earn a scoped spawn/join. Purely a wall-clock guard; results are
+/// bit-identical at any worker count.
+pub const QUANT_ELEMS_PER_WORKER: usize = 8 * 1024;
+
+fn effective_workers(workers: usize, elems: usize) -> usize {
+    workers.min(elems / QUANT_ELEMS_PER_WORKER).max(1)
+}
+
+/// Decode LUTs above this size are not cached (a 24-bit format's table
+/// would be 32 MiB); such formats decode per element with exact libm.
+const LUT_MAX_CODES: u32 = 1 << 16;
+
+/// Test hook: force every element through the exact-libm path. The
+/// fast path is bit-identical to it, so flipping this mid-run can
+/// never change a result — it exists so end-to-end suites can train
+/// once with pre-kernel numerics and assert bit-equality against the
+/// fast path (`tests/native_training.rs`).
+static FORCE_EXACT: AtomicBool = AtomicBool::new(false);
+
+/// Enable/disable the exact-libm-only mode (tests only; see
+/// [`FORCE_EXACT`]).
+pub fn set_force_exact(on: bool) {
+    FORCE_EXACT.store(on, Ordering::Relaxed);
+}
+
+fn lut_cache() -> &'static Mutex<Vec<(LnsFormat, Arc<Vec<f32>>)>> {
+    static CACHE: OnceLock<Mutex<Vec<(LnsFormat, Arc<Vec<f32>>)>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// [`decode_lut`] gated on cacheable size: `None` for formats whose
+/// table would be unreasonably large (those decode per element with
+/// exact libm instead — same bits, no table).
+pub fn decode_lut_opt(fmt: LnsFormat) -> Option<Arc<Vec<f32>>> {
+    (fmt.max_code() < LUT_MAX_CODES).then(|| decode_lut(fmt))
+}
+
+/// The shared decode table for `fmt`: entry `c` is the exact-libm
+/// `(c as f32 / gamma as f32).exp2()` that `LnsFormat::decode`
+/// computes, so decoding through the LUT is bit-identical to the
+/// scalar path. Built once per format per process.
+pub fn decode_lut(fmt: LnsFormat) -> Arc<Vec<f32>> {
+    let mut cache = lut_cache().lock().expect("lut cache poisoned");
+    if let Some((_, lut)) = cache.iter().find(|(f, _)| *f == fmt) {
+        return Arc::clone(lut);
+    }
+    let lut: Vec<f32> = (0..=fmt.max_code())
+        .map(|c| (c as f32 / fmt.gamma as f32).exp2())
+        .collect();
+    let lut = Arc::new(lut);
+    cache.push((fmt, Arc::clone(&lut)));
+    lut
+}
+
+/// Reusable scratch for the quantizer kernels: group scales and the
+/// stochastic-rounding uniform draws persist across steps, so a warm
+/// hot path allocates nothing.
+#[derive(Default)]
+pub struct QuantScratch {
+    scales: Vec<f32>,
+    uniforms: Vec<f32>,
+}
+
+/// Per-call scalar constants of one format.
+#[derive(Clone, Copy)]
+struct EncParams {
+    gamma: f32,
+    inv_gamma: f32,
+    max_code: f32,
+    /// Near-tie band in code units (see `fastmath::log2_tie_band`).
+    band: f32,
+    /// Fast path provably safe for this format (and not test-disabled).
+    fast: bool,
+}
+
+impl EncParams {
+    fn new(fmt: LnsFormat) -> EncParams {
+        EncParams {
+            gamma: fmt.gamma as f32,
+            // gamma is a power of two, so its inverse is exact and
+            // `code * inv_gamma == code / gamma` bit for bit.
+            inv_gamma: 1.0 / fmt.gamma as f32,
+            max_code: fmt.max_code() as f32,
+            band: log2_tie_band(fmt.gamma, fmt.max_code()),
+            fast: fast_log2_usable(fmt.gamma, fmt.max_code())
+                && !FORCE_EXACT.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Nearest-rounded (sign, code) of `x` under `scale` — bit-identical
+/// to `LnsFormat::encode`.
+#[inline(always)]
+fn encode_nearest(p: &EncParams, x: f32, scale: f32) -> (i8, u32) {
+    if x == 0.0 || !x.is_finite() {
+        return (0, 0);
+    }
+    let y = x.abs() / scale;
+    let e = if p.fast && y.is_finite() {
+        let t = fast_log2(y) * p.gamma;
+        let fr = t - t.floor();
+        if (fr - 0.5).abs() <= p.band {
+            // Near a rounding boundary: the fast and exact log2 could
+            // round apart — recompute the exact expression verbatim.
+            (y.log2() * p.gamma).round_ties_even()
+        } else {
+            t.round_ties_even()
+        }
+    } else {
+        (y.log2() * p.gamma).round_ties_even()
+    };
+    let code = e.clamp(0.0, p.max_code) as u32;
+    (if x > 0.0 { 1 } else { -1 }, code)
+}
+
+/// Exact-libm stochastic rounding in code space — the verbatim body of
+/// `LnsFormat::encode_stochastic` up to the clamp.
+#[inline(always)]
+fn exact_stochastic(y: f32, gamma: f32, u: f32) -> f32 {
+    let e = y.log2() * gamma;
+    let floor = e.floor();
+    let frac = e - floor;
+    if u < frac {
+        floor + 1.0
+    } else {
+        floor
+    }
+}
+
+/// Stochastically rounded (sign, code) — bit-identical to
+/// `LnsFormat::encode_stochastic` for the same uniform draw `u`.
+#[inline(always)]
+fn encode_stochastic(p: &EncParams, x: f32, scale: f32, u: f32) -> (i8, u32) {
+    if x == 0.0 || !x.is_finite() {
+        return (0, 0);
+    }
+    let y = x.abs() / scale;
+    let rounded = if p.fast && y.is_finite() {
+        let e = fast_log2(y) * p.gamma;
+        let floor = e.floor();
+        let frac = e - floor;
+        // The stochastic decision flips when (a) the fast and exact
+        // fracs straddle an integer (frac near 0 or 1) or (b) `u` lands
+        // between them — all within the band of the exact frac.
+        if frac <= p.band || frac >= 1.0 - p.band || (u - frac).abs() <= p.band {
+            exact_stochastic(y, p.gamma, u)
+        } else if u < frac {
+            floor + 1.0
+        } else {
+            floor
+        }
+    } else {
+        exact_stochastic(y, p.gamma, u)
+    };
+    let code = rounded.clamp(0.0, p.max_code) as u32;
+    (if x > 0.0 { 1 } else { -1 }, code)
+}
+
+/// Decode magnitude for `code` — LUT when cached, exact libm otherwise;
+/// identical bits either way.
+#[inline(always)]
+fn decode_mag(p: &EncParams, code: u32, lut: Option<&[f32]>) -> f32 {
+    match lut {
+        Some(l) => l[code as usize],
+        None => (code as f32 * p.inv_gamma).exp2(),
+    }
+}
+
+/// Fused round-trip of one element (same op order as
+/// `sign as f32 * scale * mag` in `LnsFormat::decode`).
+#[inline(always)]
+fn roundtrip_one(p: &EncParams, x: f32, scale: f32, lut: Option<&[f32]>) -> f32 {
+    let (sign, code) = encode_nearest(p, x, scale);
+    if sign == 0 {
+        0.0
+    } else {
+        sign as f32 * scale * decode_mag(p, code, lut)
+    }
+}
+
+#[inline(always)]
+fn roundtrip_one_stochastic(
+    p: &EncParams,
+    x: f32,
+    scale: f32,
+    u: f32,
+    lut: Option<&[f32]>,
+) -> f32 {
+    let (sign, code) = encode_stochastic(p, x, scale, u);
+    if sign == 0 {
+        0.0
+    } else {
+        sign as f32 * scale * decode_mag(p, code, lut)
+    }
+}
+
+/// Round-trip a span of elements sharing one scale. `offset` is the
+/// span's flat index into the tensor (for the pre-drawn uniforms).
+#[inline(always)]
+fn roundtrip_span(
+    span: &mut [f32],
+    offset: usize,
+    p: &EncParams,
+    scale: f32,
+    lut: Option<&[f32]>,
+    uniforms: Option<&[f32]>,
+) {
+    match uniforms {
+        None => {
+            for v in span.iter_mut() {
+                *v = roundtrip_one(p, *v, scale, lut);
+            }
+        }
+        Some(u) => {
+            for (i, v) in span.iter_mut().enumerate() {
+                *v = roundtrip_one_stochastic(p, *v, scale, u[offset + i], lut);
+            }
+        }
+    }
+}
+
+/// Compute group scales for a row-major buffer into `out`. This is
+/// *the* scale implementation (`quant::group_scales` wraps it): scales
+/// feed the bit-identity contract, so the sequential fold order here
+/// is part of that contract and must not change.
+pub fn group_scales_into(
+    out: &mut Vec<f32>,
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    scaling: Scaling,
+) {
+    out.clear();
+    match scaling {
+        Scaling::PerTensor => {
+            let absmax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            out.push(fmt.scale_for_absmax(absmax));
+        }
+        Scaling::PerRow => {
+            out.extend((0..rows).map(|r| {
+                let m = data[r * cols..(r + 1) * cols]
+                    .iter()
+                    .fold(0.0f32, |m, &x| m.max(x.abs()));
+                fmt.scale_for_absmax(m)
+            }));
+        }
+        Scaling::PerCol => {
+            out.resize(cols, 0.0);
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                for (m, &x) in out.iter_mut().zip(row.iter()) {
+                    *m = m.max(x.abs());
+                }
+            }
+            for m in out.iter_mut() {
+                *m = fmt.scale_for_absmax(*m);
+            }
+        }
+    }
+}
+
+/// Pre-draw one uniform per element in row-major order — the same
+/// stream the scalar loop would consume, so stochastic results are
+/// independent of the worker partition.
+fn fill_uniforms(out: &mut Vec<f32>, n: usize, rng: Option<&mut Rng>) {
+    let mut local;
+    let rng = match rng {
+        Some(r) => r,
+        None => {
+            // Mirror `encode_tensor`'s legacy fallback seed.
+            local = Rng::new(0);
+            &mut local
+        }
+    };
+    out.clear();
+    out.extend((0..n).map(|_| rng.uniform_f32()));
+}
+
+/// The fused fake-quantization core over precomputed scales.
+/// Deterministic given (`data`, `scales`, `uniforms`) — `workers` is
+/// pure wall-clock.
+#[allow(clippy::too_many_arguments)]
+fn quantize_with(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    scales: &[f32],
+    uniforms: Option<&[f32]>,
+    workers: usize,
+) {
+    debug_assert_eq!(data.len(), rows * cols);
+    let p = EncParams::new(fmt);
+    let lut_arc = decode_lut_opt(fmt);
+    let lut = lut_arc.as_deref().map(|v| v.as_slice());
+    let workers = effective_workers(workers, data.len());
+    match scaling {
+        // Per-tensor scale is position-free: partition the flat buffer
+        // directly (no row alignment needed).
+        Scaling::PerTensor => {
+            let scale = scales[0];
+            let n = data.len();
+            pool::partition_rows(data, n, 1, workers, |i0, chunk| {
+                roundtrip_span(chunk, i0, &p, scale, lut, uniforms);
+            });
+        }
+        Scaling::PerRow => {
+            pool::partition_rows(data, rows, cols, workers, |row0, band| {
+                for (dr, row) in band.chunks_mut(cols).enumerate() {
+                    let r = row0 + dr;
+                    roundtrip_span(row, r * cols, &p, scales[r], lut, uniforms);
+                }
+            });
+        }
+        Scaling::PerCol => {
+            pool::partition_rows(data, rows, cols, workers, |row0, band| {
+                for (dr, row) in band.chunks_mut(cols).enumerate() {
+                    let base = (row0 + dr) * cols;
+                    match uniforms {
+                        None => {
+                            for (c, v) in row.iter_mut().enumerate() {
+                                *v = roundtrip_one(&p, *v, scales[c], lut);
+                            }
+                        }
+                        Some(u) => {
+                            for (c, v) in row.iter_mut().enumerate() {
+                                *v = roundtrip_one_stochastic(&p, *v, scales[c], u[base + c], lut);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// Fused fake-quantization (deterministic Q_log round-trip) of a
+/// row-major buffer in place: scale → encode → decode per element in a
+/// single pass, no `LnsTensor` materialization. Bit-identical to
+/// `encode_tensor(..).decode()` at any `workers` count.
+pub fn quantize_rows_into(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    workers: usize,
+    scratch: &mut QuantScratch,
+) {
+    quantize_rows_into_rounded(
+        data,
+        rows,
+        cols,
+        fmt,
+        scaling,
+        Rounding::Nearest,
+        None,
+        workers,
+        scratch,
+    );
+}
+
+/// [`quantize_rows_into`] with an explicit rounding mode. Stochastic
+/// rounding consumes one uniform per element from `rng` in row-major
+/// order — the same stream the scalar `encode_stochastic` loop draws —
+/// so results stay bit-identical to the exact path and across worker
+/// counts.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_rows_into_rounded(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    rounding: Rounding,
+    rng: Option<&mut Rng>,
+    workers: usize,
+    scratch: &mut QuantScratch,
+) {
+    debug_assert_eq!(data.len(), rows * cols);
+    group_scales_into(&mut scratch.scales, data, rows, cols, fmt, scaling);
+    let uniforms = match rounding {
+        Rounding::Nearest => None,
+        Rounding::Stochastic => {
+            fill_uniforms(&mut scratch.uniforms, data.len(), rng);
+            Some(scratch.uniforms.as_slice())
+        }
+    };
+    quantize_with(data, rows, cols, fmt, scaling, &scratch.scales, uniforms, workers);
+}
+
+/// Per-tensor fused fake-quant of a flat slice — the `quantize_slice` /
+/// Q_U hot path. Fully scratch-free (one stack scale; the LUT is the
+/// process-wide cache).
+pub fn quantize_flat(xs: &mut [f32], fmt: LnsFormat, workers: usize) {
+    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scales = [fmt.scale_for_absmax(absmax)];
+    let n = xs.len();
+    quantize_with(xs, n, 1, fmt, Scaling::PerTensor, &scales, None, workers);
+}
+
+/// Stochastic-rounding variant of [`quantize_flat`] (the Q_U theory
+/// setting); uniforms buffer comes from `scratch`.
+pub fn quantize_flat_stochastic(
+    xs: &mut [f32],
+    fmt: LnsFormat,
+    rng: &mut Rng,
+    workers: usize,
+    scratch: &mut QuantScratch,
+) {
+    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scales = [fmt.scale_for_absmax(absmax)];
+    fill_uniforms(&mut scratch.uniforms, xs.len(), Some(rng));
+    let n = xs.len();
+    quantize_with(xs, n, 1, fmt, Scaling::PerTensor, &scales, Some(&scratch.uniforms), workers);
+}
+
+/// Encode a row-major buffer into sign/code planes with the fused fast
+/// path — the datapath's encode front-end. `scales` must come from
+/// [`group_scales_into`] (or `quant::group_scales`) for the same
+/// (`data`, `scaling`). Codes are bit-identical to per-element
+/// `LnsFormat::encode`/`encode_stochastic` at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_rows_into(
+    signs: &mut [i8],
+    codes: &mut [u32],
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    rounding: Rounding,
+    rng: Option<&mut Rng>,
+    scales: &[f32],
+    workers: usize,
+    scratch: &mut QuantScratch,
+) {
+    debug_assert_eq!(data.len(), rows * cols);
+    debug_assert_eq!(signs.len(), data.len());
+    debug_assert_eq!(codes.len(), data.len());
+    let uniforms = match rounding {
+        Rounding::Nearest => None,
+        Rounding::Stochastic => {
+            fill_uniforms(&mut scratch.uniforms, data.len(), rng);
+            Some(scratch.uniforms.as_slice())
+        }
+    };
+    let p = EncParams::new(fmt);
+    let workers = effective_workers(workers, data.len()).min(rows.max(1));
+    if workers <= 1 || cols == 0 || data.is_empty() {
+        encode_band(signs, codes, data, 0, cols.max(1), &p, scaling, scales, uniforms);
+        return;
+    }
+    let band_rows = rows.div_ceil(workers);
+    let chunk = band_rows * cols;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+    for (bi, (sc, cc)) in signs
+        .chunks_mut(chunk)
+        .zip(codes.chunks_mut(chunk))
+        .enumerate()
+    {
+        tasks.push(Box::new(move || {
+            encode_band(sc, cc, data, bi * band_rows, cols, &p, scaling, scales, uniforms);
+        }));
+    }
+    pool::join_all(tasks);
+}
+
+/// Encode one contiguous band of whole rows — shared by the sequential
+/// and parallel orders. The rounding mode and the scale lookup are
+/// hoisted out of the inner loops (one dispatch per row, not per
+/// element).
+#[allow(clippy::too_many_arguments)]
+fn encode_band(
+    signs: &mut [i8],
+    codes: &mut [u32],
+    data: &[f32],
+    row0: usize,
+    cols: usize,
+    p: &EncParams,
+    scaling: Scaling,
+    scales: &[f32],
+    uniforms: Option<&[f32]>,
+) {
+    for (dr, (srow, crow)) in signs
+        .chunks_mut(cols)
+        .zip(codes.chunks_mut(cols))
+        .enumerate()
+    {
+        let r = row0 + dr;
+        let base = r * cols;
+        let drow = &data[base..base + srow.len()];
+        match (scaling, uniforms) {
+            (Scaling::PerCol, None) => {
+                for (c, (&x, (sg, cd))) in drow
+                    .iter()
+                    .zip(srow.iter_mut().zip(crow.iter_mut()))
+                    .enumerate()
+                {
+                    let v = encode_nearest(p, x, scales[c]);
+                    *sg = v.0;
+                    *cd = v.1;
+                }
+            }
+            (Scaling::PerCol, Some(u)) => {
+                for (c, (&x, (sg, cd))) in drow
+                    .iter()
+                    .zip(srow.iter_mut().zip(crow.iter_mut()))
+                    .enumerate()
+                {
+                    let v = encode_stochastic(p, x, scales[c], u[base + c]);
+                    *sg = v.0;
+                    *cd = v.1;
+                }
+            }
+            (_, uni) => {
+                let s = match scaling {
+                    Scaling::PerTensor => scales[0],
+                    _ => scales[r],
+                };
+                match uni {
+                    None => {
+                        for (&x, (sg, cd)) in drow.iter().zip(srow.iter_mut().zip(crow.iter_mut()))
+                        {
+                            let v = encode_nearest(p, x, s);
+                            *sg = v.0;
+                            *cd = v.1;
+                        }
+                    }
+                    Some(u) => {
+                        for (c, (&x, (sg, cd))) in drow
+                            .iter()
+                            .zip(srow.iter_mut().zip(crow.iter_mut()))
+                            .enumerate()
+                        {
+                            let v = encode_stochastic(p, x, s, u[base + c]);
+                            *sg = v.0;
+                            *cd = v.1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::format::LnsValue;
+    use crate::lns::quant::group_scales;
+    use crate::util::proptest::property;
+    use crate::util::tensor::Tensor;
+
+    /// Independent scalar reference: the exact pre-kernel semantics,
+    /// element by element through `LnsFormat::{encode, encode_stochastic,
+    /// decode}` with `group_scales` — deliberately NOT routed through
+    /// this module.
+    fn scalar_roundtrip(
+        t: &Tensor,
+        fmt: LnsFormat,
+        scaling: Scaling,
+        rounding: Rounding,
+        rng: Option<&mut Rng>,
+    ) -> Tensor {
+        let scales = group_scales(t, fmt, scaling);
+        let mut local_rng;
+        let rng = match rng {
+            Some(r) => r,
+            None => {
+                local_rng = Rng::new(0);
+                &mut local_rng
+            }
+        };
+        let mut out = t.clone();
+        for r in 0..t.rows {
+            for c in 0..t.cols {
+                let i = r * t.cols + c;
+                let s = match scaling {
+                    Scaling::PerTensor => scales[0],
+                    Scaling::PerRow => scales[r],
+                    Scaling::PerCol => scales[c],
+                };
+                let v: LnsValue = match rounding {
+                    Rounding::Nearest => fmt.encode(t.data[i], s),
+                    Rounding::Stochastic => {
+                        fmt.encode_stochastic(t.data[i], s, rng.uniform_f32())
+                    }
+                };
+                out.data[i] = fmt.decode(v, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn decode_lut_matches_scalar_decode_bitwise() {
+        for fmt in [LnsFormat::new(8, 8), LnsFormat::new(4, 1), LnsFormat::new(12, 128)] {
+            let lut = decode_lut(fmt);
+            assert_eq!(lut.len(), fmt.max_code() as usize + 1);
+            for (c, &mag) in lut.iter().enumerate() {
+                let want = (c as f32 / fmt.gamma as f32).exp2();
+                assert_eq!(mag.to_bits(), want.to_bits(), "{fmt:?} code {c}");
+            }
+            // Cache hit returns the same table.
+            assert!(Arc::ptr_eq(&lut, &decode_lut(fmt)));
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip_bit_identical_to_scalar_quantize() {
+        property(200, |g| {
+            let n = g.usize_in(1, 300);
+            let mut xs: Vec<f32> = (0..n)
+                .map(|_| match g.usize_in(0, 6) {
+                    0 => 0.0,
+                    1..=3 => g.normal_f32(),
+                    _ => g.lns_value(),
+                })
+                .collect();
+            let fmt = LnsFormat::new(8, 8);
+            let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let s = fmt.scale_for_absmax(absmax);
+            let want: Vec<f32> = xs.iter().map(|&x| fmt.quantize(x, s)).collect();
+            quantize_flat(&mut xs, fmt, g.usize_in(1, 6));
+            for (a, b) in xs.iter().zip(want.iter()) {
+                crate::prop_assert!(g, a.to_bits() == b.to_bits(), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn shaped_roundtrip_matches_encode_decode_per_scaling() {
+        for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+            property(120, |g| {
+                let rows = g.usize_in(1, 10);
+                let cols = g.usize_in(1, 10);
+                let data: Vec<f32> = (0..rows * cols).map(|_| g.lns_value()).collect();
+                let t = Tensor::from_vec(rows, cols, data);
+                let fmt = LnsFormat::new(8, 8);
+                let want = scalar_roundtrip(&t, fmt, scaling, Rounding::Nearest, None);
+                let mut got = t.clone();
+                let mut scratch = QuantScratch::default();
+                quantize_rows_into(
+                    &mut got.data,
+                    rows,
+                    cols,
+                    fmt,
+                    scaling,
+                    g.usize_in(1, 5),
+                    &mut scratch,
+                );
+                for (a, b) in got.data.iter().zip(want.data.iter()) {
+                    crate::prop_assert!(
+                        g,
+                        a.to_bits() == b.to_bits(),
+                        "{scaling:?}: {a} vs {b}"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn stochastic_roundtrip_matches_exact_stream() {
+        let fmt = LnsFormat::new(8, 8);
+        property(100, |g| {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(1, 8);
+            let data: Vec<f32> = (0..rows * cols).map(|_| g.lns_value()).collect();
+            let t = Tensor::from_vec(rows, cols, data);
+            let seed = g.case as u64;
+            // Exact reference: encode with the scalar stochastic path,
+            // then decode.
+            let mut rng_a = Rng::new(seed);
+            let want =
+                scalar_roundtrip(&t, fmt, Scaling::PerRow, Rounding::Stochastic, Some(&mut rng_a));
+            let mut got = t.clone();
+            let mut rng_b = Rng::new(seed);
+            let mut scratch = QuantScratch::default();
+            quantize_rows_into_rounded(
+                &mut got.data,
+                rows,
+                cols,
+                fmt,
+                Scaling::PerRow,
+                Rounding::Stochastic,
+                Some(&mut rng_b),
+                g.usize_in(1, 5),
+                &mut scratch,
+            );
+            for (a, b) in got.data.iter().zip(want.data.iter()) {
+                crate::prop_assert!(g, a.to_bits() == b.to_bits(), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn group_scales_into_matches_naive_reference() {
+        property(150, |g| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 12);
+            let data: Vec<f32> = (0..rows * cols).map(|_| g.normal_f32()).collect();
+            let t = Tensor::from_vec(rows, cols, data);
+            let fmt = LnsFormat::new(8, 8);
+            let mut out = Vec::new();
+            for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+                group_scales_into(&mut out, &t.data, rows, cols, fmt, scaling);
+                // Independent naive reference (group maxima via f64
+                // cannot drift: max is exact in any width).
+                let want: Vec<f32> = match scaling {
+                    Scaling::PerTensor => vec![fmt.scale_for_absmax(t.abs_max())],
+                    Scaling::PerRow => (0..rows)
+                        .map(|r| {
+                            let m = (0..cols).map(|c| t.at(r, c).abs()).fold(0.0f32, f32::max);
+                            fmt.scale_for_absmax(m)
+                        })
+                        .collect(),
+                    Scaling::PerCol => (0..cols)
+                        .map(|c| {
+                            let m = (0..rows).map(|r| t.at(r, c).abs()).fold(0.0f32, f32::max);
+                            fmt.scale_for_absmax(m)
+                        })
+                        .collect(),
+                };
+                crate::prop_assert!(g, out == want, "{scaling:?}: {out:?} vs {want:?}");
+            }
+            // And the public wrapper returns the same vector.
+            group_scales_into(&mut out, &t.data, rows, cols, fmt, Scaling::PerRow);
+            crate::prop_assert!(
+                g,
+                out == group_scales(&t, fmt, Scaling::PerRow),
+                "wrapper drifted"
+            );
+        });
+    }
+
+    #[test]
+    fn force_exact_is_invisible_to_results() {
+        let fmt = LnsFormat::new(8, 8);
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(13, 17, 1.0, &mut rng);
+        let mut fast = t.clone();
+        let mut scratch = QuantScratch::default();
+        quantize_rows_into(&mut fast.data, 13, 17, fmt, Scaling::PerTensor, 1, &mut scratch);
+        set_force_exact(true);
+        let mut exact = t.clone();
+        quantize_rows_into(&mut exact.data, 13, 17, fmt, Scaling::PerTensor, 1, &mut scratch);
+        set_force_exact(false);
+        assert_eq!(
+            fast.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            exact.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn nonfinite_and_zero_inputs_match_scalar_path() {
+        let fmt = LnsFormat::new(8, 8);
+        let xs = [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e-45, 1.0, -2.5];
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let s = fmt.scale_for_absmax(absmax);
+        let want: Vec<f32> = xs.iter().map(|&x| fmt.quantize(x, s)).collect();
+        let mut got = xs;
+        quantize_flat(&mut got, fmt, 1);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+}

@@ -5,7 +5,8 @@
 //! BERT), deterministic and stochastic rounding, and the encoded form
 //! used by the datapath simulator.
 
-use crate::lns::format::{LnsFormat, LnsValue, Rounding};
+use crate::lns::format::{LnsFormat, Rounding};
+use crate::lns::kernels;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -42,47 +43,74 @@ impl LnsTensor {
         }
     }
 
-    /// Decode the whole tensor back to f32.
+    /// Decode the whole tensor back to f32. Row-sliced inner loops
+    /// with the group-scale lookup hoisted per row and the exp2 served
+    /// from the cached decode LUT — bit-identical to per-element
+    /// `LnsFormat::decode` (the LUT holds the same libm values).
     pub fn decode(&self) -> Tensor {
         let mut out = Tensor::zeros(self.rows, self.cols);
+        // Oversized formats get an empty LUT; decode_one then computes
+        // the identical exp2 per element.
+        let lut_arc = kernels::decode_lut_opt(self.format);
+        let lut: &[f32] = lut_arc.as_deref().map(|v| v.as_slice()).unwrap_or(&[]);
+        let inv_gamma = 1.0 / self.format.gamma as f32;
         for r in 0..self.rows {
-            for c in 0..self.cols {
-                let i = r * self.cols + c;
-                out.data[i] = self.format.decode(
-                    LnsValue { sign: self.signs[i], code: self.codes[i] },
-                    self.scale_at(r, c),
-                );
+            let base = r * self.cols;
+            let srow = &self.signs[base..base + self.cols];
+            let crow = &self.codes[base..base + self.cols];
+            let orow = &mut out.data[base..base + self.cols];
+            match self.scaling {
+                Scaling::PerCol => {
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o = decode_one(srow[c], crow[c], self.scales[c], lut, inv_gamma);
+                    }
+                }
+                _ => {
+                    let s = if self.scaling == Scaling::PerTensor {
+                        self.scales[0]
+                    } else {
+                        self.scales[r]
+                    };
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o = decode_one(srow[c], crow[c], s, lut, inv_gamma);
+                    }
+                }
             }
         }
         out
     }
 }
 
-/// Compute group scales for `t` under `scaling`.
-pub fn group_scales(t: &Tensor, fmt: LnsFormat, scaling: Scaling) -> Vec<f32> {
-    match scaling {
-        Scaling::PerTensor => vec![fmt.scale_for_absmax(t.abs_max())],
-        Scaling::PerRow => (0..t.rows)
-            .map(|r| {
-                let m = t.data[r * t.cols..(r + 1) * t.cols]
-                    .iter()
-                    .fold(0.0f32, |m, &x| m.max(x.abs()));
-                fmt.scale_for_absmax(m)
-            })
-            .collect(),
-        Scaling::PerCol => {
-            let mut maxes = vec![0.0f32; t.cols];
-            for r in 0..t.rows {
-                for c in 0..t.cols {
-                    maxes[c] = maxes[c].max(t.at(r, c).abs());
-                }
-            }
-            maxes.into_iter().map(|m| fmt.scale_for_absmax(m)).collect()
-        }
+/// One decoded element: same op order as `LnsFormat::decode`
+/// (`sign * scale * 2^(code/gamma)`), with the exp2 from the LUT when
+/// the code is covered (always, for cacheable formats).
+#[inline(always)]
+fn decode_one(sign: i8, code: u32, scale: f32, lut: &[f32], inv_gamma: f32) -> f32 {
+    if sign == 0 {
+        return 0.0;
     }
+    let mag = match lut.get(code as usize) {
+        Some(&m) => m,
+        None => (code as f32 * inv_gamma).exp2(),
+    };
+    sign as f32 * scale * mag
 }
 
-/// Encode a tensor into LNS planes.
+/// Compute group scales for `t` under `scaling`. Thin wrapper over
+/// `kernels::group_scales_into` — the fold order is part of the
+/// bit-identity contract, so there is exactly one implementation.
+pub fn group_scales(t: &Tensor, fmt: LnsFormat, scaling: Scaling) -> Vec<f32> {
+    let mut out = Vec::new();
+    kernels::group_scales_into(&mut out, &t.data, t.rows, t.cols, fmt, scaling);
+    out
+}
+
+/// Encode a tensor into LNS planes (sequential order; see
+/// [`encode_tensor_pooled`] for the multi-worker front-end). Runs on
+/// the fused `kernels` fast path — the rounding-mode and scale
+/// dispatches are hoisted out of the inner loops, no `Rng` is built
+/// unless stochastic rounding asks for one, and emitted codes are
+/// bit-identical to per-element `LnsFormat::encode`.
 pub fn encode_tensor(
     t: &Tensor,
     fmt: LnsFormat,
@@ -90,33 +118,38 @@ pub fn encode_tensor(
     rounding: Rounding,
     rng: Option<&mut Rng>,
 ) -> LnsTensor {
+    encode_tensor_pooled(t, fmt, scaling, rounding, rng, 1)
+}
+
+/// [`encode_tensor`] with the encode pass spread across `workers`
+/// scoped threads (the datapath simulator's encode front-end). Codes
+/// are bit-identical at any worker count.
+pub fn encode_tensor_pooled(
+    t: &Tensor,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    rounding: Rounding,
+    rng: Option<&mut Rng>,
+    workers: usize,
+) -> LnsTensor {
     let scales = group_scales(t, fmt, scaling);
     let mut signs = vec![0i8; t.len()];
     let mut codes = vec![0u32; t.len()];
-    let mut local_rng;
-    let rng = match rng {
-        Some(r) => r,
-        None => {
-            local_rng = Rng::new(0);
-            &mut local_rng
-        }
-    };
-    for r in 0..t.rows {
-        for c in 0..t.cols {
-            let i = r * t.cols + c;
-            let s = match scaling {
-                Scaling::PerTensor => scales[0],
-                Scaling::PerRow => scales[r],
-                Scaling::PerCol => scales[c],
-            };
-            let v = match rounding {
-                Rounding::Nearest => fmt.encode(t.data[i], s),
-                Rounding::Stochastic => fmt.encode_stochastic(t.data[i], s, rng.uniform_f32()),
-            };
-            signs[i] = v.sign;
-            codes[i] = v.code;
-        }
-    }
+    let mut scratch = kernels::QuantScratch::default();
+    kernels::encode_rows_into(
+        &mut signs,
+        &mut codes,
+        &t.data,
+        t.rows,
+        t.cols,
+        fmt,
+        scaling,
+        rounding,
+        rng,
+        &scales,
+        workers,
+        &mut scratch,
+    );
     LnsTensor {
         rows: t.rows,
         cols: t.cols,
@@ -128,28 +161,26 @@ pub fn encode_tensor(
     }
 }
 
-/// Fake-quantize (round-trip) a tensor: Q_log with deterministic rounding.
+/// Fake-quantize (round-trip) a tensor: Q_log with deterministic
+/// rounding. Runs the fused single-pass kernel (no plane
+/// materialization); bit-identical to `encode_tensor(..).decode()`.
 pub fn quantize_tensor(t: &Tensor, fmt: LnsFormat, scaling: Scaling) -> Tensor {
-    encode_tensor(t, fmt, scaling, Rounding::Nearest, None).decode()
+    let mut out = t.clone();
+    let mut scratch = kernels::QuantScratch::default();
+    kernels::quantize_rows_into(&mut out.data, out.rows, out.cols, fmt, scaling, 1, &mut scratch);
+    out
 }
 
-/// Fake-quantize a flat slice in place with per-tensor scaling.
+/// Fake-quantize a flat slice in place with per-tensor scaling (fused
+/// fast path; bit-identical to per-element `LnsFormat::quantize`).
 pub fn quantize_slice(xs: &mut [f32], fmt: LnsFormat) {
-    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-    let s = fmt.scale_for_absmax(absmax);
-    for x in xs.iter_mut() {
-        *x = fmt.quantize(*x, s);
-    }
+    kernels::quantize_flat(xs, fmt, 1);
 }
 
 /// Fake-quantize with stochastic rounding (the theory setting of §4.2).
 pub fn quantize_slice_stochastic(xs: &mut [f32], fmt: LnsFormat, rng: &mut Rng) {
-    let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-    let s = fmt.scale_for_absmax(absmax);
-    for x in xs.iter_mut() {
-        let v = fmt.encode_stochastic(*x, s, rng.uniform_f32());
-        *x = fmt.decode(v, s);
-    }
+    let mut scratch = kernels::QuantScratch::default();
+    kernels::quantize_flat_stochastic(xs, fmt, rng, 1, &mut scratch);
 }
 
 #[cfg(test)]

@@ -15,7 +15,7 @@
 //! and bias gradients stay FP32 like the paper's non-GEMM ops.
 
 use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
-use crate::model::{softmax, NativeModel, TrainQuant};
+use crate::model::{softmax_inplace, NativeModel, TrainQuant, Workspace};
 use crate::util::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -27,11 +27,15 @@ pub struct CharLmModel {
     /// Host threads for the fwd/bwd GEMMs (1 = sequential; results are
     /// bit-identical at any setting — see `Tensor::matmul_p`).
     pub workers: usize,
+    /// Per-model scratch reused across steps: staging buffers for the
+    /// quantized weight/activation tensors and the quantizer kernels'
+    /// scales — no steady-state allocation on the step path.
+    ws: Workspace,
 }
 
 impl CharLmModel {
     pub fn new(vocab: usize, seq: usize, d_model: usize, d_ff: usize) -> Self {
-        CharLmModel { vocab, seq, d_model, d_ff, workers: 1 }
+        CharLmModel { vocab, seq, d_model, d_ff, workers: 1, ws: Workspace::new() }
     }
 
     fn check_params(&self, params: &[Param]) -> Result<()> {
@@ -80,10 +84,11 @@ impl CharLmModel {
         shape: [usize; 2],
         tok_emb: &Param,
         pos_emb: &Param,
+        ws: &mut Workspace,
     ) -> Result<Tensor> {
         let (bsz, t) = (shape[0], shape[1]);
         let d = self.d_model;
-        let mut x = Tensor::zeros(bsz * t, d);
+        let mut x = ws.tensor_zeroed(bsz * t, d);
         for (bt, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
             if tok >= self.vocab {
@@ -100,38 +105,47 @@ impl CharLmModel {
         Ok(x)
     }
 
-    /// Forward pass; returns everything backward needs.
+    /// Forward pass; returns everything backward needs. Every
+    /// intermediate is staged on `ws` (the old per-step
+    /// `w1.data.clone()` / `head.data.clone()` uploads and
+    /// `Tensor::zeros` embeds now reuse pooled buffers) and quantized
+    /// in place on the pooled kernels — bit-identical to the
+    /// allocating path.
     #[allow(clippy::type_complexity)]
     fn forward_full(
         &self,
         params: &[Param],
         batch: &Batch,
         q: &TrainQuant,
+        ws: &mut Workspace,
     ) -> Result<(ForwardState, Vec<usize>)> {
         self.check_params(params)?;
         let (shape, tokens, targets) = self.unpack(batch)?;
         let (tok_emb, pos_emb) = (&params[0], &params[1]);
         let (w1, b1, head) = (&params[2], &params[3], &params[4]);
 
-        // apply_owned: the operands are freshly materialized, so the
-        // quantizers work in place instead of staging another copy.
-        let x = self.embed(tokens, shape, tok_emb, pos_emb)?;
-        let xq = q.forward.apply_owned(x);
-        let w1q = q
-            .forward
-            .apply_owned(Tensor::from_vec(self.d_model, self.d_ff, w1.data.clone()));
-        let mut z1 = xq.matmul_p(&w1q, self.workers);
+        let mut xq = self.embed(tokens, shape, tok_emb, pos_emb, ws)?;
+        q.forward.apply_into(&mut xq, self.workers, &mut ws.quant);
+        let mut w1q = ws.tensor_copy(self.d_model, self.d_ff, &w1.data);
+        q.forward.apply_into(&mut w1q, self.workers, &mut ws.quant);
+        let mut z1 = ws.tensor_for_gemm(xq.rows, w1q.cols);
+        xq.matmul_into(&w1q, &mut z1, self.workers);
         for r in 0..z1.rows {
             for c in 0..z1.cols {
                 *z1.at_mut(r, c) += b1.data[c];
             }
         }
-        let h1q = q.forward.apply_owned(z1.map(|v| v.max(0.0)));
-        let headq = q
-            .forward
-            .apply_owned(Tensor::from_vec(self.d_ff, self.vocab, head.data.clone()));
-        let logits = h1q.matmul_p(&headq, self.workers);
-        let probs = softmax(&logits);
+        let mut h1q = ws.tensor_copy_of(&z1);
+        for v in h1q.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        q.forward.apply_into(&mut h1q, self.workers, &mut ws.quant);
+        let mut headq = ws.tensor_copy(self.d_ff, self.vocab, &head.data);
+        q.forward.apply_into(&mut headq, self.workers, &mut ws.quant);
+        let mut logits = ws.tensor_for_gemm(h1q.rows, headq.cols);
+        h1q.matmul_into(&headq, &mut logits, self.workers);
+        softmax_inplace(&mut logits);
+        let probs = logits;
         let y: Vec<usize> = targets.iter().map(|&v| v as usize).collect();
         if let Some(&bad) = y.iter().find(|&&t| t >= self.vocab) {
             bail!("target {bad} out of vocab {}", self.vocab);
@@ -159,6 +173,91 @@ impl CharLmModel {
         }
         (loss / y.len() as f32, correct as f32 / y.len() as f32)
     }
+
+    /// The fwd/bwd step body over an explicit workspace (Fig. 3
+    /// placement; bit-identical to the legacy allocating path).
+    fn forward_backward_ws(
+        &self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+        ws: &mut Workspace,
+    ) -> Result<StepOutput> {
+        let (st, y) = self.forward_full(params, batch, q, ws)?;
+        let (loss, acc) = Self::loss_acc(&st.probs, &y);
+
+        let n = y.len() as f32;
+        let d = self.d_model;
+        let ForwardState { shape, tokens, xq, w1q, z1, h1q, headq, probs } = st;
+
+        // dL/dlogits = (probs - onehot)/n, then Q_E into GEMM 2. The
+        // softmax output is consumed in place (loss/acc are done with
+        // it), killing the old `probs.clone()`.
+        let mut dzq = probs;
+        for (r, &t) in y.iter().enumerate() {
+            *dzq.at_mut(r, t) -= 1.0;
+        }
+        for v in dzq.data.iter_mut() {
+            *v /= n;
+        }
+        q.backward.apply_into(&mut dzq, self.workers, &mut ws.quant);
+
+        // head grad: h1q^T @ dz, then Q_G (fresh buffer: it is returned).
+        let mut ghead = Tensor::zeros(h1q.cols, dzq.cols);
+        h1q.t_matmul_into(&dzq, &mut ghead, self.workers);
+        q.backward.apply_into(&mut ghead, self.workers, &mut ws.quant);
+
+        // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
+        let mut dh1 = ws.tensor_for_gemm(dzq.rows, headq.rows);
+        dzq.matmul_t_into(&headq, &mut dh1, self.workers);
+        for (g, z) in dh1.data.iter_mut().zip(z1.data.iter()) {
+            *g = if *z > 0.0 { *g } else { 0.0 };
+        }
+        let mut dh1q = ws.tensor_copy_of(&dh1);
+        q.backward.apply_into(&mut dh1q, self.workers, &mut ws.quant);
+
+        // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
+        let mut gw1 = Tensor::zeros(xq.cols, dh1q.cols);
+        xq.t_matmul_into(&dh1q, &mut gw1, self.workers);
+        q.backward.apply_into(&mut gw1, self.workers, &mut ws.quant);
+        let mut gb1 = vec![0.0f32; self.d_ff];
+        for r in 0..dh1.rows {
+            for (c, g) in gb1.iter_mut().enumerate() {
+                *g += dh1.at(r, c);
+            }
+        }
+
+        // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
+        // non-GEMM ops like the paper).
+        let mut dx = ws.tensor_for_gemm(dh1q.rows, w1q.rows);
+        dh1q.matmul_t_into(&w1q, &mut dx, self.workers);
+        let mut gtok = vec![0.0f32; self.vocab * d];
+        let mut gpos = vec![0.0f32; self.seq * d];
+        let t_len = shape[1];
+        for (bt, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            let pos = bt % t_len;
+            let row = &dx.data[bt * d..(bt + 1) * d];
+            let gt = &mut gtok[tok * d..(tok + 1) * d];
+            for (g, &v) in gt.iter_mut().zip(row.iter()) {
+                *g += v;
+            }
+            let gp = &mut gpos[pos * d..(pos + 1) * d];
+            for (g, &v) in gp.iter_mut().zip(row.iter()) {
+                *g += v;
+            }
+        }
+
+        for t in [xq, w1q, z1, h1q, headq, dzq, dh1, dh1q, dx] {
+            ws.recycle_tensor(t);
+        }
+
+        Ok(StepOutput {
+            loss,
+            acc: Some(acc),
+            grads: vec![gtok, gpos, gw1.data, gb1, ghead.data],
+        })
+    }
 }
 
 /// Cached forward tensors for backprop.
@@ -171,6 +270,17 @@ struct ForwardState {
     h1q: Tensor,
     headq: Tensor,
     probs: Tensor,
+}
+
+impl ForwardState {
+    /// Hand every cached buffer back to the workspace (the eval path;
+    /// backward destructures the state instead, reusing `probs` as the
+    /// logits-gradient buffer).
+    fn recycle(self, ws: &mut Workspace) {
+        for t in [self.xq, self.w1q, self.z1, self.h1q, self.headq, self.probs] {
+            ws.recycle_tensor(t);
+        }
+    }
 }
 
 impl NativeModel for CharLmModel {
@@ -194,69 +304,32 @@ impl NativeModel for CharLmModel {
     }
 
     fn forward_backward(
-        &self,
+        &mut self,
         params: &[Param],
         batch: &Batch,
         q: &TrainQuant,
     ) -> Result<StepOutput> {
-        let (st, y) = self.forward_full(params, batch, q)?;
-        let (loss, acc) = Self::loss_acc(&st.probs, &y);
-
-        let n = y.len() as f32;
-        let d = self.d_model;
-        // dL/dlogits = (probs - onehot)/n, then Q_E into GEMM 2.
-        let mut dz = st.probs.clone();
-        for (r, &t) in y.iter().enumerate() {
-            *dz.at_mut(r, t) -= 1.0;
-        }
-        let dzq = q.backward.apply_owned(dz.map(|v| v / n));
-
-        // head grad: h1q^T @ dz, then Q_G.
-        let ghead = q.backward.apply_owned(st.h1q.t_matmul_p(&dzq, self.workers));
-        // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
-        let dh1 = dzq.matmul_t_p(&st.headq, self.workers);
-        let dh1 = dh1.zip(&st.z1, |g, z| if z > 0.0 { g } else { 0.0 });
-        let dh1q = q.backward.apply(&dh1);
-
-        // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
-        let gw1 = q.backward.apply_owned(st.xq.t_matmul_p(&dh1q, self.workers));
-        let mut gb1 = vec![0.0f32; self.d_ff];
-        for r in 0..dh1.rows {
-            for (c, g) in gb1.iter_mut().enumerate() {
-                *g += dh1.at(r, c);
-            }
-        }
-
-        // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
-        // non-GEMM ops like the paper).
-        let dx = dh1q.matmul_t_p(&st.w1q, self.workers);
-        let mut gtok = vec![0.0f32; self.vocab * d];
-        let mut gpos = vec![0.0f32; self.seq * d];
-        let t_len = st.shape[1];
-        for (bt, &tok) in st.tokens.iter().enumerate() {
-            let tok = tok as usize;
-            let pos = bt % t_len;
-            let row = &dx.data[bt * d..(bt + 1) * d];
-            let gt = &mut gtok[tok * d..(tok + 1) * d];
-            for (g, &v) in gt.iter_mut().zip(row.iter()) {
-                *g += v;
-            }
-            let gp = &mut gpos[pos * d..(pos + 1) * d];
-            for (g, &v) in gp.iter_mut().zip(row.iter()) {
-                *g += v;
-            }
-        }
-
-        Ok(StepOutput {
-            loss,
-            acc: Some(acc),
-            grads: vec![gtok, gpos, gw1.data, gb1, ghead.data],
-        })
+        let mut ws = std::mem::take(&mut self.ws);
+        let result = self.forward_backward_ws(params, batch, q, &mut ws);
+        self.ws = ws;
+        result
     }
 
-    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)> {
-        let (st, y) = self.forward_full(params, batch, q)?;
-        Ok(Self::loss_acc(&st.probs, &y))
+    fn forward_eval(
+        &mut self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+    ) -> Result<(f32, f32)> {
+        let mut ws = std::mem::take(&mut self.ws);
+        let result = (|| {
+            let (st, y) = self.forward_full(params, batch, q, &mut ws)?;
+            let out = Self::loss_acc(&st.probs, &y);
+            st.recycle(&mut ws);
+            Ok(out)
+        })();
+        self.ws = ws;
+        result
     }
 
     fn set_parallelism(&mut self, workers: usize) {
@@ -283,7 +356,7 @@ mod tests {
 
     #[test]
     fn loss_at_init_is_near_uniform() {
-        let model = tiny();
+        let mut model = tiny();
         let mut rng = Rng::new(1);
         let params = init_params(&model.param_specs(), &mut rng);
         let batch = tiny_batch(&model, &mut rng);
@@ -297,7 +370,7 @@ mod tests {
 
     #[test]
     fn gradients_match_finite_differences_fp32() {
-        let model = tiny();
+        let mut model = tiny();
         let mut rng = Rng::new(2);
         let mut params = init_params(&model.param_specs(), &mut rng);
         let batch = tiny_batch(&model, &mut rng);
@@ -326,7 +399,7 @@ mod tests {
 
     #[test]
     fn grads_align_with_param_specs() {
-        let model = tiny();
+        let mut model = tiny();
         let mut rng = Rng::new(3);
         let params = init_params(&model.param_specs(), &mut rng);
         let batch = tiny_batch(&model, &mut rng);

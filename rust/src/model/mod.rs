@@ -17,7 +17,8 @@
 
 use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
 use crate::lns::format::LnsFormat;
-use crate::lns::quant::{quantize_slice, quantize_tensor, Scaling};
+use crate::lns::kernels::{self, QuantScratch};
+use crate::lns::quant::Scaling;
 use crate::lns::softfloat::{FixedPoint, MiniFloat};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -46,44 +47,40 @@ impl QuantKind {
         QuantKind::Lns { fmt: LnsFormat::PAPER8, scaling: Scaling::PerTensor }
     }
 
-    pub fn apply(&self, t: &Tensor) -> Tensor {
+    /// In-place fake-quantization on the fused pooled kernels — the
+    /// per-step hot path. Every format and every LNS scaling (PerRow
+    /// and PerCol included) quantizes in place; no staging copy, no
+    /// plane materialization. Results are bit-identical at any
+    /// `workers` count.
+    pub fn apply_into(&self, t: &mut Tensor, workers: usize, scratch: &mut QuantScratch) {
         match self {
-            QuantKind::None => t.clone(),
-            QuantKind::Lns { fmt, scaling } => quantize_tensor(t, *fmt, *scaling),
-            QuantKind::Fp8 => {
-                let mut data = t.data.clone();
-                MiniFloat::E4M3.quantize_scaled(&mut data);
-                Tensor::from_vec(t.rows, t.cols, data)
-            }
-            QuantKind::Int { bits } => {
-                let mut data = t.data.clone();
-                FixedPoint { bits: *bits }.quantize_scaled(&mut data);
-                Tensor::from_vec(t.rows, t.cols, data)
-            }
+            QuantKind::None => {}
+            QuantKind::Lns { fmt, scaling } => kernels::quantize_rows_into(
+                &mut t.data,
+                t.rows,
+                t.cols,
+                *fmt,
+                *scaling,
+                workers,
+                scratch,
+            ),
+            QuantKind::Fp8 => MiniFloat::E4M3.quantize_scaled(&mut t.data),
+            QuantKind::Int { bits } => FixedPoint { bits: *bits }.quantize_scaled(&mut t.data),
         }
     }
 
+    pub fn apply(&self, t: &Tensor) -> Tensor {
+        let mut out = t.clone();
+        self.apply_into(&mut out, 1, &mut QuantScratch::default());
+        out
+    }
+
     /// Like [`QuantKind::apply`] but consumes the tensor, quantizing
-    /// in place where the format allows — the hot-path variant for
-    /// operands just materialized from flat `Param` storage (skips
-    /// the staging copy `apply` would make).
+    /// in place — the variant for operands just materialized from flat
+    /// `Param` storage (skips the staging copy `apply` would make).
     pub fn apply_owned(&self, mut t: Tensor) -> Tensor {
-        match self {
-            QuantKind::None => t,
-            QuantKind::Lns { fmt, scaling: Scaling::PerTensor } => {
-                quantize_slice(&mut t.data, *fmt);
-                t
-            }
-            QuantKind::Lns { fmt, scaling } => quantize_tensor(&t, *fmt, *scaling),
-            QuantKind::Fp8 => {
-                MiniFloat::E4M3.quantize_scaled(&mut t.data);
-                t
-            }
-            QuantKind::Int { bits } => {
-                FixedPoint { bits: *bits }.quantize_scaled(&mut t.data);
-                t
-            }
-        }
+        self.apply_into(&mut t, 1, &mut QuantScratch::default());
+        t
     }
 
     pub fn name(&self) -> String {
@@ -115,6 +112,97 @@ impl TrainQuant {
     }
 }
 
+/// Reusable per-model scratch: a free list of f32 buffers plus the
+/// quantizer kernels' [`QuantScratch`]. Kills the per-step staging
+/// copies (`w.data.clone()` weight uploads) and `Tensor::zeros`
+/// allocations in fwd/bwd — after the first step, every intermediate
+/// tensor is drawn from and returned to this pool.
+///
+/// Buffers handed out by `grab_*` carry no history: they are zero- or
+/// copy-initialized in full, so recycling can never leak one step's
+/// values into the next (determinism is load-bearing here). The one
+/// deliberate exception is [`Workspace::tensor_for_gemm`], whose
+/// contract is that the receiving `Tensor::*_into` kernel overwrites
+/// every element unconditionally before any read.
+#[derive(Default)]
+pub struct Workspace {
+    /// Scratch for the quantizer kernels (group scales, uniforms).
+    pub quant: QuantScratch,
+    pool: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Pop a pooled buffer with enough capacity for `len` (largest-fit
+    /// fallback: any buffer grows on demand).
+    fn pop(&mut self, len: usize) -> Vec<f32> {
+        if let Some(i) = self.pool.iter().position(|v| v.capacity() >= len) {
+            self.pool.swap_remove(i)
+        } else {
+            self.pool.pop().unwrap_or_default()
+        }
+    }
+
+    /// A buffer of `len` zeros.
+    pub fn grab_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pop(len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn grab_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.pop(src.len());
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// A zeroed (rows x cols) tensor on a pooled buffer.
+    pub fn tensor_zeroed(&mut self, rows: usize, cols: usize) -> Tensor {
+        Tensor::from_vec(rows, cols, self.grab_zeroed(rows * cols))
+    }
+
+    /// A (rows x cols) tensor on a pooled buffer with *unspecified*
+    /// contents — only for outputs whose callee unconditionally
+    /// overwrites every element (the `Tensor::*_into` GEMMs zero-fill
+    /// internally, so zeroing here too would memset twice per step).
+    pub fn tensor_for_gemm(&mut self, rows: usize, cols: usize) -> Tensor {
+        let n = rows * cols;
+        let mut v = self.pop(n);
+        // resize only zero-fills growth beyond the stale prefix; a
+        // same-size reuse is free.
+        v.resize(n, 0.0);
+        Tensor::from_vec(rows, cols, v)
+    }
+
+    /// A (rows x cols) tensor copying `src` onto a pooled buffer.
+    pub fn tensor_copy(&mut self, rows: usize, cols: usize, src: &[f32]) -> Tensor {
+        Tensor::from_vec(rows, cols, self.grab_copy(src))
+    }
+
+    /// A pooled copy of an existing tensor.
+    pub fn tensor_copy_of(&mut self, t: &Tensor) -> Tensor {
+        self.tensor_copy(t.rows, t.cols, &t.data)
+    }
+
+    /// Return a buffer to the pool.
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// Return a tensor's buffer to the pool.
+    pub fn recycle_tensor(&mut self, t: Tensor) {
+        self.recycle(t.data);
+    }
+}
+
 /// The MLP: GEMM + bias + ReLU stack with softmax cross-entropy loss.
 pub struct MlpModel {
     pub sizes: Vec<usize>,
@@ -137,6 +225,17 @@ pub struct ForwardCache {
     pub probs: Tensor,
 }
 
+impl ForwardCache {
+    /// Return every cached buffer to the workspace once backward is
+    /// done with it.
+    pub fn recycle(self, ws: &mut Workspace) {
+        for t in self.inputs.into_iter().chain(self.wq).chain(self.z) {
+            ws.recycle_tensor(t);
+        }
+        ws.recycle_tensor(self.probs);
+    }
+}
+
 impl MlpModel {
     pub fn init(sizes: &[usize], rng: &mut Rng) -> Self {
         let mut weights = Vec::new();
@@ -155,30 +254,44 @@ impl MlpModel {
 
     /// Forward pass with Q_W/Q_A; returns logits + cache.
     pub fn forward(&self, x: &Tensor, q: &TrainQuant) -> ForwardCache {
-        let mut h = x.clone();
-        let mut inputs = Vec::new();
-        let mut wqs = Vec::new();
-        let mut zs = Vec::new();
+        self.forward_ws(x, q, &mut Workspace::new())
+    }
+
+    /// [`MlpModel::forward`] drawing every intermediate (quantized
+    /// activations/weights, pre-activations, probabilities) from the
+    /// workspace pool and quantizing in place on the pooled kernels —
+    /// allocation-free once the pool is warm, bit-identical to the
+    /// allocating path.
+    pub fn forward_ws(&self, x: &Tensor, q: &TrainQuant, ws: &mut Workspace) -> ForwardCache {
+        let mut inputs = Vec::with_capacity(self.n_layers());
+        let mut wqs = Vec::with_capacity(self.n_layers());
+        let mut zs = Vec::with_capacity(self.n_layers());
+        let mut h = ws.tensor_copy_of(x);
         for (l, w) in self.weights.iter().enumerate() {
-            let hq = q.forward.apply(&h);
-            let wq = q.forward.apply(w);
-            let mut z = hq.matmul_p(&wq, self.workers);
+            let mut hq = h;
+            q.forward.apply_into(&mut hq, self.workers, &mut ws.quant);
+            let mut wq = ws.tensor_copy_of(w);
+            q.forward.apply_into(&mut wq, self.workers, &mut ws.quant);
+            let mut z = ws.tensor_for_gemm(hq.rows, wq.cols);
+            hq.matmul_into(&wq, &mut z, self.workers);
             for r in 0..z.rows {
                 for c in 0..z.cols {
                     *z.at_mut(r, c) += self.biases[l][c];
                 }
             }
+            let mut next = ws.tensor_copy_of(&z);
+            if l + 1 < self.weights.len() {
+                for v in next.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
             inputs.push(hq);
             wqs.push(wq);
-            zs.push(z.clone());
-            h = if l + 1 < self.weights.len() {
-                z.map(|v| v.max(0.0))
-            } else {
-                z
-            };
+            zs.push(z);
+            h = next;
         }
-        let probs = softmax(&h);
-        ForwardCache { inputs, wq: wqs, z: zs, probs }
+        softmax_inplace(&mut h);
+        ForwardCache { inputs, wq: wqs, z: zs, probs: h }
     }
 
     /// Mean cross-entropy of cached probs vs labels.
@@ -216,22 +329,41 @@ impl MlpModel {
         labels: &[usize],
         q: &TrainQuant,
     ) -> (Vec<Tensor>, Vec<Vec<f32>>) {
+        self.backward_ws(cache, labels, q, &mut Workspace::new())
+    }
+
+    /// [`MlpModel::backward`] on workspace-pooled intermediates. The
+    /// returned gradients are freshly allocated (they outlive the
+    /// step); everything transient cycles through `ws`.
+    pub fn backward_ws(
+        &self,
+        cache: &ForwardCache,
+        labels: &[usize],
+        q: &TrainQuant,
+        ws: &mut Workspace,
+    ) -> (Vec<Tensor>, Vec<Vec<f32>>) {
         let batch = labels.len() as f32;
         // dL/dz_last = (probs - onehot)/batch.
-        let mut dz = cache.probs.clone();
+        let mut dz = ws.tensor_copy_of(&cache.probs);
         for (r, &y) in labels.iter().enumerate() {
             *dz.at_mut(r, y) -= 1.0;
         }
-        dz = dz.map(|v| v / batch);
+        for v in dz.data.iter_mut() {
+            *v /= batch;
+        }
 
         let mut wgrads = vec![Tensor::zeros(1, 1); self.n_layers()];
         let mut bgrads = vec![Vec::new(); self.n_layers()];
         for l in (0..self.n_layers()).rev() {
             // Q_E on the activation gradient entering this layer's GEMMs.
-            let dzq = q.backward.apply(&dz);
-            // Weight grad: x_q^T @ dz, then Q_G.
-            let gw = cache.inputs[l].t_matmul_p(&dzq, self.workers);
-            wgrads[l] = q.backward.apply(&gw);
+            let mut dzq = ws.tensor_copy_of(&dz);
+            q.backward.apply_into(&mut dzq, self.workers, &mut ws.quant);
+            // Weight grad: x_q^T @ dz, then Q_G. (Fresh tensor: it is
+            // returned to the caller.)
+            let mut gw = Tensor::zeros(cache.inputs[l].cols, dzq.cols);
+            cache.inputs[l].t_matmul_into(&dzq, &mut gw, self.workers);
+            q.backward.apply_into(&mut gw, self.workers, &mut ws.quant);
+            wgrads[l] = gw;
             // Bias grad: column sums of dz (kept FP32 like the paper's
             // non-GEMM ops).
             let mut gb = vec![0.0f32; dz.cols];
@@ -243,11 +375,17 @@ impl MlpModel {
             bgrads[l] = gb;
             if l > 0 {
                 // dh = dz @ w_q^T, masked by ReLU'(z_{l-1}), then Q_E.
-                let dh = dzq.matmul_t_p(&cache.wq[l], self.workers);
+                let mut dh = ws.tensor_for_gemm(dzq.rows, cache.wq[l].rows);
+                dzq.matmul_t_into(&cache.wq[l], &mut dh, self.workers);
                 let mask = &cache.z[l - 1];
-                dz = dh.zip(mask, |g, z| if z > 0.0 { g } else { 0.0 });
+                for (g, z) in dh.data.iter_mut().zip(mask.data.iter()) {
+                    *g = if *z > 0.0 { *g } else { 0.0 };
+                }
+                ws.recycle_tensor(std::mem::replace(&mut dz, dh));
             }
+            ws.recycle_tensor(dzq);
         }
+        ws.recycle_tensor(dz);
         (wgrads, bgrads)
     }
 }
@@ -267,11 +405,15 @@ pub trait NativeModel: Send {
     fn contract(&self, batch: usize) -> ModelContract;
 
     /// One fwd/bwd pass; `grads` align positionally with `params`.
-    fn forward_backward(&self, params: &[Param], batch: &Batch, q: &TrainQuant)
+    /// Takes `&mut self` so implementations can reuse a per-model
+    /// [`Workspace`] across steps (pure wall-clock state: results are
+    /// a function of the arguments only).
+    fn forward_backward(&mut self, params: &[Param], batch: &Batch, q: &TrainQuant)
         -> Result<StepOutput>;
 
     /// Forward-only held-out pass: `(loss, accuracy)`.
-    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)>;
+    fn forward_eval(&mut self, params: &[Param], batch: &Batch, q: &TrainQuant)
+        -> Result<(f32, f32)>;
 
     /// Set the host-thread count for the fwd/bwd GEMM hot path
     /// (resolved from `TrainConfig::parallelism`; 1 = sequential).
@@ -351,17 +493,21 @@ pub fn init_params(specs: &[(String, Vec<usize>)], rng: &mut Rng) -> Vec<Param> 
 }
 
 /// The MLP family as a [`NativeModel`]: assembles an [`MlpModel`] view
-/// from the flat `[w0, b0, w1, b1, ...]` parameter list each step.
+/// from the flat `[w0, b0, w1, b1, ...]` parameter list each step,
+/// with the per-step weight upload staged on a reusable [`Workspace`]
+/// (no steady-state allocation).
 pub struct NativeMlp {
     pub sizes: Vec<usize>,
     /// GEMM worker threads, forwarded into every assembled [`MlpModel`].
     pub workers: usize,
+    /// Per-model scratch reused across steps.
+    ws: Workspace,
 }
 
 impl NativeMlp {
     pub fn new(sizes: Vec<usize>) -> Self {
         assert!(sizes.len() >= 2, "mlp needs at least one layer");
-        NativeMlp { sizes, workers: 1 }
+        NativeMlp { sizes, workers: 1, ws: Workspace::new() }
     }
 
     /// Materialize the layer view from flat storage. One copy of the
@@ -369,6 +515,12 @@ impl NativeMlp {
     /// backend pays when it builds input literals; hoist it when the
     /// params are frozen across calls (see `sweep::run_sweep`'s eval).
     pub fn assemble(&self, params: &[Param]) -> Result<MlpModel> {
+        self.assemble_ws(params, &mut Workspace::new())
+    }
+
+    /// [`NativeMlp::assemble`] with weight buffers drawn from a
+    /// workspace pool; `MlpModel::recycle` hands them back.
+    fn assemble_ws(&self, params: &[Param], ws: &mut Workspace) -> Result<MlpModel> {
         let n_layers = self.sizes.len() - 1;
         if params.len() != 2 * n_layers {
             bail!("mlp expects {} params (w/b per layer), got {}", 2 * n_layers, params.len());
@@ -380,19 +532,28 @@ impl NativeMlp {
             if w.shape != [self.sizes[l], self.sizes[l + 1]] || b.shape != [self.sizes[l + 1]] {
                 bail!("mlp layer {l}: shape mismatch ({:?} / {:?})", w.shape, b.shape);
             }
-            weights.push(Tensor::from_vec(self.sizes[l], self.sizes[l + 1], w.data.clone()));
+            weights.push(ws.tensor_copy(self.sizes[l], self.sizes[l + 1], &w.data));
             biases.push(b.data.clone());
         }
         Ok(MlpModel { sizes: self.sizes.clone(), weights, biases, workers: self.workers })
     }
 
-    fn unpack(&self, batch: &Batch) -> Result<(Tensor, Vec<usize>)> {
+    fn unpack(&self, batch: &Batch, ws: &mut Workspace) -> Result<(Tensor, Vec<usize>)> {
         match batch {
             Batch::Classification { shape, xs, ys } => Ok((
-                Tensor::from_vec(shape[0], shape[1], xs.clone()),
+                ws.tensor_copy(shape[0], shape[1], xs),
                 ys.iter().map(|&v| v as usize).collect(),
             )),
             Batch::Lm { .. } => bail!("mlp family expects a classification batch"),
+        }
+    }
+}
+
+impl MlpModel {
+    /// Return the assembled weight buffers to a workspace.
+    pub fn recycle(self, ws: &mut Workspace) {
+        for w in self.weights {
+            ws.recycle_tensor(w);
         }
     }
 }
@@ -417,30 +578,54 @@ impl NativeModel for NativeMlp {
     }
 
     fn forward_backward(
-        &self,
+        &mut self,
         params: &[Param],
         batch: &Batch,
         q: &TrainQuant,
     ) -> Result<StepOutput> {
-        let (x, y) = self.unpack(batch)?;
-        let model = self.assemble(params)?;
-        let cache = model.forward(&x, q);
-        let loss = model.loss(&cache, &y);
-        let acc = model.accuracy(&cache, &y);
-        let (wg, bg) = model.backward(&cache, &y, q);
-        let mut grads = Vec::with_capacity(params.len());
-        for (gw, gb) in wg.into_iter().zip(bg.into_iter()) {
-            grads.push(gw.data);
-            grads.push(gb);
-        }
-        Ok(StepOutput { loss, acc: Some(acc), grads })
+        // Take the workspace so the assembled model (borrowing nothing
+        // from self) and the pool can be used side by side.
+        let mut ws = std::mem::take(&mut self.ws);
+        let result = (|| {
+            let (x, y) = self.unpack(batch, &mut ws)?;
+            let model = self.assemble_ws(params, &mut ws)?;
+            let cache = model.forward_ws(&x, q, &mut ws);
+            let loss = model.loss(&cache, &y);
+            let acc = model.accuracy(&cache, &y);
+            let (wg, bg) = model.backward_ws(&cache, &y, q, &mut ws);
+            cache.recycle(&mut ws);
+            model.recycle(&mut ws);
+            ws.recycle_tensor(x);
+            let mut grads = Vec::with_capacity(params.len());
+            for (gw, gb) in wg.into_iter().zip(bg.into_iter()) {
+                grads.push(gw.data);
+                grads.push(gb);
+            }
+            Ok(StepOutput { loss, acc: Some(acc), grads })
+        })();
+        self.ws = ws;
+        result
     }
 
-    fn forward_eval(&self, params: &[Param], batch: &Batch, q: &TrainQuant) -> Result<(f32, f32)> {
-        let (x, y) = self.unpack(batch)?;
-        let model = self.assemble(params)?;
-        let cache = model.forward(&x, q);
-        Ok((model.loss(&cache, &y), model.accuracy(&cache, &y)))
+    fn forward_eval(
+        &mut self,
+        params: &[Param],
+        batch: &Batch,
+        q: &TrainQuant,
+    ) -> Result<(f32, f32)> {
+        let mut ws = std::mem::take(&mut self.ws);
+        let result = (|| {
+            let (x, y) = self.unpack(batch, &mut ws)?;
+            let model = self.assemble_ws(params, &mut ws)?;
+            let cache = model.forward_ws(&x, q, &mut ws);
+            let out = (model.loss(&cache, &y), model.accuracy(&cache, &y));
+            cache.recycle(&mut ws);
+            model.recycle(&mut ws);
+            ws.recycle_tensor(x);
+            Ok(out)
+        })();
+        self.ws = ws;
+        result
     }
 
     fn set_parallelism(&mut self, workers: usize) {
@@ -448,8 +633,9 @@ impl NativeModel for NativeMlp {
     }
 }
 
-pub(crate) fn softmax(logits: &Tensor) -> Tensor {
-    let mut out = logits.clone();
+/// Row softmax in place (the hot-path form; values identical to
+/// cloning first).
+pub(crate) fn softmax_inplace(out: &mut Tensor) {
     for r in 0..out.rows {
         let row = &mut out.data[r * out.cols..(r + 1) * out.cols];
         let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
@@ -462,7 +648,6 @@ pub(crate) fn softmax(logits: &Tensor) -> Tensor {
             *v /= sum;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -600,7 +785,7 @@ mod tests {
 
     #[test]
     fn native_mlp_forward_backward_matches_direct_model() {
-        let m = NativeMlp::new(vec![6, 12, 4]);
+        let mut m = NativeMlp::new(vec![6, 12, 4]);
         let mut rng = Rng::new(7);
         let params = init_params(&m.param_specs(), &mut rng);
         let direct = m.assemble(&params).unwrap();
@@ -638,5 +823,67 @@ mod tests {
         let other = NativeMlp::new(vec![4, 4]);
         let params = init_params(&other.param_specs(), &mut rng);
         assert!(m.assemble(&params).is_err());
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_deterministic() {
+        // Re-running the same step through a warm (recycled-buffer)
+        // workspace must reproduce the cold run exactly: pooled
+        // buffers carry no history by construction.
+        let mut m = NativeMlp::new(vec![8, 16, 4]);
+        let mut rng = Rng::new(11);
+        let params = init_params(&m.param_specs(), &mut rng);
+        let mut drng = Rng::new(12);
+        let (x, y) = tiny_batch(&mut drng, 16, 8, 4);
+        let ys: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let batch = Batch::Classification { shape: [16, 8], xs: x.data.clone(), ys };
+        let q = TrainQuant::lns8();
+
+        let cold = m.forward_backward(&params, &batch, &q).unwrap();
+        for _ in 0..3 {
+            let warm = m.forward_backward(&params, &batch, &q).unwrap();
+            assert_eq!(cold.loss.to_bits(), warm.loss.to_bits());
+            assert_eq!(cold.grads, warm.grads, "warm workspace changed a gradient");
+        }
+    }
+
+    #[test]
+    fn workspace_grab_initializes_fully() {
+        let mut ws = Workspace::new();
+        // Poison a buffer, recycle it, and regrab larger/smaller.
+        let mut v = ws.grab_zeroed(8);
+        v.iter_mut().for_each(|x| *x = f32::NAN);
+        ws.recycle(v);
+        assert!(ws.grab_zeroed(4).iter().all(|&x| x == 0.0));
+        let mut v = ws.grab_copy(&[1.0, 2.0]);
+        assert_eq!(v, vec![1.0, 2.0]);
+        v.push(3.0);
+        ws.recycle(v);
+        let t = ws.tensor_zeroed(3, 5);
+        assert_eq!((t.rows, t.cols), (3, 5));
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quantkind_apply_into_in_place_for_all_scalings() {
+        // Satellite: PerRow/PerCol used to fall back to the allocating
+        // quantize_tensor; all scalings now quantize in place and match
+        // the allocating reference bit for bit.
+        let mut rng = Rng::new(13);
+        let t = Tensor::randn(9, 7, 1.0, &mut rng);
+        for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+            let kind = QuantKind::Lns { fmt: LnsFormat::new(8, 8), scaling };
+            let want = kind.apply(&t);
+            let got = kind.apply_owned(t.clone());
+            assert_eq!(
+                want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{scaling:?}"
+            );
+            // Multi-worker in-place agrees too.
+            let mut par = t.clone();
+            kind.apply_into(&mut par, 4, &mut QuantScratch::default());
+            assert_eq!(par.data, want.data, "{scaling:?} @ 4 workers");
+        }
     }
 }

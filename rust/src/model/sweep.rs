@@ -9,7 +9,7 @@ use crate::backend::Batch;
 use crate::coordinator::data::SyntheticClassification;
 use crate::lns::datapath::{MacConfig, Parallelism, VectorMacUnit};
 use crate::lns::format::Rounding;
-use crate::lns::quant::{encode_tensor, Scaling};
+use crate::lns::quant::{encode_tensor_pooled, Scaling};
 use crate::model::{init_params, MlpModel, NativeMlp, NativeModel, TrainQuant};
 use crate::optim::Optimizer;
 use crate::util::rng::Rng;
@@ -62,10 +62,15 @@ fn forward_datapath(
     mac: &mut VectorMacUnit,
 ) -> Tensor {
     let fmt = mac.cfg.format;
+    // The encode front-end rides the same worker pool as the MAC
+    // simulator itself (codes are bit-identical at any count).
+    let enc_workers = mac.cfg.parallelism.worker_count();
     let mut h = x.clone();
     for (l, w) in model.weights.iter().enumerate() {
-        let hq = encode_tensor(&h, fmt, Scaling::PerTensor, Rounding::Nearest, None);
-        let wq = encode_tensor(w, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let hq =
+            encode_tensor_pooled(&h, fmt, Scaling::PerTensor, Rounding::Nearest, None, enc_workers);
+        let wq =
+            encode_tensor_pooled(w, fmt, Scaling::PerTensor, Rounding::Nearest, None, enc_workers);
         let mut z = mac.matmul(&hq, &wq);
         for r in 0..z.rows {
             for c in 0..z.cols {

@@ -8,7 +8,7 @@
 //! 2^(B-8) * 8 — [`UpdateQuantizer::lns_matched`] encodes that rule.
 
 use crate::lns::format::LnsFormat;
-use crate::lns::quant::{quantize_slice, quantize_slice_stochastic};
+use crate::lns::kernels::{self, QuantScratch};
 use crate::lns::softfloat::FixedPoint;
 use crate::optim::Optimizer;
 use crate::util::rng::Rng;
@@ -50,10 +50,26 @@ impl UpdateQuantizer {
     }
 
     pub fn apply(&self, w: &mut [f32], rng: &mut Rng) {
+        self.apply_pooled(w, rng, 1, &mut QuantScratch::default());
+    }
+
+    /// [`UpdateQuantizer::apply`] on the fused quantizer kernels with
+    /// `workers` scoped threads. Bit-identical to the sequential
+    /// scalar path at any worker count (the LNS arms run the near-tie
+    /// fast path; stochastic draws are pre-sequenced).
+    pub fn apply_pooled(
+        &self,
+        w: &mut [f32],
+        rng: &mut Rng,
+        workers: usize,
+        scratch: &mut QuantScratch,
+    ) {
         match self {
             UpdateQuantizer::None => {}
-            UpdateQuantizer::Lns(fmt) => quantize_slice(w, *fmt),
-            UpdateQuantizer::LnsStochastic(fmt) => quantize_slice_stochastic(w, *fmt, rng),
+            UpdateQuantizer::Lns(fmt) => kernels::quantize_flat(w, *fmt, workers),
+            UpdateQuantizer::LnsStochastic(fmt) => {
+                kernels::quantize_flat_stochastic(w, *fmt, rng, workers, scratch)
+            }
             UpdateQuantizer::Int { bits, stochastic } => {
                 let fp = FixedPoint { bits: *bits };
                 if *stochastic {
@@ -71,19 +87,30 @@ impl UpdateQuantizer {
 pub struct QuantizedUpdate<O: Optimizer> {
     pub inner: O,
     pub qu: UpdateQuantizer,
+    /// Worker threads for the Q_U pass (1 = sequential; results are
+    /// bit-identical at any setting). Set from `--parallelism` by the
+    /// trainer.
+    pub workers: usize,
     rng: Rng,
+    scratch: QuantScratch,
 }
 
 impl<O: Optimizer> QuantizedUpdate<O> {
     pub fn new(inner: O, qu: UpdateQuantizer) -> Self {
-        QuantizedUpdate { inner, qu, rng: Rng::new(0xDA7A) }
+        QuantizedUpdate {
+            inner,
+            qu,
+            workers: 1,
+            rng: Rng::new(0xDA7A),
+            scratch: QuantScratch::default(),
+        }
     }
 }
 
 impl<O: Optimizer> Optimizer for QuantizedUpdate<O> {
     fn step(&mut self, idx: usize, w: &mut [f32], g: &[f32]) {
         self.inner.step(idx, w, g);
-        self.qu.apply(w, &mut self.rng);
+        self.qu.apply_pooled(w, &mut self.rng, self.workers, &mut self.scratch);
     }
 
     fn name(&self) -> &'static str {
@@ -102,6 +129,7 @@ impl<O: Optimizer> Optimizer for QuantizedUpdate<O> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lns::quant::quantize_slice;
     use crate::optim::madam::Madam;
     use crate::optim::sgd::Sgd;
 

@@ -62,6 +62,55 @@ pub fn fast_round_ties_even(x: f32) -> f32 {
     x.round_ties_even()
 }
 
+/// Scale-free part of `|fast_log2(y) - y.log2()|`: the truncated-series
+/// error of the polynomial over the mantissa in [1, 2). Measured max is
+/// ~3.2e-7 over a dense mantissa sweep; 2e-6 carries a 6x margin. The
+/// proof test `tie_band_dominates_observed_error` enforces it.
+pub const FAST_LOG2_POLY_EPS: f32 = 2.0e-6;
+
+/// One f32 ulp at 1.0 (2^-23) — the unit of the magnitude-dependent
+/// rounding error terms in [`log2_tie_band`].
+pub const F32_ULP: f32 = 1.192_092_9e-7;
+
+/// Near-tie detection band for LNS code placement, in code units.
+///
+/// The quantizer kernels compute `t = fast_log2(y) * gamma` and round
+/// to the nearest code. `gamma` is a power of two, so the multiply is
+/// exact and the code-space discrepancy vs the exact-libm path
+/// `t' = y.log2() * gamma` is exactly `gamma * |fast_log2(y) -
+/// y.log2()|`. That per-log2 error splits into
+///
+/// * a scale-free polynomial term (<= [`FAST_LOG2_POLY_EPS`]), and
+/// * f32 rounding of the result `e + p` plus libm's own final
+///   rounding, each <= 0.5 ulp of `|log2 y| + 1`. Codes only matter on
+///   `[0, max_code]` (outside, both paths clamp identically), where
+///   `|log2 y| <= (max_code + 1) / gamma`, so in code units this is
+///   bounded by `(max_code + gamma + 1) * 2^-22`.
+///
+/// `log2_tie_band` doubles the rounding term for margin. A `t` whose
+/// fractional part lies within the band of 0.5 may round differently
+/// under the two log2s, so the kernels recompute that element with
+/// exact libm — making emitted codes bit-identical by construction.
+/// Everywhere else the band *proves* both paths round the same way.
+///
+/// The band is a fallback-rate/robustness dial, not a correctness
+/// knob, as long as it upper-bounds the true error; the proof tests
+/// below pin the components it is built from.
+#[inline]
+pub fn log2_tie_band(gamma: u32, max_code: u32) -> f32 {
+    gamma as f32 * FAST_LOG2_POLY_EPS + (max_code + gamma + 1) as f32 * (4.0 * F32_ULP)
+}
+
+/// Whether the fast-log2 path is usable at all for a format: once the
+/// band approaches half a code, near-tie detection can no longer
+/// separate "provably same rounding" from "maybe different", so the
+/// kernels run every element through exact libm instead (still fused,
+/// in place, and parallel — just without the polynomial shortcut).
+#[inline]
+pub fn fast_log2_usable(gamma: u32, max_code: u32) -> bool {
+    log2_tie_band(gamma, max_code) < 0.25
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +150,64 @@ mod tests {
             let x = (k as f32).exp2();
             assert_eq!(fast_log2(x), k as f32, "log2(2^{k})");
             assert_eq!(fast_exp2(k as f32), x, "exp2({k})");
+        }
+    }
+
+    #[test]
+    fn tie_band_dominates_observed_error() {
+        // The band's two components, checked against brute force:
+        //
+        // 1. Scale-free polynomial error over a dense mantissa sweep
+        //    (e = 0, so no result-rounding term) stays under
+        //    FAST_LOG2_POLY_EPS with margin.
+        let mut worst_poly = 0.0f64;
+        for i in 0..2_000_000u32 {
+            let m = 1.0 + i as f64 / 2_000_000.0;
+            let m = m as f32;
+            let got = fast_log2(m) as f64;
+            let want = (m as f64).log2();
+            worst_poly = worst_poly.max((got - want).abs());
+        }
+        assert!(
+            worst_poly < FAST_LOG2_POLY_EPS as f64 / 2.0,
+            "poly error {worst_poly} too close to the {FAST_LOG2_POLY_EPS} budget"
+        );
+
+        // 2. Full-range error vs f32 libm, in code units, stays inside
+        //    the per-format band for values whose codes are in range.
+        for (gamma, max_code) in [(1u32, 127u32), (8, 127), (32, 511), (128, 2047), (2048, 32767)]
+        {
+            let band = log2_tie_band(gamma, max_code) as f64;
+            property(4_000, |g| {
+                // log2(y) across the consequential range [0, max_code/gamma].
+                let l = g.f64_in(0.0, max_code as f64 / gamma as f64);
+                let y = l.exp2() as f32;
+                if y.is_infinite() {
+                    return;
+                }
+                let diff =
+                    (fast_log2(y) as f64 - y.log2() as f64).abs() * gamma as f64;
+                crate::prop_assert!(
+                    g,
+                    diff < band / 2.0,
+                    "gamma={gamma}: code-unit diff {diff} vs band {band} at y={y}"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn fast_log2_gate_rejects_oversized_formats() {
+        // Everyday formats keep a usable band...
+        assert!(fast_log2_usable(8, 127));
+        assert!(fast_log2_usable(2048, 32767));
+        // ...but a 24-bit gamma=1 format has codes so large that f32
+        // rounding alone swamps tie detection; the kernels must fall
+        // back to exact libm wholesale.
+        assert!(!fast_log2_usable(1, (1 << 23) - 1));
+        for (gamma, max_code) in [(1u32, 127u32), (8, 127), (32, 511), (2048, 32767)] {
+            assert!(log2_tie_band(gamma, max_code) > 0.0);
+            assert!(log2_tie_band(gamma, max_code) < 0.25);
         }
     }
 

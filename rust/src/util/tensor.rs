@@ -83,14 +83,24 @@ impl Tensor {
     /// k-contributions in the same order at any worker count, so the
     /// result is bit-identical to `workers == 1`.
     pub fn matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut out, workers);
+        out
+    }
+
+    /// [`Tensor::matmul_p`] writing into a caller-owned output tensor
+    /// (shape-checked, zeroed here) — the allocation-free hot-path
+    /// variant for workspace-recycled buffers. Same band kernel, same
+    /// bits.
+    pub fn matmul_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let (m, n) = (self.rows, b.cols);
+        assert_eq!((out.rows, out.cols), (m, n), "matmul_into output shape mismatch");
+        out.data.fill(0.0);
         let workers = effective_workers(workers, m * self.cols * n);
-        let mut out = Tensor::zeros(m, n);
         pool::partition_rows(&mut out.data, m, n, workers, |row0, band| {
             self.matmul_band(b, row0, band)
         });
-        out
     }
 
     /// Tiled kernel for output rows `[row0, row0 + band.len()/n)` of
@@ -134,14 +144,22 @@ impl Tensor {
     /// the sequential order (per-element accumulation runs over r in
     /// ascending order in every band).
     pub fn t_matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, b.cols);
+        self.t_matmul_into(b, &mut out, workers);
+        out
+    }
+
+    /// [`Tensor::t_matmul_p`] into a caller-owned output tensor
+    /// (shape-checked, zeroed here).
+    pub fn t_matmul_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
         let (n, p) = (self.cols, b.cols);
+        assert_eq!((out.rows, out.cols), (n, p), "t_matmul_into output shape mismatch");
+        out.data.fill(0.0);
         let workers = effective_workers(workers, self.rows * n * p);
-        let mut out = Tensor::zeros(n, p);
         pool::partition_rows(&mut out.data, n, p, workers, |row0, band| {
             self.t_matmul_band(b, row0, band)
         });
-        out
     }
 
     /// Tiled kernel for output rows `[row0, row0 + band.len()/p)` of
@@ -182,14 +200,22 @@ impl Tensor {
     /// (per-element: k-tiles accumulate in ascending order regardless
     /// of the row band).
     pub fn matmul_t_p(&self, b: &Tensor, workers: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, b.rows);
+        self.matmul_t_into(b, &mut out, workers);
+        out
+    }
+
+    /// [`Tensor::matmul_t_p`] into a caller-owned output tensor
+    /// (shape-checked, zeroed here).
+    pub fn matmul_t_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
         assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
         let (m, q) = (self.rows, b.rows);
+        assert_eq!((out.rows, out.cols), (m, q), "matmul_t_into output shape mismatch");
+        out.data.fill(0.0);
         let workers = effective_workers(workers, m * self.cols * q);
-        let mut out = Tensor::zeros(m, q);
         pool::partition_rows(&mut out.data, m, q, workers, |row0, band| {
             self.matmul_t_band(b, row0, band)
         });
-        out
     }
 
     /// Tiled kernel for output rows `[row0, row0 + band.len()/q)` of

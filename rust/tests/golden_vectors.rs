@@ -13,8 +13,10 @@
 //! against the same checked-in numbers.
 
 use lns_madam::lns::convert::{mitchell_bound, ConvertMode, Converter};
-use lns_madam::lns::format::LnsFormat;
+use lns_madam::lns::format::{LnsFormat, Rounding};
+use lns_madam::lns::kernels::{self, QuantScratch};
 use lns_madam::lns::softfloat::MiniFloat;
+use lns_madam::lns::Scaling;
 
 // ---------------------------------------------------------------------------
 // softfloat: minifloat quantization golden vectors
@@ -213,6 +215,110 @@ const PAPER8_GOLDEN: &[(f32, f64)] = &[
     (0.9, 1.0),                  // code -1 clamps to 0: the scale floor
     (1048576.0, 60096.776975),   // code 160 clamps to 127: 2^15.875
 ];
+
+// ---------------------------------------------------------------------------
+// kernels: fused fast-path codes at near-tie inputs (scale = 1.0)
+// ---------------------------------------------------------------------------
+
+/// (bits, gamma, input, expected code) for the fused quantizer kernels
+/// at `scale = 1.0`. Inputs sit around the code-k/k+1 rounding
+/// boundary `2^((k + 0.5)/gamma)` at three distances: well clear of it
+/// (1e-3 codes), just outside the near-tie fallback band (2e-4 for
+/// gamma=8, whose band is ~8.1e-5 — the fast path must round these
+/// correctly *without* libm help), and inside the band (5e-5 / 6e-5,
+/// where the kernel must fall back to exact libm). Every margin is
+/// provably larger than any faithful libm's 1-ulp wiggle at that
+/// magnitude, so the expected codes are portable. Generated offline
+/// with an f32-faithful simulation of both paths (zero mismatches over
+/// 5.3M adversarial cases).
+const NEAR_TIE_GOLDEN: &[(u32, u32, f32, u32)] = &[
+    (8, 8, 1.3543729, 4),    // wide, fast path
+    (8, 8, 1.3541383, 3),    // wide, fast path
+    (8, 8, 1.354279, 4),     // outside band, fast path
+    (8, 8, 1.3542321, 3),    // outside band, fast path
+    (8, 8, 1.3542614, 4),    // inside band, falls back
+    (8, 8, 1.3542497, 3),    // inside band, falls back
+    (8, 8, 2.9539082, 13),   // wide, fast path
+    (8, 8, 2.9533963, 12),   // wide, fast path
+    (8, 8, 2.9537034, 13),   // outside band, fast path
+    (8, 8, 2.9536011, 12),   // outside band, fast path
+    (8, 8, 2.953665, 13),    // inside band, falls back
+    (8, 8, 2.9536395, 12),   // inside band, falls back
+    (8, 8, 103.080315, 54),  // wide, fast path
+    (8, 8, 103.062454, 53),  // wide, fast path
+    (8, 8, 103.073166, 54),  // outside band, fast path
+    (8, 8, 103.069595, 53),  // outside band, fast path
+    (8, 8, 103.07183, 54),   // inside band, falls back
+    (8, 8, 103.07094, 53),   // inside band, falls back
+    (8, 8, 6049.604, 101),   // wide, fast path
+    (8, 8, 6048.5557, 100),  // wide, fast path
+    (8, 8, 6049.1846, 101),  // outside band, fast path
+    (8, 8, 6048.975, 100),   // outside band, fast path
+    (8, 8, 6049.106, 101),   // inside band, falls back
+    (8, 8, 6049.0537, 100),  // inside band, falls back
+    (8, 8, 57553.855, 127),  // wide, fast path
+    (8, 8, 57543.887, 126),  // wide, fast path
+    (8, 8, 57549.867, 127),  // outside band, fast path
+    (8, 8, 57547.875, 126),  // outside band, fast path
+    (8, 8, 57549.12, 127),   // inside band, falls back
+    (8, 8, 57548.62, 126),   // inside band, falls back
+    (10, 32, 1.1764097, 8),  // g32 wide, fast path
+    (10, 32, 1.1763842, 7),  // g32 wide, fast path
+    (10, 32, 1.1763985, 8),  // g32 inside band, falls back
+    (10, 32, 1.1763954, 7),  // g32 inside band, falls back
+    (10, 32, 76.938866, 201), // g32 wide, fast path
+    (10, 32, 76.937195, 200), // g32 wide, fast path
+    (10, 32, 76.93813, 201), // g32 inside band, falls back
+    (10, 32, 76.93793, 200), // g32 inside band, falls back
+    (10, 32, 63441.56, 511), // g32 wide, fast path
+    (10, 32, 63440.188, 510), // g32 wide, fast path
+    (10, 32, 63441.15, 511), // g32 inside band, falls back
+    (10, 32, 63440.598, 510), // g32 inside band, falls back
+];
+
+#[test]
+fn near_tie_golden_vectors_fast_vs_exact() {
+    for &(bits, gamma, x, code) in NEAR_TIE_GOLDEN {
+        let fmt = LnsFormat::new(bits, gamma);
+        // The checked-in code is what the exact scalar encoder emits...
+        let exact = fmt.encode(x, 1.0);
+        assert_eq!(
+            exact.code, code,
+            "{bits}b/g{gamma}: scalar encode({x}) = {}, golden table says {code}",
+            exact.code
+        );
+        assert_eq!(exact.sign, 1);
+        // ...and the fused fast-path kernel emits the same bits.
+        let mut signs = [0i8; 1];
+        let mut codes = [0u32; 1];
+        let mut scratch = QuantScratch::default();
+        kernels::encode_rows_into(
+            &mut signs,
+            &mut codes,
+            &[x],
+            1,
+            1,
+            fmt,
+            Scaling::PerTensor,
+            Rounding::Nearest,
+            None,
+            &[1.0],
+            1,
+            &mut scratch,
+        );
+        assert_eq!(
+            codes[0], code,
+            "{bits}b/g{gamma}: kernel encode({x}) = {}, golden table says {code}",
+            codes[0]
+        );
+        assert_eq!(signs[0], 1);
+        // Decode agrees bitwise with the scalar decode.
+        let lut = kernels::decode_lut(fmt);
+        let want = fmt.decode(exact, 1.0);
+        let got = 1.0f32 * lut[code as usize];
+        assert_eq!(got.to_bits(), want.to_bits(), "{bits}b/g{gamma}: decode({code})");
+    }
+}
 
 #[test]
 fn paper8_quantize_golden_vectors() {

@@ -16,7 +16,9 @@
 //!   exact f64 reference encoder so the f32 production path can drift
 //!   at most one rounding-tie code from the mathematical definition.
 
-use lns_madam::lns::format::LnsFormat;
+use lns_madam::lns::format::{LnsFormat, LnsValue, Rounding};
+use lns_madam::lns::kernels::{self, QuantScratch};
+use lns_madam::lns::quant::group_scales;
 use lns_madam::lns::Scaling;
 use lns_madam::model::QuantKind;
 use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, UpdateQuantizer};
@@ -211,6 +213,251 @@ fn lemma1_relative_error_bounded_vs_f64_reference() {
                 "{fmt:?}: f32 rel err {rel32} > one-code bound (x={x})"
             );
         });
+    }
+}
+
+/// The exact pre-kernel reference: scalar `LnsFormat::encode` /
+/// `encode_stochastic` per element over `group_scales`, in row-major
+/// order — the semantics the fused kernels must reproduce bit for bit.
+fn exact_encode_reference(
+    t: &Tensor,
+    fmt: LnsFormat,
+    scaling: Scaling,
+    rounding: Rounding,
+    rng: Option<&mut Rng>,
+) -> (Vec<i8>, Vec<u32>, Vec<f32>) {
+    let scales = group_scales(t, fmt, scaling);
+    let mut local_rng;
+    let rng = match rng {
+        Some(r) => r,
+        None => {
+            local_rng = Rng::new(0);
+            &mut local_rng
+        }
+    };
+    let mut signs = vec![0i8; t.len()];
+    let mut codes = vec![0u32; t.len()];
+    let mut decoded = vec![0.0f32; t.len()];
+    for r in 0..t.rows {
+        for c in 0..t.cols {
+            let i = r * t.cols + c;
+            let s = match scaling {
+                Scaling::PerTensor => scales[0],
+                Scaling::PerRow => scales[r],
+                Scaling::PerCol => scales[c],
+            };
+            let v: LnsValue = match rounding {
+                Rounding::Nearest => fmt.encode(t.data[i], s),
+                Rounding::Stochastic => fmt.encode_stochastic(t.data[i], s, rng.uniform_f32()),
+            };
+            signs[i] = v.sign;
+            codes[i] = v.code;
+            decoded[i] = fmt.decode(v, s);
+        }
+    }
+    (signs, codes, decoded)
+}
+
+/// Tensor data slanted toward the quantizer's hard cases: zeros, many
+/// binades, and values engineered to straddle a code's rounding
+/// boundary (including inside the near-tie fallback band).
+fn quantizer_stress_data(
+    g: &mut lns_madam::util::proptest::Gen,
+    n: usize,
+    fmt: LnsFormat,
+) -> Vec<f32> {
+    (0..n)
+        .map(|_| match g.usize_in(0, 9) {
+            0 => 0.0,
+            1..=3 => g.normal_f32(),
+            4..=6 => g.lns_value(),
+            _ => {
+                // Near-tie construction: 2^((k + 0.5 + d)/gamma), with
+                // d spanning well inside to well outside the band.
+                let k = g.usize_in(0, fmt.max_code().saturating_sub(1) as usize) as f64;
+                let d = g.f64_in(-3e-3, 3e-3);
+                let mag = ((k + 0.5 + d) / fmt.gamma as f64).exp2();
+                (if g.bool() { -mag } else { mag }) as f32
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fast_kernels_bit_identical_to_exact_encode() {
+    // ISSUE-4 acceptance: fused fast-path codes == scalar exact codes,
+    // bit for bit, across formats (gamma 1..=32, bits 4..=12, plus the
+    // 16-bit Q_U format), scalings, and rounding modes.
+    let mut formats = Vec::new();
+    for bits in [4u32, 6, 8, 10, 12] {
+        for glog in 0..=5u32 {
+            formats.push(LnsFormat::new(bits, 1 << glog));
+        }
+    }
+    formats.push(LnsFormat::new(16, 2048));
+    for fmt in formats {
+        for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+            for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+                property(12, |g| {
+                    let rows = g.usize_in(1, 10);
+                    let cols = g.usize_in(1, 10);
+                    let t =
+                        Tensor::from_vec(rows, cols, quantizer_stress_data(g, rows * cols, fmt));
+                    let seed = 0xFEED ^ g.case as u64;
+                    let mut rng_ref = Rng::new(seed);
+                    let (signs, codes, decoded) =
+                        exact_encode_reference(&t, fmt, scaling, rounding, Some(&mut rng_ref));
+
+                    // Plane encode through the kernels.
+                    let workers = g.usize_in(1, 6);
+                    let scales = group_scales(&t, fmt, scaling);
+                    let mut got_s = vec![0i8; t.len()];
+                    let mut got_c = vec![0u32; t.len()];
+                    let mut rng_enc = Rng::new(seed);
+                    let mut scratch = QuantScratch::default();
+                    kernels::encode_rows_into(
+                        &mut got_s,
+                        &mut got_c,
+                        &t.data,
+                        rows,
+                        cols,
+                        fmt,
+                        scaling,
+                        rounding,
+                        Some(&mut rng_enc),
+                        &scales,
+                        workers,
+                        &mut scratch,
+                    );
+                    lns_madam::prop_assert!(
+                        g,
+                        got_s == signs && got_c == codes,
+                        "{fmt:?} {scaling:?} {rounding:?}: kernel planes diverge from exact"
+                    );
+
+                    // Fused round-trip agrees with exact decode bitwise.
+                    let mut rt = t.clone();
+                    let mut rng_rt = Rng::new(seed);
+                    kernels::quantize_rows_into_rounded(
+                        &mut rt.data,
+                        rows,
+                        cols,
+                        fmt,
+                        scaling,
+                        rounding,
+                        Some(&mut rng_rt),
+                        workers,
+                        &mut scratch,
+                    );
+                    for (a, b) in rt.data.iter().zip(decoded.iter()) {
+                        lns_madam::prop_assert!(
+                            g,
+                            a.to_bits() == b.to_bits(),
+                            "{fmt:?} {scaling:?} {rounding:?}: roundtrip {a} vs exact {b}"
+                        );
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_quantization_bit_identical_across_threads() {
+    // Cross-thread determinism of the fused quantizer: any worker
+    // count produces the sequential bits, for every scaling.
+    property(60, |g| {
+        let rows = g.usize_in(1, 24);
+        let cols = g.usize_in(1, 24);
+        let fmt = LnsFormat::new(8, 8);
+        let t = Tensor::from_vec(rows, cols, quantizer_stress_data(g, rows * cols, fmt));
+        for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+            let mut scratch = QuantScratch::default();
+            let mut want = t.clone();
+            kernels::quantize_rows_into(&mut want.data, rows, cols, fmt, scaling, 1, &mut scratch);
+            for workers in [2usize, 3, 5, 8, 64] {
+                let mut got = t.clone();
+                kernels::quantize_rows_into(
+                    &mut got.data,
+                    rows,
+                    cols,
+                    fmt,
+                    scaling,
+                    workers,
+                    &mut scratch,
+                );
+                lns_madam::prop_assert!(
+                    g,
+                    got.data
+                        .iter()
+                        .zip(want.data.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{scaling:?} @ {workers} workers diverged from sequential"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn parallel_quantization_bit_identical_above_worker_floor() {
+    // Small tensors scale the worker count down to 1 (the ~8k
+    // elements-per-worker floor), so the property above mostly proves
+    // the clamp. This one uses shapes big enough for genuine multi-way
+    // bands — the surface where offset/indexing bugs would live,
+    // especially the stochastic path's pre-drawn uniform stream.
+    let fmt = LnsFormat::new(8, 8);
+    let (rows, cols) = (193, 307); // 59k elements, ragged over workers
+    let mut rng = Rng::new(0xA11);
+    let t = Tensor::randn(rows, cols, 1.0, &mut rng);
+    for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+        for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+            let mut rng_ref = Rng::new(42);
+            let (signs, codes, decoded) =
+                exact_encode_reference(&t, fmt, scaling, rounding, Some(&mut rng_ref));
+            for workers in [2usize, 3, 7, 8] {
+                let mut scratch = QuantScratch::default();
+                let mut rt = t.clone();
+                let mut rng_rt = Rng::new(42);
+                kernels::quantize_rows_into_rounded(
+                    &mut rt.data,
+                    rows,
+                    cols,
+                    fmt,
+                    scaling,
+                    rounding,
+                    Some(&mut rng_rt),
+                    workers,
+                    &mut scratch,
+                );
+                assert!(
+                    rt.data.iter().zip(decoded.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{scaling:?} {rounding:?} @ {workers} workers: roundtrip diverged"
+                );
+                let scales = group_scales(&t, fmt, scaling);
+                let mut got_s = vec![0i8; t.len()];
+                let mut got_c = vec![0u32; t.len()];
+                let mut rng_enc = Rng::new(42);
+                kernels::encode_rows_into(
+                    &mut got_s,
+                    &mut got_c,
+                    &t.data,
+                    rows,
+                    cols,
+                    fmt,
+                    scaling,
+                    rounding,
+                    Some(&mut rng_enc),
+                    &scales,
+                    workers,
+                    &mut scratch,
+                );
+                assert!(
+                    got_s == signs && got_c == codes,
+                    "{scaling:?} {rounding:?} @ {workers} workers: planes diverged"
+                );
+            }
+        }
     }
 }
 
