@@ -4,10 +4,11 @@
 //! L3 coverage: Q_log quantize/encode throughput (runs per weight
 //! update), the Madam + Q_U update step, the datapath simulator, the
 //! end-to-end train-step latency split into gradient compute (PJRT or
-//! the native backend) vs weight update (rust), and the native
-//! training throughput sweep across thread counts, which emits the
-//! machine-readable `BENCH_native_training.json` (the repo's recorded
-//! perf trajectory — see DESIGN.md §Performance & testing).
+//! the native backend) vs weight update (rust), the ISSUE-5 dispatch
+//! (`"pool"`) and packed-GEMM (`"gemm_kernel"`) microbenches, and the
+//! native training throughput sweep across thread counts, which emits
+//! the machine-readable `BENCH_native_training.json` (the repo's
+//! recorded perf trajectory — see DESIGN.md §Performance & testing).
 //!
 //!   cargo bench --bench hotpath                          # full run
 //!   cargo bench --bench hotpath -- --native-only --smoke # CI smoke
@@ -27,6 +28,7 @@ use lns_madam::lns::{
 use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, QuantizedUpdate, UpdateQuantizer};
 use lns_madam::util::bench::Bencher;
 use lns_madam::util::json::Json;
+use lns_madam::util::pool;
 use lns_madam::util::rng::Rng;
 use lns_madam::util::tensor::Tensor;
 use std::collections::BTreeMap;
@@ -236,12 +238,136 @@ fn quantizer_section(smoke: bool) -> QuantBench {
     QuantBench { json, step_quant_ms }
 }
 
+/// ISSUE-5 pool section: dispatch latency of spawn-per-call
+/// (`pool::join_all_spawning`, the pre-pool mechanism kept as the
+/// baseline) vs the persistent pool (`pool::join_all`) at 1/2/4/8
+/// workers, with each task a sub-tile GEMM — the work shape the old
+/// spawn cost forced sequential. Asserts both mechanisms return
+/// identical results before timing.
+fn pool_section(smoke: bool) -> BTreeMap<String, Json> {
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut rng = Rng::new(0x9001);
+    // Sub-tile GEMM payload: 32^3 = 32k MACs, well under one 128-wide
+    // tile — the per-task work a dispatch must not dominate.
+    let dim = 32usize;
+    let a = Tensor::randn(dim, dim, 1.0, &mut rng);
+    let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
+
+    pool::prewarm();
+    println!(
+        "\n--- pool dispatch latency (persistent pool vs spawn-per-call, {} pool workers, {dim}^3 GEMM tasks) ---",
+        pool::pool_workers()
+    );
+    /// `w` sub-tile GEMM tasks borrowing the shared operands.
+    fn mk_tasks<'t>(
+        a: &'t Tensor,
+        bt: &'t Tensor,
+        w: usize,
+    ) -> Vec<Box<dyn FnOnce() -> f32 + Send + 't>> {
+        (0..w)
+            .map(|_| Box::new(move || a.matmul(bt).data[0]) as Box<dyn FnOnce() -> f32 + Send + 't>)
+            .collect()
+    }
+
+    let mut json = BTreeMap::new();
+    json.insert("pool_workers".into(), Json::Num(pool::pool_workers() as f64));
+    for &w in worker_counts {
+        // Mechanism equivalence first (hard assert, not wall-clock).
+        let spawned = pool::join_all_spawning(mk_tasks(&a, &bt, w));
+        let pooled = pool::join_all(mk_tasks(&a, &bt, w));
+        let want: Vec<u32> = spawned.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = pooled.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, got, "pool dispatch changed results at {w} tasks");
+
+        let s_spawn = b.bench(&format!("dispatch spawn-per-call @ {w} tasks"), || {
+            pool::join_all_spawning(mk_tasks(&a, &bt, w))
+        });
+        let s_pool = b.bench(&format!("dispatch persistent pool @ {w} tasks"), || {
+            pool::join_all(mk_tasks(&a, &bt, w))
+        });
+        let speedup = s_spawn.mean_ns / s_pool.mean_ns;
+        println!(
+            "  -> {w} tasks: spawn {:.2} µs, pool {:.2} µs  ({speedup:.2}x)",
+            s_spawn.mean_ns / 1e3,
+            s_pool.mean_ns / 1e3
+        );
+        json.insert(format!("spawn_dispatch_us_{w}w"), Json::Num(s_spawn.mean_ns / 1e3));
+        json.insert(format!("pool_dispatch_us_{w}w"), Json::Num(s_pool.mean_ns / 1e3));
+        json.insert(format!("dispatch_speedup_{w}w"), Json::Num(speedup));
+        // Dispatch win is only meaningful once threads are involved
+        // (at 1 task both mechanisms run inline).
+        if !smoke && w > 1 && speedup < 1.0 {
+            println!(
+                "WARNING: persistent-pool dispatch slower than spawn at {w} tasks ({speedup:.2}x)"
+            );
+        }
+    }
+    json
+}
+
+/// ISSUE-5 gemm_kernel section: packed register-blocked microkernels
+/// vs the retained unpacked (tiled) reference kernels, GFLOP/s per
+/// GEMM variant. Asserts bitwise packed == unpacked first — the
+/// bit-exactness contract — then times both.
+fn gemm_kernel_section(smoke: bool) -> BTreeMap<String, Json> {
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let dim = if smoke { 128usize } else { 512 };
+    let mut rng = Rng::new(0x6E44);
+    let a = Tensor::randn(dim, dim, 1.0, &mut rng);
+    let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
+    let flops = 2.0 * (dim * dim * dim) as f64;
+
+    println!("\n--- gemm kernels (packed register-blocked vs unpacked tiled, {dim}^3) ---");
+    let mut json = BTreeMap::new();
+    json.insert("dim".into(), Json::Num(dim as f64));
+    type Variant<'t> = (&'static str, Box<dyn Fn() -> Tensor + 't>, Box<dyn Fn() -> Tensor + 't>);
+    let variants: Vec<Variant> = vec![
+        ("matmul", Box::new(|| a.matmul(&bt)), Box::new(|| a.matmul_unpacked(&bt))),
+        ("t_matmul", Box::new(|| a.t_matmul(&bt)), Box::new(|| a.t_matmul_unpacked(&bt))),
+        ("matmul_t", Box::new(|| a.matmul_t(&bt)), Box::new(|| a.matmul_t_unpacked(&bt))),
+    ];
+    for (name, packed, unpacked) in &variants {
+        // The contract before the clock: bitwise equality.
+        let want: Vec<u32> = unpacked().data.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = packed().data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, got, "{name}: packed kernel diverged from the unpacked reference");
+
+        let s_un = b.bench(&format!("{name} {dim}^3 unpacked (reference)"), unpacked);
+        let s_pk = b.bench(&format!("{name} {dim}^3 packed"), packed);
+        let (g_un, g_pk) = (s_un.throughput(flops) / 1e9, s_pk.throughput(flops) / 1e9);
+        let speedup = s_un.mean_ns / s_pk.mean_ns;
+        println!(
+            "  -> {name}: unpacked {g_un:.2} GFLOP/s, packed {g_pk:.2} GFLOP/s ({speedup:.2}x)"
+        );
+        json.insert(format!("unpacked_gflops_{name}"), Json::Num(g_un));
+        json.insert(format!("packed_gflops_{name}"), Json::Num(g_pk));
+        json.insert(format!("kernel_speedup_{name}"), Json::Num(speedup));
+        if !smoke && *name == "matmul" && speedup < 1.0 {
+            println!("WARNING: packed {name} slower than the unpacked reference ({speedup:.2}x)");
+        }
+    }
+    // The packed kernel on the pool at 4 workers (the ISSUE-3 style
+    // parallel point, now on the persistent pool).
+    let s_p4 = b.bench(&format!("matmul {dim}^3 packed @ 4 workers"), || a.matmul_p(&bt, 4));
+    let g_p4 = s_p4.throughput(flops) / 1e9;
+    println!("  -> matmul @ 4 workers: {g_p4:.2} GFLOP/s");
+    json.insert("packed_gflops_matmul_4w".into(), Json::Num(g_p4));
+    json
+}
+
 /// The native-training throughput sweep: steps/sec for the mlp and
 /// char-LM families at 1/2/4/8 threads, lns8 and fp32, written to
 /// `out_path` as JSON. Asserts that per-step losses are bit-identical
 /// across every thread count (the parallel hot path must never change
 /// the math).
-fn native_training_section(smoke: bool, out_path: &str, quant: QuantBench) {
+fn native_training_section(
+    smoke: bool,
+    out_path: &str,
+    quant: QuantBench,
+    pool_json: BTreeMap<String, Json>,
+    gemm_json: BTreeMap<String, Json>,
+) {
     let host_cores = Parallelism::Auto.worker_count();
     let presets: &[(&str, &str)] = if smoke {
         &[("mlp", "mlp_tiny"), ("charlm", "charlm_tiny")]
@@ -379,6 +505,10 @@ fn native_training_section(smoke: bool, out_path: &str, quant: QuantBench) {
         }
     }
     root.insert("quantizer".to_string(), Json::Obj(quant_json));
+    // ISSUE-5 sections: dispatch latency and packed-kernel throughput
+    // (schemas in DESIGN.md §Reading and extending the BENCH json).
+    root.insert("pool".to_string(), Json::Obj(pool_json));
+    root.insert("gemm_kernel".to_string(), Json::Obj(gemm_json));
     let json = Json::Obj(root).dump();
     std::fs::write(out_path, json).expect("write bench json");
     let shown = std::fs::canonicalize(out_path)
@@ -399,10 +529,13 @@ fn main() {
         .unwrap_or_else(|| "BENCH_native_training.json".to_string());
 
     if native_only {
-        // Offline-safe sections only: the quantizer kernels and the
-        // native training sweep (CI runs this pair on every push).
+        // Offline-safe sections only: the quantizer kernels, the pool
+        // dispatch + packed-GEMM microbenches, and the native training
+        // sweep (CI runs this set on every push).
         let quant = quantizer_section(smoke);
-        native_training_section(smoke, &out_path, quant);
+        let pool_json = pool_section(smoke);
+        let gemm_json = gemm_kernel_section(smoke);
+        native_training_section(smoke, &out_path, quant, pool_json, gemm_json);
         return;
     }
 
@@ -512,23 +645,24 @@ fn main() {
         }
     }
 
-    // Tiled f32 GEMM throughput (the Tensor hot path under every
-    // sweep and the model mirror).
+    // f32 GEMM throughput (the Tensor hot path under every sweep and
+    // the model mirror) — now the packed microkernels; the
+    // packed-vs-unpacked comparison lives in gemm_kernel_section.
     {
         let dim = 512usize;
         let a = Tensor::randn(dim, dim, 1.0, &mut rng);
         let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
-        let s = b.bench("tensor matmul 512^3 (tiled)", || a.matmul(&bt));
+        let s = b.bench("tensor matmul 512^3 (packed)", || a.matmul(&bt));
         println!(
             "  -> {:.2} GFLOP/s",
             s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
         );
-        let s = b.bench("tensor t_matmul 512^3 (tiled)", || a.t_matmul(&bt));
+        let s = b.bench("tensor t_matmul 512^3 (packed)", || a.t_matmul(&bt));
         println!(
             "  -> {:.2} GFLOP/s",
             s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
         );
-        let s = b.bench("tensor matmul_t 512^3 (tiled)", || a.matmul_t(&bt));
+        let s = b.bench("tensor matmul_t 512^3 (packed)", || a.matmul_t(&bt));
         println!(
             "  -> {:.2} GFLOP/s",
             s.throughput(2.0 * (dim * dim * dim) as f64) / 1e9
@@ -586,5 +720,7 @@ fn main() {
     );
 
     let quant = quantizer_section(smoke);
-    native_training_section(smoke, &out_path, quant);
+    let pool_json = pool_section(smoke);
+    let gemm_json = gemm_kernel_section(smoke);
+    native_training_section(smoke, &out_path, quant, pool_json, gemm_json);
 }

@@ -192,7 +192,13 @@ impl NativeBackend {
         // The shared parallelism knob (0 = auto, 1 = sequential, n =
         // workers) drives the fwd/bwd GEMM threading; results are
         // bit-identical at every setting (tests/native_training.rs).
-        model.set_parallelism(Parallelism::from_knob(cfg.parallelism).worker_count());
+        let workers = Parallelism::from_knob(cfg.parallelism).worker_count();
+        model.set_parallelism(workers);
+        if workers > 1 {
+            // Spin the persistent pool up now so the first train step
+            // doesn't pay worker-thread spawn inside its hot path.
+            crate::util::pool::prewarm();
+        }
         let quant =
             train_quant(&cfg.format, cfg.bits_fwd, cfg.gamma_fwd, cfg.bits_bwd, cfg.gamma_bwd)?;
         let contract = model.contract(batch);

@@ -259,11 +259,11 @@ impl VectorMacUnit {
         let btc = bt_codes.as_slice();
 
         let mut out = Tensor::zeros(a.rows, b.cols);
-        // Row bands on the shared scoped pool (`util::pool`), the same
-        // primitive every rust-side hot path uses. Per-band OpCounts
-        // come back in band order, and the merge is a deterministic
-        // order-independent sum, so totals match the sequential run
-        // exactly.
+        // Row bands on the shared persistent pool (`util::pool`), the
+        // same primitive every rust-side hot path uses. Per-band
+        // OpCounts come back in band order, and the merge is a
+        // deterministic order-independent sum, so totals match the
+        // sequential run exactly.
         let per_band = pool::partition_rows(&mut out.data, a.rows, b.cols, workers, |row0, band| {
             let mut counts = OpCounts::default();
             let rows_here = band.len() / b.cols;

@@ -20,14 +20,19 @@
 //!   `LnsFormat::decode` uses, so LUT decode is bit-identical by
 //!   construction (`fast_exp2` is *not* usable here: it is only
 //!   value-close, and the contract is bit-exactness).
-//! * **pool parallelism** — row bands on `util::pool` under a ~8k
-//!   elements-per-worker floor; group scales are computed once up
+//! * **pool parallelism** — row bands on `util::pool` (persistent
+//!   workers) under the shared elements-per-worker floor
+//!   ([`QUANT_ELEMS_PER_WORKER`], resolved through
+//!   `pool::effective_workers`); group scales are computed once up
 //!   front in the sequential fold order and shared read-only, and
-//!   stochastic-rounding uniforms are pre-drawn sequentially in
-//!   row-major order, so results are bit-identical at any worker
-//!   count.
-//! * **no per-call allocation** — scales and uniforms live in a
-//!   reusable [`QuantScratch`]; the LUT is cached process-wide.
+//!   stochastic-rounding uniforms come from a **counter-based**
+//!   generator ([`CounterRng`]): each element's draw is a pure
+//!   function of (per-call key, flat index), so no sequential
+//!   pre-pass exists and results are bit-identical at any worker
+//!   count by construction.
+//! * **no per-call allocation** — group scales live in a reusable
+//!   [`QuantScratch`]; the LUT is cached process-wide; stochastic
+//!   draws are computed in-register per element.
 //!
 //! The contract enforced by `tests/properties.rs` (bit-identity vs the
 //! scalar encode across formats, scalings, roundings, and thread
@@ -37,19 +42,18 @@ use crate::lns::format::{LnsFormat, Rounding};
 use crate::lns::quant::Scaling;
 use crate::util::fastmath::{fast_log2, fast_log2_usable, log2_tie_band};
 use crate::util::pool;
-use crate::util::rng::Rng;
+use crate::util::rng::{CounterRng, Rng};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Minimum elements per worker before the parallel path engages —
-/// the quantizer analogue of `tensor.rs::PAR_MACS_PER_WORKER`: the
-/// per-element work is transcendental-bound, so ~8k elements comfortably
-/// out-earn a scoped spawn/join. Purely a wall-clock guard; results are
-/// bit-identical at any worker count.
-pub const QUANT_ELEMS_PER_WORKER: usize = 8 * 1024;
+/// The elements-per-worker floor, now owned by `util::pool` next to
+/// the GEMM MACs floor so the two cannot drift (ISSUE-5 satellite);
+/// re-exported here because it is part of this module's documented
+/// contract.
+pub use crate::util::pool::QUANT_ELEMS_PER_WORKER;
 
 fn effective_workers(workers: usize, elems: usize) -> usize {
-    workers.min(elems / QUANT_ELEMS_PER_WORKER).max(1)
+    pool::effective_workers(workers, elems, QUANT_ELEMS_PER_WORKER)
 }
 
 /// Decode LUTs above this size are not cached (a 24-bit format's table
@@ -98,13 +102,13 @@ pub fn decode_lut(fmt: LnsFormat) -> Arc<Vec<f32>> {
     lut
 }
 
-/// Reusable scratch for the quantizer kernels: group scales and the
-/// stochastic-rounding uniform draws persist across steps, so a warm
-/// hot path allocates nothing.
+/// Reusable scratch for the quantizer kernels: the group-scale buffer
+/// persists across steps, so a warm hot path allocates nothing.
+/// (Stochastic uniforms no longer need a buffer at all — they are
+/// counter-generated per element.)
 #[derive(Default)]
 pub struct QuantScratch {
     scales: Vec<f32>,
-    uniforms: Vec<f32>,
 }
 
 /// Per-call scalar constants of one format.
@@ -241,7 +245,8 @@ fn roundtrip_one_stochastic(
 }
 
 /// Round-trip a span of elements sharing one scale. `offset` is the
-/// span's flat index into the tensor (for the pre-drawn uniforms).
+/// span's flat index into the tensor — the stochastic counter, so any
+/// partition of the buffer draws the same uniform per element.
 #[inline(always)]
 fn roundtrip_span(
     span: &mut [f32],
@@ -249,17 +254,18 @@ fn roundtrip_span(
     p: &EncParams,
     scale: f32,
     lut: Option<&[f32]>,
-    uniforms: Option<&[f32]>,
+    crng: Option<CounterRng>,
 ) {
-    match uniforms {
+    match crng {
         None => {
             for v in span.iter_mut() {
                 *v = roundtrip_one(p, *v, scale, lut);
             }
         }
-        Some(u) => {
+        Some(c) => {
             for (i, v) in span.iter_mut().enumerate() {
-                *v = roundtrip_one_stochastic(p, *v, scale, u[offset + i], lut);
+                let u = c.uniform_f32_at((offset + i) as u64);
+                *v = roundtrip_one_stochastic(p, *v, scale, u, lut);
             }
         }
     }
@@ -306,25 +312,19 @@ pub fn group_scales_into(
     }
 }
 
-/// Pre-draw one uniform per element in row-major order — the same
-/// stream the scalar loop would consume, so stochastic results are
-/// independent of the worker partition.
-fn fill_uniforms(out: &mut Vec<f32>, n: usize, rng: Option<&mut Rng>) {
-    let mut local;
-    let rng = match rng {
-        Some(r) => r,
-        None => {
-            // Mirror `encode_tensor`'s legacy fallback seed.
-            local = Rng::new(0);
-            &mut local
-        }
-    };
-    out.clear();
-    out.extend((0..n).map(|_| rng.uniform_f32()));
+/// Derive the per-call counter key for a stochastic pass: one
+/// sequential `next_u64` from the caller's stream (replacing the old
+/// one-draw-per-element pre-pass), falling back to the legacy
+/// `Rng::new(0)` seed when no stream is supplied.
+fn stochastic_counter(rng: Option<&mut Rng>) -> CounterRng {
+    match rng {
+        Some(r) => CounterRng::from_rng(r),
+        None => CounterRng::from_rng(&mut Rng::new(0)),
+    }
 }
 
 /// The fused fake-quantization core over precomputed scales.
-/// Deterministic given (`data`, `scales`, `uniforms`) — `workers` is
+/// Deterministic given (`data`, `scales`, `crng`) — `workers` is
 /// pure wall-clock.
 #[allow(clippy::too_many_arguments)]
 fn quantize_with(
@@ -334,7 +334,7 @@ fn quantize_with(
     fmt: LnsFormat,
     scaling: Scaling,
     scales: &[f32],
-    uniforms: Option<&[f32]>,
+    crng: Option<CounterRng>,
     workers: usize,
 ) {
     debug_assert_eq!(data.len(), rows * cols);
@@ -349,14 +349,14 @@ fn quantize_with(
             let scale = scales[0];
             let n = data.len();
             pool::partition_rows(data, n, 1, workers, |i0, chunk| {
-                roundtrip_span(chunk, i0, &p, scale, lut, uniforms);
+                roundtrip_span(chunk, i0, &p, scale, lut, crng);
             });
         }
         Scaling::PerRow => {
             pool::partition_rows(data, rows, cols, workers, |row0, band| {
                 for (dr, row) in band.chunks_mut(cols).enumerate() {
                     let r = row0 + dr;
-                    roundtrip_span(row, r * cols, &p, scales[r], lut, uniforms);
+                    roundtrip_span(row, r * cols, &p, scales[r], lut, crng);
                 }
             });
         }
@@ -364,15 +364,16 @@ fn quantize_with(
             pool::partition_rows(data, rows, cols, workers, |row0, band| {
                 for (dr, row) in band.chunks_mut(cols).enumerate() {
                     let base = (row0 + dr) * cols;
-                    match uniforms {
+                    match crng {
                         None => {
                             for (c, v) in row.iter_mut().enumerate() {
                                 *v = roundtrip_one(&p, *v, scales[c], lut);
                             }
                         }
-                        Some(u) => {
+                        Some(crng) => {
                             for (c, v) in row.iter_mut().enumerate() {
-                                *v = roundtrip_one_stochastic(&p, *v, scales[c], u[base + c], lut);
+                                let u = crng.uniform_f32_at((base + c) as u64);
+                                *v = roundtrip_one_stochastic(&p, *v, scales[c], u, lut);
                             }
                         }
                     }
@@ -409,10 +410,11 @@ pub fn quantize_rows_into(
 }
 
 /// [`quantize_rows_into`] with an explicit rounding mode. Stochastic
-/// rounding consumes one uniform per element from `rng` in row-major
-/// order — the same stream the scalar `encode_stochastic` loop draws —
-/// so results stay bit-identical to the exact path and across worker
-/// counts.
+/// rounding derives one counter key per call from `rng` (a single
+/// sequential draw) and computes each element's uniform from its flat
+/// row-major index — the stream the scalar reference consumes at the
+/// same indices — so results stay bit-identical to the exact path and
+/// across worker counts, with no per-element pre-pass.
 #[allow(clippy::too_many_arguments)]
 pub fn quantize_rows_into_rounded(
     data: &mut [f32],
@@ -427,14 +429,11 @@ pub fn quantize_rows_into_rounded(
 ) {
     debug_assert_eq!(data.len(), rows * cols);
     group_scales_into(&mut scratch.scales, data, rows, cols, fmt, scaling);
-    let uniforms = match rounding {
+    let crng = match rounding {
         Rounding::Nearest => None,
-        Rounding::Stochastic => {
-            fill_uniforms(&mut scratch.uniforms, data.len(), rng);
-            Some(scratch.uniforms.as_slice())
-        }
+        Rounding::Stochastic => Some(stochastic_counter(rng)),
     };
-    quantize_with(data, rows, cols, fmt, scaling, &scratch.scales, uniforms, workers);
+    quantize_with(data, rows, cols, fmt, scaling, &scratch.scales, crng, workers);
 }
 
 /// Per-tensor fused fake-quant of a flat slice — the `quantize_slice` /
@@ -448,26 +447,22 @@ pub fn quantize_flat(xs: &mut [f32], fmt: LnsFormat, workers: usize) {
 }
 
 /// Stochastic-rounding variant of [`quantize_flat`] (the Q_U theory
-/// setting); uniforms buffer comes from `scratch`.
-pub fn quantize_flat_stochastic(
-    xs: &mut [f32],
-    fmt: LnsFormat,
-    rng: &mut Rng,
-    workers: usize,
-    scratch: &mut QuantScratch,
-) {
+/// setting). Fully scratch-free: the counter key is one draw from
+/// `rng`, each element's uniform is computed in-register.
+pub fn quantize_flat_stochastic(xs: &mut [f32], fmt: LnsFormat, rng: &mut Rng, workers: usize) {
     let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
     let scales = [fmt.scale_for_absmax(absmax)];
-    fill_uniforms(&mut scratch.uniforms, xs.len(), Some(rng));
+    let crng = stochastic_counter(Some(rng));
     let n = xs.len();
-    quantize_with(xs, n, 1, fmt, Scaling::PerTensor, &scales, Some(&scratch.uniforms), workers);
+    quantize_with(xs, n, 1, fmt, Scaling::PerTensor, &scales, Some(crng), workers);
 }
 
 /// Encode a row-major buffer into sign/code planes with the fused fast
 /// path — the datapath's encode front-end. `scales` must come from
 /// [`group_scales_into`] (or `quant::group_scales`) for the same
 /// (`data`, `scaling`). Codes are bit-identical to per-element
-/// `LnsFormat::encode`/`encode_stochastic` at any worker count.
+/// `LnsFormat::encode`/`encode_stochastic` (with counter-indexed
+/// uniforms) at any worker count.
 #[allow(clippy::too_many_arguments)]
 pub fn encode_rows_into(
     signs: &mut [i8],
@@ -481,22 +476,18 @@ pub fn encode_rows_into(
     rng: Option<&mut Rng>,
     scales: &[f32],
     workers: usize,
-    scratch: &mut QuantScratch,
 ) {
     debug_assert_eq!(data.len(), rows * cols);
     debug_assert_eq!(signs.len(), data.len());
     debug_assert_eq!(codes.len(), data.len());
-    let uniforms = match rounding {
+    let crng = match rounding {
         Rounding::Nearest => None,
-        Rounding::Stochastic => {
-            fill_uniforms(&mut scratch.uniforms, data.len(), rng);
-            Some(scratch.uniforms.as_slice())
-        }
+        Rounding::Stochastic => Some(stochastic_counter(rng)),
     };
     let p = EncParams::new(fmt);
     let workers = effective_workers(workers, data.len()).min(rows.max(1));
     if workers <= 1 || cols == 0 || data.is_empty() {
-        encode_band(signs, codes, data, 0, cols.max(1), &p, scaling, scales, uniforms);
+        encode_band(signs, codes, data, 0, cols.max(1), &p, scaling, scales, crng);
         return;
     }
     let band_rows = rows.div_ceil(workers);
@@ -508,7 +499,7 @@ pub fn encode_rows_into(
         .enumerate()
     {
         tasks.push(Box::new(move || {
-            encode_band(sc, cc, data, bi * band_rows, cols, &p, scaling, scales, uniforms);
+            encode_band(sc, cc, data, bi * band_rows, cols, &p, scaling, scales, crng);
         }));
     }
     pool::join_all(tasks);
@@ -528,7 +519,7 @@ fn encode_band(
     p: &EncParams,
     scaling: Scaling,
     scales: &[f32],
-    uniforms: Option<&[f32]>,
+    crng: Option<CounterRng>,
 ) {
     for (dr, (srow, crow)) in signs
         .chunks_mut(cols)
@@ -538,7 +529,7 @@ fn encode_band(
         let r = row0 + dr;
         let base = r * cols;
         let drow = &data[base..base + srow.len()];
-        match (scaling, uniforms) {
+        match (scaling, crng) {
             (Scaling::PerCol, None) => {
                 for (c, (&x, (sg, cd))) in drow
                     .iter()
@@ -556,7 +547,7 @@ fn encode_band(
                     .zip(srow.iter_mut().zip(crow.iter_mut()))
                     .enumerate()
                 {
-                    let v = encode_stochastic(p, x, scales[c], u[base + c]);
+                    let v = encode_stochastic(p, x, scales[c], u.uniform_f32_at((base + c) as u64));
                     *sg = v.0;
                     *cd = v.1;
                 }
@@ -581,7 +572,7 @@ fn encode_band(
                             .zip(srow.iter_mut().zip(crow.iter_mut()))
                             .enumerate()
                         {
-                            let v = encode_stochastic(p, x, s, u[base + c]);
+                            let v = encode_stochastic(p, x, s, u.uniform_f32_at((base + c) as u64));
                             *sg = v.0;
                             *cd = v.1;
                         }
@@ -603,7 +594,9 @@ mod tests {
     /// Independent scalar reference: the exact pre-kernel semantics,
     /// element by element through `LnsFormat::{encode, encode_stochastic,
     /// decode}` with `group_scales` — deliberately NOT routed through
-    /// this module.
+    /// this module's span/band loops. Stochastic draws use the same
+    /// counter construction the kernels use (one key per call from the
+    /// sequential stream, then a pure per-index uniform).
     fn scalar_roundtrip(
         t: &Tensor,
         fmt: LnsFormat,
@@ -612,14 +605,7 @@ mod tests {
         rng: Option<&mut Rng>,
     ) -> Tensor {
         let scales = group_scales(t, fmt, scaling);
-        let mut local_rng;
-        let rng = match rng {
-            Some(r) => r,
-            None => {
-                local_rng = Rng::new(0);
-                &mut local_rng
-            }
-        };
+        let crng = stochastic_counter(rng);
         let mut out = t.clone();
         for r in 0..t.rows {
             for c in 0..t.cols {
@@ -632,7 +618,7 @@ mod tests {
                 let v: LnsValue = match rounding {
                     Rounding::Nearest => fmt.encode(t.data[i], s),
                     Rounding::Stochastic => {
-                        fmt.encode_stochastic(t.data[i], s, rng.uniform_f32())
+                        fmt.encode_stochastic(t.data[i], s, crng.uniform_f32_at(i as u64))
                     }
                 };
                 out.data[i] = fmt.decode(v, s);

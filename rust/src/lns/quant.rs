@@ -135,7 +135,6 @@ pub fn encode_tensor_pooled(
     let scales = group_scales(t, fmt, scaling);
     let mut signs = vec![0i8; t.len()];
     let mut codes = vec![0u32; t.len()];
-    let mut scratch = kernels::QuantScratch::default();
     kernels::encode_rows_into(
         &mut signs,
         &mut codes,
@@ -148,7 +147,6 @@ pub fn encode_tensor_pooled(
         rng,
         &scales,
         workers,
-        &mut scratch,
     );
     LnsTensor {
         rows: t.rows,
@@ -179,8 +177,7 @@ pub fn quantize_slice(xs: &mut [f32], fmt: LnsFormat) {
 
 /// Fake-quantize with stochastic rounding (the theory setting of §4.2).
 pub fn quantize_slice_stochastic(xs: &mut [f32], fmt: LnsFormat, rng: &mut Rng) {
-    let mut scratch = kernels::QuantScratch::default();
-    kernels::quantize_flat_stochastic(xs, fmt, rng, 1, &mut scratch);
+    kernels::quantize_flat_stochastic(xs, fmt, rng, 1);
 }
 
 #[cfg(test)]

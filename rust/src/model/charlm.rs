@@ -129,7 +129,7 @@ impl CharLmModel {
         let mut w1q = ws.tensor_copy(self.d_model, self.d_ff, &w1.data);
         q.forward.apply_into(&mut w1q, self.workers, &mut ws.quant);
         let mut z1 = ws.tensor_for_gemm(xq.rows, w1q.cols);
-        xq.matmul_into(&w1q, &mut z1, self.workers);
+        xq.matmul_into_ws(&w1q, &mut z1, self.workers, &mut ws.gemm);
         for r in 0..z1.rows {
             for c in 0..z1.cols {
                 *z1.at_mut(r, c) += b1.data[c];
@@ -143,7 +143,7 @@ impl CharLmModel {
         let mut headq = ws.tensor_copy(self.d_ff, self.vocab, &head.data);
         q.forward.apply_into(&mut headq, self.workers, &mut ws.quant);
         let mut logits = ws.tensor_for_gemm(h1q.rows, headq.cols);
-        h1q.matmul_into(&headq, &mut logits, self.workers);
+        h1q.matmul_into_ws(&headq, &mut logits, self.workers, &mut ws.gemm);
         softmax_inplace(&mut logits);
         let probs = logits;
         let y: Vec<usize> = targets.iter().map(|&v| v as usize).collect();
@@ -204,12 +204,12 @@ impl CharLmModel {
 
         // head grad: h1q^T @ dz, then Q_G (fresh buffer: it is returned).
         let mut ghead = Tensor::zeros(h1q.cols, dzq.cols);
-        h1q.t_matmul_into(&dzq, &mut ghead, self.workers);
+        h1q.t_matmul_into_ws(&dzq, &mut ghead, self.workers, &mut ws.gemm);
         q.backward.apply_into(&mut ghead, self.workers, &mut ws.quant);
 
         // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
         let mut dh1 = ws.tensor_for_gemm(dzq.rows, headq.rows);
-        dzq.matmul_t_into(&headq, &mut dh1, self.workers);
+        dzq.matmul_t_into_ws(&headq, &mut dh1, self.workers, &mut ws.gemm);
         for (g, z) in dh1.data.iter_mut().zip(z1.data.iter()) {
             *g = if *z > 0.0 { *g } else { 0.0 };
         }
@@ -218,7 +218,7 @@ impl CharLmModel {
 
         // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
         let mut gw1 = Tensor::zeros(xq.cols, dh1q.cols);
-        xq.t_matmul_into(&dh1q, &mut gw1, self.workers);
+        xq.t_matmul_into_ws(&dh1q, &mut gw1, self.workers, &mut ws.gemm);
         q.backward.apply_into(&mut gw1, self.workers, &mut ws.quant);
         let mut gb1 = vec![0.0f32; self.d_ff];
         for r in 0..dh1.rows {
@@ -230,7 +230,7 @@ impl CharLmModel {
         // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
         // non-GEMM ops like the paper).
         let mut dx = ws.tensor_for_gemm(dh1q.rows, w1q.rows);
-        dh1q.matmul_t_into(&w1q, &mut dx, self.workers);
+        dh1q.matmul_t_into_ws(&w1q, &mut dx, self.workers, &mut ws.gemm);
         let mut gtok = vec![0.0f32; self.vocab * d];
         let mut gpos = vec![0.0f32; self.seq * d];
         let t_len = shape[1];

@@ -21,7 +21,7 @@ use crate::lns::kernels::{self, QuantScratch};
 use crate::lns::quant::Scaling;
 use crate::lns::softfloat::{FixedPoint, MiniFloat};
 use crate::util::rng::Rng;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{GemmScratch, Tensor};
 use anyhow::{bail, Result};
 
 pub mod charlm;
@@ -112,11 +112,13 @@ impl TrainQuant {
     }
 }
 
-/// Reusable per-model scratch: a free list of f32 buffers plus the
-/// quantizer kernels' [`QuantScratch`]. Kills the per-step staging
-/// copies (`w.data.clone()` weight uploads) and `Tensor::zeros`
-/// allocations in fwd/bwd — after the first step, every intermediate
-/// tensor is drawn from and returned to this pool.
+/// Reusable per-model scratch: a free list of f32 buffers, the
+/// quantizer kernels' [`QuantScratch`], and the GEMM microkernels'
+/// [`GemmScratch`] pack buffers. Kills the per-step staging copies
+/// (`w.data.clone()` weight uploads) and `Tensor::zeros` allocations
+/// in fwd/bwd — after the first step, every intermediate tensor is
+/// drawn from and returned to this pool, and every GEMM packs its
+/// operand panels into the workspace-owned scratch.
 ///
 /// Buffers handed out by `grab_*` carry no history: they are zero- or
 /// copy-initialized in full, so recycling can never leak one step's
@@ -126,8 +128,11 @@ impl TrainQuant {
 /// every element unconditionally before any read.
 #[derive(Default)]
 pub struct Workspace {
-    /// Scratch for the quantizer kernels (group scales, uniforms).
+    /// Scratch for the quantizer kernels (group scales).
     pub quant: QuantScratch,
+    /// Pack scratch for the `Tensor::*_into_ws` GEMM microkernels
+    /// (operand micropanels; pure data staging, never results).
+    pub gemm: GemmScratch,
     pool: Vec<Vec<f32>>,
 }
 
@@ -273,7 +278,7 @@ impl MlpModel {
             let mut wq = ws.tensor_copy_of(w);
             q.forward.apply_into(&mut wq, self.workers, &mut ws.quant);
             let mut z = ws.tensor_for_gemm(hq.rows, wq.cols);
-            hq.matmul_into(&wq, &mut z, self.workers);
+            hq.matmul_into_ws(&wq, &mut z, self.workers, &mut ws.gemm);
             for r in 0..z.rows {
                 for c in 0..z.cols {
                     *z.at_mut(r, c) += self.biases[l][c];
@@ -361,7 +366,7 @@ impl MlpModel {
             // Weight grad: x_q^T @ dz, then Q_G. (Fresh tensor: it is
             // returned to the caller.)
             let mut gw = Tensor::zeros(cache.inputs[l].cols, dzq.cols);
-            cache.inputs[l].t_matmul_into(&dzq, &mut gw, self.workers);
+            cache.inputs[l].t_matmul_into_ws(&dzq, &mut gw, self.workers, &mut ws.gemm);
             q.backward.apply_into(&mut gw, self.workers, &mut ws.quant);
             wgrads[l] = gw;
             // Bias grad: column sums of dz (kept FP32 like the paper's
@@ -376,7 +381,7 @@ impl MlpModel {
             if l > 0 {
                 // dh = dz @ w_q^T, masked by ReLU'(z_{l-1}), then Q_E.
                 let mut dh = ws.tensor_for_gemm(dzq.rows, cache.wq[l].rows);
-                dzq.matmul_t_into(&cache.wq[l], &mut dh, self.workers);
+                dzq.matmul_t_into_ws(&cache.wq[l], &mut dh, self.workers, &mut ws.gemm);
                 let mask = &cache.z[l - 1];
                 for (g, z) in dh.data.iter_mut().zip(mask.data.iter()) {
                     *g = if *z > 0.0 { *g } else { 0.0 };

@@ -12,9 +12,10 @@
 //!
 //! i.e. exactly one log2 + one exp2 per parameter, with the Q_U
 //! rounding applied where the weight already lives. Multi-threaded over
-//! chunks (std::thread::scope; rayon is not vendored). Equivalence with
-//! the composed reference path is enforced by tests (<= 1 code, ties
-//! only) — see also EXPERIMENTS.md §Perf for before/after numbers.
+//! parameter chunks on the persistent `util::pool` workers (rayon is
+//! not vendored). Equivalence with the composed reference path is
+//! enforced by tests (<= 1 code, ties only) — see also EXPERIMENTS.md
+//! §Perf for before/after numbers.
 
 use crate::lns::format::LnsFormat;
 use crate::optim::Optimizer;
@@ -30,7 +31,11 @@ pub struct FusedMadamQu {
     pub max_step: f32,
     /// Q_U format (bits define the clamp, gamma the grid).
     pub qu: LnsFormat,
-    /// Parallelize above this tensor size.
+    /// Parallelize above this tensor size. Re-tuned for the persistent
+    /// pool (ISSUE 5): dispatch is now a parked-thread wake instead of
+    /// a spawn/join, so mid-sized layers (16k+ params, ~2 log/exp
+    /// transcendentals each) are worth splitting where the old 64k
+    /// threshold kept them sequential.
     pub par_threshold: usize,
     pub threads: usize,
     g2: BTreeMap<usize, Vec<f32>>,
@@ -46,7 +51,7 @@ impl FusedMadamQu {
             beta: 0.9,
             max_step: 1.0,
             qu,
-            par_threshold: 65_536,
+            par_threshold: 16_384,
             threads,
             g2: BTreeMap::new(),
         }
@@ -117,10 +122,10 @@ impl Optimizer for FusedMadamQu {
         if w.len() < self.par_threshold || self.threads <= 1 {
             Self::kernel(w, g, g2, scale, inv_scale, lr, beta, max_step, gamma_u, max_code);
         } else {
-            // Parameter chunks on the shared scoped pool. The kernel is
-            // elementwise with a pre-computed shared scale, so chunking
-            // is bit-identical to the sequential order at any thread
-            // count (asserted by `parallel_equals_serial`).
+            // Parameter chunks on the shared persistent pool. The
+            // kernel is elementwise with a pre-computed shared scale,
+            // so chunking is bit-identical to the sequential order at
+            // any thread count (asserted by `parallel_equals_serial`).
             let chunk = w.len().div_ceil(self.threads);
             let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.threads);
             for ((wc, gc), g2c) in w

@@ -8,7 +8,7 @@
 //! 2^(B-8) * 8 — [`UpdateQuantizer::lns_matched`] encodes that rule.
 
 use crate::lns::format::LnsFormat;
-use crate::lns::kernels::{self, QuantScratch};
+use crate::lns::kernels;
 use crate::lns::softfloat::FixedPoint;
 use crate::optim::Optimizer;
 use crate::util::rng::Rng;
@@ -50,25 +50,19 @@ impl UpdateQuantizer {
     }
 
     pub fn apply(&self, w: &mut [f32], rng: &mut Rng) {
-        self.apply_pooled(w, rng, 1, &mut QuantScratch::default());
+        self.apply_pooled(w, rng, 1);
     }
 
     /// [`UpdateQuantizer::apply`] on the fused quantizer kernels with
-    /// `workers` scoped threads. Bit-identical to the sequential
-    /// scalar path at any worker count (the LNS arms run the near-tie
-    /// fast path; stochastic draws are pre-sequenced).
-    pub fn apply_pooled(
-        &self,
-        w: &mut [f32],
-        rng: &mut Rng,
-        workers: usize,
-        scratch: &mut QuantScratch,
-    ) {
+    /// `workers` pool threads. Bit-identical to the sequential scalar
+    /// path at any worker count (the LNS arms run the near-tie fast
+    /// path; stochastic draws are counter-indexed by element).
+    pub fn apply_pooled(&self, w: &mut [f32], rng: &mut Rng, workers: usize) {
         match self {
             UpdateQuantizer::None => {}
             UpdateQuantizer::Lns(fmt) => kernels::quantize_flat(w, *fmt, workers),
             UpdateQuantizer::LnsStochastic(fmt) => {
-                kernels::quantize_flat_stochastic(w, *fmt, rng, workers, scratch)
+                kernels::quantize_flat_stochastic(w, *fmt, rng, workers)
             }
             UpdateQuantizer::Int { bits, stochastic } => {
                 let fp = FixedPoint { bits: *bits };
@@ -92,25 +86,18 @@ pub struct QuantizedUpdate<O: Optimizer> {
     /// trainer.
     pub workers: usize,
     rng: Rng,
-    scratch: QuantScratch,
 }
 
 impl<O: Optimizer> QuantizedUpdate<O> {
     pub fn new(inner: O, qu: UpdateQuantizer) -> Self {
-        QuantizedUpdate {
-            inner,
-            qu,
-            workers: 1,
-            rng: Rng::new(0xDA7A),
-            scratch: QuantScratch::default(),
-        }
+        QuantizedUpdate { inner, qu, workers: 1, rng: Rng::new(0xDA7A) }
     }
 }
 
 impl<O: Optimizer> Optimizer for QuantizedUpdate<O> {
     fn step(&mut self, idx: usize, w: &mut [f32], g: &[f32]) {
         self.inner.step(idx, w, g);
-        self.qu.apply_pooled(w, &mut self.rng, self.workers, &mut self.scratch);
+        self.qu.apply_pooled(w, &mut self.rng, self.workers);
     }
 
     fn name(&self) -> &'static str {

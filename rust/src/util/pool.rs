@@ -1,24 +1,389 @@
-//! Scoped fork-join helper — the one thread-pool primitive every
-//! rust-side hot path shares (rayon is not vendored offline).
+//! Persistent fork-join worker pool — the one thread-pool primitive
+//! every rust-side hot path shares (rayon is not vendored offline).
+//!
+//! Until ISSUE 5 this module span/joined a `std::thread::scope` per
+//! call, which charged every GEMM, quant pass, and optimizer chunk a
+//! few microseconds of thread creation per worker — dozens of times
+//! per train step. Dispatch now hands tasks to a lazily-spawned pool
+//! of **parked** workers over a mutex/condvar queue: a wake is tens of
+//! nanoseconds to single-digit microseconds, so far smaller work items
+//! are worth splitting (see [`effective_workers`] and the re-tuned
+//! floors below).
 //!
 //! Design contract, shared with `lns::datapath` and documented in
 //! DESIGN.md §Performance & testing: work is partitioned into
-//! contiguous chunks processed by `std::thread::scope` workers, each
-//! chunk runs the *same* kernel the sequential order runs, and
-//! per-chunk results come back in chunk order so any merge (e.g.
+//! contiguous chunks processed the same way the sequential order
+//! processes them, each chunk runs the *same* kernel, and per-chunk
+//! results come back in chunk order so any merge (e.g.
 //! `OpCounts::add`) is deterministic. Parallelism must never change
 //! results: every caller is bit-identical to its sequential order at
-//! any worker count, and tests enforce it.
+//! any worker count, and tests enforce it (`rust/tests/pool.rs`).
+//!
+//! Scheduling rules that make the persistent pool safe:
+//!
+//! * **The caller is always a worker.** `join_all` runs the first task
+//!   on the calling thread, then *helps*: while its batch is
+//!   unfinished it pops queued jobs (its own or another batch's) and
+//!   runs them inline, blocking on the batch latch only when the
+//!   queue is empty. A batch therefore completes even if every pool
+//!   worker is busy, shut down, or never existed — there is no
+//!   configuration in which queued work can deadlock.
+//! * **Reentrancy runs inline.** A task that itself calls `join_all`
+//!   or `partition_rows` (detected via a thread-local) executes the
+//!   nested task list sequentially on the current thread, with the
+//!   same chunking — same results, no pool interaction, no risk of
+//!   the pool waiting on itself.
+//! * **Single task / single worker / zero-size inputs never touch the
+//!   pool** — they run inline exactly as the sequential order would.
+//! * **Borrow safety.** Tasks may borrow the caller's stack
+//!   (`'env` lifetimes); the lifetime is erased to hand jobs to
+//!   `'static` workers, which is sound because `join_all` does not
+//!   return — not even by panic — until every job of its batch has
+//!   completed. A panicking task is caught in the job wrapper,
+//!   recorded on the latch, and re-raised on the caller *after* the
+//!   batch drains.
+//! * **Shutdown/re-init is race-free.** [`shutdown`] parks no new
+//!   work, joins the workers, and drops the pool; in-flight batches
+//!   still complete through caller-help, and the next dispatch
+//!   re-initializes a fresh pool. Global toggles (e.g.
+//!   `lns::kernels::set_force_exact`) observe a quiesced pool.
 //!
 //! `workers` here is always a resolved count (see
 //! `lns::Parallelism::worker_count` for the 0=auto/1=seq/n knob);
 //! `util` stays dependency-free of the `lns` layer.
 
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Minimum multiply-accumulates per worker before a parallel GEMM
+/// actually splits. With spawn-per-call dispatch this sat at 8k MACs;
+/// a parked-thread wake costs roughly an order of magnitude less, so
+/// the floor drops to 2k — small char-LM GEMMs (a few k MACs per
+/// band) now split instead of running sequential. Purely a wall-clock
+/// guard — results are bit-identical at any worker count.
+pub const GEMM_MACS_PER_WORKER: usize = 2 * 1024;
+
+/// The quantizer analogue of [`GEMM_MACS_PER_WORKER`]: minimum
+/// elements per worker for the fused quantizer kernels. Per-element
+/// quant work is transcendental-bound (heavier than a MAC), so the
+/// same 2k floor comfortably out-earns a parked-thread wake.
+pub const QUANT_ELEMS_PER_WORKER: usize = 2 * 1024;
+
+/// Resolve the worker count actually used for a job of `work` units
+/// under a `floor` of minimum units per worker. This is *the*
+/// work-floor implementation — `tensor.rs` GEMMs and `lns::kernels`
+/// quant passes both resolve through it, so the floor policy cannot
+/// drift between consumers. Purely wall-clock: any return value
+/// produces bit-identical results.
+#[inline]
+pub fn effective_workers(workers: usize, work: usize, floor: usize) -> usize {
+    workers.min(work / floor.max(1)).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Pool internals
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// True while this thread is executing pool work (a worker's whole
+    /// life, or the caller while it runs its own/helped tasks). Nested
+    /// dispatch observes it and runs inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A lifetime-erased unit of work. The closure is self-contained: it
+/// runs the task, stores the result/panic, and signals its batch
+/// latch.
+struct Job(Box<dyn FnOnce() + Send + 'static>);
+
+/// Queue + parking shared by workers and dispatchers.
+struct Shared {
+    queue: Mutex<QueueState>,
+    work_ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+impl Shared {
+    fn try_pop(&self) -> Option<Job> {
+        self.queue.lock().expect("pool queue poisoned").jobs.pop_front()
+    }
+
+    fn push_batch(&self, batch: Vec<Job>) {
+        let n = batch.len();
+        let mut q = self.queue.lock().expect("pool queue poisoned");
+        q.jobs.extend(batch);
+        drop(q);
+        // One wake per queued job — notify_all would thundering-herd
+        // every parked worker on every dispatch (dozens per train
+        // step), which is exactly the latency this pool exists to cut.
+        // Extra notifies beyond the parked count are no-ops.
+        for _ in 0..n {
+            self.work_ready.notify_one();
+        }
+    }
+}
+
+/// Completion latch of one `join_all` batch: counts outstanding queued
+/// jobs and carries the first panic payload, if any.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Arc<Latch> {
+        Arc::new(Latch {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    /// Mark one job finished (with its panic payload, if it had one).
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut s = self.state.lock().expect("pool latch poisoned");
+        if s.panic.is_none() {
+            s.panic = panic;
+        }
+        s.remaining -= 1;
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// The live pool: worker handles plus the queue they serve.
+struct PoolCtl {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+fn ctl() -> &'static Mutex<Option<PoolCtl>> {
+    static CTL: OnceLock<Mutex<Option<PoolCtl>>> = OnceLock::new();
+    CTL.get_or_init(|| Mutex::new(None))
+}
+
+/// Default worker count: one per available core minus the caller's
+/// thread (the caller always participates). 0 means "inline mode" —
+/// a single-core host never pays for a pool at all.
+fn default_pool_size() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1))
+        .unwrap_or(0)
+}
+
+/// Get (lazily creating) the live pool. `None` means size 0 — callers
+/// run everything inline.
+fn ensure_pool() -> Option<Arc<Shared>> {
+    let mut guard = ctl().lock().expect("pool ctl poisoned");
+    if let Some(ctl) = guard.as_ref() {
+        return Some(Arc::clone(&ctl.shared));
+    }
+    let size = default_pool_size();
+    if size == 0 {
+        return None;
+    }
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+        work_ready: Condvar::new(),
+    });
+    let workers = (0..size)
+        .map(|i| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("lns-pool-{i}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn pool worker")
+        })
+        .collect();
+    *guard = Some(PoolCtl { shared: Arc::clone(&shared), workers });
+    Some(shared)
+}
+
+/// Worker body: park on the condvar, run jobs as they arrive, exit on
+/// shutdown. Jobs never unwind out of here (the job wrapper catches
+/// panics and routes them to the batch latch).
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_ready.wait(q).expect("pool queue poisoned");
+            }
+        };
+        (job.0)();
+    }
+}
+
+/// Spin the pool up ahead of the first dispatch (e.g. at backend
+/// construction) so the first hot-path call doesn't pay worker spawn.
+/// Idempotent; a no-op on single-core hosts.
+pub fn prewarm() {
+    let _ = ensure_pool();
+}
+
+/// Worker threads currently backing the pool (0 = inline mode or not
+/// yet initialized). The caller's thread always participates on top of
+/// this count.
+pub fn pool_workers() -> usize {
+    ctl().lock().expect("pool ctl poisoned").as_ref().map_or(0, |c| c.workers.len())
+}
+
+/// Tear the pool down: wake every worker, join them, drop the queue.
+/// In-flight batches still complete (their callers drain the queue
+/// themselves — see the caller-help rule), and the next dispatch
+/// re-initializes a fresh pool. Exists so tests can prove pool state
+/// cannot race global toggles; production code never needs it.
+pub fn shutdown() {
+    let ctl_taken = ctl().lock().expect("pool ctl poisoned").take();
+    let Some(ctl_taken) = ctl_taken else { return };
+    {
+        let mut q = ctl_taken.shared.queue.lock().expect("pool queue poisoned");
+        q.shutdown = true;
+    }
+    ctl_taken.shared.work_ready.notify_all();
+    for h in ctl_taken.workers {
+        h.join().expect("pool worker panicked at shutdown");
+    }
+}
+
+/// Raw-pointer wrapper so a job can write its result slot from another
+/// thread. Each job owns exactly one distinct slot, and the batch
+/// latch orders every write before the caller's read.
+struct SlotPtr<R>(*mut Option<R>);
+// Safety: R: Send, and the slot is written by exactly one job.
+unsafe impl<R: Send> Send for SlotPtr<R> {}
+
+/// Run `f` with the thread-local pool flag set (restoring it after),
+/// so nested dispatch from inside the task runs inline.
+fn run_in_pool<T>(f: impl FnOnce() -> T) -> T {
+    IN_POOL.with(|flag| {
+        let was = flag.replace(true);
+        let out = f();
+        flag.set(was);
+        out
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatch API (unchanged signatures since the scoped version)
+// ---------------------------------------------------------------------------
+
 /// Run the tasks concurrently and return their results in task order.
 /// The caller's thread is a worker too: it runs the first task itself
-/// while the rest run on scoped threads, so n-way parallelism costs
-/// n - 1 spawns (and a single task never pays one).
-pub fn join_all<'env, R: Send + 'env>(
+/// while the rest go to the parked pool workers, then helps drain the
+/// queue until its batch completes — so a single task never pays any
+/// dispatch, and queued work can never deadlock (see the module docs
+/// for the full scheduling rules).
+pub fn join_all<'env, R: Send + 'env>(tasks: Vec<Box<dyn FnOnce() -> R + Send + 'env>>) -> Vec<R> {
+    let n = tasks.len();
+    if n <= 1 || IN_POOL.with(|f| f.get()) {
+        // Single task, or nested inside pool work: the sequential
+        // order, on this thread, in task order.
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    let Some(shared) = ensure_pool() else {
+        return tasks.into_iter().map(|t| t()).collect();
+    };
+
+    let mut results: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+    let latch = Latch::new(n - 1);
+    let mut it = tasks.into_iter();
+    let first = it.next().expect("n >= 2");
+
+    // Queue tasks 1..n as lifetime-erased jobs. Safety: this function
+    // waits for `latch.remaining == 0` before returning on every path
+    // (including the first-task-panicked path), so every borrow the
+    // jobs carry outlives their execution.
+    let batch: Vec<Job> = it
+        .zip(results.iter_mut().skip(1))
+        .map(|(task, slot)| {
+            let slot = SlotPtr(slot as *mut Option<R>);
+            let latch = Arc::clone(&latch);
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                match catch_unwind(AssertUnwindSafe(task)) {
+                    Ok(v) => {
+                        // Safety: exclusive slot, ordered by the latch.
+                        unsafe { *slot.0 = Some(v) };
+                        latch.complete(None);
+                    }
+                    Err(p) => latch.complete(Some(p)),
+                }
+            });
+            // Safety: lifetime erasure only — see the batch comment.
+            Job(unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            })
+        })
+        .collect();
+    shared.push_batch(batch);
+
+    // Task 0 on the caller's thread (nested dispatch inlines).
+    let first_result = run_in_pool(|| catch_unwind(AssertUnwindSafe(first)));
+
+    // Help drain the queue until this batch is done: run queued jobs
+    // (ours or another batch's) whenever the latch is still open, and
+    // only block when the queue is empty.
+    loop {
+        if latch.state.lock().expect("pool latch poisoned").remaining == 0 {
+            break;
+        }
+        if let Some(job) = shared.try_pop() {
+            run_in_pool(|| (job.0)());
+            continue;
+        }
+        // Queue empty: our outstanding jobs are in flight on workers
+        // (or other helpers); block until they signal.
+        let mut s = latch.state.lock().expect("pool latch poisoned");
+        while s.remaining > 0 {
+            s = latch.done.wait(s).expect("pool latch poisoned");
+        }
+        break;
+    }
+
+    // Batch fully drained: propagate panics (caller's task first),
+    // then collect results in task order.
+    match first_result {
+        Ok(v) => results[0] = Some(v),
+        Err(p) => resume_unwind(p),
+    }
+    if let Some(p) = latch.state.lock().expect("pool latch poisoned").panic.take() {
+        resume_unwind(p);
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("pool job completed without a result"))
+        .collect()
+}
+
+/// The pre-pool dispatch: spawn a scoped thread per task, join them
+/// all. Kept verbatim as the dispatch-latency baseline for
+/// `benches/hotpath.rs` (`"pool"` section) and as an independent
+/// oracle for the pool bit-identity tests — results are identical to
+/// [`join_all`] by construction, only the dispatch mechanism differs.
+pub fn join_all_spawning<'env, R: Send + 'env>(
     mut tasks: Vec<Box<dyn FnOnce() -> R + Send + 'env>>,
 ) -> Vec<R> {
     if tasks.len() <= 1 {
@@ -39,13 +404,16 @@ pub fn join_all<'env, R: Send + 'env>(
 
 /// Split `data` (a row-major buffer of `rows` rows, `row_len` elements
 /// each) into up to `workers` contiguous row bands and run
-/// `f(first_row, band)` for each on scoped threads. Returns the
-/// per-band results in band order.
+/// `f(first_row, band)` for each on the pool. Returns the per-band
+/// results in band order.
 ///
 /// Bands always hold whole rows, so a kernel that writes its band and
 /// reads only shared inputs is race-free by construction. With one
 /// worker (or one row, or an empty buffer) `f` runs inline exactly
-/// once over the whole buffer — the sequential order.
+/// once over the whole buffer — the sequential order. The band split
+/// (`rows.div_ceil(workers)` rows per band) is fixed by the `workers`
+/// argument alone, never by pool occupancy, so the per-band result
+/// vector is deterministic.
 pub fn partition_rows<'env, T, R, F>(
     data: &'env mut [T],
     rows: usize,
@@ -65,22 +433,14 @@ where
     }
     let band_rows = rows.div_ceil(workers);
     let f = &f;
-    std::thread::scope(|s| {
-        // The caller's thread processes the first band itself (after
-        // the rest are spawned), saving one spawn/join per call.
-        let mut bands = data.chunks_mut(band_rows * row_len).enumerate();
-        let (_, first) = bands.next().expect("at least one band");
-        let handles: Vec<_> = bands
-            .map(|(ci, band)| s.spawn(move || f(ci * band_rows, band)))
-            .collect();
-        let mut results = vec![f(0, first)];
-        results.extend(
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("pool worker panicked")),
-        );
-        results
-    })
+    let tasks: Vec<Box<dyn FnOnce() -> R + Send + '_>> = data
+        .chunks_mut(band_rows * row_len)
+        .enumerate()
+        .map(|(ci, band)| {
+            Box::new(move || f(ci * band_rows, band)) as Box<dyn FnOnce() -> R + Send + '_>
+        })
+        .collect();
+    join_all(tasks)
 }
 
 #[cfg(test)]
@@ -101,6 +461,48 @@ mod tests {
         let tasks: Vec<Box<dyn FnOnce() -> bool + Send>> =
             vec![Box::new(move || std::thread::current().id() == tid)];
         assert_eq!(join_all(tasks), vec![true]);
+    }
+
+    #[test]
+    fn join_all_spawning_matches_pool_dispatch() {
+        let mk = || -> Vec<Box<dyn FnOnce() -> u64 + Send>> {
+            (0..13)
+                .map(|i| Box::new(move || (i as u64 + 1) * 3) as Box<dyn FnOnce() -> u64 + Send>)
+                .collect()
+        };
+        assert_eq!(join_all(mk()), join_all_spawning(mk()));
+    }
+
+    #[test]
+    fn nested_join_all_runs_inline() {
+        // A task that dispatches again must execute its nested tasks
+        // on its own thread (the reentrancy rule) with correct results.
+        let tasks: Vec<Box<dyn FnOnce() -> (Vec<usize>, bool) + Send>> = (0..4)
+            .map(|outer| {
+                Box::new(move || {
+                    let tid = std::thread::current().id();
+                    let inner: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..3)
+                        .map(|i| {
+                            Box::new(move || {
+                                assert_eq!(
+                                    std::thread::current().id(),
+                                    tid,
+                                    "nested task left its thread"
+                                );
+                                outer * 10 + i
+                            }) as Box<dyn FnOnce() -> usize + Send>
+                        })
+                        .collect();
+                    let got = join_all(inner);
+                    (got, true)
+                }) as Box<dyn FnOnce() -> (Vec<usize>, bool) + Send>
+            })
+            .collect();
+        let results = join_all(tasks);
+        for (outer, (inner, ok)) in results.into_iter().enumerate() {
+            assert!(ok);
+            assert_eq!(inner, vec![outer * 10, outer * 10 + 1, outer * 10 + 2]);
+        }
     }
 
     #[test]
@@ -136,5 +538,58 @@ mod tests {
             partition_rows(&mut zero_width, 5, 0, 8, |row0, b| (row0, b.len())),
             vec![(0, 0)]
         );
+    }
+
+    #[test]
+    fn panicking_task_propagates_after_batch_drains() {
+        let hit = std::sync::atomic::AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..6)
+                .map(|i| {
+                    let hit = &hit;
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("task 3 exploded");
+                        }
+                        hit.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            join_all(tasks)
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // Every non-panicking task still ran (the batch drains fully
+        // before the unwind — that is what keeps 'env borrows sound).
+        assert_eq!(hit.load(std::sync::atomic::Ordering::SeqCst), 5);
+        // And the pool remains usable afterwards.
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..4).map(|i| Box::new(move || i) as Box<dyn FnOnce() -> usize + Send>).collect();
+        assert_eq!(join_all(tasks), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn effective_workers_floor_policy() {
+        // Below one floor of work: always sequential.
+        assert_eq!(effective_workers(8, GEMM_MACS_PER_WORKER - 1, GEMM_MACS_PER_WORKER), 1);
+        // Work for exactly two workers.
+        assert_eq!(effective_workers(8, 2 * GEMM_MACS_PER_WORKER, GEMM_MACS_PER_WORKER), 2);
+        // Plenty of work: the request passes through.
+        assert_eq!(effective_workers(4, 1 << 30, GEMM_MACS_PER_WORKER), 4);
+        // Degenerate floor cannot divide by zero.
+        assert_eq!(effective_workers(4, 100, 0), 4);
+        assert_eq!(effective_workers(0, 100, 1), 1);
+    }
+
+    #[test]
+    fn shutdown_then_reinit_is_transparent() {
+        let mk = || -> Vec<Box<dyn FnOnce() -> usize + Send>> {
+            (0..8).map(|i| Box::new(move || i * 7) as Box<dyn FnOnce() -> usize + Send>).collect()
+        };
+        let before = join_all(mk());
+        shutdown();
+        shutdown(); // idempotent
+        let after = join_all(mk()); // re-initializes lazily
+        assert_eq!(before, after);
     }
 }

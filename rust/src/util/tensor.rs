@@ -1,31 +1,114 @@
 //! Minimal dense f32 tensor used by the pure-rust model mirror and the
 //! datapath simulator. Row-major, 1-D/2-D views, no broadcasting magic —
-//! the heavy math runs in the PJRT artifacts; this exists for the
-//! experiments that sweep number formats without recompiling HLO.
+//! this is the GEMM hot path under every native train step and sweep.
+//!
+//! The three GEMM variants run **packed, register-blocked
+//! microkernels** (ISSUE 5): the stationary operand is packed once per
+//! call into k-major micropanels of [`LANES`] contiguous floats
+//! (reused via [`GemmScratch`], zero steady-state allocation), and the
+//! kernels hold a fixed-width `[f32; LANES]` accumulator block in
+//! registers while the k-loop streams the panel — a shape LLVM
+//! auto-vectorizes. Per output element the floating-point operation
+//! sequence is **identical** to the pre-packing tiled kernels (k
+//! ascending, same zero-skip, same per-tile partial sums for
+//! `matmul_t`), so outputs are bit-identical to the
+//! [`Tensor::matmul_unpacked`]-family reference kernels — and, as
+//! before, bit-identical across any worker count (row bands on
+//! `util::pool`). Both properties are enforced by tests here and in
+//! `rust/tests/properties.rs`.
 
 use crate::util::pool;
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 
-/// GEMM tile sizes. A (TILE_K x TILE_J) f32 panel is 64 KiB — sized to
-/// sit in L2 with room for the streaming operand; TILE_I bounds the
-/// output working set of the transposed variant.
+/// Tile sizes of the *reference* (pre-packing) kernels, kept because
+/// `matmul_t`'s per-(TILE_K)-tile partial sums are part of the
+/// bit-exactness contract: the packed kernel reproduces the same
+/// nested accumulation, so TILE_K must not drift between the two.
 const TILE_I: usize = 64;
 const TILE_J: usize = 128;
 const TILE_K: usize = 128;
 
-/// Minimum MACs per worker before the parallel GEMM variants actually
-/// split: scoped-thread spawn/join costs a few microseconds per
-/// worker, so the requested count is scaled down (possibly to 1) when
-/// each thread's share of the work would be smaller than that. Sized
-/// so the `*_tiny` test presets still split 2+ ways (their GEMMs are
-/// 16k+ MACs) while sub-tile GEMMs stay sequential. Purely a
-/// wall-clock guard — results are bit-identical at any worker count.
-const PAR_MACS_PER_WORKER: usize = 8 * 1024;
+/// Width of the register accumulator block (the j-dimension unroll of
+/// the packed microkernels): 16 f32 = two AVX2 vectors / one AVX-512
+/// vector, small enough that `[f32; LANES]` plus the packed-panel row
+/// stays entirely in registers.
+const LANES: usize = 16;
 
-/// Resolve the worker count actually used for a GEMM of `macs`
-/// multiply-accumulates.
-fn effective_workers(workers: usize, macs: usize) -> usize {
-    workers.min(macs / PAR_MACS_PER_WORKER).max(1)
+/// Reusable packing scratch for the GEMM microkernels: `b` holds the
+/// stationary operand packed into k-major [`LANES`]-wide micropanels;
+/// `a` holds the transposed A operand `t_matmul` additionally packs.
+/// Owned by `model::Workspace` on the training hot path (the `*_ws`
+/// GEMM variants); standalone callers fall back to a thread-local
+/// instance — either way, packing allocates nothing once warm.
+#[derive(Default)]
+pub struct GemmScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    /// Fallback pack scratch for GEMM calls without a workspace.
+    static TL_GEMM_SCRATCH: RefCell<GemmScratch> =
+        const { RefCell::new(GemmScratch { a: Vec::new(), b: Vec::new() }) };
+}
+
+/// Number of [`LANES`]-wide panels covering `n` columns.
+#[inline]
+fn n_panels(n: usize) -> usize {
+    n.div_ceil(LANES)
+}
+
+/// Pack the column panels of a row-major (k_rows x n) matrix: panel
+/// `p` holds columns `[p*LANES, p*LANES+w)` as `k_rows` contiguous
+/// rows of LANES floats, zero-padded beyond the true width `w`. Pure
+/// data movement — no arithmetic, so packing cannot affect results.
+fn pack_col_panels(dst: &mut Vec<f32>, src: &[f32], k_rows: usize, n: usize) {
+    let need = n_panels(n) * k_rows * LANES;
+    dst.resize(need, 0.0);
+    for (p, panel) in dst.chunks_mut(k_rows * LANES).enumerate() {
+        let j0 = p * LANES;
+        let w = LANES.min(n - j0);
+        for (kk, drow) in panel.chunks_mut(LANES).enumerate() {
+            let srow = &src[kk * n + j0..kk * n + j0 + w];
+            drow[..w].copy_from_slice(srow);
+            drow[w..].fill(0.0);
+        }
+    }
+}
+
+/// Pack the *row* panels of a row-major (q x k) matrix transposed:
+/// panel `p` holds rows `[p*LANES, p*LANES+w)` of `src` laid out
+/// k-major (`panel[kk*LANES + l] = src[(p*LANES+l)*k + kk]`), zero
+/// lanes beyond `w` — the B^T staging of `matmul_t`.
+fn pack_row_panels(dst: &mut Vec<f32>, src: &[f32], q: usize, k: usize) {
+    let need = n_panels(q) * k * LANES;
+    dst.resize(need, 0.0);
+    for (p, panel) in dst.chunks_mut(k * LANES).enumerate() {
+        let j0 = p * LANES;
+        let w = LANES.min(q - j0);
+        if w < LANES {
+            panel.fill(0.0);
+        }
+        for l in 0..w {
+            let srow = &src[(j0 + l) * k..(j0 + l) * k + k];
+            for (kk, &v) in srow.iter().enumerate() {
+                panel[kk * LANES + l] = v;
+            }
+        }
+    }
+}
+
+/// Transpose a row-major (rows x cols) matrix into `dst` (cols x rows)
+/// — the A^T staging of `t_matmul`, so each output row reads its A
+/// column contiguously.
+fn pack_transpose(dst: &mut Vec<f32>, src: &[f32], rows: usize, cols: usize) {
+    dst.resize(rows * cols, 0.0);
+    for (r, srow) in src.chunks(cols).enumerate() {
+        for (c, &v) in srow.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -68,17 +151,14 @@ impl Tensor {
         self.data.is_empty()
     }
 
-    /// C = A @ B, cache-blocked: the k and j loops are tiled so a
-    /// (KB x JB) panel of B stays resident in L1/L2 while every row of
-    /// A streams over it, instead of re-reading all of B per A row.
-    /// Zero lanes of A are skipped (LNS tensors are often sparse at
-    /// low bitwidths).
+    /// C = A @ B on the packed microkernel. Zero lanes of A are
+    /// skipped (LNS tensors are often sparse at low bitwidths).
     pub fn matmul(&self, b: &Tensor) -> Tensor {
         self.matmul_p(b, 1)
     }
 
     /// [`Tensor::matmul`] with output rows partitioned across `workers`
-    /// scoped threads. Each band runs the same tiled band kernel the
+    /// pool threads. Each band runs the same packed band kernel the
     /// sequential path runs, and every output element accumulates its
     /// k-contributions in the same order at any worker count, so the
     /// result is bit-identical to `workers == 1`.
@@ -89,24 +169,249 @@ impl Tensor {
     }
 
     /// [`Tensor::matmul_p`] writing into a caller-owned output tensor
-    /// (shape-checked, zeroed here) — the allocation-free hot-path
-    /// variant for workspace-recycled buffers. Same band kernel, same
-    /// bits.
+    /// (shape-checked; every element is overwritten) — the
+    /// allocation-free hot-path variant for workspace-recycled
+    /// buffers, packing into a thread-local scratch. Same band kernel,
+    /// same bits.
     pub fn matmul_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
+        // Take (not borrow) the thread-local scratch across the pool
+        // dispatch: the pool's caller-help loop may run a *foreign*
+        // task on this thread mid-GEMM, and if that task starts a
+        // top-level GEMM of its own it must get a fresh scratch (one
+        // rare allocation) rather than a RefCell double-borrow panic.
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        self.matmul_into_ws(b, out, workers, &mut scratch);
+        TL_GEMM_SCRATCH.set(scratch);
+    }
+
+    /// [`Tensor::matmul_into`] with an explicit pack scratch (the
+    /// workspace-plumbed training hot path). B's column panels are
+    /// packed once per call, shared read-only across all row bands.
+    pub fn matmul_into_ws(
+        &self,
+        b: &Tensor,
+        out: &mut Tensor,
+        workers: usize,
+        scratch: &mut GemmScratch,
+    ) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
-        let (m, n) = (self.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
         assert_eq!((out.rows, out.cols), (m, n), "matmul_into output shape mismatch");
-        out.data.fill(0.0);
-        let workers = effective_workers(workers, m * self.cols * n);
+        if k == 0 {
+            // Degenerate inner dimension: nothing to pack, all-zero
+            // output (the kernels only overwrite via the panel loop).
+            out.data.fill(0.0);
+            return;
+        }
+        pack_col_panels(&mut scratch.b, &b.data, k, n);
+        let bp = scratch.b.as_slice();
+        let workers = pool::effective_workers(workers, m * k * n, pool::GEMM_MACS_PER_WORKER);
         pool::partition_rows(&mut out.data, m, n, workers, |row0, band| {
-            self.matmul_band(b, row0, band)
+            self.matmul_band_packed(bp, n, row0, band)
         });
     }
 
-    /// Tiled kernel for output rows `[row0, row0 + band.len()/n)` of
-    /// A @ B — shared verbatim by the sequential and parallel paths so
-    /// results cannot diverge.
-    fn matmul_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+    /// Packed microkernel for output rows `[row0, row0 + band.len()/n)`
+    /// of A @ B — shared verbatim by the sequential and parallel paths.
+    /// Per element: k ascending, zero lanes of A skipped, one
+    /// accumulator chain — the exact op sequence of
+    /// [`Tensor::matmul_unpacked`]'s tiled kernel, held in a LANES-wide
+    /// register block instead of a memory-resident output row.
+    fn matmul_band_packed(&self, bp: &[f32], n: usize, row0: usize, band: &mut [f32]) {
+        let k = self.cols;
+        let rows = if n == 0 { 0 } else { band.len() / n };
+        for (p, panel) in bp.chunks(k * LANES).enumerate() {
+            let j0 = p * LANES;
+            let w = LANES.min(n - j0);
+            for di in 0..rows {
+                let i = row0 + di;
+                let arow = &self.data[i * k..(i + 1) * k];
+                let mut acc = [0.0f32; LANES];
+                for (kk, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &panel[kk * LANES..kk * LANES + LANES];
+                    for (o, &bv) in acc.iter_mut().zip(brow.iter()) {
+                        *o += a * bv;
+                    }
+                }
+                band[di * n + j0..di * n + j0 + w].copy_from_slice(&acc[..w]);
+            }
+        }
+    }
+
+    /// C = A^T @ B where self is (m, n): result (n, k), packed
+    /// microkernel.
+    pub fn t_matmul(&self, b: &Tensor) -> Tensor {
+        self.t_matmul_p(b, 1)
+    }
+
+    /// [`Tensor::t_matmul`] with output rows (the columns of A)
+    /// partitioned across `workers` pool threads; bit-identical to the
+    /// sequential order (per-element accumulation runs over r in
+    /// ascending order in every band).
+    pub fn t_matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, b.cols);
+        self.t_matmul_into(b, &mut out, workers);
+        out
+    }
+
+    /// [`Tensor::t_matmul_p`] into a caller-owned output tensor
+    /// (shape-checked; every element is overwritten), thread-local
+    /// pack scratch (taken, not borrowed — see [`Tensor::matmul_into`]).
+    pub fn t_matmul_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        self.t_matmul_into_ws(b, out, workers, &mut scratch);
+        TL_GEMM_SCRATCH.set(scratch);
+    }
+
+    /// [`Tensor::t_matmul_into`] with an explicit pack scratch. Packs
+    /// both operands once per call: A transposed (so each output row
+    /// reads its A column contiguously) and B's column panels.
+    pub fn t_matmul_into_ws(
+        &self,
+        b: &Tensor,
+        out: &mut Tensor,
+        workers: usize,
+        scratch: &mut GemmScratch,
+    ) {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let (r_dim, n, p) = (self.rows, self.cols, b.cols);
+        assert_eq!((out.rows, out.cols), (n, p), "t_matmul_into output shape mismatch");
+        if r_dim == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let GemmScratch { a: at, b: bp } = scratch;
+        pack_transpose(at, &self.data, r_dim, n);
+        pack_col_panels(bp, &b.data, r_dim, p);
+        let (at, bp) = (at.as_slice(), bp.as_slice());
+        let workers = pool::effective_workers(workers, r_dim * n * p, pool::GEMM_MACS_PER_WORKER);
+        pool::partition_rows(&mut out.data, n, p, workers, |row0, band| {
+            t_matmul_band_packed(at, bp, r_dim, p, row0, band)
+        });
+    }
+
+    /// C = A @ B^T where b is (k, n): result (m, k), packed
+    /// microkernel.
+    pub fn matmul_t(&self, b: &Tensor) -> Tensor {
+        self.matmul_t_p(b, 1)
+    }
+
+    /// [`Tensor::matmul_t`] with output rows partitioned across
+    /// `workers` pool threads; bit-identical to the sequential order
+    /// (per-element: k-tiles accumulate in ascending order regardless
+    /// of the row band).
+    pub fn matmul_t_p(&self, b: &Tensor, workers: usize) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, b.rows);
+        self.matmul_t_into(b, &mut out, workers);
+        out
+    }
+
+    /// [`Tensor::matmul_t_p`] into a caller-owned output tensor
+    /// (shape-checked; every element is overwritten), thread-local
+    /// pack scratch (taken, not borrowed — see [`Tensor::matmul_into`]).
+    pub fn matmul_t_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        self.matmul_t_into_ws(b, out, workers, &mut scratch);
+        TL_GEMM_SCRATCH.set(scratch);
+    }
+
+    /// [`Tensor::matmul_t_into`] with an explicit pack scratch. B's
+    /// rows (the output columns) are transpose-packed once per call
+    /// into k-major panels.
+    pub fn matmul_t_into_ws(
+        &self,
+        b: &Tensor,
+        out: &mut Tensor,
+        workers: usize,
+        scratch: &mut GemmScratch,
+    ) {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let (m, k, q) = (self.rows, self.cols, b.rows);
+        assert_eq!((out.rows, out.cols), (m, q), "matmul_t_into output shape mismatch");
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        pack_row_panels(&mut scratch.b, &b.data, q, k);
+        let bp = scratch.b.as_slice();
+        let workers = pool::effective_workers(workers, m * k * q, pool::GEMM_MACS_PER_WORKER);
+        pool::partition_rows(&mut out.data, m, q, workers, |row0, band| {
+            self.matmul_t_band_packed(bp, q, row0, band)
+        });
+    }
+
+    /// Packed microkernel for output rows of A @ B^T. Reproduces the
+    /// reference kernel's nested accumulation exactly: per element, a
+    /// fresh partial sum per TILE_K k-tile (ascending within the
+    /// tile, no zero-skip), tile partials added to the output chain in
+    /// tile order — only now both levels live in LANES-wide register
+    /// blocks.
+    fn matmul_t_band_packed(&self, bp: &[f32], q: usize, row0: usize, band: &mut [f32]) {
+        let k = self.cols;
+        let rows = if q == 0 { 0 } else { band.len() / q };
+        for (p, panel) in bp.chunks(k * LANES).enumerate() {
+            let j0 = p * LANES;
+            let w = LANES.min(q - j0);
+            for di in 0..rows {
+                let i = row0 + di;
+                let arow = &self.data[i * k..(i + 1) * k];
+                let mut oacc = [0.0f32; LANES];
+                for k0 in (0..k).step_by(TILE_K) {
+                    let k1 = (k0 + TILE_K).min(k);
+                    let mut tacc = [0.0f32; LANES];
+                    for (kk, &a) in arow[k0..k1].iter().enumerate() {
+                        let brow = &panel[(k0 + kk) * LANES..(k0 + kk) * LANES + LANES];
+                        for (o, &bv) in tacc.iter_mut().zip(brow.iter()) {
+                            *o += a * bv;
+                        }
+                    }
+                    for (o, &t) in oacc.iter_mut().zip(tacc.iter()) {
+                        *o += t;
+                    }
+                }
+                band[di * q + j0..di * q + j0 + w].copy_from_slice(&oacc[..w]);
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Reference (pre-packing) kernels: the cache-blocked tiled GEMMs
+    // ISSUE 1–4 shipped, kept verbatim as (a) the baseline of the
+    // packed-vs-unpacked bench section and (b) the independent oracle
+    // the packed microkernels are bit-compared against — the packed
+    // kernels replay the same per-element FP op sequence, so equality
+    // is exact, not approximate.
+    // -----------------------------------------------------------------
+
+    /// Sequential A @ B on the reference tiled kernel.
+    pub fn matmul_unpacked(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut out = Tensor::zeros(self.rows, b.cols);
+        self.matmul_band_ref(b, 0, &mut out.data);
+        out
+    }
+
+    /// Sequential A^T @ B on the reference tiled kernel.
+    pub fn t_matmul_unpacked(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let mut out = Tensor::zeros(self.cols, b.cols);
+        self.t_matmul_band_ref(b, 0, &mut out.data);
+        out
+    }
+
+    /// Sequential A @ B^T on the reference tiled kernel.
+    pub fn matmul_t_unpacked(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let mut out = Tensor::zeros(self.rows, b.rows);
+        self.matmul_t_band_ref(b, 0, &mut out.data);
+        out
+    }
+
+    /// Reference tiled kernel for output rows of A @ B.
+    fn matmul_band_ref(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
         let (k, n) = (self.cols, b.cols);
         let rows = if n == 0 { 0 } else { band.len() / n };
         for j0 in (0..n).step_by(TILE_J) {
@@ -132,39 +437,8 @@ impl Tensor {
         }
     }
 
-    /// C = A^T @ B where self is (m, n): result (n, k). Blocked over
-    /// the output rows (i) and columns (j) so the (IB x JB) output
-    /// block stays hot while the shared r dimension streams.
-    pub fn t_matmul(&self, b: &Tensor) -> Tensor {
-        self.t_matmul_p(b, 1)
-    }
-
-    /// [`Tensor::t_matmul`] with output rows (the columns of A)
-    /// partitioned across `workers` scoped threads; bit-identical to
-    /// the sequential order (per-element accumulation runs over r in
-    /// ascending order in every band).
-    pub fn t_matmul_p(&self, b: &Tensor, workers: usize) -> Tensor {
-        let mut out = Tensor::zeros(self.cols, b.cols);
-        self.t_matmul_into(b, &mut out, workers);
-        out
-    }
-
-    /// [`Tensor::t_matmul_p`] into a caller-owned output tensor
-    /// (shape-checked, zeroed here).
-    pub fn t_matmul_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
-        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
-        let (n, p) = (self.cols, b.cols);
-        assert_eq!((out.rows, out.cols), (n, p), "t_matmul_into output shape mismatch");
-        out.data.fill(0.0);
-        let workers = effective_workers(workers, self.rows * n * p);
-        pool::partition_rows(&mut out.data, n, p, workers, |row0, band| {
-            self.t_matmul_band(b, row0, band)
-        });
-    }
-
-    /// Tiled kernel for output rows `[row0, row0 + band.len()/p)` of
-    /// A^T @ B.
-    fn t_matmul_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+    /// Reference tiled kernel for output rows of A^T @ B.
+    fn t_matmul_band_ref(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
         let (r_dim, n, p) = (self.rows, self.cols, b.cols);
         let rows = if p == 0 { 0 } else { band.len() / p };
         for i0 in (0..rows).step_by(TILE_I) {
@@ -188,39 +462,8 @@ impl Tensor {
         }
     }
 
-    /// C = A @ B^T where b is (k, n): result (m, k). Blocked over the
-    /// rows of B (j) and the shared dimension (k): each (JB x KB)
-    /// panel of B is reused across all rows of A before moving on.
-    pub fn matmul_t(&self, b: &Tensor) -> Tensor {
-        self.matmul_t_p(b, 1)
-    }
-
-    /// [`Tensor::matmul_t`] with output rows partitioned across
-    /// `workers` scoped threads; bit-identical to the sequential order
-    /// (per-element: k-tiles accumulate in ascending order regardless
-    /// of the row band).
-    pub fn matmul_t_p(&self, b: &Tensor, workers: usize) -> Tensor {
-        let mut out = Tensor::zeros(self.rows, b.rows);
-        self.matmul_t_into(b, &mut out, workers);
-        out
-    }
-
-    /// [`Tensor::matmul_t_p`] into a caller-owned output tensor
-    /// (shape-checked, zeroed here).
-    pub fn matmul_t_into(&self, b: &Tensor, out: &mut Tensor, workers: usize) {
-        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
-        let (m, q) = (self.rows, b.rows);
-        assert_eq!((out.rows, out.cols), (m, q), "matmul_t_into output shape mismatch");
-        out.data.fill(0.0);
-        let workers = effective_workers(workers, m * self.cols * q);
-        pool::partition_rows(&mut out.data, m, q, workers, |row0, band| {
-            self.matmul_t_band(b, row0, band)
-        });
-    }
-
-    /// Tiled kernel for output rows `[row0, row0 + band.len()/q)` of
-    /// A @ B^T.
-    fn matmul_t_band(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
+    /// Reference tiled kernel for output rows of A @ B^T.
+    fn matmul_t_band_ref(&self, b: &Tensor, row0: usize, band: &mut [f32]) {
         let (k, q) = (self.cols, b.rows);
         let rows = if q == 0 { 0 } else { band.len() / q };
         for j0 in (0..q).step_by(TILE_J) {
@@ -273,6 +516,41 @@ impl Tensor {
 
     pub fn l2(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Packed microkernel for output rows of A^T @ B, over the transposed
+/// A pack `at` (n x r_dim, output row's A column contiguous) and B's
+/// column panels `bp`. Per element: r ascending, zero lanes of A
+/// skipped, one accumulator chain — the reference kernel's exact op
+/// sequence.
+fn t_matmul_band_packed(
+    at: &[f32],
+    bp: &[f32],
+    r_dim: usize,
+    p: usize,
+    row0: usize,
+    band: &mut [f32],
+) {
+    let rows = if p == 0 { 0 } else { band.len() / p };
+    for (pi, panel) in bp.chunks(r_dim * LANES).enumerate() {
+        let j0 = pi * LANES;
+        let w = LANES.min(p - j0);
+        for di in 0..rows {
+            let i = row0 + di;
+            let arow = &at[i * r_dim..(i + 1) * r_dim];
+            let mut acc = [0.0f32; LANES];
+            for (rr, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &panel[rr * LANES..rr * LANES + LANES];
+                for (o, &bv) in acc.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+            band[di * p + j0..di * p + j0 + w].copy_from_slice(&acc[..w]);
+        }
     }
 }
 
@@ -339,7 +617,7 @@ mod tests {
         let _ = a.matmul_t(&b);
     }
 
-    /// Plain triple-loop references for validating the tiled kernels.
+    /// Plain triple-loop references for validating the kernels.
     fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
         let mut out = Tensor::zeros(a.rows, b.cols);
         for i in 0..a.rows {
@@ -363,12 +641,19 @@ mod tests {
     }
 
     #[test]
-    fn tiled_matmul_matches_naive_across_tile_boundaries() {
-        // Sizes straddle the 64/128 tile edges (including exact
+    fn packed_matmul_matches_naive_across_panel_boundaries() {
+        // Sizes straddle the LANES/tile edges (including exact
         // multiples and off-by-one tails).
         let mut rng = Rng::new(17);
-        for (m, k, n) in [(1, 1, 1), (3, 129, 5), (130, 64, 131), (65, 257, 127), (128, 128, 128)]
-        {
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 129, 5),
+            (130, 64, 131),
+            (65, 257, 127),
+            (128, 128, 128),
+            (4, 16, 16),
+            (4, 16, 17),
+        ] {
             let a = Tensor::randn(m, k, 1.0, &mut rng);
             let b = Tensor::randn(k, n, 1.0, &mut rng);
             assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
@@ -376,9 +661,9 @@ mod tests {
     }
 
     #[test]
-    fn tiled_t_matmul_matches_naive_across_tile_boundaries() {
+    fn packed_t_matmul_matches_naive_across_panel_boundaries() {
         let mut rng = Rng::new(18);
-        for (r, n, p) in [(129, 65, 131), (64, 130, 3), (257, 127, 129)] {
+        for (r, n, p) in [(129, 65, 131), (64, 130, 3), (257, 127, 129), (7, 16, 16)] {
             let a = Tensor::randn(r, n, 1.0, &mut rng);
             let b = Tensor::randn(r, p, 1.0, &mut rng);
             // A^T as an explicit transpose, then the naive product.
@@ -393,9 +678,9 @@ mod tests {
     }
 
     #[test]
-    fn tiled_matmul_t_matches_naive_across_tile_boundaries() {
+    fn packed_matmul_t_matches_naive_across_panel_boundaries() {
         let mut rng = Rng::new(19);
-        for (m, k, q) in [(65, 129, 130), (3, 257, 127), (130, 64, 65)] {
+        for (m, k, q) in [(65, 129, 130), (3, 257, 127), (130, 64, 65), (5, 16, 16)] {
             let a = Tensor::randn(m, k, 1.0, &mut rng);
             let b = Tensor::randn(q, k, 1.0, &mut rng);
             let mut bt = Tensor::zeros(k, q);
@@ -405,6 +690,52 @@ mod tests {
                 }
             }
             assert_close(&a.matmul_t(&b), &naive_matmul(&a, &bt), 1e-4);
+        }
+    }
+
+    #[test]
+    fn packed_kernels_bit_identical_to_unpacked_reference() {
+        // The ISSUE-5 contract: the packed register-blocked
+        // microkernels replay the reference tiled kernels' exact
+        // per-element FP op sequence — equality is bitwise, for every
+        // variant, at ragged shapes straddling LANES and TILE_K
+        // boundaries, with sparse (zero-skip) data in the mix.
+        let mut rng = Rng::new(29);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (2, 3, 15),
+            (5, 16, 16),
+            (7, 127, 17),
+            (37, 129, 53),
+            (64, 256, 33),
+            (130, 64, 131),
+        ] {
+            let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let mut c = Tensor::randn(m, n, 1.0, &mut rng);
+            // Sparsify both left operands so the zero-skip path runs.
+            for (i, v) in a.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            for (i, v) in c.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.matmul(&b)), bits(&a.matmul_unpacked(&b)), "matmul {m}x{k}x{n}");
+            assert_eq!(
+                bits(&a.t_matmul(&c)),
+                bits(&a.t_matmul_unpacked(&c)),
+                "t_matmul {m}x{k}x{n}"
+            );
+            assert_eq!(
+                bits(&c.matmul_t(&b)),
+                bits(&c.matmul_t_unpacked(&b)),
+                "matmul_t {m}x{k}x{n}"
+            );
         }
     }
 
@@ -435,6 +766,37 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_output_buffers() {
+        // The workspace contract: every *_into variant overwrites
+        // every element, so recycled (poisoned) buffers cannot leak
+        // history — the training hot path feeds all three variants
+        // unzeroed `tensor_for_gemm` buffers. Ragged shapes so the
+        // final LANES panel is partial in each.
+        let mut rng = Rng::new(31);
+        let a = Tensor::randn(9, 33, 1.0, &mut rng); // (m, k)
+        let b = Tensor::randn(33, 21, 1.0, &mut rng); // (k, n)
+        let c = Tensor::randn(9, 21, 1.0, &mut rng); // (m, n)
+        let poisoned = |rows: usize, cols: usize| {
+            Tensor::from_vec(rows, cols, vec![f32::NAN; rows * cols])
+        };
+
+        let want = a.matmul(&b); // (9, 21)
+        let mut out = poisoned(9, 21);
+        a.matmul_into(&b, &mut out, 2);
+        assert_eq!(out.data, want.data, "matmul_into left stale NaNs");
+
+        let want_t = a.t_matmul(&c); // A^T @ C: (33, 21)
+        let mut out_t = poisoned(33, 21);
+        a.t_matmul_into(&c, &mut out_t, 2);
+        assert_eq!(out_t.data, want_t.data, "t_matmul_into left stale NaNs");
+
+        let want_mt = c.matmul_t(&b); // C @ B^T: (9, 33)
+        let mut out_mt = poisoned(9, 33);
+        c.matmul_t_into(&b, &mut out_mt, 2);
+        assert_eq!(out_mt.data, want_mt.data, "matmul_t_into left stale NaNs");
     }
 
     #[test]

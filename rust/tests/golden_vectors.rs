@@ -14,9 +14,10 @@
 
 use lns_madam::lns::convert::{mitchell_bound, ConvertMode, Converter};
 use lns_madam::lns::format::{LnsFormat, Rounding};
-use lns_madam::lns::kernels::{self, QuantScratch};
+use lns_madam::lns::kernels;
 use lns_madam::lns::softfloat::MiniFloat;
 use lns_madam::lns::Scaling;
+use lns_madam::util::rng::{CounterRng, Rng};
 
 // ---------------------------------------------------------------------------
 // softfloat: minifloat quantization golden vectors
@@ -291,7 +292,6 @@ fn near_tie_golden_vectors_fast_vs_exact() {
         // ...and the fused fast-path kernel emits the same bits.
         let mut signs = [0i8; 1];
         let mut codes = [0u32; 1];
-        let mut scratch = QuantScratch::default();
         kernels::encode_rows_into(
             &mut signs,
             &mut codes,
@@ -304,7 +304,6 @@ fn near_tie_golden_vectors_fast_vs_exact() {
             None,
             &[1.0],
             1,
-            &mut scratch,
         );
         assert_eq!(
             codes[0], code,
@@ -339,5 +338,116 @@ fn paper8_quantize_golden_vectors() {
                 "quantize({x}): rel err {rel} > Lemma-1 bound {bound}"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CounterRng: counter-based stochastic-rounding stream golden vectors
+// ---------------------------------------------------------------------------
+
+/// (key, counter, expected u64 draw, expected uniform f32). The
+/// construction is SplitMix64's finalizer over `key + (i+1)*PHI` —
+/// row (0, 0) is therefore exactly SplitMix64's first output from
+/// seed 0 — and the f32 uniform is the same 24-bit top-bits
+/// construction `Rng::uniform_f32` uses, so every expected value is
+/// reproducible from the published reference algorithm. The uniform
+/// column is exact (24-bit integers and 2^-24 are exactly
+/// representable), so asserts are bitwise. (0, u64::MAX) pins the
+/// counter-wrap edge: the wrapped state is 0, whose finalizer image
+/// is 0.
+const COUNTER_RNG_GOLDEN: &[(u64, u64, u64, f32)] = &[
+    (0x0000000000000000, 0x0000000000000000, 0xE220A8397B1DCDAF, 0.8833108),
+    (0x0000000000000000, 0x0000000000000001, 0x6E789E6AA1B965F4, 0.43152797),
+    (0x0000000000000000, 0x0000000000000002, 0x06C45D188009454F, 0.026433766),
+    (0x0000000000000000, 0x0000000000000007, 0xC584133AC916AB3C, 0.77154654),
+    (0x0000000000000000, 0x0000000000001FFF, 0x2D2D553455DCDFD4, 0.17647296),
+    (0x0000000000000000, 0x0000000100000000, 0x46093CF9861EC2E4, 0.2735784),
+    (0x0000000000000000, 0xFFFFFFFFFFFFFFFF, 0x0000000000000000, 0.0),
+    (0x0000000000000001, 0x0000000000000000, 0x910A2DEC89025CC1, 0.5665615),
+    (0x0000000000000001, 0x0000000000000001, 0xBEEB8DA1658EEC67, 0.7457817),
+    (0x0000000000000001, 0x0000000000000002, 0xF893A2EEFB32555E, 0.9710027),
+    (0x0000000000000001, 0x0000000000000007, 0x85E7BB0F12278575, 0.5230672),
+    (0x0000000000000001, 0x0000000000001FFF, 0x01952A3B83A7C1FC, 0.006182313),
+    (0x0000000000000001, 0x0000000100000000, 0x16C3E976BF22DC37, 0.08892685),
+    (0x0000000000000001, 0xFFFFFFFFFFFFFFFF, 0x5692161D100B05E5, 0.3381666),
+    (0x000000000000DA7A, 0x0000000000000000, 0x5ADBAA8B4F43D880, 0.3549143),
+    (0x000000000000DA7A, 0x0000000000000001, 0xE542C1DD1F137FAD, 0.89554983),
+    (0x000000000000DA7A, 0x0000000000000002, 0x3BEA9B5F4190F02A, 0.23404855),
+    (0x000000000000DA7A, 0x0000000000000007, 0x38190AED91BED9CF, 0.21913207),
+    (0x000000000000DA7A, 0x0000000000001FFF, 0x931E28034B1712F2, 0.5746789),
+    (0x000000000000DA7A, 0x0000000100000000, 0xE43C8FC34DA5F3F9, 0.89154905),
+    (0x000000000000DA7A, 0xFFFFFFFFFFFFFFFF, 0x8744D95DAD46F86D, 0.5283943),
+    (0x00000000DEADBEEF, 0x0000000000000000, 0x4ADFB90F68C9EB9B, 0.29247624),
+    (0x00000000DEADBEEF, 0x0000000000000001, 0xDE586A3141A10922, 0.8685366),
+    (0x00000000DEADBEEF, 0x0000000000000002, 0x021FBC2F8E1CFC1D, 0.008296728),
+    (0x00000000DEADBEEF, 0x0000000000000007, 0xB30A4CCF430B1B5A, 0.69937587),
+    (0x00000000DEADBEEF, 0x0000000000001FFF, 0x378B755F7F75C37E, 0.2169717),
+    (0x00000000DEADBEEF, 0x0000000100000000, 0xDF0AD790901E109C, 0.87125915),
+    (0x00000000DEADBEEF, 0xFFFFFFFFFFFFFFFF, 0x4E062702EC929EEA, 0.30478138),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000000000000, 0xE4D971771B652C20, 0.8939429),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000000000001, 0xE99FF867DBF682C9, 0.9125972),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000000000002, 0x382FF84CB27281E9, 0.21948195),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000000000007, 0x405DA438A39E8064, 0.25142884),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000000001FFF, 0x928F9EE3E7FDE1BA, 0.5725039),
+    (0xFFFFFFFFFFFFFFFF, 0x0000000100000000, 0xC5AA1D1D7E827744, 0.772127),
+    (0xFFFFFFFFFFFFFFFF, 0xFFFFFFFFFFFFFFFF, 0xB4D055FCF2CBBD7B, 0.7063039),
+];
+
+#[test]
+fn counter_rng_golden_vectors() {
+    for &(key, i, want_u64, want_f32) in COUNTER_RNG_GOLDEN {
+        let c = CounterRng::new(key);
+        assert_eq!(
+            c.u64_at(i),
+            want_u64,
+            "CounterRng({key:#X}).u64_at({i:#X}) drifted from the golden table"
+        );
+        assert_eq!(
+            c.uniform_f32_at(i).to_bits(),
+            want_f32.to_bits(),
+            "CounterRng({key:#X}).uniform_f32_at({i:#X}) drifted from the golden table"
+        );
+    }
+}
+
+#[test]
+fn stochastic_quant_consumes_exactly_one_sequential_draw_per_call() {
+    // The counter construction replaces the per-element pre-draw: a
+    // stochastic quantize call advances the caller's sequential stream
+    // by exactly one u64 (the key), regardless of tensor size — and
+    // the emitted values match the scalar `encode_stochastic` fed the
+    // counter stream at each flat index.
+    let fmt = LnsFormat::new(8, 8);
+    let (rows, cols) = (7, 13);
+    let mut seq = Rng::new(0x5EED);
+    let data: Vec<f32> = (0..rows * cols).map(|_| seq.normal_f32()).collect();
+
+    let mut rng_a = Rng::new(99);
+    let mut rng_b = Rng::new(99);
+    let key_rng = CounterRng::from_rng(&mut rng_b); // the draw the kernel makes
+
+    let mut got: Vec<f32> = data.clone();
+    let mut scratch = kernels::QuantScratch::default();
+    kernels::quantize_rows_into_rounded(
+        &mut got,
+        rows,
+        cols,
+        fmt,
+        Scaling::PerTensor,
+        Rounding::Stochastic,
+        Some(&mut rng_a),
+        1,
+        &mut scratch,
+    );
+    // One draw consumed: both streams now aligned.
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "kernel consumed more than the key draw");
+
+    // Scalar reference over the same counter stream.
+    let absmax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let s = fmt.scale_for_absmax(absmax);
+    for (i, (&x, &g)) in data.iter().zip(got.iter()).enumerate() {
+        let v = fmt.encode_stochastic(x, s, key_rng.uniform_f32_at(i as u64));
+        let want = fmt.decode(v, s);
+        assert_eq!(g.to_bits(), want.to_bits(), "element {i}: {g} vs scalar {want}");
     }
 }

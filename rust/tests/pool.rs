@@ -1,0 +1,209 @@
+//! Integration tests for the persistent worker pool (`util::pool`) —
+//! the ISSUE-5 threading substrate every hot path now dispatches
+//! through.
+//!
+//! Four families:
+//! * **reentrancy** — tasks that dispatch again run their nested task
+//!   lists inline, with correct results;
+//! * **oversubscription** — far more tasks/workers than host cores
+//!   complete correctly (queued jobs drain through workers and the
+//!   caller-help loop);
+//! * **pool-vs-inline bit-identity** — GEMM, quantizer, and
+//!   fused-optimizer outputs are bitwise equal between `workers == 1`
+//!   (inline, never touches the pool) and pooled multi-worker runs;
+//! * **shutdown/re-init** — tearing the pool down and re-initializing
+//!   it around global toggles (`kernels::set_force_exact`) can never
+//!   change a result, so pool lifecycle cannot race process-wide
+//!   state.
+
+use lns_madam::lns::format::LnsFormat;
+use lns_madam::lns::kernels::{self, QuantScratch};
+use lns_madam::lns::Scaling;
+use lns_madam::optim::{FusedMadamQu, Optimizer, UpdateQuantizer};
+use lns_madam::util::pool;
+use lns_madam::util::rng::Rng;
+use lns_madam::util::tensor::Tensor;
+
+fn qu_fmt() -> LnsFormat {
+    match UpdateQuantizer::lns_matched(16) {
+        UpdateQuantizer::Lns(f) => f,
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn reentrant_dispatch_from_pool_tasks_runs_inline() {
+    // Outer tasks each run a nested partition_rows; the nested calls
+    // must execute on the outer task's thread (no pool-in-pool) and
+    // produce exactly the sequential result.
+    let tasks: Vec<Box<dyn FnOnce() -> Vec<u32> + Send>> = (0..6)
+        .map(|outer: usize| {
+            Box::new(move || {
+                let tid = std::thread::current().id();
+                let mut data = vec![0u32; 12 * 3];
+                pool::partition_rows(&mut data, 12, 3, 4, |row0, band| {
+                    assert_eq!(
+                        std::thread::current().id(),
+                        tid,
+                        "nested partition_rows left its thread"
+                    );
+                    for (i, v) in band.iter_mut().enumerate() {
+                        *v = (outer * 1000 + row0 * 3 + i) as u32;
+                    }
+                });
+                data
+            }) as Box<dyn FnOnce() -> Vec<u32> + Send>
+        })
+        .collect();
+    for (outer, got) in pool::join_all(tasks).into_iter().enumerate() {
+        let want: Vec<u32> = (0..36).map(|i| (outer * 1000 + i) as u32).collect();
+        assert_eq!(got, want, "outer task {outer}");
+    }
+}
+
+#[test]
+fn oversubscription_many_more_workers_than_cores() {
+    // 64-way partition and a 100-task join on a handful of cores:
+    // everything queues, drains, and lands in order.
+    let (rows, cols) = (257, 31);
+    let mut data = vec![0.0f32; rows * cols];
+    let firsts = pool::partition_rows(&mut data, rows, cols, 64, |row0, band| {
+        for (i, v) in band.iter_mut().enumerate() {
+            *v = (row0 * cols + i) as f32;
+        }
+        row0
+    });
+    assert!(firsts.len() > 1, "oversubscribed call should still band");
+    for (i, v) in data.iter().enumerate() {
+        assert_eq!(*v, i as f32, "element {i} written by the wrong band");
+    }
+
+    let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..100)
+        .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+        .collect();
+    let got = pool::join_all(tasks);
+    assert_eq!(got, (0..100).map(|i| i * i).collect::<Vec<_>>());
+}
+
+#[test]
+fn pool_vs_inline_bit_identity_gemm() {
+    // workers == 1 never touches the pool (inline fast path); pooled
+    // runs must reproduce it bit for bit, for every GEMM variant,
+    // above the work floor so bands genuinely split.
+    let mut rng = Rng::new(0x6E0);
+    let a = Tensor::randn(97, 131, 1.0, &mut rng);
+    let b = Tensor::randn(131, 61, 1.0, &mut rng);
+    let c = Tensor::randn(97, 61, 1.0, &mut rng);
+    let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    for workers in [2usize, 3, 8, 32] {
+        assert_eq!(bits(&a.matmul_p(&b, workers)), bits(&a.matmul(&b)), "matmul @ {workers}");
+        assert_eq!(bits(&a.t_matmul_p(&c, workers)), bits(&a.t_matmul(&c)), "t_matmul @ {workers}");
+        assert_eq!(bits(&c.matmul_t_p(&b, workers)), bits(&c.matmul_t(&b)), "matmul_t @ {workers}");
+    }
+}
+
+#[test]
+fn pool_vs_inline_bit_identity_quantizer() {
+    let fmt = LnsFormat::PAPER8;
+    let (rows, cols) = (151, 67); // > QUANT_ELEMS_PER_WORKER * 2
+    let mut rng = Rng::new(0x6E1);
+    let t = Tensor::randn(rows, cols, 1.0, &mut rng);
+    for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+        let mut scratch = QuantScratch::default();
+        let mut want = t.clone();
+        kernels::quantize_rows_into(&mut want.data, rows, cols, fmt, scaling, 1, &mut scratch);
+        for workers in [2usize, 5, 16] {
+            let mut got = t.clone();
+            kernels::quantize_rows_into(
+                &mut got.data,
+                rows,
+                cols,
+                fmt,
+                scaling,
+                workers,
+                &mut scratch,
+            );
+            assert!(
+                got.data.iter().zip(want.data.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{scaling:?} @ {workers} workers diverged from inline"
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_vs_inline_bit_identity_fused_optimizer() {
+    let fmt = qu_fmt();
+    let mut rng = Rng::new(0x6E2);
+    let n = 100_000;
+    let w0: Vec<f32> = (0..n).map(|_| rng.normal_f32() + 0.01).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-2).collect();
+
+    let mut inline = FusedMadamQu::new(0.0078125, fmt);
+    inline.par_threshold = usize::MAX; // force the inline kernel
+    let mut w_inline = w0.clone();
+    inline.step(0, &mut w_inline, &g);
+    let want: Vec<u32> = w_inline.iter().map(|v| v.to_bits()).collect();
+
+    for threads in [2usize, 4, 16] {
+        let mut pooled = FusedMadamQu::new(0.0078125, fmt);
+        pooled.par_threshold = 1;
+        pooled.threads = threads;
+        let mut w_pool = w0.clone();
+        pooled.step(0, &mut w_pool, &g);
+        // Bitwise, not f32 ==: a sign-of-zero flip must fail too.
+        let got: Vec<u32> = w_pool.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, got, "fused optimizer @ {threads} threads diverged");
+    }
+}
+
+#[test]
+fn shutdown_reinit_and_global_toggles_cannot_race_results() {
+    // The lifecycle test: quantize on the pool, tear the pool down,
+    // flip the force-exact toggle both ways, re-dispatch (lazily
+    // re-initializing the pool), and require bitwise-stable results
+    // at every point. Pool state and process-wide toggles must be
+    // fully independent.
+    let fmt = LnsFormat::PAPER8;
+    let (rows, cols) = (131, 83);
+    let mut rng = Rng::new(0x6E3);
+    let t = Tensor::randn(rows, cols, 1.0, &mut rng);
+    let run = |workers: usize| {
+        let mut out = t.clone();
+        let mut scratch = QuantScratch::default();
+        kernels::quantize_rows_into(
+            &mut out.data,
+            rows,
+            cols,
+            fmt,
+            Scaling::PerTensor,
+            workers,
+            &mut scratch,
+        );
+        out.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    };
+
+    let want = run(1);
+    assert_eq!(run(8), want, "pooled run diverged before shutdown");
+
+    pool::shutdown();
+    // (No pool_workers() == 0 assert here: sibling tests in this
+    // binary run concurrently and may lazily re-init the pool at any
+    // moment — which is exactly the transparency being tested.)
+    // Toggle global state while the pool is down, then dispatch: the
+    // fast path is bit-identical to exact, so nothing may change.
+    kernels::set_force_exact(true);
+    assert_eq!(run(8), want, "force-exact after shutdown diverged");
+    kernels::set_force_exact(false);
+    assert_eq!(run(8), want, "re-initialized pool diverged");
+
+    // A second cycle, interleaving shutdown between dispatches.
+    pool::shutdown();
+    assert_eq!(run(4), want, "second re-init diverged");
+
+    // GEMMs ride the same re-initialized pool (bitwise compare).
+    let a = Tensor::randn(67, 79, 1.0, &mut rng);
+    let b = Tensor::randn(79, 43, 1.0, &mut rng);
+    let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.matmul_p(&b, 8)), bits(&a.matmul(&b)));
+}

@@ -23,7 +23,7 @@ use lns_madam::lns::Scaling;
 use lns_madam::model::QuantKind;
 use lns_madam::optim::{FusedMadamQu, Madam, Optimizer, UpdateQuantizer};
 use lns_madam::util::proptest::property;
-use lns_madam::util::rng::Rng;
+use lns_madam::util::rng::{CounterRng, Rng};
 use lns_madam::util::tensor::Tensor;
 
 fn lns_kind(bits: u32, gamma: u32) -> QuantKind {
@@ -218,7 +218,10 @@ fn lemma1_relative_error_bounded_vs_f64_reference() {
 
 /// The exact pre-kernel reference: scalar `LnsFormat::encode` /
 /// `encode_stochastic` per element over `group_scales`, in row-major
-/// order — the semantics the fused kernels must reproduce bit for bit.
+/// order — the semantics the fused kernels must reproduce bit for
+/// bit. Stochastic uniforms use the kernels' counter construction:
+/// one key drawn from the sequential stream, then a pure per-index
+/// draw (`CounterRng::uniform_f32_at(flat index)`).
 fn exact_encode_reference(
     t: &Tensor,
     fmt: LnsFormat,
@@ -227,13 +230,9 @@ fn exact_encode_reference(
     rng: Option<&mut Rng>,
 ) -> (Vec<i8>, Vec<u32>, Vec<f32>) {
     let scales = group_scales(t, fmt, scaling);
-    let mut local_rng;
-    let rng = match rng {
-        Some(r) => r,
-        None => {
-            local_rng = Rng::new(0);
-            &mut local_rng
-        }
+    let crng = match rng {
+        Some(r) => CounterRng::from_rng(r),
+        None => CounterRng::from_rng(&mut Rng::new(0)),
     };
     let mut signs = vec![0i8; t.len()];
     let mut codes = vec![0u32; t.len()];
@@ -248,7 +247,9 @@ fn exact_encode_reference(
             };
             let v: LnsValue = match rounding {
                 Rounding::Nearest => fmt.encode(t.data[i], s),
-                Rounding::Stochastic => fmt.encode_stochastic(t.data[i], s, rng.uniform_f32()),
+                Rounding::Stochastic => {
+                    fmt.encode_stochastic(t.data[i], s, crng.uniform_f32_at(i as u64))
+                }
             };
             signs[i] = v.sign;
             codes[i] = v.code;
@@ -327,7 +328,6 @@ fn fast_kernels_bit_identical_to_exact_encode() {
                         Some(&mut rng_enc),
                         &scales,
                         workers,
-                        &mut scratch,
                     );
                     lns_madam::prop_assert!(
                         g,
@@ -401,11 +401,12 @@ fn parallel_quantization_bit_identical_across_threads() {
 
 #[test]
 fn parallel_quantization_bit_identical_above_worker_floor() {
-    // Small tensors scale the worker count down to 1 (the ~8k
-    // elements-per-worker floor), so the property above mostly proves
-    // the clamp. This one uses shapes big enough for genuine multi-way
-    // bands — the surface where offset/indexing bugs would live,
-    // especially the stochastic path's pre-drawn uniform stream.
+    // Small tensors scale the worker count down to 1 (the shared
+    // `pool::QUANT_ELEMS_PER_WORKER` floor), so the property above
+    // mostly proves the clamp. This one uses shapes big enough for
+    // genuine multi-way bands — the surface where offset/indexing
+    // bugs would live, especially the stochastic path's
+    // counter-indexed uniform draws.
     let fmt = LnsFormat::new(8, 8);
     let (rows, cols) = (193, 307); // 59k elements, ragged over workers
     let mut rng = Rng::new(0xA11);
@@ -450,7 +451,6 @@ fn parallel_quantization_bit_identical_above_worker_floor() {
                     Some(&mut rng_enc),
                     &scales,
                     workers,
-                    &mut scratch,
                 );
                 assert!(
                     got_s == signs && got_c == codes,
@@ -485,6 +485,50 @@ fn parallel_gemm_bit_identical_property() {
             c.matmul_t(&b).data,
             c.matmul_t_p(&b, workers).data,
             "matmul_t {m}x{k}x{n}"
+        );
+    });
+}
+
+#[test]
+fn packed_gemm_bit_identical_to_reference_property() {
+    // ISSUE-5: the packed register-blocked microkernels replay the
+    // pre-packing tiled kernels' exact per-element FP op sequence, so
+    // equality against the retained `*_unpacked` reference kernels is
+    // bitwise — at random shapes, random sparsity (the zero-skip
+    // path), and random worker counts.
+    property(40, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 160);
+        let n = g.usize_in(1, 40);
+        let workers = g.usize_in(1, 9);
+        let mut rng = Rng::new(0xD1CE ^ g.case as u64);
+        let sparsify = |t: &mut Tensor, every: usize| {
+            for (i, v) in t.data.iter_mut().enumerate() {
+                if i % every == 0 {
+                    *v = 0.0;
+                }
+            }
+        };
+        let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let mut c = Tensor::randn(m, n, 1.0, &mut rng);
+        sparsify(&mut a, 2 + g.usize_in(0, 3));
+        sparsify(&mut c, 2 + g.usize_in(0, 3));
+        let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&a.matmul_p(&b, workers)),
+            bits(&a.matmul_unpacked(&b)),
+            "matmul {m}x{k}x{n} @ {workers}"
+        );
+        assert_eq!(
+            bits(&a.t_matmul_p(&c, workers)),
+            bits(&a.t_matmul_unpacked(&c)),
+            "t_matmul {m}x{k}x{n} @ {workers}"
+        );
+        assert_eq!(
+            bits(&c.matmul_t_p(&b, workers)),
+            bits(&c.matmul_t_unpacked(&b)),
+            "matmul_t {m}x{k}x{n} @ {workers}"
         );
     });
 }
