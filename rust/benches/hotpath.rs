@@ -356,6 +356,58 @@ fn gemm_kernel_section(smoke: bool) -> BTreeMap<String, Json> {
     json
 }
 
+/// LnsExec tier section: the same short lns8 training run through the
+/// f32-exact and lns-int execution tiers for both model families —
+/// steps/sec, final loss, and (lns-int) the measured datapath work
+/// priced by the energy model. The integer tier simulates every GEMM
+/// lane, so this section stays on the tiny presets at every bench
+/// size.
+fn lns_exec_section(smoke: bool) -> BTreeMap<String, Json> {
+    use lns_madam::hw::EnergyModel;
+    let steps = if smoke { 5usize } else { 20 };
+    println!("\n--- lns_exec training tiers (tiny presets, {steps} steps) ---");
+    let mut json = BTreeMap::new();
+    json.insert("steps".into(), Json::Num(steps as f64));
+    for preset in ["mlp_tiny", "charlm_tiny"] {
+        for tier in ["f32-exact", "lns-int"] {
+            let cfg = TrainConfig {
+                model: preset.into(),
+                format: "lns".into(),
+                optimizer: OptKind::Madam,
+                lr: OptKind::Madam.default_lr(),
+                steps: 1,
+                eval_every: 0,
+                qu_bits: 16,
+                backend: BackendKind::Native,
+                parallelism: 1,
+                exec_tier: tier.into(),
+                ..TrainConfig::default()
+            };
+            let mut trainer = Trainer::new(cfg).expect("lns_exec trainer");
+            let t0 = Instant::now();
+            let mut last = f32::NAN;
+            for _ in 0..steps {
+                last = trainer.step().expect("lns_exec step").0;
+            }
+            let sps = steps as f64 / t0.elapsed().as_secs_f64();
+            let key = format!("{preset}_{}", tier.replace('-', "_"));
+            println!("lns_exec {preset:12} {tier:9}  {sps:8.2} steps/s  final loss {last:.4}");
+            json.insert(format!("{key}_final_loss"), Json::Num(last as f64));
+            json.insert(format!("{key}_steps_per_sec"), Json::Num(sps));
+            if tier == "lns-int" {
+                let c = trainer.op_counts;
+                assert!(c.total_macs() > 0, "{preset}: lns-int reported no datapath work");
+                json.insert(format!("{key}_macs"), Json::Num(c.total_macs() as f64));
+                json.insert(
+                    format!("{key}_pe_mj"),
+                    Json::Num(EnergyModel::paper().counts_mj(&c)),
+                );
+            }
+        }
+    }
+    json
+}
+
 /// The native-training throughput sweep: steps/sec for the mlp and
 /// char-LM families at 1/2/4/8 threads, lns8 and fp32, written to
 /// `out_path` as JSON. Asserts that per-step losses are bit-identical
@@ -367,6 +419,7 @@ fn native_training_section(
     quant: QuantBench,
     pool_json: BTreeMap<String, Json>,
     gemm_json: BTreeMap<String, Json>,
+    lns_exec_json: BTreeMap<String, Json>,
 ) {
     let host_cores = Parallelism::Auto.worker_count();
     let presets: &[(&str, &str)] = if smoke {
@@ -509,6 +562,9 @@ fn native_training_section(
     // (schemas in DESIGN.md §Reading and extending the BENCH json).
     root.insert("pool".to_string(), Json::Obj(pool_json));
     root.insert("gemm_kernel".to_string(), Json::Obj(gemm_json));
+    // The LnsExec tier comparison (f32-exact vs lns-int) with the
+    // measured datapath energy of the integer runs.
+    root.insert("lns_exec".to_string(), Json::Obj(lns_exec_json));
     let json = Json::Obj(root).dump();
     std::fs::write(out_path, json).expect("write bench json");
     let shown = std::fs::canonicalize(out_path)
@@ -535,7 +591,8 @@ fn main() {
         let quant = quantizer_section(smoke);
         let pool_json = pool_section(smoke);
         let gemm_json = gemm_kernel_section(smoke);
-        native_training_section(smoke, &out_path, quant, pool_json, gemm_json);
+        let lns_exec_json = lns_exec_section(smoke);
+        native_training_section(smoke, &out_path, quant, pool_json, gemm_json, lns_exec_json);
         return;
     }
 
@@ -722,5 +779,6 @@ fn main() {
     let quant = quantizer_section(smoke);
     let pool_json = pool_section(smoke);
     let gemm_json = gemm_kernel_section(smoke);
-    native_training_section(smoke, &out_path, quant, pool_json, gemm_json);
+    let lns_exec_json = lns_exec_section(smoke);
+    native_training_section(smoke, &out_path, quant, pool_json, gemm_json, lns_exec_json);
 }

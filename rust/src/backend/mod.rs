@@ -130,4 +130,13 @@ pub trait ExecBackend {
     /// Held-out forward pass; `Ok(None)` when the backend has no eval
     /// path (e.g. no eval artifact was lowered).
     fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>>;
+
+    /// Drain the hardware op counters accumulated since the last call.
+    /// `None` for backends that never execute the integer-domain LNS
+    /// tier (PJRT); `Some` — usually nonzero only under
+    /// `--exec-tier lns-int` — from the native backend, feeding
+    /// `hw::energy` with measured work.
+    fn take_op_counts(&mut self) -> Option<crate::lns::OpCounts> {
+        None
+    }
 }

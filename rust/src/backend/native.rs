@@ -9,9 +9,10 @@
 
 use crate::backend::{Batch, ExecBackend, ModelContract, ModelFamily, Param, StepOutput};
 use crate::coordinator::config::TrainConfig;
-use crate::lns::Parallelism;
+use crate::lns::exec::ExecTier;
+use crate::lns::{OpCounts, Parallelism};
 use crate::model::charlm::CharLmModel;
-use crate::model::{train_quant, NativeMlp, NativeModel, TrainQuant};
+use crate::model::{train_quant, NativeMlp, NativeModel, QuantKind, TrainQuant};
 use crate::runtime::{artifacts_available, Manifest};
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -201,6 +202,22 @@ impl NativeBackend {
         }
         let quant =
             train_quant(&cfg.format, cfg.bits_fwd, cfg.gamma_fwd, cfg.bits_bwd, cfg.gamma_bwd)?;
+        // The execution tier: f32-exact (fake-quant, the default) or
+        // lns-int (GEMMs on stored codes through the integer datapath).
+        // lns-int computes *in* the quantizers' LNS format, so it needs
+        // LNS on both training sides.
+        let tier = ExecTier::parse(&cfg.exec_tier)?;
+        if tier == ExecTier::LnsInt {
+            match (&quant.forward, &quant.backward) {
+                (QuantKind::Lns { .. }, QuantKind::Lns { .. }) => {}
+                _ => bail!(
+                    "--exec-tier lns-int requires LNS quantizers on both training \
+                     sides (got format '{}'); run with --format lns",
+                    cfg.format
+                ),
+            }
+        }
+        model.set_exec_tier(tier);
         let contract = model.contract(batch);
         Ok(NativeBackend { model, quant, contract })
     }
@@ -226,6 +243,22 @@ mod tests {
         }
         assert!(builtin_model("nope").is_err());
     }
+
+    #[test]
+    fn lns_int_tier_requires_lns_format() {
+        let mk = |format: &str, tier: &str| TrainConfig {
+            model: "mlp_tiny".into(),
+            format: format.into(),
+            exec_tier: tier.into(),
+            ..TrainConfig::default()
+        };
+        let err = NativeBackend::new(&mk("fp32", "lns-int")).unwrap_err();
+        assert!(err.to_string().contains("lns-int"), "unexpected error: {err}");
+        assert!(NativeBackend::new(&mk("fp8", "lns-int")).is_err());
+        assert!(NativeBackend::new(&mk("lns", "lns-int")).is_ok());
+        assert!(NativeBackend::new(&mk("fp32", "f32-exact")).is_ok());
+        assert!(NativeBackend::new(&mk("lns", "warp-speed")).is_err());
+    }
 }
 
 impl ExecBackend for NativeBackend {
@@ -244,5 +277,9 @@ impl ExecBackend for NativeBackend {
     fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>> {
         let (loss, acc) = self.model.forward_eval(params, batch, &self.quant)?;
         Ok(Some((loss, Some(acc))))
+    }
+
+    fn take_op_counts(&mut self) -> Option<OpCounts> {
+        Some(self.model.take_op_counts())
     }
 }

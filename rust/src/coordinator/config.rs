@@ -83,6 +83,12 @@ pub struct TrainConfig {
     /// simulator. Every consumer is bit-identical at any setting, so
     /// the knob is pure wall-clock (see DESIGN.md §Performance).
     pub parallelism: usize,
+    /// GEMM execution tier for the native backend: "f32-exact" runs
+    /// fake-quantized f32 GEMMs (the default, bit-exact reference);
+    /// "lns-int" runs every training GEMM on the stored LNS codes
+    /// through the Fig. 6 integer datapath, streaming per-step
+    /// `OpCounts` into `hw::energy`. Requires `format = "lns"`.
+    pub exec_tier: String,
 }
 
 impl Default for TrainConfig {
@@ -106,6 +112,7 @@ impl Default for TrainConfig {
             ckpt_path: String::new(),
             resume_from: String::new(),
             parallelism: 0,
+            exec_tier: "f32-exact".into(),
         }
     }
 }
@@ -140,6 +147,7 @@ impl TrainConfig {
             ckpt_path: cfg.str_or("paths", "checkpoint", &d.ckpt_path),
             resume_from: cfg.str_or("paths", "resume", &d.resume_from),
             parallelism: cfg.i64_or("train", "parallelism", d.parallelism as i64).max(0) as usize,
+            exec_tier: cfg.str_or("train", "exec_tier", &d.exec_tier),
         })
     }
 
@@ -162,6 +170,7 @@ mod tests {
         assert_eq!(t.optimizer, OptKind::Madam);
         assert!((t.lr - 2f32.powi(-7)).abs() < 1e-9);
         assert_eq!(t.gamma_fwd, 8.0);
+        assert_eq!(t.exec_tier, "f32-exact");
         assert_eq!(TrainConfig::maxexp(8), 127.0);
     }
 
@@ -181,7 +190,7 @@ mod tests {
         let p = dir.join("t.toml");
         std::fs::write(
             &p,
-            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\nparallelism = 2\n[quant]\ngamma_fwd = 16\n",
+            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\nparallelism = 2\nexec_tier = \"lns-int\"\n[quant]\ngamma_fwd = 16\n",
         )
         .unwrap();
         let t = TrainConfig::from_file(p.to_str().unwrap()).unwrap();
@@ -190,6 +199,7 @@ mod tests {
         assert_eq!(t.steps, 10);
         assert_eq!(t.gamma_fwd, 16.0);
         assert_eq!(t.parallelism, 2);
+        assert_eq!(t.exec_tier, "lns-int");
         assert_eq!(t.train_artifact(), "tfm_tiny_lns_train");
     }
 

@@ -16,6 +16,8 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::config::{OptKind, TrainConfig};
 use crate::coordinator::data::{CharCorpus, SyntheticClassification};
 use crate::coordinator::metrics::MetricsLog;
+use crate::hw::energy::EnergyModel;
+use crate::lns::OpCounts;
 use crate::model::init_params;
 use crate::optim::{Adam, FusedMadamQu, Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
 use crate::runtime::{artifacts_available, Manifest, Runtime};
@@ -43,6 +45,12 @@ pub struct Trainer {
     contract: ModelContract,
     rng: Rng,
     pub steps_done: usize,
+    /// Hardware op counters accumulated over the run, drained from the
+    /// backend after every step. Nonzero only when GEMMs execute on
+    /// the integer LNS datapath (`--exec-tier lns-int`); priced
+    /// through `hw::energy` as *measured* work, per step in the
+    /// metrics log and in total after `run()`.
+    pub op_counts: OpCounts,
 }
 
 /// Build the family-matched data source. `stream_seed` folds the
@@ -167,6 +175,7 @@ impl Trainer {
             contract,
             rng,
             steps_done: 0,
+            op_counts: OpCounts::default(),
         };
         if !trainer.cfg.resume_from.is_empty() {
             let path = trainer.cfg.resume_from.clone();
@@ -214,6 +223,14 @@ impl Trainer {
         if let Some(a) = acc {
             pairs.push(("acc", a as f64));
         }
+        // Drain the backend's hardware op counters (the lns-int tier's
+        // executed work) and price the step's energy from measurement.
+        let step_counts = self.backend.take_op_counts().unwrap_or_default();
+        if step_counts.total_macs() > 0 {
+            self.op_counts.add(&step_counts);
+            pairs.push(("lns_macs", step_counts.total_macs() as f64));
+            pairs.push(("lns_pe_mj", EnergyModel::paper().counts_mj(&step_counts)));
+        }
         self.log.record(self.steps_done, &pairs);
         self.steps_done += 1;
         Ok((loss, acc))
@@ -233,7 +250,14 @@ impl Trainer {
             return Ok(None);
         }
         let batch = self.sample_batch();
-        self.backend.eval_step(&self.params, &batch)
+        let out = self.backend.eval_step(&self.params, &batch);
+        // Eval forwards also execute on the lns-int datapath; drain
+        // them into the run total here so they are never misattributed
+        // to the next train step's metrics row.
+        if let Some(c) = self.backend.take_op_counts() {
+            self.op_counts.add(&c);
+        }
+        out
     }
 
     /// Run the configured number of steps with periodic eval + logging,

@@ -18,6 +18,7 @@
 //! PPU share). All figures are fJ.
 
 use crate::lns::convert::ConvertMode;
+use crate::lns::datapath::OpCounts;
 use crate::lns::format::LnsFormat;
 
 /// Number formats the PE can be synthesized for.
@@ -168,7 +169,13 @@ impl EnergyModel {
     /// LNS datapath energy per MAC for a conversion mode (Fig. 9 parts).
     pub fn lns_datapath_breakdown(&self, fmt: LnsFormat, mode: ConvertMode) -> EnergyBreakdown {
         let c = &self.lns;
-        let bins = mode.lut_entries(fmt).max(1) as f64;
+        // Reference runs a full gamma-entry exact LUT in the datapath
+        // (see `lns::datapath::dot_params_for`); pricing must follow
+        // the bins the simulator actually executes.
+        let bins = match mode {
+            ConvertMode::Reference => fmt.gamma as f64,
+            m => m.lut_entries(fmt).max(1) as f64,
+        };
         let hybrid = bins < fmt.gamma as f64;
         let mut parts = vec![
             ("exponent add".to_string(), c.exp_add),
@@ -227,6 +234,38 @@ impl EnergyModel {
     /// Energy for a workload of `macs` MACs, in millijoules.
     pub fn workload_mj(&self, format: PeFormat, macs: f64) -> f64 {
         self.pe_mac_fj(format) * macs * 1e-12 // fJ -> mJ
+    }
+
+    /// Price a *measured* op-count stream from the integer datapath
+    /// (the `lns::exec` training tier or the `VectorMacUnit`
+    /// simulator), datapath only, in femtojoules.
+    ///
+    /// Each counter is an executed-event count, so components are
+    /// priced per event with no vector-size amortization: `lut_muls`
+    /// is already "bins per output element", not per MAC, which is
+    /// exactly the closed-form `bins * lut_mul / VS` per MAC when the
+    /// contraction depth equals the vector size (pinned by
+    /// `measured_counts_price_matches_closed_form`). `collector_adds`
+    /// carries both the tree add and the collector access;
+    /// `final_adds` ride in the PPU share of the delivery model and
+    /// are not priced here.
+    pub fn counts_fj(&self, c: &OpCounts) -> f64 {
+        let k = &self.lns;
+        c.exp_adds as f64 * k.exp_add
+            + c.sign_xors as f64 * k.sign_xor
+            + c.shifts as f64 * k.shift
+            + c.collector_adds as f64 * (k.tree_add + k.collector)
+            + c.mitchell_adds as f64 * k.mitchell_add
+            + c.lut_muls as f64 * k.lut_mul
+    }
+
+    /// Measured-workload PE energy in millijoules: the priced counts
+    /// plus operand delivery for the executed MACs (8-bit LNS
+    /// operands).
+    pub fn counts_mj(&self, c: &OpCounts) -> f64 {
+        let delivery =
+            self.delivery_mac_fj(PeFormat::Lns(ConvertMode::ExactLut)) * c.total_macs() as f64;
+        (self.counts_fj(c) + delivery) * 1e-12
     }
 }
 
@@ -309,6 +348,72 @@ mod tests {
             let b = m.pe_breakdown(fmt);
             assert!((b.total() - m.pe_mac_fj(fmt)).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn measured_counts_price_matches_closed_form() {
+        use crate::lns::datapath::{MacConfig, Parallelism, VectorMacUnit};
+        use crate::lns::format::Rounding;
+        use crate::lns::quant::{encode_tensor, Scaling};
+        use crate::util::tensor::Tensor;
+
+        let m = EnergyModel::paper();
+        // Contraction depth == vector size (32) with every lane live
+        // and equal-magnitude (no zero flags, no swamping), so the
+        // measured event counts must reduce exactly to the closed-form
+        // per-MAC breakdown — the pinned contract between the
+        // simulator's OpCounts and the Table 10 pricing.
+        let mut a = Tensor::zeros(4, 32);
+        a.data.fill(1.0);
+        let mut b = Tensor::zeros(32, 5);
+        b.data.fill(1.0);
+        let fmt = LnsFormat::PAPER8;
+        let ea = encode_tensor(&a, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        let eb = encode_tensor(&b, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+        for mode in [
+            ConvertMode::Mitchell,
+            ConvertMode::Hybrid { lut_bits: 1 },
+            ConvertMode::Hybrid { lut_bits: 2 },
+            ConvertMode::ExactLut,
+            ConvertMode::Reference,
+        ] {
+            let mut mac = VectorMacUnit::new(MacConfig {
+                format: fmt,
+                convert: mode,
+                acc_bits: 24,
+                vector_size: 32,
+                parallelism: Parallelism::Sequential,
+            });
+            mac.matmul(&ea, &eb);
+            let macs = mac.counts.total_macs() as f64;
+            assert_eq!(macs, 4.0 * 5.0 * 32.0);
+            let per_mac = m.counts_fj(&mac.counts) / macs;
+            let closed = m.datapath_mac_fj(PeFormat::Lns(mode));
+            assert!(
+                (per_mac - closed).abs() < 1e-9 * closed,
+                "{}: measured {per_mac} fJ/MAC vs closed-form {closed}",
+                PeFormat::Lns(mode).name()
+            );
+        }
+    }
+
+    #[test]
+    fn reference_mode_priced_as_full_lut() {
+        let m = EnergyModel::paper();
+        let reference = m.datapath_mac_fj(PeFormat::Lns(ConvertMode::Reference));
+        let exact = m.datapath_mac_fj(PeFormat::Lns(ConvertMode::ExactLut));
+        assert!((reference - exact).abs() < 1e-12, "{reference} vs {exact}");
+    }
+
+    #[test]
+    fn counts_mj_includes_delivery() {
+        let m = EnergyModel::paper();
+        let c = OpCounts { exp_adds: 1_000_000, ..OpCounts::default() };
+        let datapath_only = m.counts_fj(&c) * 1e-12;
+        let with_delivery = m.counts_mj(&c);
+        let want = datapath_only
+            + m.delivery_mac_fj(PeFormat::Lns(ConvertMode::ExactLut)) * 1e6 * 1e-12;
+        assert!((with_delivery - want).abs() < 1e-15, "{with_delivery} vs {want}");
     }
 
     #[test]

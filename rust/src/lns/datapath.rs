@@ -19,7 +19,7 @@
 
 use crate::lns::convert::{ConvertMode, Converter};
 use crate::lns::format::LnsFormat;
-use crate::lns::quant::LnsTensor;
+use crate::lns::quant::{LnsTensor, Scaling};
 use crate::util::pool;
 use crate::util::tensor::Tensor;
 
@@ -140,12 +140,36 @@ impl MacConfig {
 /// `MacConfig` + `Converter` so worker threads can share them without
 /// borrowing the mutable unit.
 #[derive(Clone, Copy, Debug)]
-struct DotParams {
-    gamma: u32,
-    remainder_bits: u32,
-    n_bins: u32,
-    span: u32,
-    acc_bits: u32,
+pub(crate) struct DotParams {
+    pub(crate) gamma: u32,
+    pub(crate) remainder_bits: u32,
+    pub(crate) n_bins: u32,
+    pub(crate) span: u32,
+    pub(crate) acc_bits: u32,
+}
+
+/// Derive the dot-kernel parameters for a format/mode pair. Shared by
+/// [`VectorMacUnit`] and the `lns::exec` training tier so both compute
+/// through identical bin layouts.
+///
+/// `ConvertMode::Reference` gets one bin per remainder value — a full
+/// `gamma`-entry exact LUT with span 1, which makes the datapath's
+/// per-lane conversion exact (bit-identical to `ExactLut`). It used to
+/// fall through `lut_entries() == 0 -> max(1)` and silently degrade to
+/// pure Mitchell (span == gamma), the opposite of what "reference"
+/// promises.
+pub(crate) fn dot_params_for(fmt: LnsFormat, mode: ConvertMode, acc_bits: u32) -> DotParams {
+    let n_bins = match mode {
+        ConvertMode::Reference => fmt.gamma,
+        m => m.lut_entries(fmt).max(1),
+    };
+    DotParams {
+        gamma: fmt.gamma,
+        remainder_bits: fmt.remainder_bits(),
+        n_bins,
+        span: fmt.gamma / n_bins,
+        acc_bits,
+    }
 }
 
 /// The simulated vector MAC unit.
@@ -161,22 +185,8 @@ impl VectorMacUnit {
         VectorMacUnit { cfg, conv, counts: OpCounts::default() }
     }
 
-    fn n_bins(&self) -> u32 {
-        self.conv.mode.lut_entries(self.cfg.format).max(1)
-    }
-
-    fn span(&self) -> u32 {
-        self.cfg.format.gamma / self.n_bins()
-    }
-
     fn dot_params(&self) -> DotParams {
-        DotParams {
-            gamma: self.cfg.format.gamma,
-            remainder_bits: self.cfg.format.remainder_bits(),
-            n_bins: self.n_bins(),
-            span: self.span(),
-            acc_bits: self.cfg.acc_bits,
-        }
+        dot_params_for(self.cfg.format, self.conv.mode, self.cfg.acc_bits)
     }
 
     /// Dot product of two LNS-encoded vectors given as (sign, code)
@@ -205,6 +215,22 @@ impl VectorMacUnit {
     pub fn matmul(&mut self, a: &LnsTensor, b: &LnsTensor) -> Tensor {
         assert_eq!(a.cols, b.rows, "matmul shape mismatch");
         assert_eq!(a.format, b.format);
+        // Group scales are applied per output element after the
+        // integer dot, so they must be constant along the contraction
+        // dim: A may be PerTensor/PerRow-scaled, B PerTensor/PerCol.
+        // A PerCol-scaled A (or PerRow-scaled B) has a different scale
+        // per lane and cannot be factored out of the dot — reject it
+        // instead of silently using scales[0] for every lane.
+        assert!(
+            a.scaling != Scaling::PerCol,
+            "matmul scaling mismatch: A is PerCol-scaled, so the scale varies \
+             along the contraction dim; re-encode A as PerTensor or PerRow"
+        );
+        assert!(
+            b.scaling != Scaling::PerRow,
+            "matmul scaling mismatch: B is PerRow-scaled, so the scale varies \
+             along the contraction dim; re-encode B as PerTensor or PerCol"
+        );
         let workers = self.cfg.parallelism.worker_count().min(a.rows.max(1));
         if workers <= 1 || b.cols == 0 {
             return self.matmul_sequential(a, b);
@@ -219,6 +245,7 @@ impl VectorMacUnit {
         // cycle and reuses across 32 lanes — column-major staging).
         let mut col_signs = vec![0i8; b.rows];
         let mut col_codes = vec![0u32; b.rows];
+        let mut bins = vec![0i64; params.n_bins as usize];
         for j in 0..b.cols {
             for k in 0..b.rows {
                 col_signs[k] = b.signs[k * b.cols + j];
@@ -226,12 +253,13 @@ impl VectorMacUnit {
             }
             for i in 0..a.rows {
                 let row = i * a.cols;
-                let unscaled = dot_kernel(
+                let unscaled = dot_kernel_scratch(
                     &params,
                     &a.signs[row..row + a.cols],
                     &a.codes[row..row + a.cols],
                     &col_signs,
                     &col_codes,
+                    &mut bins,
                     &mut self.counts,
                 );
                 // PPU scaling: per-group scales of both operands.
@@ -266,18 +294,20 @@ impl VectorMacUnit {
         // sequential run exactly.
         let per_band = pool::partition_rows(&mut out.data, a.rows, b.cols, workers, |row0, band| {
             let mut counts = OpCounts::default();
+            let mut bins = vec![0i64; params.n_bins as usize];
             let rows_here = band.len() / b.cols;
             for dr in 0..rows_here {
                 let i = row0 + dr;
                 let row = i * a.cols;
                 for j in 0..b.cols {
                     let col = j * b.rows;
-                    let unscaled = dot_kernel(
+                    let unscaled = dot_kernel_scratch(
                         &params,
                         &a.signs[row..row + a.cols],
                         &a.codes[row..row + a.cols],
                         &bts[col..col + b.rows],
                         &btc[col..col + b.rows],
+                        &mut bins,
                         &mut counts,
                     );
                     let sa = a.scale_at(i, 0);
@@ -295,7 +325,8 @@ impl VectorMacUnit {
 }
 
 /// The per-output-element dot kernel — shared verbatim by the
-/// sequential and parallel paths so results cannot diverge.
+/// sequential and parallel paths so results cannot diverge. Allocates
+/// its own bin collectors; hot loops use [`dot_kernel_scratch`].
 fn dot_kernel(
     p: &DotParams,
     sa: &[i8],
@@ -304,10 +335,26 @@ fn dot_kernel(
     eb: &[u32],
     counts: &mut OpCounts,
 ) -> f64 {
+    let mut bins = vec![0i64; p.n_bins as usize];
+    dot_kernel_scratch(p, sa, ea, sb, eb, &mut bins, counts)
+}
+
+/// [`dot_kernel`] with caller-provided bin collectors (`bins.len()`
+/// must equal `p.n_bins`; contents are overwritten), so GEMM loops run
+/// allocation-free per output element.
+pub(crate) fn dot_kernel_scratch(
+    p: &DotParams,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    bins: &mut [i64],
+    counts: &mut OpCounts,
+) -> f64 {
     debug_assert_eq!(sa.len(), sb.len());
+    debug_assert_eq!(bins.len(), p.n_bins as usize);
     let gamma = p.gamma;
     let b = p.remainder_bits;
-    let n_bins = p.n_bins;
     let span = p.span;
 
     // Pass 1 (hardware: max-exponent detect for the block window).
@@ -337,7 +384,7 @@ fn dot_kernel(
     // 2^(q_max - frac_bits) / gamma. Hybrid mode scales each addend
     // by (gamma + lsb) instead of gamma — an integer-exact way to
     // fold Mitchell's (1 + lsb/gamma) into the adder tree.
-    let mut bins = vec![0i64; n_bins as usize];
+    bins.fill(0);
     for i in 0..sa.len() {
         counts.exp_adds += 1;
         counts.sign_xors += 1;
@@ -631,5 +678,100 @@ mod tests {
         let mut mac5 = VectorMacUnit::new(MacConfig::paper());
         let alone = mac5.dot(&[1], &[10], &[1], &[10]);
         assert_eq!(only, alone);
+    }
+
+    #[test]
+    fn reference_mode_is_bitwise_identical_to_exact_lut() {
+        // Regression: Reference used to degrade to pure Mitchell
+        // (lut_entries 0 -> clamped to 1 bin, span == gamma). With one
+        // bin per remainder value its per-lane conversion is exact, so
+        // it must match ExactLut bit for bit — outputs and op counts.
+        let mut rng = Rng::new(31);
+        for fmt in [LnsFormat::PAPER8, LnsFormat::new(8, 16)] {
+            let a = Tensor::randn(9, 21, 1.0, &mut rng);
+            let b = Tensor::randn(21, 7, 1.0, &mut rng);
+            let (ea, eb) = (enc(&a, fmt), enc(&b, fmt));
+
+            let mut cfg = MacConfig::paper();
+            cfg.format = fmt;
+            cfg.convert = ConvertMode::ExactLut;
+            let mut exact = VectorMacUnit::new(cfg);
+            let want = exact.matmul(&ea, &eb);
+
+            cfg.convert = ConvertMode::Reference;
+            let mut reference = VectorMacUnit::new(cfg);
+            let got = reference.matmul(&ea, &eb);
+
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "gamma={}", fmt.gamma);
+            assert_eq!(reference.counts, exact.counts, "gamma={}", fmt.gamma);
+        }
+    }
+
+    #[test]
+    fn k_constant_scaling_pairs_match_decoded_reference() {
+        // The four scaling pairs whose group scale is constant along
+        // the contraction dim must all agree with the decoded-f32
+        // reference (the PPU factors the scales out of the dot).
+        let mut rng = Rng::new(32);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(8, 12, 1.0, &mut rng).map(|v| v * 3.0);
+        let b = Tensor::randn(12, 6, 1.0, &mut rng).map(|v| v * 0.25);
+        for sa in [Scaling::PerTensor, Scaling::PerRow] {
+            for sb in [Scaling::PerTensor, Scaling::PerCol] {
+                let ea = encode_tensor(&a, fmt, sa, Rounding::Nearest, None);
+                let eb = encode_tensor(&b, fmt, sb, Rounding::Nearest, None);
+                let mut mac = VectorMacUnit::new(MacConfig::paper());
+                let got = mac.matmul(&ea, &eb);
+                let want = ea.decode().matmul(&eb.decode());
+                for (g, w) in got.data.iter().zip(want.data.iter()) {
+                    assert!(
+                        (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                        "{sa:?} x {sb:?}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_varying_scaling_pairs_are_rejected() {
+        // Regression: PerCol-scaled A / PerRow-scaled B used to be
+        // silently evaluated with scales[0] for every lane. The scale
+        // varies along the contraction dim there, so matmul must
+        // refuse — covering the remaining five of the 3x3 pairs.
+        let mut rng = Rng::new(33);
+        let fmt = LnsFormat::PAPER8;
+        let a = Tensor::randn(4, 6, 1.0, &mut rng);
+        let b = Tensor::randn(6, 5, 1.0, &mut rng);
+        let pairs = [
+            (Scaling::PerCol, Scaling::PerTensor),
+            (Scaling::PerCol, Scaling::PerCol),
+            (Scaling::PerCol, Scaling::PerRow),
+            (Scaling::PerTensor, Scaling::PerRow),
+            (Scaling::PerRow, Scaling::PerRow),
+        ];
+        // Silence the expected panics' default backtrace spew.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        for (sa, sb) in pairs {
+            let ea = encode_tensor(&a, fmt, sa, Rounding::Nearest, None);
+            let eb = encode_tensor(&b, fmt, sb, Rounding::Nearest, None);
+            let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut mac = VectorMacUnit::new(MacConfig::paper());
+                mac.matmul(&ea, &eb)
+            }))
+            .expect_err(&format!("{sa:?} x {sb:?} must be rejected"));
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(
+                msg.contains("matmul scaling mismatch"),
+                "{sa:?} x {sb:?}: unexpected panic message: {msg}"
+            );
+        }
+        std::panic::set_hook(prev);
     }
 }

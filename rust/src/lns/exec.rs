@@ -1,0 +1,613 @@
+//! Integer-domain LNS execution tier for the native trainer.
+//!
+//! The fake-quant path (`ExecTier::F32Exact`) quantizes operands and
+//! then multiplies in f32 through the packed GEMM kernels — the paper's
+//! *numerics*, but not its *hardware*. This module is the other tier:
+//! every training GEMM re-encodes its (already LNS-grid) operands to
+//! (sign, code) planes and runs the Fig. 6 Vector MAC arithmetic from
+//! [`crate::lns::datapath`] — exponent-add products, per-remainder-bin
+//! integer collectors, Mitchell/hybrid conversion — accumulating
+//! [`OpCounts`] so `hw::energy` prices *executed* work instead of a
+//! proxy calculation.
+//!
+//! Contract:
+//!  * All three GEMM orientations the trainer needs (`A·B`, `Aᵀ·B`,
+//!    `A·Bᵀ`) share one k-major dot loop, so they cannot diverge.
+//!  * Operands are PerTensor-scaled (scale constant along the
+//!    contraction dim — the combination `VectorMacUnit::matmul`
+//!    guarantees correct by construction).
+//!  * Bit-identical at any worker count: output elements are computed
+//!    independently with the full k extent, and per-band op counts
+//!    merge through order-independent u64 sums.
+//!  * Allocation-free after warmup: plane/scale/bin buffers persist in
+//!    [`ExecScratch`] (workers allocate one γ-entry bin vector per
+//!    band, the same O(γ) footprint as the datapath's parallel path).
+
+use crate::lns::convert::ConvertMode;
+use crate::lns::datapath::{dot_kernel_scratch, dot_params_for, DotParams, OpCounts};
+use crate::lns::format::{LnsFormat, Rounding};
+use crate::lns::kernels::{encode_rows_into, group_scales_into};
+use crate::lns::quant::Scaling;
+use crate::util::pool;
+
+/// Which arithmetic the native trainer's GEMMs execute on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecTier {
+    /// Fake-quant reference: quantize operands, multiply in f32
+    /// through the packed kernels (bit-exact paper numerics).
+    #[default]
+    F32Exact,
+    /// Native LNS: GEMMs run on stored codes through the integer
+    /// datapath, streaming `OpCounts` into the energy model.
+    LnsInt,
+}
+
+impl ExecTier {
+    /// Parse the `--exec-tier` knob.
+    pub fn parse(s: &str) -> anyhow::Result<ExecTier> {
+        match s {
+            "f32-exact" => Ok(ExecTier::F32Exact),
+            "lns-int" => Ok(ExecTier::LnsInt),
+            other => anyhow::bail!(
+                "unknown exec tier '{other}' (expected 'f32-exact' or 'lns-int')"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecTier::F32Exact => "f32-exact",
+            ExecTier::LnsInt => "lns-int",
+        }
+    }
+}
+
+/// Datapath parameters for one integer-domain GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct LnsExecCfg {
+    pub fmt: LnsFormat,
+    pub convert: ConvertMode,
+    /// Collector width in bits (24 in the paper).
+    pub acc_bits: u32,
+}
+
+impl LnsExecCfg {
+    /// The training default: exact per-remainder LUT conversion with
+    /// the paper's 24-bit collector, in the given storage format.
+    pub fn for_format(fmt: LnsFormat) -> LnsExecCfg {
+        LnsExecCfg { fmt, convert: ConvertMode::ExactLut, acc_bits: 24 }
+    }
+}
+
+/// Reusable buffers for the integer-domain GEMMs: (sign, code) planes
+/// for both operands, a transposed staging area per operand (dot loops
+/// want both sides contraction-major), group scales, and the
+/// sequential path's bin collectors.
+#[derive(Default)]
+pub struct ExecScratch {
+    a_signs: Vec<i8>,
+    a_codes: Vec<u32>,
+    a_scales: Vec<f32>,
+    b_signs: Vec<i8>,
+    b_codes: Vec<u32>,
+    b_scales: Vec<f32>,
+    t_signs: Vec<i8>,
+    t_codes: Vec<u32>,
+    u_signs: Vec<i8>,
+    u_codes: Vec<u32>,
+    bins: Vec<i64>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch::default()
+    }
+}
+
+/// Encode `data` (a `rows x cols` tensor) into PerTensor-scaled
+/// (sign, code) planes, growing the buffers as needed. Returns the
+/// group scale. Nearest rounding with no RNG: re-encoding values that
+/// already sit on an LNS grid recovers their codes exactly, so the
+/// engine computes over exactly the quantized operands.
+fn encode_plane(
+    signs: &mut Vec<i8>,
+    codes: &mut Vec<u32>,
+    scales: &mut Vec<f32>,
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: LnsFormat,
+    workers: usize,
+) -> f32 {
+    let n = rows * cols;
+    debug_assert_eq!(data.len(), n);
+    if signs.len() < n {
+        signs.resize(n, 0);
+    }
+    if codes.len() < n {
+        codes.resize(n, 0);
+    }
+    group_scales_into(scales, data, rows, cols, fmt, Scaling::PerTensor);
+    encode_rows_into(
+        &mut signs[..n],
+        &mut codes[..n],
+        data,
+        rows,
+        cols,
+        fmt,
+        Scaling::PerTensor,
+        Rounding::Nearest,
+        None,
+        scales,
+        workers,
+    );
+    scales[0]
+}
+
+/// Stage a `rows x cols` plane transposed (`out[j*rows+i] = in[i*cols+j]`)
+/// so its groups become contraction-major.
+fn stage_transposed(
+    t_signs: &mut Vec<i8>,
+    t_codes: &mut Vec<u32>,
+    signs: &[i8],
+    codes: &[u32],
+    rows: usize,
+    cols: usize,
+) {
+    let n = rows * cols;
+    if t_signs.len() < n {
+        t_signs.resize(n, 0);
+    }
+    if t_codes.len() < n {
+        t_codes.resize(n, 0);
+    }
+    for i in 0..rows {
+        let row = i * cols;
+        for j in 0..cols {
+            t_signs[j * rows + i] = signs[row + j];
+            t_codes[j * rows + i] = codes[row + j];
+        }
+    }
+}
+
+/// The shared inner GEMM: row `i` of the `a` planes and row `j` of the
+/// `b` planes are both k-major slices; `out[i*n+j]` gets their datapath
+/// dot times the folded PerTensor scales. Identical per-element kernel
+/// on the sequential and pooled paths, so outputs and op counts are
+/// bit-identical at every worker count.
+#[allow(clippy::too_many_arguments)]
+fn gemm_k_major(
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    a_signs: &[i8],
+    a_codes: &[u32],
+    b_signs: &[i8],
+    b_codes: &[u32],
+    scale: f64,
+    params: DotParams,
+    workers: usize,
+    seq_bins: &mut Vec<i64>,
+    counts: &mut OpCounts,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a_signs.len(), m * k);
+    debug_assert_eq!(b_signs.len(), n * k);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let nb = params.n_bins as usize;
+    let workers =
+        pool::effective_workers(workers, m * n * k, pool::GEMM_MACS_PER_WORKER).min(m.max(1));
+    if workers <= 1 {
+        if seq_bins.len() != nb {
+            seq_bins.clear();
+            seq_bins.resize(nb, 0);
+        }
+        for i in 0..m {
+            let ra = i * k;
+            for j in 0..n {
+                let rb = j * k;
+                let unscaled = dot_kernel_scratch(
+                    &params,
+                    &a_signs[ra..ra + k],
+                    &a_codes[ra..ra + k],
+                    &b_signs[rb..rb + k],
+                    &b_codes[rb..rb + k],
+                    seq_bins,
+                    counts,
+                );
+                out[i * n + j] = (unscaled * scale) as f32;
+            }
+        }
+        return;
+    }
+    let per_band = pool::partition_rows(out, m, n, workers, |row0, band| {
+        let mut local = OpCounts::default();
+        let mut bins = vec![0i64; nb];
+        let rows_here = band.len() / n;
+        for dr in 0..rows_here {
+            let ra = (row0 + dr) * k;
+            for j in 0..n {
+                let rb = j * k;
+                let unscaled = dot_kernel_scratch(
+                    &params,
+                    &a_signs[ra..ra + k],
+                    &a_codes[ra..ra + k],
+                    &b_signs[rb..rb + k],
+                    &b_codes[rb..rb + k],
+                    &mut bins,
+                    &mut local,
+                );
+                band[dr * n + j] = (unscaled * scale) as f32;
+            }
+        }
+        local
+    });
+    for c in &per_band {
+        counts.add(c);
+    }
+}
+
+/// `out[m,n] = A[m,k] · B[k,n]` through the integer datapath.
+#[allow(clippy::too_many_arguments)]
+pub fn lns_matmul_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: LnsExecCfg,
+    workers: usize,
+    scratch: &mut ExecScratch,
+    counts: &mut OpCounts,
+) {
+    assert_eq!(a.len(), m * k, "lns matmul shape mismatch (A)");
+    assert_eq!(b.len(), k * n, "lns matmul shape mismatch (B)");
+    assert_eq!(out.len(), m * n, "lns matmul shape mismatch (out)");
+    let params = dot_params_for(cfg.fmt, cfg.convert, cfg.acc_bits);
+    let sa = encode_plane(
+        &mut scratch.a_signs,
+        &mut scratch.a_codes,
+        &mut scratch.a_scales,
+        a,
+        m,
+        k,
+        cfg.fmt,
+        workers,
+    );
+    let sb = encode_plane(
+        &mut scratch.b_signs,
+        &mut scratch.b_codes,
+        &mut scratch.b_scales,
+        b,
+        k,
+        n,
+        cfg.fmt,
+        workers,
+    );
+    stage_transposed(
+        &mut scratch.t_signs,
+        &mut scratch.t_codes,
+        &scratch.b_signs[..k * n],
+        &scratch.b_codes[..k * n],
+        k,
+        n,
+    );
+    gemm_k_major(
+        out,
+        m,
+        n,
+        k,
+        &scratch.a_signs[..m * k],
+        &scratch.a_codes[..m * k],
+        &scratch.t_signs[..n * k],
+        &scratch.t_codes[..n * k],
+        sa as f64 * sb as f64,
+        params,
+        workers,
+        &mut scratch.bins,
+        counts,
+    );
+}
+
+/// `out[m,n] = A[k,m]ᵀ · B[k,n]` through the integer datapath.
+#[allow(clippy::too_many_arguments)]
+pub fn lns_t_matmul_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: LnsExecCfg,
+    workers: usize,
+    scratch: &mut ExecScratch,
+    counts: &mut OpCounts,
+) {
+    assert_eq!(a.len(), k * m, "lns t_matmul shape mismatch (A)");
+    assert_eq!(b.len(), k * n, "lns t_matmul shape mismatch (B)");
+    assert_eq!(out.len(), m * n, "lns t_matmul shape mismatch (out)");
+    let params = dot_params_for(cfg.fmt, cfg.convert, cfg.acc_bits);
+    let sa = encode_plane(
+        &mut scratch.a_signs,
+        &mut scratch.a_codes,
+        &mut scratch.a_scales,
+        a,
+        k,
+        m,
+        cfg.fmt,
+        workers,
+    );
+    let sb = encode_plane(
+        &mut scratch.b_signs,
+        &mut scratch.b_codes,
+        &mut scratch.b_scales,
+        b,
+        k,
+        n,
+        cfg.fmt,
+        workers,
+    );
+    stage_transposed(
+        &mut scratch.t_signs,
+        &mut scratch.t_codes,
+        &scratch.a_signs[..k * m],
+        &scratch.a_codes[..k * m],
+        k,
+        m,
+    );
+    stage_transposed(
+        &mut scratch.u_signs,
+        &mut scratch.u_codes,
+        &scratch.b_signs[..k * n],
+        &scratch.b_codes[..k * n],
+        k,
+        n,
+    );
+    gemm_k_major(
+        out,
+        m,
+        n,
+        k,
+        &scratch.t_signs[..m * k],
+        &scratch.t_codes[..m * k],
+        &scratch.u_signs[..n * k],
+        &scratch.u_codes[..n * k],
+        sa as f64 * sb as f64,
+        params,
+        workers,
+        &mut scratch.bins,
+        counts,
+    );
+}
+
+/// `out[m,n] = A[m,k] · B[n,k]ᵀ` through the integer datapath.
+#[allow(clippy::too_many_arguments)]
+pub fn lns_matmul_t_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    cfg: LnsExecCfg,
+    workers: usize,
+    scratch: &mut ExecScratch,
+    counts: &mut OpCounts,
+) {
+    assert_eq!(a.len(), m * k, "lns matmul_t shape mismatch (A)");
+    assert_eq!(b.len(), n * k, "lns matmul_t shape mismatch (B)");
+    assert_eq!(out.len(), m * n, "lns matmul_t shape mismatch (out)");
+    let params = dot_params_for(cfg.fmt, cfg.convert, cfg.acc_bits);
+    let sa = encode_plane(
+        &mut scratch.a_signs,
+        &mut scratch.a_codes,
+        &mut scratch.a_scales,
+        a,
+        m,
+        k,
+        cfg.fmt,
+        workers,
+    );
+    let sb = encode_plane(
+        &mut scratch.b_signs,
+        &mut scratch.b_codes,
+        &mut scratch.b_scales,
+        b,
+        n,
+        k,
+        cfg.fmt,
+        workers,
+    );
+    // Both operands are already k-major per row — no staging.
+    gemm_k_major(
+        out,
+        m,
+        n,
+        k,
+        &scratch.a_signs[..m * k],
+        &scratch.a_codes[..m * k],
+        &scratch.b_signs[..n * k],
+        &scratch.b_codes[..n * k],
+        sa as f64 * sb as f64,
+        params,
+        workers,
+        &mut scratch.bins,
+        counts,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::convert::mitchell_bound;
+    use crate::lns::quant::quantize_tensor;
+    use crate::util::rng::Rng;
+    use crate::util::tensor::Tensor;
+
+    const FMT: LnsFormat = LnsFormat::PAPER8;
+
+    fn transpose(t: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(t.cols, t.rows);
+        for i in 0..t.rows {
+            for j in 0..t.cols {
+                out.data[j * t.rows + i] = t.data[i * t.cols + j];
+            }
+        }
+        out
+    }
+
+    fn run_matmul(a: &Tensor, b: &Tensor, cfg: LnsExecCfg, workers: usize) -> (Tensor, OpCounts) {
+        let mut out = Tensor::zeros(a.rows, b.cols);
+        let mut scratch = ExecScratch::new();
+        let mut counts = OpCounts::default();
+        lns_matmul_into(
+            &mut out.data,
+            &a.data,
+            &b.data,
+            a.rows,
+            a.cols,
+            b.cols,
+            cfg,
+            workers,
+            &mut scratch,
+            &mut counts,
+        );
+        (out, counts)
+    }
+
+    #[test]
+    fn exec_tier_knob_parses() {
+        assert_eq!(ExecTier::parse("f32-exact").unwrap(), ExecTier::F32Exact);
+        assert_eq!(ExecTier::parse("lns-int").unwrap(), ExecTier::LnsInt);
+        assert!(ExecTier::parse("fp64").is_err());
+        assert_eq!(ExecTier::LnsInt.name(), "lns-int");
+        assert_eq!(ExecTier::default(), ExecTier::F32Exact);
+    }
+
+    #[test]
+    fn matmul_within_mitchell_bound_for_every_mode() {
+        let mut rng = Rng::new(51);
+        let a = Tensor::randn(11, 33, 1.0, &mut rng);
+        let b = Tensor::randn(33, 9, 1.0, &mut rng);
+        // The engine re-encodes with the same PerTensor/Nearest
+        // pipeline as quantize_tensor, so this reference is exactly the
+        // quantized grid the datapath computes over.
+        let aq = quantize_tensor(&a, FMT, Scaling::PerTensor);
+        let bq = quantize_tensor(&b, FMT, Scaling::PerTensor);
+        let reference = aq.matmul(&bq);
+        let abs_ref = aq.map(f32::abs).matmul(&bq.map(f32::abs));
+        let slack = 1e-3 * reference.abs_max().max(1.0);
+        for (mode, span) in [
+            (ConvertMode::Reference, 1u32),
+            (ConvertMode::ExactLut, 1),
+            (ConvertMode::Hybrid { lut_bits: 2 }, 2),
+            (ConvertMode::Hybrid { lut_bits: 1 }, 4),
+            (ConvertMode::Mitchell, 8),
+        ] {
+            let cfg = LnsExecCfg { fmt: FMT, convert: mode, acc_bits: 24 };
+            let (got, counts) = run_matmul(&a, &b, cfg, 1);
+            let bound = mitchell_bound(FMT.gamma, span) as f32;
+            for i in 0..reference.data.len() {
+                let err = (got.data[i] - reference.data[i]).abs();
+                let budget = bound * abs_ref.data[i] + slack;
+                assert!(err <= budget, "{mode:?}: elem {i} err {err} > budget {budget}");
+            }
+            assert_eq!(counts.total_macs(), (11 * 33 * 9) as u64);
+        }
+    }
+
+    #[test]
+    fn orientations_agree_bitwise_with_plain_matmul() {
+        // t_matmul / matmul_t on pre-transposed data must equal the
+        // plain matmul bit for bit: same encode, same dot kernel, the
+        // staging just rearranges reads.
+        let mut rng = Rng::new(52);
+        let a = Tensor::randn(10, 17, 1.0, &mut rng);
+        let b = Tensor::randn(17, 12, 1.0, &mut rng);
+        let cfg = LnsExecCfg::for_format(FMT);
+        let (want, want_counts) = run_matmul(&a, &b, cfg, 1);
+
+        let at = transpose(&a);
+        let mut got_t = Tensor::zeros(a.rows, b.cols);
+        let (mut scratch, mut counts) = (ExecScratch::new(), OpCounts::default());
+        lns_t_matmul_into(
+            &mut got_t.data,
+            &at.data,
+            &b.data,
+            a.rows,
+            a.cols,
+            b.cols,
+            cfg,
+            1,
+            &mut scratch,
+            &mut counts,
+        );
+        assert_eq!(got_t.data, want.data, "t_matmul diverged");
+        assert_eq!(counts, want_counts);
+
+        let bt = transpose(&b);
+        let mut got_bt = Tensor::zeros(a.rows, b.cols);
+        let (mut scratch, mut counts) = (ExecScratch::new(), OpCounts::default());
+        lns_matmul_t_into(
+            &mut got_bt.data,
+            &a.data,
+            &bt.data,
+            a.rows,
+            a.cols,
+            b.cols,
+            cfg,
+            1,
+            &mut scratch,
+            &mut counts,
+        );
+        assert_eq!(got_bt.data, want.data, "matmul_t diverged");
+        assert_eq!(counts, want_counts);
+    }
+
+    #[test]
+    fn bit_identical_and_counts_equal_across_worker_counts() {
+        let mut rng = Rng::new(53);
+        // Ragged row count so bands are uneven.
+        let a = Tensor::randn(23, 40, 1.0, &mut rng);
+        let b = Tensor::randn(40, 13, 1.0, &mut rng);
+        let cfg = LnsExecCfg::for_format(FMT);
+        let (want, want_counts) = run_matmul(&a, &b, cfg, 1);
+        for workers in [2usize, 4, 8] {
+            let (got, counts) = run_matmul(&a, &b, cfg, workers);
+            assert_eq!(got.data, want.data, "{workers} workers: outputs diverged");
+            assert_eq!(counts, want_counts, "{workers} workers: counts diverged");
+        }
+    }
+
+    #[test]
+    fn reencoding_grid_values_is_exact() {
+        // Training operands are fake-quantized, i.e. already on the LNS
+        // grid; the engine's ExactLut result then differs from the f32
+        // GEMM of those operands only by collector fixed-point error.
+        let mut rng = Rng::new(54);
+        let a = quantize_tensor(&Tensor::randn(6, 24, 1.0, &mut rng), FMT, Scaling::PerTensor);
+        let b = quantize_tensor(&Tensor::randn(24, 5, 1.0, &mut rng), FMT, Scaling::PerTensor);
+        let (got, _) = run_matmul(&a, &b, LnsExecCfg::for_format(FMT), 1);
+        let want = a.matmul(&b);
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes_are_safe() {
+        let cfg = LnsExecCfg::for_format(FMT);
+        let (mut scratch, mut counts) = (ExecScratch::new(), OpCounts::default());
+        // k = 0: defined, all-zero output.
+        let mut out = vec![1.0f32; 6];
+        lns_matmul_into(&mut out, &[], &[], 2, 0, 3, cfg, 4, &mut scratch, &mut counts);
+        assert_eq!(out, vec![0.0; 6]);
+        // n = 0 / m = 0: no output, no panic.
+        lns_matmul_into(&mut [], &[1.0, 2.0], &[], 2, 1, 0, cfg, 4, &mut scratch, &mut counts);
+        lns_matmul_into(&mut [], &[], &[1.0, 2.0], 0, 1, 2, cfg, 4, &mut scratch, &mut counts);
+    }
+}

@@ -4,12 +4,15 @@
 //! format (Sections 2–3): representation ([`format`]), group-scaled
 //! quantization ([`quant`]), log-to-linear conversion including the
 //! hybrid Mitchell approximation ([`convert`]), the bit-faithful Fig. 6
-//! vector-MAC datapath ([`datapath`]), the fused allocation-free
-//! quantizer kernels behind the Q_W/Q_A/Q_E/Q_G hot path ([`kernels`]),
-//! and the baseline formats the paper compares against ([`softfloat`]).
+//! vector-MAC datapath ([`datapath`]), the integer-domain training
+//! execution tier that runs GEMMs through that datapath ([`exec`]),
+//! the fused allocation-free quantizer kernels behind the
+//! Q_W/Q_A/Q_E/Q_G hot path ([`kernels`]), and the baseline formats
+//! the paper compares against ([`softfloat`]).
 
 pub mod convert;
 pub mod datapath;
+pub mod exec;
 pub mod format;
 pub mod kernels;
 pub mod quant;
@@ -17,6 +20,7 @@ pub mod softfloat;
 
 pub use convert::{ConvertMode, Converter};
 pub use datapath::{MacConfig, OpCounts, Parallelism, VectorMacUnit};
+pub use exec::{ExecScratch, ExecTier, LnsExecCfg};
 pub use format::{LnsFormat, LnsValue, Rounding};
 pub use kernels::QuantScratch;
 pub use quant::{encode_tensor, encode_tensor_pooled, quantize_tensor, LnsTensor, Scaling};

@@ -4,6 +4,7 @@
 //!                   [--optimizer O] [--steps N] [--lr X]
 //!                   [--gamma-fwd G] [--gamma-bwd G] [--qu-bits B]
 //!                   [--backend auto|native|pjrt]
+//!                   [--exec-tier f32-exact|lns-int]
 //!                   [--save-ckpt path] [--resume path]
 //!                   [--parallelism P]   # 0 = auto, 1 = sequential
 //!   lns-madam info            # list artifacts + native model presets
@@ -69,6 +70,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "seed" => cfg.seed = v.parse()?,
             "parallelism" => cfg.parallelism = v.parse()?,
             "backend" => cfg.backend = BackendKind::parse(v)?,
+            "exec-tier" => cfg.exec_tier = v.clone(),
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "log" => cfg.log_path = v.clone(),
             "save-ckpt" => cfg.ckpt_path = v.clone(),
@@ -96,6 +98,16 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .map(|a| format!(", eval acc = {a:.3}"))
             .unwrap_or_default()
     );
+    // Measured integer-datapath work (nonzero only under lns-int),
+    // priced by the calibrated PE energy model.
+    if trainer.op_counts.total_macs() > 0 {
+        let c = trainer.op_counts;
+        println!(
+            "lns_exec: {} MACs on the integer datapath, {:.3} mJ (measured, PE-level)",
+            c.total_macs(),
+            EnergyModel::paper().counts_mj(&c)
+        );
+    }
     Ok(())
 }
 

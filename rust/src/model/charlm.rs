@@ -15,7 +15,9 @@
 //! and bias gradients stay FP32 like the paper's non-GEMM ops.
 
 use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
-use crate::model::{softmax_inplace, NativeModel, TrainQuant, Workspace};
+use crate::lns::datapath::OpCounts;
+use crate::lns::exec::ExecTier;
+use crate::model::{gemm_nn, gemm_nt, gemm_tn, softmax_inplace, NativeModel, TrainQuant, Workspace};
 use crate::util::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -27,6 +29,9 @@ pub struct CharLmModel {
     /// Host threads for the fwd/bwd GEMMs (1 = sequential; results are
     /// bit-identical at any setting — see `Tensor::matmul_p`).
     pub workers: usize,
+    /// Which arithmetic the fwd/bwd GEMMs execute on (f32-exact
+    /// fake-quant, or the integer-domain LNS datapath).
+    pub exec: ExecTier,
     /// Per-model scratch reused across steps: staging buffers for the
     /// quantized weight/activation tensors and the quantizer kernels'
     /// scales — no steady-state allocation on the step path.
@@ -35,7 +40,15 @@ pub struct CharLmModel {
 
 impl CharLmModel {
     pub fn new(vocab: usize, seq: usize, d_model: usize, d_ff: usize) -> Self {
-        CharLmModel { vocab, seq, d_model, d_ff, workers: 1, ws: Workspace::new() }
+        CharLmModel {
+            vocab,
+            seq,
+            d_model,
+            d_ff,
+            workers: 1,
+            exec: ExecTier::F32Exact,
+            ws: Workspace::new(),
+        }
     }
 
     fn check_params(&self, params: &[Param]) -> Result<()> {
@@ -129,7 +142,7 @@ impl CharLmModel {
         let mut w1q = ws.tensor_copy(self.d_model, self.d_ff, &w1.data);
         q.forward.apply_into(&mut w1q, self.workers, &mut ws.quant);
         let mut z1 = ws.tensor_for_gemm(xq.rows, w1q.cols);
-        xq.matmul_into_ws(&w1q, &mut z1, self.workers, &mut ws.gemm);
+        gemm_nn(&xq, &w1q, &mut z1, self.exec, &q.forward, self.workers, ws);
         for r in 0..z1.rows {
             for c in 0..z1.cols {
                 *z1.at_mut(r, c) += b1.data[c];
@@ -143,7 +156,7 @@ impl CharLmModel {
         let mut headq = ws.tensor_copy(self.d_ff, self.vocab, &head.data);
         q.forward.apply_into(&mut headq, self.workers, &mut ws.quant);
         let mut logits = ws.tensor_for_gemm(h1q.rows, headq.cols);
-        h1q.matmul_into_ws(&headq, &mut logits, self.workers, &mut ws.gemm);
+        gemm_nn(&h1q, &headq, &mut logits, self.exec, &q.forward, self.workers, ws);
         softmax_inplace(&mut logits);
         let probs = logits;
         let y: Vec<usize> = targets.iter().map(|&v| v as usize).collect();
@@ -204,12 +217,12 @@ impl CharLmModel {
 
         // head grad: h1q^T @ dz, then Q_G (fresh buffer: it is returned).
         let mut ghead = Tensor::zeros(h1q.cols, dzq.cols);
-        h1q.t_matmul_into_ws(&dzq, &mut ghead, self.workers, &mut ws.gemm);
+        gemm_tn(&h1q, &dzq, &mut ghead, self.exec, &q.backward, self.workers, ws);
         q.backward.apply_into(&mut ghead, self.workers, &mut ws.quant);
 
         // dh1 = dz @ head^T, masked by relu'(z1), then Q_E into GEMM 1.
         let mut dh1 = ws.tensor_for_gemm(dzq.rows, headq.rows);
-        dzq.matmul_t_into_ws(&headq, &mut dh1, self.workers, &mut ws.gemm);
+        gemm_nt(&dzq, &headq, &mut dh1, self.exec, &q.backward, self.workers, ws);
         for (g, z) in dh1.data.iter_mut().zip(z1.data.iter()) {
             *g = if *z > 0.0 { *g } else { 0.0 };
         }
@@ -218,7 +231,7 @@ impl CharLmModel {
 
         // w1 grad: xq^T @ dh1, then Q_G; bias grad stays FP32.
         let mut gw1 = Tensor::zeros(xq.cols, dh1q.cols);
-        xq.t_matmul_into_ws(&dh1q, &mut gw1, self.workers, &mut ws.gemm);
+        gemm_tn(&xq, &dh1q, &mut gw1, self.exec, &q.backward, self.workers, ws);
         q.backward.apply_into(&mut gw1, self.workers, &mut ws.quant);
         let mut gb1 = vec![0.0f32; self.d_ff];
         for r in 0..dh1.rows {
@@ -230,7 +243,7 @@ impl CharLmModel {
         // dx = dh1 @ w1^T; scatter into the embedding tables (FP32,
         // non-GEMM ops like the paper).
         let mut dx = ws.tensor_for_gemm(dh1q.rows, w1q.rows);
-        dh1q.matmul_t_into_ws(&w1q, &mut dx, self.workers, &mut ws.gemm);
+        gemm_nt(&dh1q, &w1q, &mut dx, self.exec, &q.backward, self.workers, ws);
         let mut gtok = vec![0.0f32; self.vocab * d];
         let mut gpos = vec![0.0f32; self.seq * d];
         let t_len = shape[1];
@@ -334,6 +347,14 @@ impl NativeModel for CharLmModel {
 
     fn set_parallelism(&mut self, workers: usize) {
         self.workers = workers.max(1);
+    }
+
+    fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.exec = tier;
+    }
+
+    fn take_op_counts(&mut self) -> OpCounts {
+        std::mem::take(&mut self.ws.counts)
     }
 }
 

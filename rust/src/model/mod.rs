@@ -16,6 +16,8 @@
 //! char-LM data path.
 
 use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
+use crate::lns::datapath::OpCounts;
+use crate::lns::exec::{self, ExecScratch, ExecTier, LnsExecCfg};
 use crate::lns::format::LnsFormat;
 use crate::lns::kernels::{self, QuantScratch};
 use crate::lns::quant::Scaling;
@@ -133,6 +135,13 @@ pub struct Workspace {
     /// Pack scratch for the `Tensor::*_into_ws` GEMM microkernels
     /// (operand micropanels; pure data staging, never results).
     pub gemm: GemmScratch,
+    /// Plane/scale buffers for the integer-domain `lns::exec` GEMMs
+    /// (unused while the f32-exact tier runs).
+    pub exec: ExecScratch,
+    /// Hardware op counters accumulated by the lns-int tier's GEMMs
+    /// (always zero on the f32-exact tier). Drained per step through
+    /// [`NativeModel::take_op_counts`].
+    pub counts: OpCounts,
     pool: Vec<Vec<f32>>,
 }
 
@@ -208,6 +217,102 @@ impl Workspace {
     }
 }
 
+/// Datapath configuration for one lns-int GEMM: execute in the LNS
+/// format of the quantizer guarding that GEMM's operands (Q_W/Q_A
+/// forward, Q_E/Q_G backward). Non-LNS kinds cannot reach here — the
+/// backend validates the tier/format pairing at construction.
+fn exec_cfg(kind: &QuantKind) -> LnsExecCfg {
+    match kind {
+        QuantKind::Lns { fmt, .. } => LnsExecCfg::for_format(*fmt),
+        other => unreachable!("lns-int exec tier with non-LNS quantizer {other:?}"),
+    }
+}
+
+/// `out = a · b` on the selected execution tier. The f32-exact tier
+/// runs the packed microkernels; the lns-int tier re-encodes the
+/// (already fake-quantized) operands and computes through the integer
+/// datapath, accumulating op counts into `ws.counts`. Both tiers are
+/// bit-identical at any worker count.
+pub(crate) fn gemm_nn(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+    tier: ExecTier,
+    kind: &QuantKind,
+    workers: usize,
+    ws: &mut Workspace,
+) {
+    match tier {
+        ExecTier::F32Exact => a.matmul_into_ws(b, out, workers, &mut ws.gemm),
+        ExecTier::LnsInt => exec::lns_matmul_into(
+            &mut out.data,
+            &a.data,
+            &b.data,
+            a.rows,
+            a.cols,
+            b.cols,
+            exec_cfg(kind),
+            workers,
+            &mut ws.exec,
+            &mut ws.counts,
+        ),
+    }
+}
+
+/// `out = aᵀ · b` on the selected execution tier (`a` is `[k, m]`).
+pub(crate) fn gemm_tn(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+    tier: ExecTier,
+    kind: &QuantKind,
+    workers: usize,
+    ws: &mut Workspace,
+) {
+    match tier {
+        ExecTier::F32Exact => a.t_matmul_into_ws(b, out, workers, &mut ws.gemm),
+        ExecTier::LnsInt => exec::lns_t_matmul_into(
+            &mut out.data,
+            &a.data,
+            &b.data,
+            a.cols,
+            a.rows,
+            b.cols,
+            exec_cfg(kind),
+            workers,
+            &mut ws.exec,
+            &mut ws.counts,
+        ),
+    }
+}
+
+/// `out = a · bᵀ` on the selected execution tier (`b` is `[n, k]`).
+pub(crate) fn gemm_nt(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+    tier: ExecTier,
+    kind: &QuantKind,
+    workers: usize,
+    ws: &mut Workspace,
+) {
+    match tier {
+        ExecTier::F32Exact => a.matmul_t_into_ws(b, out, workers, &mut ws.gemm),
+        ExecTier::LnsInt => exec::lns_matmul_t_into(
+            &mut out.data,
+            &a.data,
+            &b.data,
+            a.rows,
+            a.cols,
+            b.rows,
+            exec_cfg(kind),
+            workers,
+            &mut ws.exec,
+            &mut ws.counts,
+        ),
+    }
+}
+
 /// The MLP: GEMM + bias + ReLU stack with softmax cross-entropy loss.
 pub struct MlpModel {
     pub sizes: Vec<usize>,
@@ -216,6 +321,9 @@ pub struct MlpModel {
     /// Host threads for the fwd/bwd GEMMs (1 = sequential). Any value
     /// produces bit-identical outputs — see `Tensor::matmul_p`.
     pub workers: usize,
+    /// Which arithmetic the fwd/bwd GEMMs execute on (f32-exact
+    /// fake-quant, or the integer-domain LNS datapath).
+    pub exec: ExecTier,
 }
 
 /// Forward cache for backprop.
@@ -250,7 +358,13 @@ impl MlpModel {
             weights.push(Tensor::randn(w[0], w[1], std, rng));
             biases.push(vec![0.0; w[1]]);
         }
-        MlpModel { sizes: sizes.to_vec(), weights, biases, workers: 1 }
+        MlpModel {
+            sizes: sizes.to_vec(),
+            weights,
+            biases,
+            workers: 1,
+            exec: ExecTier::F32Exact,
+        }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -278,7 +392,7 @@ impl MlpModel {
             let mut wq = ws.tensor_copy_of(w);
             q.forward.apply_into(&mut wq, self.workers, &mut ws.quant);
             let mut z = ws.tensor_for_gemm(hq.rows, wq.cols);
-            hq.matmul_into_ws(&wq, &mut z, self.workers, &mut ws.gemm);
+            gemm_nn(&hq, &wq, &mut z, self.exec, &q.forward, self.workers, ws);
             for r in 0..z.rows {
                 for c in 0..z.cols {
                     *z.at_mut(r, c) += self.biases[l][c];
@@ -366,7 +480,7 @@ impl MlpModel {
             // Weight grad: x_q^T @ dz, then Q_G. (Fresh tensor: it is
             // returned to the caller.)
             let mut gw = Tensor::zeros(cache.inputs[l].cols, dzq.cols);
-            cache.inputs[l].t_matmul_into_ws(&dzq, &mut gw, self.workers, &mut ws.gemm);
+            gemm_tn(&cache.inputs[l], &dzq, &mut gw, self.exec, &q.backward, self.workers, ws);
             q.backward.apply_into(&mut gw, self.workers, &mut ws.quant);
             wgrads[l] = gw;
             // Bias grad: column sums of dz (kept FP32 like the paper's
@@ -381,7 +495,7 @@ impl MlpModel {
             if l > 0 {
                 // dh = dz @ w_q^T, masked by ReLU'(z_{l-1}), then Q_E.
                 let mut dh = ws.tensor_for_gemm(dzq.rows, cache.wq[l].rows);
-                dzq.matmul_t_into_ws(&cache.wq[l], &mut dh, self.workers, &mut ws.gemm);
+                gemm_nt(&dzq, &cache.wq[l], &mut dh, self.exec, &q.backward, self.workers, ws);
                 let mask = &cache.z[l - 1];
                 for (g, z) in dh.data.iter_mut().zip(mask.data.iter()) {
                     *g = if *z > 0.0 { *g } else { 0.0 };
@@ -424,6 +538,16 @@ pub trait NativeModel: Send {
     /// (resolved from `TrainConfig::parallelism`; 1 = sequential).
     /// Implementations guarantee bit-identical results at any setting.
     fn set_parallelism(&mut self, workers: usize);
+
+    /// Select the GEMM execution tier (default f32-exact). The lns-int
+    /// tier requires LNS quantizers on both training sides — the
+    /// backend validates that before calling.
+    fn set_exec_tier(&mut self, tier: ExecTier);
+
+    /// Drain the hardware op counters accumulated since the last call.
+    /// Nonzero only while the lns-int tier runs; feeds `hw::energy` so
+    /// energy is priced from executed work.
+    fn take_op_counts(&mut self) -> OpCounts;
 }
 
 /// Map a format name + quantizer knobs onto the Fig. 3 assignment the
@@ -505,6 +629,8 @@ pub struct NativeMlp {
     pub sizes: Vec<usize>,
     /// GEMM worker threads, forwarded into every assembled [`MlpModel`].
     pub workers: usize,
+    /// Execution tier, forwarded into every assembled [`MlpModel`].
+    pub exec: ExecTier,
     /// Per-model scratch reused across steps.
     ws: Workspace,
 }
@@ -512,7 +638,7 @@ pub struct NativeMlp {
 impl NativeMlp {
     pub fn new(sizes: Vec<usize>) -> Self {
         assert!(sizes.len() >= 2, "mlp needs at least one layer");
-        NativeMlp { sizes, workers: 1, ws: Workspace::new() }
+        NativeMlp { sizes, workers: 1, exec: ExecTier::F32Exact, ws: Workspace::new() }
     }
 
     /// Materialize the layer view from flat storage. One copy of the
@@ -540,7 +666,13 @@ impl NativeMlp {
             weights.push(ws.tensor_copy(self.sizes[l], self.sizes[l + 1], &w.data));
             biases.push(b.data.clone());
         }
-        Ok(MlpModel { sizes: self.sizes.clone(), weights, biases, workers: self.workers })
+        Ok(MlpModel {
+            sizes: self.sizes.clone(),
+            weights,
+            biases,
+            workers: self.workers,
+            exec: self.exec,
+        })
     }
 
     fn unpack(&self, batch: &Batch, ws: &mut Workspace) -> Result<(Tensor, Vec<usize>)> {
@@ -635,6 +767,14 @@ impl NativeModel for NativeMlp {
 
     fn set_parallelism(&mut self, workers: usize) {
         self.workers = workers.max(1);
+    }
+
+    fn set_exec_tier(&mut self, tier: ExecTier) {
+        self.exec = tier;
+    }
+
+    fn take_op_counts(&mut self) -> OpCounts {
+        std::mem::take(&mut self.ws.counts)
     }
 }
 
@@ -867,6 +1007,57 @@ mod tests {
         let t = ws.tensor_zeroed(3, 5);
         assert_eq!((t.rows, t.cols), (3, 5));
         assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn lns_int_tier_tracks_fake_quant_and_streams_counts() {
+        // With ExactLut conversion the integer tier differs from the
+        // f32 GEMM of the same quantized operands only by collector
+        // fixed-point error, so loss and grads stay close — and the
+        // op-count stream must report exactly the executed MACs, then
+        // drain to zero.
+        let mut m = NativeMlp::new(vec![8, 16, 4]);
+        let mut rng = Rng::new(17);
+        let params = init_params(&m.param_specs(), &mut rng);
+        let mut drng = Rng::new(18);
+        let (x, y) = tiny_batch(&mut drng, 12, 8, 4);
+        let ys: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let batch = Batch::Classification { shape: [12, 8], xs: x.data.clone(), ys };
+        let q = TrainQuant::lns8();
+
+        let exact = m.forward_backward(&params, &batch, &q).unwrap();
+        assert_eq!(m.take_op_counts(), OpCounts::default(), "f32-exact streams no counts");
+
+        m.set_exec_tier(ExecTier::LnsInt);
+        let lns = m.forward_backward(&params, &batch, &q).unwrap();
+        assert!(
+            (lns.loss - exact.loss).abs() <= 0.05 * exact.loss.abs().max(0.1),
+            "loss diverged: lns-int {} vs f32-exact {}",
+            lns.loss,
+            exact.loss
+        );
+        // Pointwise bounds are fragile here (a pre-activation within
+        // collector error of 0 can flip its ReLU mask between tiers),
+        // so compare gradients in relative L2.
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (g, e) in lns.grads.iter().zip(exact.grads.iter()) {
+            for (a, b) in g.iter().zip(e.iter()) {
+                num += ((a - b) as f64).powi(2);
+                den += (*b as f64).powi(2);
+            }
+        }
+        assert!(
+            num.sqrt() <= 0.2 * den.sqrt().max(1e-6),
+            "grads diverged: rel l2 {}",
+            num.sqrt() / den.sqrt().max(1e-6)
+        );
+        // Exactly the 2 fwd + 3 bwd GEMMs' MACs (final layer has no dh).
+        let (bsz, d0, d1, d2) = (12u64, 8u64, 16u64, 4u64);
+        let want_macs = (bsz * d0 * d1 + bsz * d1 * d2) // fwd
+            + (d1 * bsz * d2 + bsz * d2 * d1 + d0 * bsz * d1); // bwd
+        let counts = m.take_op_counts();
+        assert_eq!(counts.total_macs(), want_macs);
+        assert_eq!(m.take_op_counts(), OpCounts::default(), "drain resets the stream");
     }
 
     #[test]

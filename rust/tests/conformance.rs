@@ -78,8 +78,11 @@ fn roundtrip_error_bounded_by_gap_factor_across_formats_and_roundings() {
 // Datapath vs exact reference, within the Mitchell bound
 // ---------------------------------------------------------------------------
 
-/// (mode, remainder-LSB span at gamma = 8).
-const MODES: [(ConvertMode, u32); 4] = [
+/// (mode, remainder-LSB span at gamma = 8). Reference leads: it runs
+/// a full gamma-entry LUT in the datapath (span 1, exactly ExactLut)
+/// rather than silently degrading to Mitchell as it once did.
+const MODES: [(ConvertMode, u32); 5] = [
+    (ConvertMode::Reference, 1),
     (ConvertMode::ExactLut, 1),
     (ConvertMode::Hybrid { lut_bits: 2 }, 2),
     (ConvertMode::Hybrid { lut_bits: 1 }, 4),
@@ -158,6 +161,99 @@ fn hybrid_error_shrinks_as_lut_grows() {
             w[0] <= w[1] * 1.1 + 1e-9,
             "error not monotone in LUT size: {errs:?}"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LnsExec training tier: every GEMM orientation within the bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lns_exec_gemms_within_mitchell_bound_in_every_orientation() {
+    use lns_madam::lns::exec::{lns_matmul_into, lns_matmul_t_into, lns_t_matmul_into};
+    use lns_madam::lns::{quantize_tensor, ExecScratch, LnsExecCfg, OpCounts};
+
+    let mut rng = Rng::new(408);
+    let fmt = LnsFormat::PAPER8;
+    let (m, k, n) = (14usize, 40usize, 11usize);
+    let a = Tensor::randn(m, k, 1.0, &mut rng);
+    let b = Tensor::randn(k, n, 1.0, &mut rng);
+    // The tier re-encodes through the same PerTensor/Nearest pipeline,
+    // so the quantized grid is the exact reference surface.
+    let aq = quantize_tensor(&a, fmt, Scaling::PerTensor);
+    let bq = quantize_tensor(&b, fmt, Scaling::PerTensor);
+    let reference = aq.matmul(&bq);
+    let abs_ref = aq.map(f32::abs).matmul(&bq.map(f32::abs));
+    let slack = 1e-3 * reference.abs_max().max(1.0);
+
+    // Pre-transposed copies for the t_matmul / matmul_t orientations.
+    let mut at = Tensor::zeros(k, m);
+    for i in 0..m {
+        for j in 0..k {
+            at.data[j * m + i] = a.data[i * k + j];
+        }
+    }
+    let mut bt = Tensor::zeros(n, k);
+    for i in 0..k {
+        for j in 0..n {
+            bt.data[j * k + i] = b.data[i * n + j];
+        }
+    }
+
+    for (mode, span) in MODES {
+        let cfg = LnsExecCfg { fmt, convert: mode, acc_bits: 24 };
+        let bound = mitchell_bound(fmt.gamma, span) as f32;
+        let mut scratch = ExecScratch::new();
+        let mut outs = [Tensor::zeros(m, n), Tensor::zeros(m, n), Tensor::zeros(m, n)];
+        let mut counts = OpCounts::default();
+        lns_matmul_into(
+            &mut outs[0].data,
+            &a.data,
+            &b.data,
+            m,
+            k,
+            n,
+            cfg,
+            2,
+            &mut scratch,
+            &mut counts,
+        );
+        lns_t_matmul_into(
+            &mut outs[1].data,
+            &at.data,
+            &b.data,
+            m,
+            k,
+            n,
+            cfg,
+            2,
+            &mut scratch,
+            &mut counts,
+        );
+        lns_matmul_t_into(
+            &mut outs[2].data,
+            &a.data,
+            &bt.data,
+            m,
+            k,
+            n,
+            cfg,
+            2,
+            &mut scratch,
+            &mut counts,
+        );
+        for (o, out) in outs.iter().enumerate() {
+            for i in 0..reference.data.len() {
+                let err = (out.data[i] - reference.data[i]).abs();
+                let budget = bound * abs_ref.data[i] + slack;
+                assert!(
+                    err <= budget,
+                    "{mode:?} orientation {o}: elem {i} err {err} > budget {budget}"
+                );
+            }
+        }
+        // Measured work: one MAC per (i, j, lane) per orientation.
+        assert_eq!(counts.total_macs(), 3 * (m * k * n) as u64);
     }
 }
 

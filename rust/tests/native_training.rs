@@ -202,6 +202,81 @@ fn parallel_training_bit_identical_to_sequential_and_exact_quantizers() {
 }
 
 #[test]
+fn lns_int_tier_reduces_loss_for_both_families() {
+    // LnsExec tentpole acceptance: a short training run with every
+    // GEMM executed on the integer LNS datapath (`--exec-tier
+    // lns-int`) converges like the fake-quant tier for both model
+    // families, and the trainer accumulates the measured datapath
+    // work for the energy model.
+    for (model, steps, factor) in [("mlp_tiny", 200usize, 0.9), ("charlm_tiny", 250, 0.95)] {
+        let mut cfg = native_cfg(model, "lns", OptKind::Madam, steps);
+        cfg.exec_tier = "lns-int".into();
+        let mut trainer = Trainer::new(cfg).expect("lns-int trainer");
+        let (first, _) = trainer.step().expect("first step");
+        for _ in 1..steps {
+            trainer.step().expect("step");
+        }
+        let last = trainer.final_loss(10);
+        assert!(first.is_finite(), "{model}: first loss {first}");
+        assert!(
+            last < (first as f64) * factor,
+            "{model}: lns-int loss {first} -> {last} did not decrease"
+        );
+        assert!(
+            trainer.op_counts.total_macs() > 0,
+            "{model}: lns-int run reported no measured datapath work"
+        );
+        // Per-step energy metrics made it into the log.
+        assert!(trainer.log.last("lns_macs").unwrap_or(0.0) > 0.0);
+        assert!(trainer.log.last("lns_pe_mj").unwrap_or(0.0) > 0.0);
+    }
+}
+
+#[test]
+fn lns_int_training_bit_identical_across_worker_counts() {
+    // The integer tier inherits the repo-wide determinism contract:
+    // `--parallelism 4` reproduces the sequential run bit for bit —
+    // losses, final parameters, and the measured op counts.
+    for model in ["mlp_tiny", "charlm_tiny"] {
+        let mk = |parallelism: usize| {
+            let mut cfg = native_cfg(model, "lns", OptKind::Madam, 12);
+            cfg.parallelism = parallelism;
+            cfg.exec_tier = "lns-int".into();
+            cfg
+        };
+        let mut seq = Trainer::new(mk(1)).expect("sequential lns-int trainer");
+        let mut par = Trainer::new(mk(4)).expect("parallel lns-int trainer");
+        for step in 0..12 {
+            let (ls, _) = seq.step().expect("seq step");
+            let (lp, _) = par.step().expect("par step");
+            assert_eq!(
+                ls.to_bits(),
+                lp.to_bits(),
+                "{model} step {step}: sequential loss {ls} vs parallel loss {lp}"
+            );
+        }
+        for (a, b) in seq.params.iter().zip(par.params.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.data, b.data, "{model}: final param {} differs", a.name);
+        }
+        assert!(seq.op_counts.total_macs() > 0, "{model}: no measured datapath work");
+        assert_eq!(seq.op_counts, par.op_counts, "{model}: op counts diverged");
+    }
+}
+
+#[test]
+fn lns_int_tier_with_non_lns_format_is_a_clear_error() {
+    let mut cfg = native_cfg("mlp_tiny", "fp32", OptKind::Sgd, 1);
+    cfg.exec_tier = "lns-int".into();
+    let err = Trainer::new(cfg).unwrap_err();
+    assert!(err.to_string().contains("lns-int"), "unexpected error: {err}");
+    // And an unknown tier name is rejected at construction.
+    let mut cfg = native_cfg("mlp_tiny", "lns", OptKind::Madam, 1);
+    cfg.exec_tier = "int4".into();
+    assert!(Trainer::new(cfg).is_err());
+}
+
+#[test]
 fn unknown_native_model_is_a_clear_error() {
     let err = Trainer::new(native_cfg("resnet50", "lns", OptKind::Madam, 1)).unwrap_err();
     assert!(err.to_string().contains("presets"), "unexpected error: {err}");

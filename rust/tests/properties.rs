@@ -490,6 +490,92 @@ fn parallel_gemm_bit_identical_property() {
 }
 
 #[test]
+fn lns_exec_matmul_bounded_and_bit_identical_across_workers_property() {
+    // The integer-domain training tier (`lns::exec`): at random shapes
+    // and every conversion mode, the GEMM stays within the Mitchell/
+    // hybrid envelope of the exact f32 product of the quantized
+    // operands, and both outputs and op counts are bit-identical at
+    // every worker count.
+    use lns_madam::lns::convert::mitchell_bound;
+    use lns_madam::lns::exec::lns_matmul_into;
+    use lns_madam::lns::{quantize_tensor, ConvertMode, ExecScratch, LnsExecCfg, OpCounts};
+
+    let fmt = LnsFormat::new(8, 8);
+    let modes: [(ConvertMode, u32); 5] = [
+        (ConvertMode::Reference, 1),
+        (ConvertMode::ExactLut, 1),
+        (ConvertMode::Hybrid { lut_bits: 2 }, 2),
+        (ConvertMode::Hybrid { lut_bits: 1 }, 4),
+        (ConvertMode::Mitchell, 8),
+    ];
+    property(25, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 96);
+        let n = g.usize_in(1, 24);
+        let mut rng = Rng::new(0xE1EC ^ g.case as u64);
+        let a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let aq = quantize_tensor(&a, fmt, Scaling::PerTensor);
+        let bq = quantize_tensor(&b, fmt, Scaling::PerTensor);
+        let reference = aq.matmul(&bq);
+        let abs_ref = aq.map(f32::abs).matmul(&bq.map(f32::abs));
+        let slack = 1e-3 * reference.abs_max().max(1.0);
+        let (mode, span) = modes[g.usize_in(0, modes.len() - 1)];
+        let cfg = LnsExecCfg { fmt, convert: mode, acc_bits: 24 };
+        let bound = mitchell_bound(fmt.gamma, span) as f32;
+
+        let run = |workers: usize| {
+            let mut out = vec![0.0f32; m * n];
+            let mut scratch = ExecScratch::new();
+            let mut counts = OpCounts::default();
+            lns_matmul_into(
+                &mut out,
+                &a.data,
+                &b.data,
+                m,
+                k,
+                n,
+                cfg,
+                workers,
+                &mut scratch,
+                &mut counts,
+            );
+            (out, counts)
+        };
+        let (want, want_counts) = run(1);
+        lns_madam::prop_assert!(
+            g,
+            want_counts.total_macs() == (m * k * n) as u64,
+            "{mode:?} {m}x{k}x{n}: MAC total {} != {}",
+            want_counts.total_macs(),
+            m * k * n
+        );
+        for i in 0..want.len() {
+            let err = (want[i] - reference.data[i]).abs();
+            let budget = bound * abs_ref.data[i] + slack;
+            lns_madam::prop_assert!(
+                g,
+                err <= budget,
+                "{mode:?} {m}x{k}x{n}: elem {i} err {err} > budget {budget}"
+            );
+        }
+        for workers in [2usize, 4, 8] {
+            let (got, counts) = run(workers);
+            lns_madam::prop_assert!(
+                g,
+                got.iter().zip(want.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{mode:?} {m}x{k}x{n} @ {workers} workers: outputs diverged"
+            );
+            lns_madam::prop_assert!(
+                g,
+                counts == want_counts,
+                "{mode:?} {m}x{k}x{n} @ {workers} workers: op counts diverged"
+            );
+        }
+    });
+}
+
+#[test]
 fn packed_gemm_bit_identical_to_reference_property() {
     // ISSUE-5: the packed register-blocked microkernels replay the
     // pre-packing tiled kernels' exact per-element FP op sequence, so
