@@ -5,7 +5,8 @@
 //! update), the Madam + Q_U update step, the datapath simulator, the
 //! end-to-end train-step latency split into gradient compute (PJRT or
 //! the native backend) vs weight update (rust), the ISSUE-5 dispatch
-//! (`"pool"`) and packed-GEMM (`"gemm_kernel"`) microbenches, and the
+//! (`"pool"`) and packed-GEMM (`"gemm_kernel"`) microbenches, the
+//! ISSUE-7 scalar-vs-AVX2 kernel comparison (`"simd"`), and the
 //! native training throughput sweep across thread counts, which emits
 //! the machine-readable `BENCH_native_training.json` (the repo's
 //! recorded perf trajectory — see DESIGN.md §Performance & testing).
@@ -356,6 +357,174 @@ fn gemm_kernel_section(smoke: bool) -> BTreeMap<String, Json> {
     json
 }
 
+/// ISSUE-7 simd section: the scalar oracles vs the AVX2 tier on the
+/// three SIMD'd hot paths — packed GEMM GFLOP/s, fused quantizer
+/// elem/s, and the integer collector MACs/s — plus the value-close FMA
+/// GEMM tier (`--simd force`), exercised through the explicit
+/// `matmul_fma` hook so the process-wide mode never leaves `auto`.
+/// Asserts bitwise Off == Auto (and the FMA error bound) before any
+/// timing; off-smoke on AVX2 hosts it hard-asserts the SIMD tier is
+/// not slower than its scalar oracle.
+fn simd_section(smoke: bool) -> BTreeMap<String, Json> {
+    use lns_madam::util::simd::{self, SimdMode};
+    let b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let dim = if smoke { 128usize } else { 512 };
+    let detected = simd::avx2_fma_detected();
+    println!(
+        "\n--- simd kernels (scalar oracle vs avx2 tier, {dim}^3 gemm; isa: {}, tier: {}) ---",
+        simd::isa_name(),
+        simd::tier_name()
+    );
+    let mut json = BTreeMap::new();
+    json.insert("isa".into(), Json::Str(simd::isa_name().into()));
+    json.insert("tier".into(), Json::Str(simd::tier_name().into()));
+    json.insert("detected".into(), Json::Bool(detected));
+    json.insert("dim".into(), Json::Num(dim as f64));
+
+    let mut rng = Rng::new(0x51D0);
+    let a = Tensor::randn(dim, dim, 1.0, &mut rng);
+    let bt = Tensor::randn(dim, dim, 1.0, &mut rng);
+    let flops = 2.0 * (dim * dim * dim) as f64;
+
+    // The contract before the clock: Off == Auto bitwise per variant.
+    simd::set_mode(SimdMode::Off).unwrap();
+    let want = [a.matmul(&bt), a.t_matmul(&bt), a.matmul_t(&bt)];
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let got = [a.matmul(&bt), a.t_matmul(&bt), a.matmul_t(&bt)];
+    for ((w, g), name) in want.iter().zip(got.iter()).zip(["matmul", "t_matmul", "matmul_t"]) {
+        let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> = g.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, gb, "{name}: avx2 bitwise tier diverged from the scalar oracle");
+    }
+
+    simd::set_mode(SimdMode::Off).unwrap();
+    let s_scalar = b.bench(&format!("matmul {dim}^3 scalar tier"), || a.matmul(&bt));
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let s_simd = b.bench(&format!("matmul {dim}^3 simd tier"), || a.matmul(&bt));
+    let (g_sc, g_si) = (s_scalar.throughput(flops) / 1e9, s_simd.throughput(flops) / 1e9);
+    println!(
+        "  -> matmul: scalar {g_sc:.2} GFLOP/s, simd {g_si:.2} GFLOP/s ({:.2}x)",
+        s_scalar.mean_ns / s_simd.mean_ns
+    );
+    json.insert("scalar_gflops_matmul".into(), Json::Num(g_sc));
+    json.insert("simd_gflops_matmul".into(), Json::Num(g_si));
+    json.insert("simd_speedup_matmul".into(), Json::Num(s_scalar.mean_ns / s_simd.mean_ns));
+    if !smoke && detected {
+        // Acceptance: the SIMD tier must not lose to its scalar oracle
+        // on the large GEMM (3% tolerance for timer noise).
+        assert!(
+            g_si >= 0.97 * g_sc,
+            "simd matmul tier slower than scalar: {g_si:.2} vs {g_sc:.2} GFLOP/s"
+        );
+    }
+
+    // Quantizer: scalar vs simd elem/s on a large PerTensor roundtrip
+    // (in-place on already-quantized data — idempotent, steady-state).
+    let qdim = if smoke { 256usize } else { 1024 };
+    let n = qdim * qdim;
+    let fmt = LnsFormat::PAPER8;
+    let t = Tensor::randn(qdim, qdim, 1.0, &mut rng);
+    let mut scratch = QuantScratch::default();
+    simd::set_mode(SimdMode::Off).unwrap();
+    let mut w = t.clone();
+    kernels::quantize_rows_into(&mut w.data, qdim, qdim, fmt, Scaling::PerTensor, 1, &mut scratch);
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let mut g = t.clone();
+    kernels::quantize_rows_into(&mut g.data, qdim, qdim, fmt, Scaling::PerTensor, 1, &mut scratch);
+    assert_eq!(
+        w.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        g.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "avx2 quantizer diverged from the scalar oracle"
+    );
+    simd::set_mode(SimdMode::Off).unwrap();
+    let s_qs = b.bench(&format!("quantize {n} elems scalar tier"), || {
+        kernels::quantize_rows_into(
+            &mut w.data,
+            qdim,
+            qdim,
+            fmt,
+            Scaling::PerTensor,
+            1,
+            &mut scratch,
+        );
+    });
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let s_qv = b.bench(&format!("quantize {n} elems simd tier"), || {
+        kernels::quantize_rows_into(
+            &mut g.data,
+            qdim,
+            qdim,
+            fmt,
+            Scaling::PerTensor,
+            1,
+            &mut scratch,
+        );
+    });
+    let (e_sc, e_si) = (s_qs.throughput(n as f64) / 1e6, s_qv.throughput(n as f64) / 1e6);
+    println!(
+        "  -> quantize: scalar {e_sc:.1} Melem/s, simd {e_si:.1} Melem/s ({:.2}x)",
+        s_qs.mean_ns / s_qv.mean_ns
+    );
+    json.insert("scalar_melem_per_s_quant".into(), Json::Num(e_sc));
+    json.insert("simd_melem_per_s_quant".into(), Json::Num(e_si));
+    json.insert("simd_speedup_quant".into(), Json::Num(s_qs.mean_ns / s_qv.mean_ns));
+    if !smoke && detected {
+        assert!(
+            e_si >= 0.97 * e_sc,
+            "simd quantizer tier slower than scalar: {e_si:.1} vs {e_sc:.1} Melem/s"
+        );
+    }
+
+    // Integer collector (the datapath/LnsExec dot loop): MACs/s.
+    let (cm, ck, cn) = if smoke { (32usize, 64usize, 32usize) } else { (64, 128, 64) };
+    let ca = Tensor::randn(cm, ck, 1.0, &mut rng);
+    let cb = Tensor::randn(ck, cn, 1.0, &mut rng);
+    let ea = encode_tensor(&ca, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    let eb = encode_tensor(&cb, fmt, Scaling::PerTensor, Rounding::Nearest, None);
+    simd::set_mode(SimdMode::Off).unwrap();
+    let mut mac_s = VectorMacUnit::new(MacConfig::paper());
+    let out_s = mac_s.matmul(&ea, &eb);
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let mut mac_v = VectorMacUnit::new(MacConfig::paper());
+    let out_v = mac_v.matmul(&ea, &eb);
+    assert_eq!(out_s.data, out_v.data, "avx2 collector diverged from the scalar oracle");
+    assert_eq!(mac_s.counts, mac_v.counts, "avx2 collector op counts diverged");
+    let macs = (cm * ck * cn) as f64;
+    simd::set_mode(SimdMode::Off).unwrap();
+    let s_cs = b.bench(&format!("collector matmul {cm}x{ck}x{cn} scalar tier"), || {
+        VectorMacUnit::new(MacConfig::paper()).matmul(&ea, &eb)
+    });
+    simd::set_mode(SimdMode::Auto).unwrap();
+    let s_cv = b.bench(&format!("collector matmul {cm}x{ck}x{cn} simd tier"), || {
+        VectorMacUnit::new(MacConfig::paper()).matmul(&ea, &eb)
+    });
+    let (m_sc, m_si) = (s_cs.throughput(macs) / 1e6, s_cv.throughput(macs) / 1e6);
+    println!(
+        "  -> collector: scalar {m_sc:.1} MMACs/s, simd {m_si:.1} MMACs/s ({:.2}x)",
+        s_cs.mean_ns / s_cv.mean_ns
+    );
+    json.insert("scalar_mmacs_collector".into(), Json::Num(m_sc));
+    json.insert("simd_mmacs_collector".into(), Json::Num(m_si));
+    json.insert("simd_speedup_collector".into(), Json::Num(s_cs.mean_ns / s_cv.mean_ns));
+
+    // Value-close FMA GEMM tier (`--simd force`): error bound, then
+    // throughput. `matmul_fma` is None on non-AVX2 hosts.
+    if let Some(fma) = a.matmul_fma(&bt) {
+        let absdot = a.map(f32::abs).matmul(&bt.map(f32::abs));
+        for (i, (gv, wv)) in fma.data.iter().zip(want[0].data.iter()).enumerate() {
+            let bound = 1e-4 * absdot.data[i].max(1e-20);
+            assert!((gv - wv).abs() <= bound, "fma tier out of bound at {i}: {gv} vs {wv}");
+        }
+        let s_fma = b.bench(&format!("matmul {dim}^3 fma tier"), || a.matmul_fma(&bt));
+        let g_fma = s_fma.throughput(flops) / 1e9;
+        println!("  -> matmul fma (value-close): {g_fma:.2} GFLOP/s");
+        json.insert("fma_gflops_matmul".into(), Json::Num(g_fma));
+    }
+
+    simd::set_mode(SimdMode::Auto).unwrap();
+    json
+}
+
 /// LnsExec tier section: the same short lns8 training run through the
 /// f32-exact and lns-int execution tiers for both model families —
 /// steps/sec, final loss, and (lns-int) the measured datapath work
@@ -413,12 +582,14 @@ fn lns_exec_section(smoke: bool) -> BTreeMap<String, Json> {
 /// `out_path` as JSON. Asserts that per-step losses are bit-identical
 /// across every thread count (the parallel hot path must never change
 /// the math).
+#[allow(clippy::too_many_arguments)]
 fn native_training_section(
     smoke: bool,
     out_path: &str,
     quant: QuantBench,
     pool_json: BTreeMap<String, Json>,
     gemm_json: BTreeMap<String, Json>,
+    simd_json: BTreeMap<String, Json>,
     lns_exec_json: BTreeMap<String, Json>,
 ) {
     let host_cores = Parallelism::Auto.worker_count();
@@ -562,6 +733,10 @@ fn native_training_section(
     // (schemas in DESIGN.md §Reading and extending the BENCH json).
     root.insert("pool".to_string(), Json::Obj(pool_json));
     root.insert("gemm_kernel".to_string(), Json::Obj(gemm_json));
+    // ISSUE-7 section: scalar-oracle vs AVX2-tier throughput for the
+    // GEMM band kernels, the fused quantizer, and the integer
+    // collector, plus the value-close FMA tier.
+    root.insert("simd".to_string(), Json::Obj(simd_json));
     // The LnsExec tier comparison (f32-exact vs lns-int) with the
     // measured datapath energy of the integer runs.
     root.insert("lns_exec".to_string(), Json::Obj(lns_exec_json));
@@ -591,8 +766,17 @@ fn main() {
         let quant = quantizer_section(smoke);
         let pool_json = pool_section(smoke);
         let gemm_json = gemm_kernel_section(smoke);
+        let simd_json = simd_section(smoke);
         let lns_exec_json = lns_exec_section(smoke);
-        native_training_section(smoke, &out_path, quant, pool_json, gemm_json, lns_exec_json);
+        native_training_section(
+            smoke,
+            &out_path,
+            quant,
+            pool_json,
+            gemm_json,
+            simd_json,
+            lns_exec_json,
+        );
         return;
     }
 
@@ -779,6 +963,15 @@ fn main() {
     let quant = quantizer_section(smoke);
     let pool_json = pool_section(smoke);
     let gemm_json = gemm_kernel_section(smoke);
+    let simd_json = simd_section(smoke);
     let lns_exec_json = lns_exec_section(smoke);
-    native_training_section(smoke, &out_path, quant, pool_json, gemm_json, lns_exec_json);
+    native_training_section(
+        smoke,
+        &out_path,
+        quant,
+        pool_json,
+        gemm_json,
+        simd_json,
+        lns_exec_json,
+    );
 }

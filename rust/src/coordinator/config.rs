@@ -89,6 +89,14 @@ pub struct TrainConfig {
     /// through the Fig. 6 integer datapath, streaming per-step
     /// `OpCounts` into `hw::energy`. Requires `format = "lns"`.
     pub exec_tier: String,
+    /// SIMD kernel tier for the rust-side hot paths: "auto" (default)
+    /// uses the bitwise AVX2 kernels when the host CPU reports
+    /// AVX2+FMA, "off" forces the scalar oracles everywhere, "force"
+    /// additionally enables the value-close FMA GEMM tier and errors
+    /// at startup on CPUs without AVX2+FMA. "auto" and "off" are
+    /// bit-identical by contract (see DESIGN.md §SIMD kernels); the
+    /// `LNS_MADAM_SIMD` env var overrides this knob for CI.
+    pub simd: String,
 }
 
 impl Default for TrainConfig {
@@ -113,6 +121,7 @@ impl Default for TrainConfig {
             resume_from: String::new(),
             parallelism: 0,
             exec_tier: "f32-exact".into(),
+            simd: "auto".into(),
         }
     }
 }
@@ -148,6 +157,7 @@ impl TrainConfig {
             resume_from: cfg.str_or("paths", "resume", &d.resume_from),
             parallelism: cfg.i64_or("train", "parallelism", d.parallelism as i64).max(0) as usize,
             exec_tier: cfg.str_or("train", "exec_tier", &d.exec_tier),
+            simd: cfg.str_or("train", "simd", &d.simd),
         })
     }
 
@@ -171,6 +181,7 @@ mod tests {
         assert!((t.lr - 2f32.powi(-7)).abs() < 1e-9);
         assert_eq!(t.gamma_fwd, 8.0);
         assert_eq!(t.exec_tier, "f32-exact");
+        assert_eq!(t.simd, "auto");
         assert_eq!(TrainConfig::maxexp(8), 127.0);
     }
 
@@ -190,7 +201,7 @@ mod tests {
         let p = dir.join("t.toml");
         std::fs::write(
             &p,
-            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\nparallelism = 2\nexec_tier = \"lns-int\"\n[quant]\ngamma_fwd = 16\n",
+            "[train]\nmodel = \"tfm_tiny\"\noptimizer = \"sgd\"\nsteps = 10\nparallelism = 2\nexec_tier = \"lns-int\"\nsimd = \"off\"\n[quant]\ngamma_fwd = 16\n",
         )
         .unwrap();
         let t = TrainConfig::from_file(p.to_str().unwrap()).unwrap();
@@ -200,6 +211,7 @@ mod tests {
         assert_eq!(t.gamma_fwd, 16.0);
         assert_eq!(t.parallelism, 2);
         assert_eq!(t.exec_tier, "lns-int");
+        assert_eq!(t.simd, "off");
         assert_eq!(t.train_artifact(), "tfm_tiny_lns_train");
     }
 

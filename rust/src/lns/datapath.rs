@@ -21,6 +21,7 @@ use crate::lns::convert::{ConvertMode, Converter};
 use crate::lns::format::LnsFormat;
 use crate::lns::quant::{LnsTensor, Scaling};
 use crate::util::pool;
+use crate::util::simd;
 use crate::util::tensor::Tensor;
 
 /// Hardware op counters for one simulated GEMM.
@@ -342,6 +343,11 @@ fn dot_kernel(
 /// [`dot_kernel`] with caller-provided bin collectors (`bins.len()`
 /// must equal `p.n_bins`; contents are overwritten), so GEMM loops run
 /// allocation-free per output element.
+///
+/// Dispatches to the AVX2 tier ([`dot_kernel_simd`]) when it is
+/// enabled and applicable; the two tiers share the per-lane collector
+/// body and the bin epilogue, so outputs *and* [`OpCounts`] are
+/// bit-identical either way.
 pub(crate) fn dot_kernel_scratch(
     p: &DotParams,
     sa: &[i8],
@@ -353,9 +359,128 @@ pub(crate) fn dot_kernel_scratch(
 ) -> f64 {
     debug_assert_eq!(sa.len(), sb.len());
     debug_assert_eq!(bins.len(), p.n_bins as usize);
-    let gamma = p.gamma;
+    if let Some(r) = dot_kernel_simd(p, sa, ea, sb, eb, bins, counts) {
+        return r;
+    }
+    dot_kernel_scalar(p, sa, ea, sb, eb, bins, counts)
+}
+
+/// Block-window constants of one dot product: the anchor exponent, the
+/// precision kept below it, and the collector saturation rail. Shared
+/// by both kernel tiers so the window math cannot drift.
+#[derive(Clone, Copy)]
+struct Window {
+    q_max: i64,
+    frac_bits: i64,
+    cap: i64,
+}
+
+impl Window {
+    fn new(p: &DotParams, lanes: usize, q_max: i64) -> Window {
+        // Carry headroom for n lanes, leaving frac_bits of precision
+        // below the largest product inside the acc_bits-wide collector.
+        let headroom = 64 - (lanes as u64).leading_zeros() as i64;
+        Window {
+            q_max,
+            frac_bits: (p.acc_bits as i64 - 1 - headroom).max(0),
+            // Collector saturation rail: the modeled accumulator holds
+            // acc_bits signed integer bits (bin units carry an extra
+            // gamma factor from the folded Mitchell scaling). Sums
+            // clamp here instead of wrapping — a guarded accumulator
+            // never flips sign.
+            cap: (p.gamma as i64) << (p.acc_bits as i64 - 1).clamp(0, 48),
+        }
+    }
+}
+
+/// Shift-and-accumulate one nonzero lane into its remainder bin — the
+/// serial heart of the collector, shared verbatim by the scalar tier,
+/// the SIMD tier's block drain, and both tiers' tails. Hybrid mode
+/// scales each addend by (gamma + lsb) instead of gamma — an
+/// integer-exact way to fold Mitchell's (1 + lsb/gamma) into the adder
+/// tree.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn collect_lane(
+    p: &DotParams,
+    w: Window,
+    bins: &mut [i64],
+    counts: &mut OpCounts,
+    sign: i64,
+    q: i64,
+    r_msb: usize,
+    r_lsb: i64,
+) {
+    counts.shifts += 1;
+    let rel = q - w.q_max + w.frac_bits; // shift within the window
+    if rel < 0 {
+        // Swamped: too small for the collector's precision.
+        counts.collector_adds += 1;
+        return;
+    }
+    let mut addend = sign << rel;
+    if p.span > 1 {
+        counts.mitchell_adds += 1;
+        addend *= p.gamma as i64 + r_lsb;
+    } else {
+        addend *= p.gamma as i64;
+    }
+    counts.collector_adds += 1;
+    bins[r_msb] = (bins[r_msb] + addend).clamp(-w.cap, w.cap);
+}
+
+/// Decompose lane `i` into its collector fields and feed
+/// [`collect_lane`] (no-op on zero lanes). The scalar tier's loop body
+/// and the SIMD tier's tail.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn collect_scalar_lane(
+    p: &DotParams,
+    w: Window,
+    bins: &mut [i64],
+    counts: &mut OpCounts,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    i: usize,
+) {
+    if sa[i] == 0 || sb[i] == 0 {
+        return; // zero flag: lane contributes nothing
+    }
+    let pexp = ea[i] + eb[i]; // 8-bit adder with carry-out
+    let sign = (sa[i] as i64) * (sb[i] as i64);
+    let q = (pexp >> p.remainder_bits) as i64;
+    let r = pexp & (p.gamma - 1);
+    collect_lane(p, w, bins, counts, sign, q, (r / p.span) as usize, (r % p.span) as i64);
+}
+
+/// LUT multiply per bin + final accumulation (PPU side) — shared by
+/// both tiers.
+fn collector_epilogue(p: &DotParams, w: Window, bins: &[i64], counts: &mut OpCounts) -> f64 {
+    let window = ((w.q_max - w.frac_bits) as f64).exp2();
+    let mut acc = 0.0f64;
+    for (i, &bin) in bins.iter().enumerate() {
+        counts.lut_muls += 1;
+        counts.final_adds += 1;
+        let lut = ((i as u32 * p.span) as f64 / p.gamma as f64).exp2();
+        acc += bin as f64 / p.gamma as f64 * lut;
+    }
+    acc * window
+}
+
+/// The hardware-faithful scalar collector loop — the bit-exactness
+/// oracle of the SIMD tier.
+fn dot_kernel_scalar(
+    p: &DotParams,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    bins: &mut [i64],
+    counts: &mut OpCounts,
+) -> f64 {
     let b = p.remainder_bits;
-    let span = p.span;
 
     // Pass 1 (hardware: max-exponent detect for the block window).
     let mut q_max: i64 = -1;
@@ -364,67 +489,85 @@ pub(crate) fn dot_kernel_scratch(
             q_max = q_max.max(((ea[i] + eb[i]) >> b) as i64);
         }
     }
+    // Every lane costs an exponent add and a sign XOR, zero or not.
+    counts.exp_adds += sa.len() as u64;
+    counts.sign_xors += sa.len() as u64;
     if q_max < 0 {
-        // All-zero vector: still count the lane ops, result is 0.
-        counts.exp_adds += sa.len() as u64;
-        counts.sign_xors += sa.len() as u64;
+        // All-zero vector: the lane ops are counted, result is 0.
         return 0.0;
     }
-    // Carry headroom for n lanes, leaving frac_bits of precision
-    // below the largest product inside the acc_bits-wide collector.
-    let headroom = 64 - (sa.len() as u64).leading_zeros() as i64;
-    let frac_bits = (p.acc_bits as i64 - 1 - headroom).max(0);
-    // Collector saturation rail: the modeled accumulator holds
-    // acc_bits signed integer bits (bin units carry an extra gamma
-    // factor from the folded Mitchell scaling). Sums clamp here
-    // instead of wrapping — a guarded accumulator never flips sign.
-    let cap = (gamma as i64) << (p.acc_bits as i64 - 1).clamp(0, 48);
+    let w = Window::new(p, sa.len(), q_max);
 
     // Per-remainder-bin integer collectors, in units of
-    // 2^(q_max - frac_bits) / gamma. Hybrid mode scales each addend
-    // by (gamma + lsb) instead of gamma — an integer-exact way to
-    // fold Mitchell's (1 + lsb/gamma) into the adder tree.
+    // 2^(q_max - frac_bits) / gamma.
     bins.fill(0);
     for i in 0..sa.len() {
-        counts.exp_adds += 1;
-        counts.sign_xors += 1;
-        if sa[i] == 0 || sb[i] == 0 {
-            continue; // zero flag: lane contributes nothing
-        }
-        let pexp = ea[i] + eb[i]; // 8-bit adder with carry-out
-        let sign = (sa[i] as i64) * (sb[i] as i64);
-        let q = (pexp >> b) as i64;
-        let r = pexp & (gamma - 1);
-        let r_msb = r / span;
-        let r_lsb = r % span;
-        counts.shifts += 1;
-        let rel = q - q_max + frac_bits; // shift within the window
-        if rel < 0 {
-            // Swamped: too small for the collector's precision.
-            counts.collector_adds += 1;
-            continue;
-        }
-        let mut addend = sign << rel;
-        if span > 1 {
-            counts.mitchell_adds += 1;
-            addend *= gamma as i64 + r_lsb as i64;
-        } else {
-            addend *= gamma as i64;
-        }
-        counts.collector_adds += 1;
-        bins[r_msb as usize] = (bins[r_msb as usize] + addend).clamp(-cap, cap);
+        collect_scalar_lane(p, w, bins, counts, sa, ea, sb, eb, i);
     }
+    collector_epilogue(p, w, bins, counts)
+}
 
-    // LUT multiply per bin + final accumulation (PPU side).
-    let window = ((q_max - frac_bits) as f64).exp2();
-    let mut acc = 0.0f64;
-    for (i, &bin) in bins.iter().enumerate() {
-        counts.lut_muls += 1;
-        counts.final_adds += 1;
-        let lut = ((i as u32 * span) as f64 / gamma as f64).exp2();
-        acc += bin as f64 / gamma as f64 * lut;
+/// AVX2 tier of the collector loop: pass-1 max and the pass-2 field
+/// decomposition (exponent add, quotient/remainder split, sign
+/// product) run 8 lanes at a time; the inherently serial
+/// clamp-accumulate drains lane by lane through the same
+/// [`collect_lane`] the scalar tier uses, so results and op counts are
+/// bit-identical (the math is pure integer — there is nothing to
+/// round). `None` — with nothing touched — when SIMD is off or
+/// undetected, the vector is shorter than one block, or the bin span
+/// is not a power of two (the vector remainder split uses shift/mask).
+fn dot_kernel_simd(
+    p: &DotParams,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    bins: &mut [i64],
+    counts: &mut OpCounts,
+) -> Option<f64> {
+    let n = sa.len();
+    if !simd::simd_enabled() || n < 8 || !p.span.is_power_of_two() {
+        return None;
     }
-    acc * window
+    let q_max = simd::dot_qmax(sa, ea, sb, eb, p.remainder_bits)?;
+    counts.exp_adds += n as u64;
+    counts.sign_xors += n as u64;
+    if q_max < 0 {
+        return Some(0.0);
+    }
+    let w = Window::new(p, n, q_max);
+    bins.fill(0);
+    let mut blk = simd::DotBlock::default();
+    let mut i = 0;
+    while i + 8 <= n {
+        if simd::dot_block(&mut blk, sa, ea, sb, eb, i, p.remainder_bits, p.span) {
+            for l in 0..8 {
+                if blk.nz & (1 << l) != 0 {
+                    collect_lane(
+                        p,
+                        w,
+                        bins,
+                        counts,
+                        blk.sign[l] as i64,
+                        blk.q[l] as i64,
+                        blk.r_msb[l] as usize,
+                        blk.r_lsb[l] as i64,
+                    );
+                }
+            }
+        } else {
+            // Unreachable after the simd_enabled() gate (detection is
+            // cached) — drain the block through the scalar lane path.
+            for l in i..i + 8 {
+                collect_scalar_lane(p, w, bins, counts, sa, ea, sb, eb, l);
+            }
+        }
+        i += 8;
+    }
+    for l in i..n {
+        collect_scalar_lane(p, w, bins, counts, sa, ea, sb, eb, l);
+    }
+    Some(collector_epilogue(p, w, bins, counts))
 }
 
 #[cfg(test)]
@@ -596,6 +739,60 @@ mod tests {
         let got = par.matmul(&ea, &eb);
         assert_eq!(got.data, want.data);
         assert_eq!(par.counts, seq.counts);
+    }
+
+    #[test]
+    fn simd_collector_bit_identical_to_scalar() {
+        // Off ↔ Auto toggling is race-safe: the tiers are bit-identical
+        // by contract, so concurrent tests see the same numbers either
+        // way. Shapes straddle the 8-lane block width; zeros exercise
+        // the lane mask; every convert mode exercises a different
+        // span/bin layout (ExactLut span 1, Hybrid span 2, Mitchell
+        // span gamma).
+        use crate::util::simd::{set_mode, SimdMode};
+        let mut rng = Rng::new(41);
+        let fmt = LnsFormat::PAPER8;
+        let mut av = Tensor::randn(5, 37, 1.0, &mut rng);
+        for (i, v) in av.data.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Tensor::randn(37, 9, 1.0, &mut rng);
+        let (ea, eb) = (enc(&av, fmt), enc(&b, fmt));
+        for convert in [
+            ConvertMode::ExactLut,
+            ConvertMode::Hybrid { lut_bits: 1 },
+            ConvertMode::Mitchell,
+        ] {
+            let mut cfg = MacConfig::paper();
+            cfg.convert = convert;
+            set_mode(SimdMode::Off).unwrap();
+            let mut scalar = VectorMacUnit::new(cfg);
+            let want = scalar.matmul(&ea, &eb);
+            set_mode(SimdMode::Auto).unwrap();
+            let mut vectored = VectorMacUnit::new(cfg);
+            let got = vectored.matmul(&ea, &eb);
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "{convert:?} outputs diverged");
+            assert_eq!(vectored.counts, scalar.counts, "{convert:?} op counts diverged");
+        }
+        // Short vectors (< one block) decline to scalar; all-zero
+        // vectors a block wide take the SIMD early-out. Results and
+        // counts must match the scalar tier in both cases.
+        for n in [3usize, 16] {
+            let (sz, ez) = (vec![0i8; n], vec![0u32; n]);
+            let (so, eo) = (vec![1i8; n], vec![5u32; n]);
+            set_mode(SimdMode::Off).unwrap();
+            let mut s = VectorMacUnit::new(MacConfig::paper());
+            let zs = s.dot(&sz, &ez, &so, &eo);
+            set_mode(SimdMode::Auto).unwrap();
+            let mut v = VectorMacUnit::new(MacConfig::paper());
+            let zv = v.dot(&sz, &ez, &so, &eo);
+            assert_eq!(zs, zv, "n={n}");
+            assert_eq!(s.counts, v.counts, "n={n}");
+        }
+        set_mode(SimdMode::Auto).unwrap();
     }
 
     #[test]

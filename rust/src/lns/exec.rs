@@ -199,7 +199,7 @@ fn gemm_k_major(
     }
     let nb = params.n_bins as usize;
     let workers =
-        pool::effective_workers(workers, m * n * k, pool::GEMM_MACS_PER_WORKER).min(m.max(1));
+        pool::effective_workers(workers, m * n * k, pool::gemm_macs_floor()).min(m.max(1));
     if workers <= 1 {
         if seq_bins.len() != nb {
             seq_bins.clear();
@@ -581,6 +581,28 @@ mod tests {
             assert_eq!(got.data, want.data, "{workers} workers: outputs diverged");
             assert_eq!(counts, want_counts, "{workers} workers: counts diverged");
         }
+    }
+
+    #[test]
+    fn simd_exec_gemm_bit_identical_to_scalar() {
+        // The integer GEMM routes every dot through the collector
+        // kernel, whose SIMD tier is bitwise by contract — so toggling
+        // Off ↔ Auto must change neither outputs nor op counts for any
+        // orientation (Off ↔ Auto is race-safe under concurrent tests
+        // for the same reason).
+        use crate::util::simd::{set_mode, SimdMode};
+        let mut rng = Rng::new(55);
+        let a = Tensor::randn(9, 21, 1.0, &mut rng);
+        let b = Tensor::randn(21, 7, 1.0, &mut rng);
+        let convert = ConvertMode::Hybrid { lut_bits: 1 };
+        let cfg = LnsExecCfg { fmt: FMT, convert, acc_bits: 24 };
+        set_mode(SimdMode::Off).unwrap();
+        let (want, want_counts) = run_matmul(&a, &b, cfg, 2);
+        set_mode(SimdMode::Auto).unwrap();
+        let (got, counts) = run_matmul(&a, &b, cfg, 2);
+        assert_eq!(got.data, want.data, "outputs diverged across simd tiers");
+        assert_eq!(counts, want_counts, "op counts diverged across simd tiers");
+        set_mode(SimdMode::Auto).unwrap();
     }
 
     #[test]

@@ -43,6 +43,7 @@ use crate::lns::quant::Scaling;
 use crate::util::fastmath::{fast_log2, fast_log2_usable, log2_tie_band};
 use crate::util::pool;
 use crate::util::rng::{CounterRng, Rng};
+use crate::util::simd;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -53,7 +54,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 pub use crate::util::pool::QUANT_ELEMS_PER_WORKER;
 
 fn effective_workers(workers: usize, elems: usize) -> usize {
-    pool::effective_workers(workers, elems, QUANT_ELEMS_PER_WORKER)
+    pool::effective_workers(workers, elems, pool::quant_elems_floor())
 }
 
 /// Decode LUTs above this size are not cached (a 24-bit format's table
@@ -135,6 +136,13 @@ impl EncParams {
             fast: fast_log2_usable(fmt.gamma, fmt.max_code())
                 && !FORCE_EXACT.load(Ordering::Relaxed),
         }
+    }
+
+    /// The lane-kernel view of these constants. The SIMD span kernels
+    /// replicate only the *fast* nearest path, so callers must gate
+    /// dispatch on `self.fast` (which also folds in [`FORCE_EXACT`]).
+    fn simd_spec(&self) -> simd::QuantSpec {
+        simd::QuantSpec { gamma: self.gamma, band: self.band, max_code: self.max_code }
     }
 }
 
@@ -258,6 +266,21 @@ fn roundtrip_span(
 ) {
     match crng {
         None => {
+            // AVX2 tier: lane-wise fast-log2 encode + LUT-gather decode,
+            // bit-identical to the scalar fast path (near-tie and
+            // non-finite lanes are patched through `roundtrip_one`
+            // itself). Declines — falling to the scalar loop below —
+            // when SIMD is off/undetected, the format is not fast-path
+            // safe, or the format has no cached LUT.
+            if p.fast {
+                if let Some(l) = lut {
+                    if simd::quant_roundtrip_span(span, scale, p.simd_spec(), l, |x| {
+                        roundtrip_one(p, x, scale, Some(l))
+                    }) {
+                        return;
+                    }
+                }
+            }
             for v in span.iter_mut() {
                 *v = roundtrip_one(p, *v, scale, lut);
             }
@@ -559,11 +582,22 @@ fn encode_band(
                 };
                 match uni {
                     None => {
-                        for (&x, (sg, cd)) in drow.iter().zip(srow.iter_mut().zip(crow.iter_mut()))
-                        {
-                            let v = encode_nearest(p, x, s);
-                            *sg = v.0;
-                            *cd = v.1;
+                        // AVX2 tier (same dispatch contract as
+                        // `roundtrip_span`): vectorize the whole-row
+                        // single-scale encode; near-tie / non-finite
+                        // lanes fall back to `encode_nearest` per lane.
+                        let vectorized = p.fast
+                            && simd::quant_encode_span(srow, crow, drow, s, p.simd_spec(), |x| {
+                                encode_nearest(p, x, s)
+                            });
+                        if !vectorized {
+                            for (&x, (sg, cd)) in
+                                drow.iter().zip(srow.iter_mut().zip(crow.iter_mut()))
+                            {
+                                let v = encode_nearest(p, x, s);
+                                *sg = v.0;
+                                *cd = v.1;
+                            }
                         }
                     }
                     Some(u) => {
@@ -785,6 +819,78 @@ mod tests {
             fast.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             exact.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn simd_tier_is_bit_identical_to_scalar_quantizer() {
+        // Off ↔ Auto toggling is safe even with concurrent tests: the
+        // two tiers are bit-identical by contract, so a racing test
+        // observing either mode sees the same numbers.
+        use crate::util::simd::{set_mode, SimdMode};
+        let fmt = LnsFormat::new(8, 8);
+        let mut rng = Rng::new(11);
+        // Shapes straddling the 8-lane width (sub-vector rows, exact
+        // multiples, ragged tails) with values salted by zeros and
+        // non-finites so the lane mask's fallback path is exercised.
+        for (rows, cols) in [(3usize, 5usize), (4, 8), (7, 29), (1, 257)] {
+            let mut t = Tensor::randn(rows, cols, 1.0, &mut rng);
+            for (i, v) in t.data.iter_mut().enumerate() {
+                match i % 11 {
+                    0 => *v = 0.0,
+                    5 => *v = f32::NAN,
+                    8 => *v = f32::INFINITY,
+                    _ => {}
+                }
+            }
+            for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+                let mut scratch = QuantScratch::default();
+                set_mode(SimdMode::Off).unwrap();
+                let mut want = t.clone();
+                quantize_rows_into(&mut want.data, rows, cols, fmt, scaling, 1, &mut scratch);
+                set_mode(SimdMode::Auto).unwrap();
+                let mut got = t.clone();
+                quantize_rows_into(&mut got.data, rows, cols, fmt, scaling, 3, &mut scratch);
+                for (a, b) in got.data.iter().zip(want.data.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{scaling:?} {rows}x{cols}: {a} vs {b}");
+                }
+            }
+            // Encode front-end: sign/code planes under both tiers.
+            let scales = group_scales(&t, fmt, Scaling::PerRow);
+            let n = rows * cols;
+            let (mut s0, mut c0) = (vec![0i8; n], vec![0u32; n]);
+            let (mut s1, mut c1) = (vec![0i8; n], vec![0u32; n]);
+            set_mode(SimdMode::Off).unwrap();
+            encode_rows_into(
+                &mut s0,
+                &mut c0,
+                &t.data,
+                rows,
+                cols,
+                fmt,
+                Scaling::PerRow,
+                Rounding::Nearest,
+                None,
+                &scales,
+                1,
+            );
+            set_mode(SimdMode::Auto).unwrap();
+            encode_rows_into(
+                &mut s1,
+                &mut c1,
+                &t.data,
+                rows,
+                cols,
+                fmt,
+                Scaling::PerRow,
+                Rounding::Nearest,
+                None,
+                &scales,
+                2,
+            );
+            assert_eq!(s0, s1, "{rows}x{cols} sign planes diverged");
+            assert_eq!(c0, c1, "{rows}x{cols} code planes diverged");
+        }
+        set_mode(SimdMode::Auto).unwrap();
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //!                   [--exec-tier f32-exact|lns-int]
 //!                   [--save-ckpt path] [--resume path]
 //!                   [--parallelism P]   # 0 = auto, 1 = sequential
+//!                   [--simd auto|off|force]  # kernel tier; see DESIGN.md
 //!   lns-madam info            # list artifacts + native model presets
-//!   lns-madam energy [--parallelism P]   # Table 8 energy report +
-//!                                        # measured datapath profile
+//!   lns-madam energy [--parallelism P] [--simd auto|off|force]
+//!                             # Table 8 energy report + measured
+//!                             # datapath profile
 //!   lns-madam quant-error     # Fig. 4 quantization-error study
 //!
 //! Arg parsing is hand-rolled (no clap offline); flags are --key value.
@@ -23,6 +25,7 @@ use lns_madam::lns::{ConvertMode, MacConfig, Parallelism};
 use lns_madam::optim::error::fig4_sweep;
 use lns_madam::runtime::{artifacts_available, Manifest, Runtime};
 use lns_madam::util::bench::print_table;
+use lns_madam::util::simd;
 use std::path::Path;
 
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
@@ -71,6 +74,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "parallelism" => cfg.parallelism = v.parse()?,
             "backend" => cfg.backend = BackendKind::parse(v)?,
             "exec-tier" => cfg.exec_tier = v.clone(),
+            "simd" => cfg.simd = v.clone(),
             "artifacts" => cfg.artifacts_dir = v.clone(),
             "log" => cfg.log_path = v.clone(),
             "save-ckpt" => cfg.ckpt_path = v.clone(),
@@ -83,9 +87,18 @@ fn cmd_train(args: &[String]) -> Result<()> {
         "training {} [{}] with {} (lr {}), {} steps, Q_U {} bits",
         cfg.model, cfg.format, cfg.optimizer.name(), cfg.lr, cfg.steps, cfg.qu_bits
     );
+    // Resolve the SIMD tier before any kernel runs: `force` on a CPU
+    // without AVX2+FMA is a clear startup error, not a kernel panic.
+    simd::set_mode(simd::SimdMode::parse(&cfg.simd)?)?;
     let workers = Parallelism::from_knob(cfg.parallelism).worker_count();
     let mut trainer = Trainer::new(cfg)?;
-    println!("backend: {} ({} worker thread(s))", trainer.backend_name(), workers);
+    println!(
+        "backend: {} ({} worker thread(s), isa: {}, simd: {})",
+        trainer.backend_name(),
+        workers,
+        simd::isa_name(),
+        simd::tier_name()
+    );
     if trainer.steps_done > 0 {
         println!("resumed at step {}", trainer.steps_done);
     }
@@ -162,9 +175,11 @@ fn cmd_energy(args: &[String]) -> Result<()> {
     for (k, v) in &flags {
         match k.as_str() {
             "parallelism" => par = Parallelism::from_knob(v.parse()?),
+            "simd" => simd::set_mode(simd::SimdMode::parse(v)?)?,
             other => bail!("unknown flag --{other}"),
         }
     }
+    println!("isa: {}, simd: {}", simd::isa_name(), simd::tier_name());
     let model = EnergyModel::paper();
     let formats = [
         PeFormat::Lns(ConvertMode::ExactLut),

@@ -12,6 +12,13 @@
 //! fused optimizer step (optim::fused) additionally cross-checks
 //! against the exact composed implementation.
 
+/// The atanh-series polynomial coefficients of [`fast_log2`]:
+/// `2/ln2 / (2k+1)` for k = 0..5. Exported so the AVX2 lane-wise
+/// replication in `util::simd` evaluates the *same* constants in the
+/// same Horner order — the two implementations cannot drift.
+pub const FAST_LOG2_COEFFS: [f32; 6] =
+    [2.885_390_1, 0.961_796_7, 0.577_078_04, 0.412_198_6, 0.320_598_9, 0.262_308_2];
+
 /// log2(x) for finite x > 0. Max abs error ~2e-7 over all normals.
 ///
 /// Range-reduces to the mantissa m in [1, 2) and evaluates the atanh
@@ -24,11 +31,8 @@ pub fn fast_log2(x: f32) -> f32 {
     let m = f32::from_bits((bits & 0x007f_ffff) | 0x3f80_0000);
     let t = (m - 1.0) / (m + 1.0);
     let u = t * t;
-    // 2/ln2 / (2k+1) for k = 0..5.
-    let p = t * (2.885_390_1
-        + u * (0.961_796_7
-            + u * (0.577_078_04
-                + u * (0.412_198_6 + u * (0.320_598_9 + u * 0.262_308_2)))));
+    let c = FAST_LOG2_COEFFS;
+    let p = t * (c[0] + u * (c[1] + u * (c[2] + u * (c[3] + u * (c[4] + u * c[5])))));
     e as f32 + p
 }
 

@@ -14,4 +14,5 @@ pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod tensor;

@@ -73,6 +73,35 @@ pub const GEMM_MACS_PER_WORKER: usize = 2 * 1024;
 /// same 2k floor comfortably out-earns a parked-thread wake.
 pub const QUANT_ELEMS_PER_WORKER: usize = 2 * 1024;
 
+/// How much the per-worker work floors scale up when the AVX2 kernels
+/// are active: a SIMD lane retires roughly 4-8x the scalar per-element
+/// work per cycle, so a task must be proportionally bigger before a
+/// parked-thread wake pays for itself.
+pub const SIMD_FLOOR_SCALE: usize = 4;
+
+/// The GEMM split floor for the *currently resolved* SIMD tier:
+/// [`GEMM_MACS_PER_WORKER`], scaled by [`SIMD_FLOOR_SCALE`] when the
+/// AVX2 kernels are enabled. Like the base floor this is purely a
+/// wall-clock dial — worker count never changes bits.
+#[inline]
+pub fn gemm_macs_floor() -> usize {
+    if crate::util::simd::simd_enabled() {
+        GEMM_MACS_PER_WORKER * SIMD_FLOOR_SCALE
+    } else {
+        GEMM_MACS_PER_WORKER
+    }
+}
+
+/// The quantizer analogue of [`gemm_macs_floor`].
+#[inline]
+pub fn quant_elems_floor() -> usize {
+    if crate::util::simd::simd_enabled() {
+        QUANT_ELEMS_PER_WORKER * SIMD_FLOOR_SCALE
+    } else {
+        QUANT_ELEMS_PER_WORKER
+    }
+}
+
 /// Resolve the worker count actually used for a job of `work` units
 /// under a `floor` of minimum units per worker. This is *the*
 /// work-floor implementation — `tensor.rs` GEMMs and `lns::kernels`
@@ -579,6 +608,21 @@ mod tests {
         // Degenerate floor cannot divide by zero.
         assert_eq!(effective_workers(4, 100, 0), 4);
         assert_eq!(effective_workers(0, 100, 1), 1);
+    }
+
+    #[test]
+    fn simd_aware_floors_scale_with_the_resolved_tier() {
+        // The floors only ever equal the base constant or the scaled
+        // one, tracking whether the AVX2 kernels are live right now.
+        // (Not toggling the global mode here: the floor is a pure
+        // function of it, and other tests own their own toggles.)
+        let scaled = crate::util::simd::simd_enabled();
+        let want_gemm =
+            if scaled { GEMM_MACS_PER_WORKER * SIMD_FLOOR_SCALE } else { GEMM_MACS_PER_WORKER };
+        let want_quant =
+            if scaled { QUANT_ELEMS_PER_WORKER * SIMD_FLOOR_SCALE } else { QUANT_ELEMS_PER_WORKER };
+        assert_eq!(gemm_macs_floor(), want_gemm);
+        assert_eq!(quant_elems_floor(), want_quant);
     }
 
     #[test]

@@ -1,0 +1,978 @@
+//! Runtime-dispatched AVX2/FMA microkernels for the training hot paths.
+//!
+//! This module is the single point where the crate touches `std::arch`.
+//! Everything else calls the safe wrappers below, which resolve to one
+//! of three tiers at runtime:
+//!
+//! * **scalar** — the existing kernels in `tensor.rs` / `kernels.rs` /
+//!   `datapath.rs`. Always available; the bit-exactness oracle.
+//! * **avx2 bitwise** (default under `--simd auto` when the CPU reports
+//!   AVX2+FMA) — hand-written 8-wide kernels that replicate the scalar
+//!   kernels' per-element FP op sequence exactly. The GEMM band kernels
+//!   keep the two-rounding `acc += a * b` (`vmulps` + `vaddps`, never
+//!   `vfmadd`), the quantizer replicates `fast_log2`'s bit twiddling and
+//!   polynomial lane-wise, and the LnsExec collector front end is pure
+//!   integer arithmetic — so every tier-switch is bitwise invisible.
+//! * **avx2+fma value-close** (only under `--simd force`) — GEMM band
+//!   kernels using single-rounding `vfmadd213ps`. Faster, deterministic,
+//!   and partition-independent, but *not* bitwise-equal to the scalar
+//!   kernels; covered by error-bound property tests instead.
+//!
+//! Why the bitwise tier is possible at all: the packed GEMM kernels
+//! accumulate into a `[f32; 16]` block where each of the 16 j-lanes is
+//! an independent IEEE accumulator chain over k. Splitting the block
+//! into two `__m256` registers vectorizes *across* lanes without
+//! reassociating *within* any lane, so per-element rounding history is
+//! untouched. The same argument covers the quantizer (each element is
+//! its own chain) and the integer collector (exact integer ops).
+//!
+//! The mode is process-global (`set_mode`), resolved at startup from
+//! `--simd`, and overridable via the `LNS_MADAM_SIMD` env var (wins over
+//! the flag; used by CI to pin the forced-scalar lane). Lanes the vector
+//! quantizer cannot prove safe (zeros, non-finite values, near-tie codes
+//! inside the libm fallback band) are routed per-lane to the caller's
+//! scalar fallback closure, mirroring the PR 4 fast-path contract.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Env override for the SIMD tier (wins over `--simd`): `off`/`scalar`/
+/// `0`/`false` pin the scalar fallback, `force` pins the value-close
+/// GEMM tier, anything else means `auto`. Parsed leniently because CI
+/// sets it to pin a lane, not to validate user input.
+pub const SIMD_ENV: &str = "LNS_MADAM_SIMD";
+
+/// Lane width of the packed GEMM micropanels. Must equal
+/// `tensor::LANES`; asserted at compile time where the panels are built.
+pub const PANEL_LANES: usize = 16;
+
+/// Resolved SIMD policy. `Auto` uses the bitwise AVX2 kernels when the
+/// CPU reports AVX2+FMA and the scalar kernels otherwise — numerically
+/// invisible either way. `Off` pins the scalar kernels. `Force`
+/// additionally opts the GEMM band kernels into the value-close FMA
+/// variants and is rejected at startup when the ISA is absent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    Auto = 0,
+    Off = 1,
+    Force = 2,
+}
+
+impl SimdMode {
+    /// Strict parse for `--simd` (CLI surface; unknown values error).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "off" => Ok(SimdMode::Off),
+            "force" => Ok(SimdMode::Force),
+            other => anyhow::bail!("unknown simd mode '{other}' (expected auto|off|force)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+            SimdMode::Force => "force",
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(SimdMode::Auto as u8);
+
+fn mode_from_u8(v: u8) -> SimdMode {
+    match v {
+        1 => SimdMode::Off,
+        2 => SimdMode::Force,
+        _ => SimdMode::Auto,
+    }
+}
+
+fn env_override() -> Option<SimdMode> {
+    static ENV: OnceLock<Option<SimdMode>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let v = std::env::var(SIMD_ENV).ok()?;
+        Some(match v.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" | "false" => SimdMode::Off,
+            "force" => SimdMode::Force,
+            _ => SimdMode::Auto,
+        })
+    })
+}
+
+/// True iff the running CPU reports both AVX2 and FMA (cached).
+pub fn avx2_fma_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static DET: OnceLock<bool> = OnceLock::new();
+        *DET.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Check a mode against the running CPU without installing it.
+/// `Force` on a CPU without AVX2+FMA is the one rejected combination —
+/// callers surface this at startup instead of panicking in a kernel.
+pub fn validate(mode: SimdMode) -> anyhow::Result<()> {
+    if mode == SimdMode::Force && !avx2_fma_detected() {
+        anyhow::bail!(
+            "simd mode 'force' requires AVX2+FMA, which this CPU does not report; \
+             use 'auto' (runtime-detected) or 'off'"
+        );
+    }
+    Ok(())
+}
+
+/// Install the process-wide SIMD mode (validated first). The
+/// `LNS_MADAM_SIMD` env override, when present, wins over this value.
+pub fn set_mode(mode: SimdMode) -> anyhow::Result<()> {
+    validate(mode)?;
+    MODE.store(mode as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// The resolved mode: env override if set, else the installed mode.
+pub fn mode() -> SimdMode {
+    if let Some(m) = env_override() {
+        return m;
+    }
+    mode_from_u8(MODE.load(Ordering::Relaxed))
+}
+
+/// True when the bitwise AVX2 kernels are active (mode is not `Off` and
+/// the ISA is present). `Force` does not change this — the quantizer and
+/// collector kernels are bitwise in every enabled tier.
+pub fn simd_enabled() -> bool {
+    mode() != SimdMode::Off && avx2_fma_detected()
+}
+
+/// Human-readable ISA summary for the startup banner.
+pub fn isa_name() -> &'static str {
+    if avx2_fma_detected() {
+        "x86-64 avx2+fma"
+    } else {
+        "scalar-only"
+    }
+}
+
+/// Human-readable resolved tier for the startup banner.
+pub fn tier_name() -> &'static str {
+    match (mode(), avx2_fma_detected()) {
+        (SimdMode::Off, _) => "scalar (simd off)",
+        (_, false) => "scalar (isa not detected)",
+        (SimdMode::Auto, true) => "avx2 bitwise",
+        (SimdMode::Force, true) => "avx2+fma value-close gemm",
+    }
+}
+
+/// Which GEMM band kernel the dispatchers in `tensor.rs` should run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    Scalar,
+    /// mul+add AVX2 — bitwise-equal to the scalar kernels.
+    Bitwise,
+    /// fmadd AVX2 — value-close, explicitly opted in via `--simd force`.
+    ValueClose,
+}
+
+pub fn gemm_kernel() -> GemmKernel {
+    if !avx2_fma_detected() {
+        return GemmKernel::Scalar;
+    }
+    match mode() {
+        SimdMode::Off => GemmKernel::Scalar,
+        SimdMode::Auto => GemmKernel::Bitwise,
+        SimdMode::Force => GemmKernel::ValueClose,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 32-byte-aligned f32 scratch
+// ---------------------------------------------------------------------------
+
+/// One aligned 8-lane chunk; `size_of == align == 32`, so a `Vec<Chunk>`
+/// is a contiguous, 32-byte-aligned run of f32s with no padding.
+#[derive(Clone, Copy)]
+#[repr(C, align(32))]
+struct Chunk([f32; 8]);
+
+/// Reusable f32 scratch whose backing storage is 32-byte aligned, so
+/// packed GEMM panels start on a full AVX2 vector boundary. Alignment is
+/// a throughput nicety only — the kernels use unaligned loads, so safety
+/// never depends on it. `reset` leaves contents unspecified: every
+/// caller (the pack routines) fully overwrites its logical range.
+#[derive(Default)]
+pub struct AlignedF32 {
+    buf: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub const fn new() -> Self {
+        AlignedF32 { buf: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set the logical length to `n`, growing (never shrinking) the
+    /// backing allocation, and return the mutable view. Newly exposed
+    /// elements hold unspecified stale values — callers overwrite the
+    /// full range before reading.
+    pub fn reset(&mut self, n: usize) -> &mut [f32] {
+        let chunks = n.div_ceil(8);
+        if self.buf.len() < chunks {
+            self.buf.resize(chunks, Chunk([0.0; 8]));
+        }
+        self.len = n;
+        self.as_mut_slice()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `buf` is a live allocation of `buf.len()` `Chunk`s,
+        // each exactly eight contiguous f32s (repr(C), size 32, no
+        // padding), and `reset` guarantees `len <= buf.len() * 8`.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`; the &mut self borrow makes it unique.
+        unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel parameter blocks
+// ---------------------------------------------------------------------------
+
+/// Per-format constants for the vectorized quantizer; mirrors the
+/// fields of the (private) `EncParams` in `lns::kernels` that the fused
+/// fast path reads.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    /// `gamma as f32` — codes per octave.
+    pub gamma: f32,
+    /// Near-tie fallback half-band around fractional code 0.5.
+    pub band: f32,
+    /// Largest magnitude code, as f32 (the scalar clamp bound).
+    pub max_code: f32,
+}
+
+/// Vector front end of one 8-lane block of the Fig. 6 collector loop:
+/// exponent-add products decomposed into quotient/remainder fields, plus
+/// the sign products and a nonzero-lane bitmask. The (inherently serial)
+/// clamp-accumulate into remainder bins stays with the caller.
+#[derive(Default)]
+pub struct DotBlock {
+    /// Bit `l` set iff lane `l` has both operand signs nonzero.
+    pub nz: u32,
+    /// Sign products (`sa * sb`), each in {-1, 0, 1}.
+    pub sign: [i32; 8],
+    /// `(ea + eb) >> remainder_bits`.
+    pub q: [i32; 8],
+    /// `((ea + eb) & (gamma - 1)) / span`.
+    pub r_msb: [i32; 8],
+    /// `((ea + eb) & (gamma - 1)) % span`.
+    pub r_lsb: [i32; 8],
+}
+
+// ---------------------------------------------------------------------------
+// Safe wrappers (dispatch + the non-x86 scalar decline path)
+// ---------------------------------------------------------------------------
+
+/// Bitwise AVX2 band kernel for `matmul` / `t_matmul` (they share a
+/// shape: k-major walk over one packed column panel with zero-skip).
+/// Returns false (untouched output) when the ISA is absent.
+pub fn matmul_band_bitwise(
+    a: &[f32],
+    k: usize,
+    bp: &[f32],
+    n: usize,
+    row0: usize,
+    band: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return false;
+        }
+        // SAFETY: AVX2+FMA confirmed by runtime detection.
+        unsafe { x86::matmul_band::<false>(a, k, bp, n, row0, band) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, k, bp, n, row0, band);
+        false
+    }
+}
+
+/// Value-close FMA variant of [`matmul_band_bitwise`] (`--simd force`
+/// tier): single-rounding fused multiply-adds, same loop structure.
+pub fn matmul_band_fma(
+    a: &[f32],
+    k: usize,
+    bp: &[f32],
+    n: usize,
+    row0: usize,
+    band: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return false;
+        }
+        // SAFETY: AVX2+FMA confirmed by runtime detection.
+        unsafe { x86::matmul_band::<true>(a, k, bp, n, row0, band) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, k, bp, n, row0, band);
+        false
+    }
+}
+
+/// Bitwise AVX2 band kernel for `matmul_t` (tiled-k partial sums,
+/// no zero-skip — replicates the scalar kernel's `tacc`/`oacc` order).
+pub fn matmul_t_band_bitwise(
+    a: &[f32],
+    k: usize,
+    bp: &[f32],
+    q: usize,
+    row0: usize,
+    band: &mut [f32],
+    tile_k: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return false;
+        }
+        // SAFETY: AVX2+FMA confirmed by runtime detection.
+        unsafe { x86::matmul_t_band::<false>(a, k, bp, q, row0, band, tile_k) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, k, bp, q, row0, band, tile_k);
+        false
+    }
+}
+
+/// Value-close FMA variant of [`matmul_t_band_bitwise`].
+pub fn matmul_t_band_fma(
+    a: &[f32],
+    k: usize,
+    bp: &[f32],
+    q: usize,
+    row0: usize,
+    band: &mut [f32],
+    tile_k: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return false;
+        }
+        // SAFETY: AVX2+FMA confirmed by runtime detection.
+        unsafe { x86::matmul_t_band::<true>(a, k, bp, q, row0, band, tile_k) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (a, k, bp, q, row0, band, tile_k);
+        false
+    }
+}
+
+/// Vectorized nearest-rounding fake-quant over one scale span. Handles
+/// every element (vector lanes, flagged-lane scalar fallback, tail) and
+/// returns true, or returns false with `span` untouched when SIMD is
+/// disabled/absent. Lanes with zero, non-finite, or near-tie inputs go
+/// through `fallback` (the scalar `roundtrip_one`), exactly like the
+/// scalar fast path's own exact-libm escape hatch.
+pub fn quant_roundtrip_span<F: FnMut(f32) -> f32>(
+    span: &mut [f32],
+    scale: f32,
+    spec: QuantSpec,
+    lut: &[f32],
+    fallback: F,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !simd_enabled() {
+            return false;
+        }
+        assert!(lut.len() > spec.max_code as usize, "decode LUT shorter than max code");
+        // SAFETY: AVX2+FMA confirmed; gather indices are clamped to
+        // [0, max_code] which the assert bounds against the LUT.
+        unsafe { x86::roundtrip_span(span, scale, spec, lut, fallback) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (span, scale, spec, lut, fallback);
+        false
+    }
+}
+
+/// Vectorized nearest-rounding encode over one scale span (sign/code
+/// planes, no decode). Same contract as [`quant_roundtrip_span`].
+pub fn quant_encode_span<F: FnMut(f32) -> (i8, u32)>(
+    signs: &mut [i8],
+    codes: &mut [u32],
+    data: &[f32],
+    scale: f32,
+    spec: QuantSpec,
+    fallback: F,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !simd_enabled() {
+            return false;
+        }
+        assert!(signs.len() >= data.len() && codes.len() >= data.len());
+        // SAFETY: AVX2+FMA confirmed; plane lengths checked above.
+        unsafe { x86::encode_span(signs, codes, data, scale, spec, fallback) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (signs, codes, data, scale, spec, fallback);
+        false
+    }
+}
+
+/// Pass-1 of the collector loop: max over nonzero lanes of
+/// `(ea + eb) >> rbits`, or -1 when every lane is zero. Pure integer —
+/// bit-identical to the scalar scan. `None` when the ISA is absent.
+pub fn dot_qmax(sa: &[i8], ea: &[u32], sb: &[i8], eb: &[u32], rbits: u32) -> Option<i64> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return None;
+        }
+        assert!(ea.len() >= sa.len() && sb.len() >= sa.len() && eb.len() >= sa.len());
+        // SAFETY: AVX2 confirmed; operand lengths checked above.
+        Some(unsafe { x86::dot_qmax(sa, ea, sb, eb, rbits) })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (sa, ea, sb, eb, rbits);
+        None
+    }
+}
+
+/// Pass-2 front end for lanes `i..i + 8` of the collector loop (see
+/// [`DotBlock`]). Requires `gamma == 1 << rbits` and a power-of-two
+/// `span` (callers gate on this). Returns false when the ISA is absent.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_block(
+    out: &mut DotBlock,
+    sa: &[i8],
+    ea: &[u32],
+    sb: &[i8],
+    eb: &[u32],
+    i: usize,
+    rbits: u32,
+    span: u32,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !avx2_fma_detected() {
+            return false;
+        }
+        assert!(
+            i + 8 <= sa.len()
+                && i + 8 <= ea.len()
+                && i + 8 <= sb.len()
+                && i + 8 <= eb.len()
+                && span.is_power_of_two()
+        );
+        // SAFETY: AVX2 confirmed; the 8-lane window is in bounds.
+        unsafe { x86::dot_block(out, sa, ea, sb, eb, i, rbits, span) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (out, sa, ea, sb, eb, i, rbits, span);
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernel bodies
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::{DotBlock, QuantSpec, PANEL_LANES};
+    use crate::util::fastmath::FAST_LOG2_COEFFS;
+
+    /// Band kernel shared by `matmul` and `t_matmul`: for each 16-lane
+    /// packed column panel, walk k ascending with the scalar kernel's
+    /// broadcast zero-skip, accumulating into two 8-lane registers. With
+    /// `FMA = false` every step is `vaddps(acc, vmulps(a, b))` — the
+    /// exact two-rounding sequence of the scalar `*o += a * bv`, making
+    /// the result bitwise-equal. `FMA = true` fuses the step (one
+    /// rounding): the `--simd force` value-close tier.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matmul_band<const FMA: bool>(
+        a: &[f32],
+        k: usize,
+        bp: &[f32],
+        n: usize,
+        row0: usize,
+        band: &mut [f32],
+    ) {
+        let rows = if n == 0 { 0 } else { band.len() / n };
+        for (p, panel) in bp.chunks(k * PANEL_LANES).enumerate() {
+            let j0 = p * PANEL_LANES;
+            let w = PANEL_LANES.min(n - j0);
+            for di in 0..rows {
+                let i = row0 + di;
+                let arow = &a[i * k..(i + 1) * k];
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let va = _mm256_set1_ps(av);
+                    let b0 = _mm256_loadu_ps(panel.as_ptr().add(kk * PANEL_LANES));
+                    let b1 = _mm256_loadu_ps(panel.as_ptr().add(kk * PANEL_LANES + 8));
+                    if FMA {
+                        acc0 = _mm256_fmadd_ps(va, b0, acc0);
+                        acc1 = _mm256_fmadd_ps(va, b1, acc1);
+                    } else {
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(va, b0));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(va, b1));
+                    }
+                }
+                let mut out = [0.0f32; PANEL_LANES];
+                _mm256_storeu_ps(out.as_mut_ptr(), acc0);
+                _mm256_storeu_ps(out.as_mut_ptr().add(8), acc1);
+                band[di * n + j0..di * n + j0 + w].copy_from_slice(&out[..w]);
+            }
+        }
+    }
+
+    /// Band kernel for `matmul_t`: same panel walk but with the scalar
+    /// kernel's k-tiling — fresh per-tile partials (`t*`, no zero-skip)
+    /// folded into the output accumulators (`o*`) in tile order.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn matmul_t_band<const FMA: bool>(
+        a: &[f32],
+        k: usize,
+        bp: &[f32],
+        q: usize,
+        row0: usize,
+        band: &mut [f32],
+        tile_k: usize,
+    ) {
+        let rows = if q == 0 { 0 } else { band.len() / q };
+        for (p, panel) in bp.chunks(k * PANEL_LANES).enumerate() {
+            let j0 = p * PANEL_LANES;
+            let w = PANEL_LANES.min(q - j0);
+            for di in 0..rows {
+                let i = row0 + di;
+                let arow = &a[i * k..(i + 1) * k];
+                let mut o0 = _mm256_setzero_ps();
+                let mut o1 = _mm256_setzero_ps();
+                let mut k0 = 0usize;
+                while k0 < k {
+                    let k1 = (k0 + tile_k).min(k);
+                    let mut t0 = _mm256_setzero_ps();
+                    let mut t1 = _mm256_setzero_ps();
+                    for (kk, &av) in arow[k0..k1].iter().enumerate() {
+                        let va = _mm256_set1_ps(av);
+                        let b0 = _mm256_loadu_ps(panel.as_ptr().add((k0 + kk) * PANEL_LANES));
+                        let b1 = _mm256_loadu_ps(panel.as_ptr().add((k0 + kk) * PANEL_LANES + 8));
+                        if FMA {
+                            t0 = _mm256_fmadd_ps(va, b0, t0);
+                            t1 = _mm256_fmadd_ps(va, b1, t1);
+                        } else {
+                            t0 = _mm256_add_ps(t0, _mm256_mul_ps(va, b0));
+                            t1 = _mm256_add_ps(t1, _mm256_mul_ps(va, b1));
+                        }
+                    }
+                    o0 = _mm256_add_ps(o0, t0);
+                    o1 = _mm256_add_ps(o1, t1);
+                    k0 = k1;
+                }
+                let mut out = [0.0f32; PANEL_LANES];
+                _mm256_storeu_ps(out.as_mut_ptr(), o0);
+                _mm256_storeu_ps(out.as_mut_ptr().add(8), o1);
+                band[di * q + j0..di * q + j0 + w].copy_from_slice(&out[..w]);
+            }
+        }
+    }
+
+    /// Per-lane results of the vectorized nearest-rounding encode.
+    struct EncodedLanes {
+        /// Clamped integer codes, each in `[0, max_code]` (safe to
+        /// gather with, whatever the input lane held).
+        code: __m256i,
+        /// Lanes whose fractional code landed inside the near-tie band
+        /// (must fall back to the exact libm encoder).
+        tie: __m256,
+        /// Lanes with finite `y` (the fast path's usability guard).
+        y_fin: __m256,
+    }
+
+    /// Replicates `fastmath::fast_log2` and the scalar nearest-rounding
+    /// encode lane-wise, preserving the exact FP op sequence: every step
+    /// below is the vector twin of one scalar step (mul+add polynomial —
+    /// never fmadd — floor, round-ties-even, clamp). Lanes flagged in
+    /// `tie` or outside `y_fin` carry well-defined but unused codes.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn encode8(y: __m256, spec: QuantSpec) -> EncodedLanes {
+        let c = FAST_LOG2_COEFFS;
+        let bits = _mm256_castps_si256(y);
+        let e = _mm256_sub_epi32(_mm256_srli_epi32::<23>(bits), _mm256_set1_epi32(127));
+        let m = _mm256_castsi256_ps(_mm256_or_si256(
+            _mm256_and_si256(bits, _mm256_set1_epi32(0x007f_ffff)),
+            _mm256_set1_epi32(0x3f80_0000),
+        ));
+        let one = _mm256_set1_ps(1.0);
+        let t = _mm256_div_ps(_mm256_sub_ps(m, one), _mm256_add_ps(m, one));
+        let u = _mm256_mul_ps(t, t);
+        let mut p = _mm256_add_ps(_mm256_set1_ps(c[4]), _mm256_mul_ps(u, _mm256_set1_ps(c[5])));
+        p = _mm256_add_ps(_mm256_set1_ps(c[3]), _mm256_mul_ps(u, p));
+        p = _mm256_add_ps(_mm256_set1_ps(c[2]), _mm256_mul_ps(u, p));
+        p = _mm256_add_ps(_mm256_set1_ps(c[1]), _mm256_mul_ps(u, p));
+        p = _mm256_add_ps(_mm256_set1_ps(c[0]), _mm256_mul_ps(u, p));
+        p = _mm256_mul_ps(t, p);
+        let flog = _mm256_add_ps(_mm256_cvtepi32_ps(e), p);
+        let tc = _mm256_mul_ps(flog, _mm256_set1_ps(spec.gamma));
+        let fr = _mm256_sub_ps(tc, _mm256_floor_ps(tc));
+        let absm = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let tie = _mm256_cmp_ps::<_CMP_LE_OQ>(
+            _mm256_and_ps(_mm256_sub_ps(fr, _mm256_set1_ps(0.5)), absm),
+            _mm256_set1_ps(spec.band),
+        );
+        let r = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(tc);
+        // max/min return the second operand on NaN, so a NaN code lane
+        // degrades to 0 — in bounds for the gather, and those lanes are
+        // already excluded from the fast-path mask.
+        let clamped = _mm256_min_ps(
+            _mm256_max_ps(r, _mm256_setzero_ps()),
+            _mm256_set1_ps(spec.max_code),
+        );
+        let code = _mm256_cvtps_epi32(clamped);
+        let y_fin = _mm256_cmp_ps::<_CMP_LT_OQ>(y, _mm256_set1_ps(f32::INFINITY));
+        EncodedLanes { code, tie, y_fin }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn roundtrip_span<F: FnMut(f32) -> f32>(
+        span: &mut [f32],
+        scale: f32,
+        spec: QuantSpec,
+        lut: &[f32],
+        mut fallback: F,
+    ) {
+        let n = span.len();
+        let vscale = _mm256_set1_ps(scale);
+        let vinf = _mm256_set1_ps(f32::INFINITY);
+        let absm = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let signm = _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN));
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(span.as_ptr().add(i));
+            let ax = _mm256_and_ps(x, absm);
+            let y = _mm256_div_ps(ax, vscale);
+            let enc = encode8(y, spec);
+            // Fast-path lanes: finite nonzero x, finite y, not near-tie
+            // — mirrors the scalar guards (NaN compares false → fallback).
+            let x_fin = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, vinf);
+            let nz = _mm256_cmp_ps::<_CMP_NEQ_OQ>(x, _mm256_setzero_ps());
+            let ok = _mm256_andnot_ps(enc.tie, _mm256_and_ps(_mm256_and_ps(x_fin, enc.y_fin), nz));
+            let okm = _mm256_movemask_ps(ok) as u32 & 0xff;
+            let mag = _mm256_i32gather_ps::<4>(lut.as_ptr(), enc.code);
+            // ±scale * mag == (sign as f32 * scale) * mag bit for bit.
+            let res = _mm256_mul_ps(_mm256_or_ps(vscale, _mm256_and_ps(x, signm)), mag);
+            if okm == 0xff {
+                _mm256_storeu_ps(span.as_mut_ptr().add(i), res);
+            } else {
+                let mut tmp = [0.0f32; 8];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), res);
+                for (l, t) in tmp.iter().enumerate() {
+                    let v = &mut span[i + l];
+                    *v = if okm & (1 << l) != 0 { *t } else { fallback(*v) };
+                }
+            }
+            i += 8;
+        }
+        for v in span[i..].iter_mut() {
+            *v = fallback(*v);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn encode_span<F: FnMut(f32) -> (i8, u32)>(
+        signs: &mut [i8],
+        codes: &mut [u32],
+        data: &[f32],
+        scale: f32,
+        spec: QuantSpec,
+        mut fallback: F,
+    ) {
+        let n = data.len();
+        let vscale = _mm256_set1_ps(scale);
+        let vinf = _mm256_set1_ps(f32::INFINITY);
+        let absm = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(data.as_ptr().add(i));
+            let ax = _mm256_and_ps(x, absm);
+            let y = _mm256_div_ps(ax, vscale);
+            let enc = encode8(y, spec);
+            let x_fin = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, vinf);
+            let nz = _mm256_cmp_ps::<_CMP_NEQ_OQ>(x, _mm256_setzero_ps());
+            let ok = _mm256_andnot_ps(enc.tie, _mm256_and_ps(_mm256_and_ps(x_fin, enc.y_fin), nz));
+            let okm = _mm256_movemask_ps(ok) as u32 & 0xff;
+            let gtm =
+                _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(x, _mm256_setzero_ps())) as u32;
+            let mut ctmp = [0i32; 8];
+            _mm256_storeu_si256(ctmp.as_mut_ptr().cast::<__m256i>(), enc.code);
+            for (l, &c) in ctmp.iter().enumerate() {
+                if okm & (1 << l) != 0 {
+                    signs[i + l] = if gtm & (1 << l) != 0 { 1 } else { -1 };
+                    codes[i + l] = c as u32;
+                } else {
+                    let (s, cc) = fallback(data[i + l]);
+                    signs[i + l] = s;
+                    codes[i + l] = cc;
+                }
+            }
+            i += 8;
+        }
+        for l in i..n {
+            let (s, c) = fallback(data[l]);
+            signs[l] = s;
+            codes[l] = c;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_qmax(sa: &[i8], ea: &[u32], sb: &[i8], eb: &[u32], rbits: u32) -> i64 {
+        let n = sa.len();
+        let shift = _mm_cvtsi32_si128(rbits as i32);
+        let zero = _mm256_setzero_si256();
+        let neg1 = _mm256_set1_epi32(-1);
+        let mut vmax = neg1;
+        let mut i = 0;
+        while i + 8 <= n {
+            let sa8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(sa.as_ptr().add(i).cast()));
+            let sb8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(sb.as_ptr().add(i).cast()));
+            let ea8 = _mm256_loadu_si256(ea.as_ptr().add(i).cast());
+            let eb8 = _mm256_loadu_si256(eb.as_ptr().add(i).cast());
+            let q = _mm256_srl_epi32(_mm256_add_epi32(ea8, eb8), shift);
+            let invalid =
+                _mm256_or_si256(_mm256_cmpeq_epi32(sa8, zero), _mm256_cmpeq_epi32(sb8, zero));
+            let qv = _mm256_blendv_epi8(q, neg1, invalid);
+            vmax = _mm256_max_epi32(vmax, qv);
+            i += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), vmax);
+        let mut q_max = lanes.iter().copied().max().unwrap_or(-1) as i64;
+        for j in i..n {
+            if sa[j] != 0 && sb[j] != 0 {
+                q_max = q_max.max(((ea[j] + eb[j]) >> rbits) as i64);
+            }
+        }
+        q_max
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_block(
+        out: &mut DotBlock,
+        sa: &[i8],
+        ea: &[u32],
+        sb: &[i8],
+        eb: &[u32],
+        i: usize,
+        rbits: u32,
+        span: u32,
+    ) {
+        let zero = _mm256_setzero_si256();
+        let sa8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(sa.as_ptr().add(i).cast()));
+        let sb8 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(sb.as_ptr().add(i).cast()));
+        let ea8 = _mm256_loadu_si256(ea.as_ptr().add(i).cast());
+        let eb8 = _mm256_loadu_si256(eb.as_ptr().add(i).cast());
+        let pexp = _mm256_add_epi32(ea8, eb8);
+        let q = _mm256_srl_epi32(pexp, _mm_cvtsi32_si128(rbits as i32));
+        let r = _mm256_and_si256(pexp, _mm256_set1_epi32(((1u32 << rbits) - 1) as i32));
+        // span is a power of two (caller-gated), so / and % are shift/mask.
+        let r_msb = _mm256_srl_epi32(r, _mm_cvtsi32_si128(span.trailing_zeros() as i32));
+        let r_lsb = _mm256_and_si256(r, _mm256_set1_epi32((span - 1) as i32));
+        let sign = _mm256_mullo_epi32(sa8, sb8);
+        let invalid =
+            _mm256_or_si256(_mm256_cmpeq_epi32(sa8, zero), _mm256_cmpeq_epi32(sb8, zero));
+        out.nz = !(_mm256_movemask_ps(_mm256_castsi256_ps(invalid)) as u32) & 0xff;
+        _mm256_storeu_si256(out.sign.as_mut_ptr().cast(), sign);
+        _mm256_storeu_si256(out.q.as_mut_ptr().cast(), q);
+        _mm256_storeu_si256(out.r_msb.as_mut_ptr().cast(), r_msb);
+        _mm256_storeu_si256(out.r_lsb.as_mut_ptr().cast(), r_lsb);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_is_strict() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("off").unwrap(), SimdMode::Off);
+        assert_eq!(SimdMode::parse("force").unwrap(), SimdMode::Force);
+        assert!(SimdMode::parse("avx512").is_err());
+        assert!(SimdMode::parse("Auto").is_err());
+        assert_eq!(SimdMode::Force.name(), "force");
+    }
+
+    #[test]
+    fn validate_rejects_force_without_isa() {
+        // Non-mutating check: `set_mode(Force)` shares this validator,
+        // so the startup rejection is covered without installing Force
+        // process-wide (which would change GEMM numerics under
+        // concurrently running tests).
+        assert!(validate(SimdMode::Auto).is_ok());
+        assert!(validate(SimdMode::Off).is_ok());
+        assert_eq!(validate(SimdMode::Force).is_ok(), avx2_fma_detected());
+    }
+
+    #[test]
+    fn names_are_consistent() {
+        // Whatever the host, the banner strings resolve without panic
+        // and agree with detection.
+        let isa = isa_name();
+        assert_eq!(isa.contains("avx2"), avx2_fma_detected());
+        assert!(!tier_name().is_empty());
+    }
+
+    #[test]
+    fn off_mode_disables_everything() {
+        set_mode(SimdMode::Off).unwrap();
+        assert!(!simd_enabled());
+        assert_eq!(gemm_kernel(), GemmKernel::Scalar);
+        let mut span = [1.0f32; 16];
+        let spec = QuantSpec { gamma: 8.0, band: 1e-4, max_code: 127.0 };
+        let lut = vec![1.0f32; 128];
+        assert!(!quant_roundtrip_span(&mut span, 1.0, spec, &lut, |x| x));
+        set_mode(SimdMode::Auto).unwrap();
+        // Off <-> Auto toggling is numerically invisible by contract, so
+        // restoring Auto here cannot disturb concurrent tests.
+        assert_eq!(simd_enabled(), avx2_fma_detected());
+    }
+
+    #[test]
+    fn aligned_f32_is_aligned_and_resizable() {
+        let mut buf = AlignedF32::new();
+        assert!(buf.is_empty());
+        let s = buf.reset(37);
+        assert_eq!(s.len(), 37);
+        s.fill(1.5);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 32, 0);
+        assert_eq!(buf.len(), 37);
+        assert!(buf.as_slice().iter().all(|&v| v == 1.5));
+        // Shrink keeps the allocation; grow re-exposes it.
+        buf.reset(8);
+        assert_eq!(buf.as_slice().len(), 8);
+        let s = buf.reset(64);
+        assert_eq!(s.len(), 64);
+        s.fill(2.0);
+        assert_eq!(buf.as_slice()[63], 2.0);
+    }
+
+    #[test]
+    fn gemm_band_bitwise_matches_scalar_emulation() {
+        if !avx2_fma_detected() {
+            return;
+        }
+        // Hand-packed panel: n = 11 columns (one ragged 16-lane panel),
+        // k = 5, 2 rows, with zeros in `a` to exercise the skip.
+        let (rows, k, n) = (2usize, 5usize, 11usize);
+        let a: Vec<f32> = (0..rows * k)
+            .map(|i| if i % 4 == 3 { 0.0 } else { (i as f32 * 0.37).sin() })
+            .collect();
+        let mut bp = vec![0.0f32; k * PANEL_LANES];
+        for kk in 0..k {
+            for j in 0..n {
+                bp[kk * PANEL_LANES + j] = ((kk * 7 + j) as f32 * 0.11).cos();
+            }
+        }
+        let mut got = vec![f32::NAN; rows * n];
+        assert!(matmul_band_bitwise(&a, k, &bp, n, 0, &mut got));
+        // Scalar emulation with the exact tensor.rs op sequence.
+        let mut want = vec![f32::NAN; rows * n];
+        for i in 0..rows {
+            let mut acc = [0.0f32; PANEL_LANES];
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for (l, o) in acc.iter_mut().enumerate() {
+                    *o += av * bp[kk * PANEL_LANES + l];
+                }
+            }
+            want[i * n..(i + 1) * n].copy_from_slice(&acc[..n]);
+        }
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_helpers_match_scalar() {
+        let n = 29usize;
+        let sa: Vec<i8> = (0..n).map(|i| [(-1i8), 0, 1, 1][i % 4]).collect();
+        let sb: Vec<i8> = (0..n).map(|i| [1i8, 1, -1, 0, 1][i % 5]).collect();
+        let ea: Vec<u32> = (0..n).map(|i| (i as u32 * 37) % 1000).collect();
+        let eb: Vec<u32> = (0..n).map(|i| (i as u32 * 91) % 900).collect();
+        let rbits = 3u32;
+        let span = 2u32;
+        let Some(got) = dot_qmax(&sa, &ea, &sb, &eb, rbits) else {
+            return; // no AVX2: wrappers decline, scalar path covers it
+        };
+        let mut want = -1i64;
+        for i in 0..n {
+            if sa[i] != 0 && sb[i] != 0 {
+                want = want.max(((ea[i] + eb[i]) >> rbits) as i64);
+            }
+        }
+        assert_eq!(got, want);
+
+        let mut blk = DotBlock::default();
+        assert!(dot_block(&mut blk, &sa, &ea, &sb, &eb, 8, rbits, span));
+        for l in 0..8 {
+            let i = 8 + l;
+            let nz = sa[i] != 0 && sb[i] != 0;
+            assert_eq!(blk.nz & (1 << l) != 0, nz, "lane {l}");
+            assert_eq!(blk.sign[l], sa[i] as i32 * sb[i] as i32);
+            let pexp = ea[i] + eb[i];
+            assert_eq!(blk.q[l], (pexp >> rbits) as i32);
+            let r = pexp & ((1 << rbits) - 1);
+            assert_eq!(blk.r_msb[l], (r / span) as i32);
+            assert_eq!(blk.r_lsb[l], (r % span) as i32);
+        }
+    }
+}

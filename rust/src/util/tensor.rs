@@ -16,9 +16,18 @@
 //! before, bit-identical across any worker count (row bands on
 //! `util::pool`). Both properties are enforced by tests here and in
 //! `rust/tests/properties.rs`.
+//!
+//! On AVX2+FMA hosts the band kernels additionally dispatch through
+//! [`crate::util::simd`] (ISSUE 7): the default tier is hand-written
+//! 8-wide mul+add kernels that replay the scalar op sequence exactly
+//! (still bitwise — the scalar bodies below remain the oracle), and
+//! `--simd force` opts the GEMM into single-rounding FMA variants that
+//! are value-close instead, reachable for tests via the explicit
+//! [`Tensor::matmul_fma`]-family hooks without flipping process state.
 
 use crate::util::pool;
 use crate::util::rng::Rng;
+use crate::util::simd::{self, AlignedF32};
 use std::cell::RefCell;
 
 /// Tile sizes of the *reference* (pre-packing) kernels, kept because
@@ -35,22 +44,28 @@ const TILE_K: usize = 128;
 /// stays entirely in registers.
 const LANES: usize = 16;
 
+// The SIMD band kernels are written against the same micropanel
+// geometry; a silent drift would corrupt results, so pin it.
+const _: () = assert!(LANES == simd::PANEL_LANES);
+
 /// Reusable packing scratch for the GEMM microkernels: `b` holds the
 /// stationary operand packed into k-major [`LANES`]-wide micropanels;
 /// `a` holds the transposed A operand `t_matmul` additionally packs.
 /// Owned by `model::Workspace` on the training hot path (the `*_ws`
 /// GEMM variants); standalone callers fall back to a thread-local
-/// instance — either way, packing allocates nothing once warm.
+/// instance — either way, packing allocates nothing once warm. Backed
+/// by [`AlignedF32`] so panels start on a 32-byte AVX2 vector boundary
+/// (a throughput nicety — the kernels use unaligned loads).
 #[derive(Default)]
 pub struct GemmScratch {
-    a: Vec<f32>,
-    b: Vec<f32>,
+    a: AlignedF32,
+    b: AlignedF32,
 }
 
 thread_local! {
     /// Fallback pack scratch for GEMM calls without a workspace.
     static TL_GEMM_SCRATCH: RefCell<GemmScratch> =
-        const { RefCell::new(GemmScratch { a: Vec::new(), b: Vec::new() }) };
+        const { RefCell::new(GemmScratch { a: AlignedF32::new(), b: AlignedF32::new() }) };
 }
 
 /// Number of [`LANES`]-wide panels covering `n` columns.
@@ -63,9 +78,11 @@ fn n_panels(n: usize) -> usize {
 /// `p` holds columns `[p*LANES, p*LANES+w)` as `k_rows` contiguous
 /// rows of LANES floats, zero-padded beyond the true width `w`. Pure
 /// data movement — no arithmetic, so packing cannot affect results.
-fn pack_col_panels(dst: &mut Vec<f32>, src: &[f32], k_rows: usize, n: usize) {
+fn pack_col_panels(dst: &mut AlignedF32, src: &[f32], k_rows: usize, n: usize) {
     let need = n_panels(n) * k_rows * LANES;
-    dst.resize(need, 0.0);
+    // `reset` leaves stale contents; the loop below overwrites every
+    // element of every panel (true width + zero padding).
+    let dst = dst.reset(need);
     for (p, panel) in dst.chunks_mut(k_rows * LANES).enumerate() {
         let j0 = p * LANES;
         let w = LANES.min(n - j0);
@@ -81,9 +98,11 @@ fn pack_col_panels(dst: &mut Vec<f32>, src: &[f32], k_rows: usize, n: usize) {
 /// panel `p` holds rows `[p*LANES, p*LANES+w)` of `src` laid out
 /// k-major (`panel[kk*LANES + l] = src[(p*LANES+l)*k + kk]`), zero
 /// lanes beyond `w` — the B^T staging of `matmul_t`.
-fn pack_row_panels(dst: &mut Vec<f32>, src: &[f32], q: usize, k: usize) {
+fn pack_row_panels(dst: &mut AlignedF32, src: &[f32], q: usize, k: usize) {
     let need = n_panels(q) * k * LANES;
-    dst.resize(need, 0.0);
+    // Stale after `reset`: full-width panels write all LANES lanes per
+    // k; ragged panels are zero-filled first.
+    let dst = dst.reset(need);
     for (p, panel) in dst.chunks_mut(k * LANES).enumerate() {
         let j0 = p * LANES;
         let w = LANES.min(q - j0);
@@ -102,8 +121,9 @@ fn pack_row_panels(dst: &mut Vec<f32>, src: &[f32], q: usize, k: usize) {
 /// Transpose a row-major (rows x cols) matrix into `dst` (cols x rows)
 /// — the A^T staging of `t_matmul`, so each output row reads its A
 /// column contiguously.
-fn pack_transpose(dst: &mut Vec<f32>, src: &[f32], rows: usize, cols: usize) {
-    dst.resize(rows * cols, 0.0);
+fn pack_transpose(dst: &mut AlignedF32, src: &[f32], rows: usize, cols: usize) {
+    // Stale after `reset`: the transpose writes every element.
+    let dst = dst.reset(rows * cols);
     for (r, srow) in src.chunks(cols).enumerate() {
         for (c, &v) in srow.iter().enumerate() {
             dst[c * rows + r] = v;
@@ -205,19 +225,40 @@ impl Tensor {
         }
         pack_col_panels(&mut scratch.b, &b.data, k, n);
         let bp = scratch.b.as_slice();
-        let workers = pool::effective_workers(workers, m * k * n, pool::GEMM_MACS_PER_WORKER);
+        let workers = pool::effective_workers(workers, m * k * n, pool::gemm_macs_floor());
         pool::partition_rows(&mut out.data, m, n, workers, |row0, band| {
             self.matmul_band_packed(bp, n, row0, band)
         });
     }
 
-    /// Packed microkernel for output rows `[row0, row0 + band.len()/n)`
-    /// of A @ B — shared verbatim by the sequential and parallel paths.
-    /// Per element: k ascending, zero lanes of A skipped, one
-    /// accumulator chain — the exact op sequence of
+    /// Band kernel dispatcher for A @ B: the resolved SIMD tier when
+    /// one is active (bitwise mul+add under `auto`, value-close FMA
+    /// under `force`), else the scalar microkernel.
+    fn matmul_band_packed(&self, bp: &[f32], n: usize, row0: usize, band: &mut [f32]) {
+        match simd::gemm_kernel() {
+            simd::GemmKernel::ValueClose => {
+                if simd::matmul_band_fma(&self.data, self.cols, bp, n, row0, band) {
+                    return;
+                }
+            }
+            simd::GemmKernel::Bitwise => {
+                if simd::matmul_band_bitwise(&self.data, self.cols, bp, n, row0, band) {
+                    return;
+                }
+            }
+            simd::GemmKernel::Scalar => {}
+        }
+        self.matmul_band_scalar(bp, n, row0, band);
+    }
+
+    /// Scalar packed microkernel for output rows
+    /// `[row0, row0 + band.len()/n)` of A @ B — shared verbatim by the
+    /// sequential and parallel paths, and the bit-exactness oracle of
+    /// the SIMD tier. Per element: k ascending, zero lanes of A
+    /// skipped, one accumulator chain — the exact op sequence of
     /// [`Tensor::matmul_unpacked`]'s tiled kernel, held in a LANES-wide
     /// register block instead of a memory-resident output row.
-    fn matmul_band_packed(&self, bp: &[f32], n: usize, row0: usize, band: &mut [f32]) {
+    fn matmul_band_scalar(&self, bp: &[f32], n: usize, row0: usize, band: &mut [f32]) {
         let k = self.cols;
         let rows = if n == 0 { 0 } else { band.len() / n };
         for (p, panel) in bp.chunks(k * LANES).enumerate() {
@@ -287,7 +328,7 @@ impl Tensor {
         pack_transpose(at, &self.data, r_dim, n);
         pack_col_panels(bp, &b.data, r_dim, p);
         let (at, bp) = (at.as_slice(), bp.as_slice());
-        let workers = pool::effective_workers(workers, r_dim * n * p, pool::GEMM_MACS_PER_WORKER);
+        let workers = pool::effective_workers(workers, r_dim * n * p, pool::gemm_macs_floor());
         pool::partition_rows(&mut out.data, n, p, workers, |row0, band| {
             t_matmul_band_packed(at, bp, r_dim, p, row0, band)
         });
@@ -337,19 +378,41 @@ impl Tensor {
         }
         pack_row_panels(&mut scratch.b, &b.data, q, k);
         let bp = scratch.b.as_slice();
-        let workers = pool::effective_workers(workers, m * k * q, pool::GEMM_MACS_PER_WORKER);
+        let workers = pool::effective_workers(workers, m * k * q, pool::gemm_macs_floor());
         pool::partition_rows(&mut out.data, m, q, workers, |row0, band| {
             self.matmul_t_band_packed(bp, q, row0, band)
         });
     }
 
-    /// Packed microkernel for output rows of A @ B^T. Reproduces the
+    /// Band kernel dispatcher for A @ B^T (see
+    /// [`Tensor::matmul_band_packed`]). The bitwise SIMD variant
+    /// replays the same TILE_K tiling, so even this reassociation-prone
+    /// kernel stays bit-identical under `auto`.
+    fn matmul_t_band_packed(&self, bp: &[f32], q: usize, row0: usize, band: &mut [f32]) {
+        match simd::gemm_kernel() {
+            simd::GemmKernel::ValueClose => {
+                if simd::matmul_t_band_fma(&self.data, self.cols, bp, q, row0, band, TILE_K) {
+                    return;
+                }
+            }
+            simd::GemmKernel::Bitwise => {
+                if simd::matmul_t_band_bitwise(&self.data, self.cols, bp, q, row0, band, TILE_K) {
+                    return;
+                }
+            }
+            simd::GemmKernel::Scalar => {}
+        }
+        self.matmul_t_band_scalar(bp, q, row0, band);
+    }
+
+    /// Scalar packed microkernel for output rows of A @ B^T; the
+    /// bit-exactness oracle of the SIMD tier. Reproduces the
     /// reference kernel's nested accumulation exactly: per element, a
     /// fresh partial sum per TILE_K k-tile (ascending within the
     /// tile, no zero-skip), tile partials added to the output chain in
     /// tile order — only now both levels live in LANES-wide register
     /// blocks.
-    fn matmul_t_band_packed(&self, bp: &[f32], q: usize, row0: usize, band: &mut [f32]) {
+    fn matmul_t_band_scalar(&self, bp: &[f32], q: usize, row0: usize, band: &mut [f32]) {
         let k = self.cols;
         let rows = if q == 0 { 0 } else { band.len() / q };
         for (p, panel) in bp.chunks(k * LANES).enumerate() {
@@ -375,6 +438,85 @@ impl Tensor {
                 band[di * q + j0..di * q + j0 + w].copy_from_slice(&oacc[..w]);
             }
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Value-close FMA tier, explicit entry points. These run the
+    // `--simd force` GEMM kernels directly (sequential, thread-local
+    // scratch) without touching the process-wide SIMD mode — tests and
+    // benches exercise the tier through them so concurrently running
+    // bitwise tests never observe fused roundings. `None` when the CPU
+    // lacks AVX2+FMA.
+    // -----------------------------------------------------------------
+
+    /// A @ B on the value-close FMA band kernel (single-rounding fused
+    /// multiply-adds; within the documented error bound of
+    /// [`Tensor::matmul`], not bitwise-equal).
+    pub fn matmul_fma(&self, b: &Tensor) -> Option<Tensor> {
+        if !simd::avx2_fma_detected() {
+            return None;
+        }
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (k, n) = (self.cols, b.cols);
+        let mut out = Tensor::zeros(self.rows, n);
+        if k == 0 {
+            return Some(out);
+        }
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        pack_col_panels(&mut scratch.b, &b.data, k, n);
+        let ran = simd::matmul_band_fma(&self.data, k, scratch.b.as_slice(), n, 0, &mut out.data);
+        TL_GEMM_SCRATCH.set(scratch);
+        debug_assert!(ran);
+        Some(out)
+    }
+
+    /// A^T @ B on the value-close FMA band kernel.
+    pub fn t_matmul_fma(&self, b: &Tensor) -> Option<Tensor> {
+        if !simd::avx2_fma_detected() {
+            return None;
+        }
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let (r_dim, n, p) = (self.rows, self.cols, b.cols);
+        let mut out = Tensor::zeros(n, p);
+        if r_dim == 0 {
+            return Some(out);
+        }
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        let GemmScratch { a: at, b: bp } = &mut scratch;
+        pack_transpose(at, &self.data, r_dim, n);
+        pack_col_panels(bp, &b.data, r_dim, p);
+        let ran = simd::matmul_band_fma(at.as_slice(), r_dim, bp.as_slice(), p, 0, &mut out.data);
+        TL_GEMM_SCRATCH.set(scratch);
+        debug_assert!(ran);
+        Some(out)
+    }
+
+    /// A @ B^T on the value-close FMA band kernel (fused roundings
+    /// inside each TILE_K partial; tile folding unchanged).
+    pub fn matmul_t_fma(&self, b: &Tensor) -> Option<Tensor> {
+        if !simd::avx2_fma_detected() {
+            return None;
+        }
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let (k, q) = (self.cols, b.rows);
+        let mut out = Tensor::zeros(self.rows, q);
+        if k == 0 {
+            return Some(out);
+        }
+        let mut scratch = TL_GEMM_SCRATCH.take();
+        pack_row_panels(&mut scratch.b, &b.data, q, k);
+        let ran = simd::matmul_t_band_fma(
+            &self.data,
+            k,
+            scratch.b.as_slice(),
+            q,
+            0,
+            &mut out.data,
+            TILE_K,
+        );
+        TL_GEMM_SCRATCH.set(scratch);
+        debug_assert!(ran);
+        Some(out)
     }
 
     // -----------------------------------------------------------------
@@ -519,12 +661,39 @@ impl Tensor {
     }
 }
 
-/// Packed microkernel for output rows of A^T @ B, over the transposed
-/// A pack `at` (n x r_dim, output row's A column contiguous) and B's
-/// column panels `bp`. Per element: r ascending, zero lanes of A
-/// skipped, one accumulator chain — the reference kernel's exact op
-/// sequence.
+/// Band kernel dispatcher for A^T @ B over the transposed A pack.
+/// After packing, this has the same k-major panel walk as `matmul`
+/// (r plays the role of k), so it shares `matmul`'s SIMD kernels.
 fn t_matmul_band_packed(
+    at: &[f32],
+    bp: &[f32],
+    r_dim: usize,
+    p: usize,
+    row0: usize,
+    band: &mut [f32],
+) {
+    match simd::gemm_kernel() {
+        simd::GemmKernel::ValueClose => {
+            if simd::matmul_band_fma(at, r_dim, bp, p, row0, band) {
+                return;
+            }
+        }
+        simd::GemmKernel::Bitwise => {
+            if simd::matmul_band_bitwise(at, r_dim, bp, p, row0, band) {
+                return;
+            }
+        }
+        simd::GemmKernel::Scalar => {}
+    }
+    t_matmul_band_scalar(at, bp, r_dim, p, row0, band);
+}
+
+/// Scalar packed microkernel for output rows of A^T @ B, over the
+/// transposed A pack `at` (n x r_dim, output row's A column
+/// contiguous) and B's column panels `bp`; the bit-exactness oracle of
+/// the SIMD tier. Per element: r ascending, zero lanes of A skipped,
+/// one accumulator chain — the reference kernel's exact op sequence.
+fn t_matmul_band_scalar(
     at: &[f32],
     bp: &[f32],
     r_dim: usize,
@@ -811,5 +980,78 @@ mod tests {
         }
         let b = Tensor::randn(140, 66, 1.0, &mut rng);
         assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn simd_band_kernels_bit_identical_to_scalar() {
+        // The ISSUE-7 contract: toggling the SIMD tier off and back on
+        // never changes a bit, for every GEMM variant, at ragged shapes
+        // straddling the 8-lane SIMD width, the 16-lane panel width,
+        // and TILE_K, with sparse left operands so the zero-skip path
+        // runs. On hosts without AVX2 both sides run scalar and the
+        // test degenerates to a self-comparison — still valid.
+        // (Off <-> Auto flips are numerically invisible by contract,
+        // so concurrent tests are undisturbed.)
+        use crate::util::simd::{set_mode, SimdMode};
+        let mut rng = Rng::new(41);
+        for (m, k, n) in [
+            (1, 7, 8),
+            (3, 8, 9),
+            (5, 16, 16),
+            (7, 127, 17),
+            (9, 128, 24),
+            (37, 129, 53),
+            (130, 64, 131),
+        ] {
+            let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let c = Tensor::randn(m, n, 1.0, &mut rng);
+            for (i, v) in a.data.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            set_mode(SimdMode::Off).unwrap();
+            let want = (a.matmul(&b), a.t_matmul(&c), c.matmul_t(&b));
+            set_mode(SimdMode::Auto).unwrap();
+            let got = (a.matmul(&b), a.t_matmul(&c), c.matmul_t(&b));
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got.0), bits(&want.0), "matmul {m}x{k}x{n}");
+            assert_eq!(bits(&got.1), bits(&want.1), "t_matmul {m}x{k}x{n}");
+            assert_eq!(bits(&got.2), bits(&want.2), "matmul_t {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn fma_tier_is_value_close_not_bitwise() {
+        // The `--simd force` tier, via the explicit hooks: every output
+        // differs from the scalar result by at most a few fused-vs-split
+        // roundings per k-step, bounded against the |A| @ |B| magnitude.
+        let mut rng = Rng::new(43);
+        for (m, k, n) in [(3, 8, 9), (7, 127, 17), (37, 129, 53)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let c = Tensor::randn(m, n, 1.0, &mut rng);
+            let Some(got) = a.matmul_fma(&b) else {
+                return; // no AVX2+FMA on this host: tier unreachable
+            };
+            let got_t = a.t_matmul_fma(&c).unwrap();
+            let got_mt = c.matmul_t_fma(&b).unwrap();
+            // Per element |fma - scalar| <= ~k ulps of the absolute
+            // dot; 1e-4 relative carries two orders of margin at these
+            // k while still catching any real reassociation bug.
+            let bound = |want: &Tensor, absdot: &Tensor, got: &Tensor, tag: &str| {
+                for ((g, w), ad) in got.data.iter().zip(want.data.iter()).zip(absdot.data.iter()) {
+                    assert!(
+                        (g - w).abs() <= 1e-4 * ad.max(1e-20),
+                        "{tag}: {g} vs {w} (absdot {ad})"
+                    );
+                }
+            };
+            let abs = |t: &Tensor| t.map(f32::abs);
+            bound(&a.matmul(&b), &abs(&a).matmul(&abs(&b)), &got, "matmul_fma");
+            bound(&a.t_matmul(&c), &abs(&a).t_matmul(&abs(&c)), &got_t, "t_matmul_fma");
+            bound(&c.matmul_t(&b), &abs(&c).matmul_t(&abs(&b)), &got_mt, "matmul_t_fma");
+        }
     }
 }

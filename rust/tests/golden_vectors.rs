@@ -320,6 +320,51 @@ fn near_tie_golden_vectors_fast_vs_exact() {
 }
 
 #[test]
+fn near_tie_golden_vectors_simd_lane_flagging() {
+    // ISSUE-7: the AVX2 quantizer kernel tests all 8 lanes against the
+    // near-tie band at once and patches flagged lanes through the
+    // scalar exact-libm fallback. Packing each format's golden inputs
+    // into one >= 8-wide row makes the vector path (not the scalar
+    // tail) process band-interior and band-exterior lanes side by
+    // side; the emitted codes must equal the checked-in table under
+    // both SIMD modes. On hosts without AVX2+FMA the Auto pass
+    // re-runs the scalar path — the assert is the same.
+    use lns_madam::util::simd::{set_mode, SimdMode};
+    for (bits, gamma) in [(8u32, 8u32), (10, 32)] {
+        let fmt = LnsFormat::new(bits, gamma);
+        let group: Vec<(f32, u32)> = NEAR_TIE_GOLDEN
+            .iter()
+            .filter(|&&(b, g, _, _)| b == bits && g == gamma)
+            .map(|&(_, _, x, code)| (x, code))
+            .collect();
+        assert!(group.len() >= 8, "{bits}b/g{gamma}: group too narrow for the vector path");
+        let data: Vec<f32> = group.iter().map(|&(x, _)| x).collect();
+        let want: Vec<u32> = group.iter().map(|&(_, code)| code).collect();
+        for mode in [SimdMode::Off, SimdMode::Auto] {
+            set_mode(mode).unwrap();
+            let mut signs = vec![0i8; data.len()];
+            let mut codes = vec![0u32; data.len()];
+            kernels::encode_rows_into(
+                &mut signs,
+                &mut codes,
+                &data,
+                1,
+                data.len(),
+                fmt,
+                Scaling::PerTensor,
+                Rounding::Nearest,
+                None,
+                &[1.0],
+                1,
+            );
+            assert_eq!(codes, want, "{bits}b/g{gamma} under {mode:?}: lane codes diverged");
+            assert!(signs.iter().all(|&s| s == 1), "{bits}b/g{gamma} under {mode:?}: signs");
+        }
+        set_mode(SimdMode::Auto).unwrap();
+    }
+}
+
+#[test]
 fn paper8_quantize_golden_vectors() {
     let fmt = LnsFormat::PAPER8;
     let bound = fmt.max_rel_error();

@@ -576,6 +576,169 @@ fn lns_exec_matmul_bounded_and_bit_identical_across_workers_property() {
 }
 
 #[test]
+fn simd_gemm_off_auto_bit_identical_property() {
+    // ISSUE-7: the AVX2 band kernels are bitwise replays of the scalar
+    // microkernels (mul+add intrinsics, per-lane IEEE chains), so
+    // toggling the process-wide mode between Off and Auto must never
+    // change a single output bit. Shapes deliberately straddle the
+    // 8-lane vector width, the 16-lane panel, and the TILE_K depth;
+    // sparsity exercises the zero-skip path. Off <-> Auto toggling is
+    // race-safe under the concurrent test harness for the same reason:
+    // a racing test observing either mode sees the same numbers.
+    use lns_madam::util::simd::{set_mode, SimdMode};
+    let shapes: [(usize, usize, usize); 6] =
+        [(1, 1, 1), (3, 7, 9), (8, 16, 16), (9, 127, 17), (5, 128, 33), (11, 129, 40)];
+    property(12, |g| {
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let workers = g.usize_in(1, 5);
+            let mut rng = Rng::new(0x51D ^ ((g.case * 8 + si) as u64));
+            let mut a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let mut c = Tensor::randn(m, n, 1.0, &mut rng);
+            let every = 2 + g.usize_in(0, 3);
+            for (i, v) in a.data.iter_mut().enumerate() {
+                if i % every == 0 {
+                    *v = 0.0;
+                }
+            }
+            for (i, v) in c.data.iter_mut().enumerate() {
+                if i % every == 1 {
+                    *v = 0.0;
+                }
+            }
+            let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            set_mode(SimdMode::Off).unwrap();
+            let want_ab = bits(&a.matmul_p(&b, workers));
+            let want_ac = bits(&a.t_matmul_p(&c, workers));
+            let want_cb = bits(&c.matmul_t_p(&b, workers));
+            set_mode(SimdMode::Auto).unwrap();
+            assert_eq!(want_ab, bits(&a.matmul_p(&b, workers)), "matmul {m}x{k}x{n} @ {workers}");
+            assert_eq!(
+                want_ac,
+                bits(&a.t_matmul_p(&c, workers)),
+                "t_matmul {m}x{k}x{n} @ {workers}"
+            );
+            assert_eq!(
+                want_cb,
+                bits(&c.matmul_t_p(&b, workers)),
+                "matmul_t {m}x{k}x{n} @ {workers}"
+            );
+        }
+    });
+}
+
+#[test]
+fn simd_quantizer_off_auto_bit_identical_property() {
+    // The AVX2 quantizer span kernels vectorize only the fast nearest
+    // path and bail to the scalar per-lane closure for near-tie,
+    // non-finite, and zero lanes — so Off vs Auto is bitwise across
+    // formats (fast-path-safe and not), scalings, and rounding modes,
+    // including the planes the encode kernel writes.
+    use lns_madam::util::simd::{set_mode, SimdMode};
+    let formats = [
+        LnsFormat::new(8, 8),
+        LnsFormat::new(8, 32),
+        LnsFormat::new(6, 4),
+        LnsFormat::new(12, 128),
+    ];
+    for fmt in formats {
+        for scaling in [Scaling::PerTensor, Scaling::PerRow, Scaling::PerCol] {
+            for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+                property(8, |g| {
+                    let rows = g.usize_in(1, 6);
+                    let cols = g.usize_in(1, 40); // spans straddle the 8-lane width
+                    let t =
+                        Tensor::from_vec(rows, cols, quantizer_stress_data(g, rows * cols, fmt));
+                    let seed = 0x51D0 ^ g.case as u64;
+                    let workers = g.usize_in(1, 4);
+                    let run = || {
+                        let mut scratch = QuantScratch::default();
+                        let mut rt = t.clone();
+                        let mut rng_rt = Rng::new(seed);
+                        kernels::quantize_rows_into_rounded(
+                            &mut rt.data,
+                            rows,
+                            cols,
+                            fmt,
+                            scaling,
+                            rounding,
+                            Some(&mut rng_rt),
+                            workers,
+                            &mut scratch,
+                        );
+                        let scales = group_scales(&t, fmt, scaling);
+                        let mut signs = vec![0i8; t.len()];
+                        let mut codes = vec![0u32; t.len()];
+                        let mut rng_enc = Rng::new(seed);
+                        kernels::encode_rows_into(
+                            &mut signs,
+                            &mut codes,
+                            &t.data,
+                            rows,
+                            cols,
+                            fmt,
+                            scaling,
+                            rounding,
+                            Some(&mut rng_enc),
+                            &scales,
+                            workers,
+                        );
+                        (rt, signs, codes)
+                    };
+                    set_mode(SimdMode::Off).unwrap();
+                    let want = run();
+                    set_mode(SimdMode::Auto).unwrap();
+                    let got = run();
+                    let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                    lns_madam::prop_assert!(
+                        g,
+                        bits(&want.0) == bits(&got.0) && want.1 == got.1 && want.2 == got.2,
+                        "{fmt:?} {scaling:?} {rounding:?}: Off vs Auto diverged"
+                    );
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_fma_tier_value_close_property() {
+    // The Force-only FMA GEMM tier fuses each multiply-add into one
+    // rounding, so it is NOT bitwise — but every element must stay
+    // within a tight relative envelope of the scalar result, scaled by
+    // the |A|@|B| magnitude sum (the usual reassociation bound). The
+    // tier is reached through the explicit `*_fma` hooks, which never
+    // touch the process-wide mode. `None` (no AVX2+FMA host) passes
+    // vacuously: the scalar fallback is the tier on such machines.
+    property(30, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 160);
+        let n = g.usize_in(1, 24);
+        let mut rng = Rng::new(0xF3A ^ g.case as u64);
+        let a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let c = Tensor::randn(m, n, 1.0, &mut rng);
+        let check = |got: Option<Tensor>, want: &Tensor, abs: &Tensor, tag: &str| {
+            let Some(got) = got else { return };
+            assert_eq!(got.rows, want.rows, "{tag}: shape");
+            for i in 0..want.data.len() {
+                let err = (got.data[i] - want.data[i]).abs();
+                // ~2*k*eps relative to the magnitude sum covers any
+                // reassociation of a k<=160 chain with lots of slack.
+                let budget = 1e-4 * abs.data[i].max(1e-10);
+                assert!(err <= budget, "{tag} {m}x{k}x{n}: elem {i} err {err} > {budget}");
+            }
+        };
+        let abs_ab = a.map(f32::abs).matmul(&b.map(f32::abs));
+        check(a.matmul_fma(&b), &a.matmul(&b), &abs_ab, "matmul_fma");
+        let abs_ac = a.map(f32::abs).t_matmul(&c.map(f32::abs));
+        check(a.t_matmul_fma(&c), &a.t_matmul(&c), &abs_ac, "t_matmul_fma");
+        let abs_cb = c.map(f32::abs).matmul_t(&b.map(f32::abs));
+        check(c.matmul_t_fma(&b), &c.matmul_t(&b), &abs_cb, "matmul_t_fma");
+    });
+}
+
+#[test]
 fn packed_gemm_bit_identical_to_reference_property() {
     // ISSUE-5: the packed register-blocked microkernels replay the
     // pre-packing tiled kernels' exact per-element FP op sequence, so
