@@ -6,7 +6,8 @@
 //! end-to-end train-step latency split into gradient compute (PJRT or
 //! the native backend) vs weight update (rust), the ISSUE-5 dispatch
 //! (`"pool"`) and packed-GEMM (`"gemm_kernel"`) microbenches, the
-//! ISSUE-7 scalar-vs-AVX2 kernel comparison (`"simd"`), and the
+//! ISSUE-7 scalar-vs-AVX2 kernel comparison (`"simd"`), the ISSUE-8
+//! batched-serving latency/throughput sweep (`"serving"`), and the
 //! native training throughput sweep across thread counts, which emits
 //! the machine-readable `BENCH_native_training.json` (the repo's
 //! recorded perf trajectory — see DESIGN.md §Performance & testing).
@@ -577,6 +578,146 @@ fn lns_exec_section(smoke: bool) -> BTreeMap<String, Json> {
     json
 }
 
+/// The `"serving"` section: batched-inference latency/throughput vs
+/// concurrent clients at each worker count, over an in-process
+/// [`ServeEngine`] (no TCP — the wire layer is benched by
+/// `serve-bench`; this measures the batching core itself). Before any
+/// timing it hard-asserts the serving contracts: the weight store fits
+/// the 1/3-of-f32 budget and batched responses are bit-identical to
+/// one-at-a-time generation at every worker count.
+fn serving_section(smoke: bool) -> BTreeMap<String, Json> {
+    use lns_madam::backend::Param;
+    use lns_madam::serve::{Sequence, ServeEngine};
+
+    // Char-LM-shaped random weights (training is irrelevant to the
+    // serving hot path; token streams only need to be deterministic).
+    let (vocab, seq, d_model, d_ff) = if smoke { (16usize, 12usize, 8usize, 16usize) } else { (64, 32, 64, 128) };
+    let mut rng = Rng::new(42);
+    let mut param = |name: &str, shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        Param {
+            name: name.into(),
+            shape: shape.to_vec(),
+            data: rng.normal_vec(n).iter().map(|v| v * 0.25).collect(),
+        }
+    };
+    let params = vec![
+        param("tok_emb", &[vocab, d_model]),
+        param("pos_emb", &[seq, d_model]),
+        param("w1", &[d_model, d_ff]),
+        param("b1", &[d_ff]),
+        param("head", &[d_ff, vocab]),
+    ];
+    let fmt = LnsFormat::PAPER8;
+    let max_new = if smoke { 4usize } else { 16 };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let client_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let rounds = if smoke { 2usize } else { 8 };
+    let prompt_for = |c: usize| vec![(c as u32) % vocab as u32, 1, 2];
+
+    // Contract asserts (these run at every bench size — they are the
+    // point of the section, the numbers are the trajectory).
+    let mut reference = ServeEngine::from_params(&params, fmt, 1).expect("serve engine");
+    let store = reference.store();
+    let (resident, f32_bytes) = (store.resident_bytes(), store.f32_bytes());
+    assert!(
+        resident * 3 <= f32_bytes,
+        "weight store {resident} bytes exceeds 1/3 of f32 {f32_bytes}"
+    );
+    let want: Vec<Vec<u32>> = (0..8)
+        .map(|c| reference.generate(c as u64, &prompt_for(c), max_new).expect("generate"))
+        .collect();
+    for &workers in worker_counts {
+        let mut engine = ServeEngine::from_params(&params, fmt, workers).expect("serve engine");
+        let mut active: Vec<Sequence> = (0..8)
+            .map(|c| Sequence::new(c as u64, &prompt_for(c), max_new).expect("sequence"))
+            .collect();
+        for _ in 0..max_new {
+            engine.tick(&mut active).expect("tick");
+        }
+        for s in &active {
+            assert_eq!(
+                s.generated, want[s.id as usize],
+                "serving batch invariance broken: sequence {} at {workers} workers",
+                s.id
+            );
+        }
+    }
+
+    println!("\n--- serving throughput (in-process batching core) ---");
+    println!(
+        "weight store: {resident} bytes resident vs {f32_bytes} f32 ({:.1}%)",
+        100.0 * resident as f64 / f32_bytes as f64
+    );
+    let mut json = BTreeMap::new();
+    json.insert("smoke".into(), Json::Bool(smoke));
+    json.insert("max_new".into(), Json::Num(max_new as f64));
+    json.insert("store_resident_bytes".into(), Json::Num(resident as f64));
+    json.insert("store_f32_bytes".into(), Json::Num(f32_bytes as f64));
+    json.insert(
+        "store_ratio".into(),
+        Json::Num(resident as f64 / f32_bytes as f64),
+    );
+    let mut results = Vec::new();
+    for &workers in worker_counts {
+        let mut engine = ServeEngine::from_params(&params, fmt, workers).expect("serve engine");
+        for &clients in client_counts {
+            // Each round admits `clients` concurrent requests and runs
+            // them to completion; every request's latency is its
+            // round's wall time (equal max_new retires them together).
+            let mut latencies_ms: Vec<f64> = Vec::new();
+            let mut total_tokens = 0usize;
+            let t_all = Instant::now();
+            for _ in 0..rounds {
+                let mut active: Vec<Sequence> = (0..clients)
+                    .map(|c| Sequence::new(c as u64, &prompt_for(c), max_new).expect("sequence"))
+                    .collect();
+                let t0 = Instant::now();
+                while !active.is_empty() {
+                    engine.tick(&mut active).expect("tick");
+                    let before = active.len();
+                    active.retain(|s| !s.done());
+                    total_tokens += (before - active.len()) * max_new;
+                }
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                for _ in 0..clients {
+                    latencies_ms.push(ms);
+                }
+            }
+            let elapsed = t_all.elapsed().as_secs_f64();
+            latencies_ms.sort_by(|a, b| a.total_cmp(b));
+            let p50 = percentile_ms(&latencies_ms, 50.0);
+            let p99 = percentile_ms(&latencies_ms, 99.0);
+            let rps = latencies_ms.len() as f64 / elapsed;
+            let tps = total_tokens as f64 / elapsed;
+            println!(
+                "serve workers={workers} clients={clients}  p50 {p50:8.3} ms  p99 {p99:8.3} ms  {rps:8.1} req/s  {tps:8.1} tok/s"
+            );
+            let mut m = BTreeMap::new();
+            m.insert("workers".to_string(), Json::Num(workers as f64));
+            m.insert("clients".to_string(), Json::Num(clients as f64));
+            m.insert("p50_ms".to_string(), Json::Num(p50));
+            m.insert("p99_ms".to_string(), Json::Num(p99));
+            m.insert("req_per_s".to_string(), Json::Num(rps));
+            m.insert("tok_per_s".to_string(), Json::Num(tps));
+            results.push(Json::Obj(m));
+        }
+    }
+    json.insert("results".into(), Json::Arr(results));
+    json
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (mirrors
+/// `serve::server::percentile`, kept local so the bench stays
+/// dependency-light).
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// The native-training throughput sweep: steps/sec for the mlp and
 /// char-LM families at 1/2/4/8 threads, lns8 and fp32, written to
 /// `out_path` as JSON. Asserts that per-step losses are bit-identical
@@ -591,6 +732,7 @@ fn native_training_section(
     gemm_json: BTreeMap<String, Json>,
     simd_json: BTreeMap<String, Json>,
     lns_exec_json: BTreeMap<String, Json>,
+    serving_json: BTreeMap<String, Json>,
 ) {
     let host_cores = Parallelism::Auto.worker_count();
     let presets: &[(&str, &str)] = if smoke {
@@ -740,6 +882,9 @@ fn native_training_section(
     // The LnsExec tier comparison (f32-exact vs lns-int) with the
     // measured datapath energy of the integer runs.
     root.insert("lns_exec".to_string(), Json::Obj(lns_exec_json));
+    // ISSUE-8 section: batched LNS-native serving latency/throughput
+    // vs concurrent clients at each worker count.
+    root.insert("serving".to_string(), Json::Obj(serving_json));
     let json = Json::Obj(root).dump();
     std::fs::write(out_path, json).expect("write bench json");
     let shown = std::fs::canonicalize(out_path)
@@ -768,6 +913,7 @@ fn main() {
         let gemm_json = gemm_kernel_section(smoke);
         let simd_json = simd_section(smoke);
         let lns_exec_json = lns_exec_section(smoke);
+        let serving_json = serving_section(smoke);
         native_training_section(
             smoke,
             &out_path,
@@ -776,6 +922,7 @@ fn main() {
             gemm_json,
             simd_json,
             lns_exec_json,
+            serving_json,
         );
         return;
     }
@@ -965,6 +1112,7 @@ fn main() {
     let gemm_json = gemm_kernel_section(smoke);
     let simd_json = simd_section(smoke);
     let lns_exec_json = lns_exec_section(smoke);
+    let serving_json = serving_section(smoke);
     native_training_section(
         smoke,
         &out_path,
@@ -973,5 +1121,6 @@ fn main() {
         gemm_json,
         simd_json,
         lns_exec_json,
+        serving_json,
     );
 }

@@ -57,9 +57,23 @@ pub fn save(path: &Path, params: &[Param], step: usize, meta: &BTreeMap<String, 
     .dump();
     out.extend_from_slice(&(meta_json.len() as u64).to_le_bytes());
     out.extend_from_slice(meta_json.as_bytes());
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(&out)?;
+    // Crash-atomic replace: write the whole image to a sibling temp
+    // file, flush it to disk, then rename over the final path. A crash
+    // at any point leaves either the previous good checkpoint or the
+    // complete new one — never a truncated file at `path` (the serve
+    // path loads these unattended; see ISSUE 8).
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&out)?;
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
     Ok(())
 }
 
@@ -228,6 +242,33 @@ mod tests {
             err.to_string().contains("implausible"),
             "unexpected error: {err}"
         );
+    }
+
+    #[test]
+    fn interrupted_rewrite_preserves_existing_checkpoint() {
+        // A truncated in-progress write (simulated as garbage at the
+        // sibling temp path a crashed `save` would leave behind) must
+        // never clobber an existing valid checkpoint: `save` writes to
+        // the temp file and renames only once the image is complete.
+        let dir = std::env::temp_dir().join("lns_ckpt_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        save(&path, &mk_params(), 7, &BTreeMap::new()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Crash mid-write: only the temp sibling holds partial bytes.
+        let tmp = dir.join("c.ckpt.tmp");
+        std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+        let (params, step, _) = load(&path).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(params[0].data, mk_params()[0].data);
+        assert_eq!(std::fs::read(&path).unwrap(), good, "final path untouched");
+
+        // The next complete save replaces both cleanly.
+        save(&path, &mk_params(), 8, &BTreeMap::new()).unwrap();
+        let (_, step, _) = load(&path).unwrap();
+        assert_eq!(step, 8);
+        assert!(!tmp.exists(), "temp sibling consumed by rename");
     }
 
     #[test]

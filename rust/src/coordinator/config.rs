@@ -128,8 +128,14 @@ impl Default for TrainConfig {
 
 impl TrainConfig {
     /// Max exponent code for a bitwidth: 2^(B-1)-1 (the scalar the
-    /// artifacts take alongside gamma).
+    /// artifacts take alongside gamma). `bits` must be in the supported
+    /// 2..=24 range — `bits = 0` would underflow the shift, which is
+    /// why `from_file` range-checks before anything calls this.
     pub fn maxexp(bits: u32) -> f32 {
+        assert!(
+            (2..=24).contains(&bits),
+            "maxexp: bitwidth {bits} outside supported range 2..=24"
+        );
         ((1u64 << (bits - 1)) - 1) as f32
     }
 
@@ -137,25 +143,47 @@ impl TrainConfig {
         let cfg = Config::load(path)?;
         let d = TrainConfig::default();
         let optimizer = OptKind::parse(&cfg.str_or("train", "optimizer", d.optimizer.name()))?;
+        // TOML integers are i64; every unsigned field is range-checked
+        // here with a clear error instead of the old silent `as` wrap
+        // (steps = -1 used to become ~1.8e19 steps, bits_fwd = -8 a
+        // huge u32 that then underflowed maxexp's shift).
+        let non_negative = |section: &str, key: &str, default: i64| -> Result<i64> {
+            let v = cfg.i64_or(section, key, default);
+            if v < 0 {
+                bail!("[{section}] {key} = {v}: must be >= 0");
+            }
+            Ok(v)
+        };
+        let bitwidth = |key: &str, default: i64| -> Result<u32> {
+            let v = cfg.i64_or("quant", key, default);
+            if !(2..=24).contains(&v) {
+                bail!("[quant] {key} = {v}: bitwidth must be in 2..=24");
+            }
+            Ok(v as u32)
+        };
+        let qu_bits = cfg.i64_or("quant", "qu_bits", d.qu_bits as i64);
+        if qu_bits != 0 && !(2..=24).contains(&qu_bits) {
+            bail!("[quant] qu_bits = {qu_bits}: must be 0 (full precision) or in 2..=24");
+        }
         Ok(TrainConfig {
             model: cfg.str_or("train", "model", &d.model),
             format: cfg.str_or("train", "format", &d.format),
-            steps: cfg.i64_or("train", "steps", d.steps as i64) as usize,
-            eval_every: cfg.i64_or("train", "eval_every", d.eval_every as i64) as usize,
-            seed: cfg.i64_or("train", "seed", d.seed as i64) as u64,
+            steps: non_negative("train", "steps", d.steps as i64)? as usize,
+            eval_every: non_negative("train", "eval_every", d.eval_every as i64)? as usize,
+            seed: non_negative("train", "seed", d.seed as i64)? as u64,
             optimizer,
             lr: cfg.f64_or("train", "lr", optimizer.default_lr() as f64) as f32,
             gamma_fwd: cfg.f64_or("quant", "gamma_fwd", d.gamma_fwd as f64) as f32,
-            bits_fwd: cfg.i64_or("quant", "bits_fwd", d.bits_fwd as i64) as u32,
+            bits_fwd: bitwidth("bits_fwd", d.bits_fwd as i64)?,
             gamma_bwd: cfg.f64_or("quant", "gamma_bwd", d.gamma_bwd as f64) as f32,
-            bits_bwd: cfg.i64_or("quant", "bits_bwd", d.bits_bwd as i64) as u32,
-            qu_bits: cfg.i64_or("quant", "qu_bits", d.qu_bits as i64) as u32,
+            bits_bwd: bitwidth("bits_bwd", d.bits_bwd as i64)?,
+            qu_bits: qu_bits as u32,
             backend: BackendKind::parse(&cfg.str_or("train", "backend", d.backend.name()))?,
             artifacts_dir: cfg.str_or("paths", "artifacts", &d.artifacts_dir),
             log_path: cfg.str_or("paths", "log", &d.log_path),
             ckpt_path: cfg.str_or("paths", "checkpoint", &d.ckpt_path),
             resume_from: cfg.str_or("paths", "resume", &d.resume_from),
-            parallelism: cfg.i64_or("train", "parallelism", d.parallelism as i64).max(0) as usize,
+            parallelism: non_negative("train", "parallelism", d.parallelism as i64)? as usize,
             exec_tier: cfg.str_or("train", "exec_tier", &d.exec_tier),
             simd: cfg.str_or("train", "simd", &d.simd),
         })
@@ -170,9 +198,82 @@ impl TrainConfig {
     }
 }
 
+/// Configuration for the `serve` subcommand: a checkpoint to load into
+/// the LNS-native weight store, a localhost port, and the runtime
+/// knobs shared with training.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Checkpoint to serve (required).
+    pub ckpt_path: String,
+    /// Model preset the checkpoint was trained with; must be a char-LM
+    /// family preset (the serving path generates tokens).
+    pub model: String,
+    /// TCP port on 127.0.0.1; 0 = let the OS pick (printed at startup).
+    pub port: u16,
+    /// Weight-store code format bitwidth (2..=16 so codes pack into
+    /// u8/u16 planes) and gamma, defaulting to the paper's 8/8.
+    pub bits: u32,
+    pub gamma: u32,
+    /// Worker threads for the batched forward (same knob convention as
+    /// training: 0 = auto, 1 = sequential, n = exactly n).
+    pub parallelism: usize,
+    /// SIMD tier knob (auto | off | force), resolved at startup.
+    pub simd: String,
+    /// Hard cap on generated tokens per request (requests asking for
+    /// more are clamped).
+    pub max_new_cap: usize,
+    /// Exit after answering this many requests (0 = run forever) — the
+    /// CI smoke harness uses this for a clean shutdown.
+    pub max_requests: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            ckpt_path: String::new(),
+            model: "charlm_tiny".into(),
+            port: 0,
+            bits: 8,
+            gamma: 8,
+            parallelism: 0,
+            simd: "auto".into(),
+            max_new_cap: 256,
+            max_requests: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Range-check the serve knobs with the same clear-error discipline
+    /// as `TrainConfig::from_file`.
+    pub fn validate(&self) -> Result<()> {
+        if self.ckpt_path.is_empty() {
+            bail!("serve: --ckpt <path> is required");
+        }
+        if !(2..=16).contains(&self.bits) {
+            bail!("serve: --bits {} outside supported range 2..=16", self.bits);
+        }
+        if !self.gamma.is_power_of_two() {
+            bail!("serve: --gamma {} must be a power of two", self.gamma);
+        }
+        if self.max_new_cap == 0 {
+            bail!("serve: --max-new-cap must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn load_toml(name: &str, body: &str) -> Result<TrainConfig> {
+        let dir = std::env::temp_dir().join("lns_cfg_reject_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        TrainConfig::from_file(p.to_str().unwrap())
+    }
 
     #[test]
     fn defaults_are_paper_settings() {
@@ -218,6 +319,77 @@ mod tests {
     #[test]
     fn rejects_unknown_optimizer() {
         assert!(OptKind::parse("lamb").is_err());
+    }
+
+    #[test]
+    fn rejects_negative_steps() {
+        let err = load_toml("neg_steps.toml", "[train]\nsteps = -1\n").unwrap_err();
+        assert!(err.to_string().contains("steps"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn rejects_negative_eval_every() {
+        let err = load_toml("neg_eval.toml", "[train]\neval_every = -50\n").unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn rejects_negative_seed() {
+        let err = load_toml("neg_seed.toml", "[train]\nseed = -7\n").unwrap_err();
+        assert!(err.to_string().contains("seed"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn rejects_negative_parallelism() {
+        let err = load_toml("neg_par.toml", "[train]\nparallelism = -2\n").unwrap_err();
+        assert!(err.to_string().contains("parallelism"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_bitwidths() {
+        // Negative bits used to wrap to a huge u32 and underflow
+        // maxexp's shift; zero would underflow it directly.
+        for (name, body, key) in [
+            ("neg_bits_fwd.toml", "[quant]\nbits_fwd = -8\n", "bits_fwd"),
+            ("zero_bits_fwd.toml", "[quant]\nbits_fwd = 0\n", "bits_fwd"),
+            ("big_bits_fwd.toml", "[quant]\nbits_fwd = 25\n", "bits_fwd"),
+            ("neg_bits_bwd.toml", "[quant]\nbits_bwd = -3\n", "bits_bwd"),
+            ("one_bit_bwd.toml", "[quant]\nbits_bwd = 1\n", "bits_bwd"),
+        ] {
+            let err = load_toml(name, body).unwrap_err();
+            assert!(err.to_string().contains(key), "{name}: unexpected error {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_qu_bits_but_allows_zero() {
+        let err = load_toml("neg_qu.toml", "[quant]\nqu_bits = -16\n").unwrap_err();
+        assert!(err.to_string().contains("qu_bits"), "unexpected: {err}");
+        let err = load_toml("one_qu.toml", "[quant]\nqu_bits = 1\n").unwrap_err();
+        assert!(err.to_string().contains("qu_bits"), "unexpected: {err}");
+        // qu_bits = 0 is the documented full-precision setting.
+        let t = load_toml("zero_qu.toml", "[quant]\nqu_bits = 0\n").unwrap();
+        assert_eq!(t.qu_bits, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside supported range")]
+    fn maxexp_rejects_zero_bits() {
+        let _ = TrainConfig::maxexp(0);
+    }
+
+    #[test]
+    fn serve_config_validates_ranges() {
+        let mut s = ServeConfig { ckpt_path: "c.ckpt".into(), ..ServeConfig::default() };
+        assert!(s.validate().is_ok());
+        s.bits = 17;
+        assert!(s.validate().is_err(), "bits > 16 must be rejected");
+        s.bits = 8;
+        s.gamma = 6;
+        assert!(s.validate().is_err(), "non-power-of-two gamma rejected");
+        s.gamma = 8;
+        s.ckpt_path.clear();
+        assert!(s.validate().is_err(), "missing checkpoint rejected");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod metrics;
 pub mod trainer;
 
 pub use crate::backend::BackendKind;
-pub use config::{OptKind, TrainConfig};
+pub use config::{OptKind, ServeConfig, TrainConfig};
 pub use data::{CharCorpus, SyntheticClassification};
 pub use metrics::MetricsLog;
 pub use trainer::{resolve_backend, Param, Trainer};

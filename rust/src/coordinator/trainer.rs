@@ -42,6 +42,10 @@ pub struct Trainer {
     backend: Box<dyn ExecBackend>,
     opt: Box<dyn Optimizer>,
     data: DataSource,
+    /// Held-out stream for `evaluate()`, independently seeded from the
+    /// training stream: eval cadence (`--eval-every`) must never
+    /// perturb which batches training sees (the determinism contract).
+    eval_data: DataSource,
     contract: ModelContract,
     rng: Rng,
     pub steps_done: usize,
@@ -59,6 +63,23 @@ pub struct Trainer {
 /// already trained on.
 fn make_data(contract: &ModelContract, cfg_seed: u64, step: u64) -> DataSource {
     let seed = cfg_seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    make_data_seeded(contract, seed)
+}
+
+/// Seed-space offset for the held-out eval stream, so eval batches are
+/// drawn from a stream that can never collide with (or consume from)
+/// the training stream at any `(seed, resume-step)` combination.
+const EVAL_STREAM_SALT: u64 = 0xE7A1_5EED_0BAD_CAFE;
+
+/// The eval-side counterpart of [`make_data`]: same family dispatch,
+/// independent seed lane.
+fn make_eval_data(contract: &ModelContract, cfg_seed: u64, step: u64) -> DataSource {
+    let seed =
+        cfg_seed ^ EVAL_STREAM_SALT ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    make_data_seeded(contract, seed)
+}
+
+fn make_data_seeded(contract: &ModelContract, seed: u64) -> DataSource {
     match contract.family {
         ModelFamily::Mlp => DataSource::Classification(SyntheticClassification::new(
             contract.data_shape[1],
@@ -67,6 +88,22 @@ fn make_data(contract: &ModelContract, cfg_seed: u64, step: u64) -> DataSource {
             seed,
         )),
         ModelFamily::CharLm => DataSource::Lm(CharCorpus::new(contract.n_out, 4, seed)),
+    }
+}
+
+/// Draw one contract-shaped batch from a data source (shared by the
+/// training and eval streams; each stream owns its own source).
+fn sample_from(data: &mut DataSource, contract: &ModelContract) -> Batch {
+    let [b, d] = contract.data_shape;
+    match data {
+        DataSource::Classification(ds) => {
+            let (xs, ys) = ds.batch(b);
+            Batch::Classification { shape: [b, d], xs, ys }
+        }
+        DataSource::Lm(ds) => {
+            let (tokens, targets) = ds.batch(b, d);
+            Batch::Lm { shape: [b, d], tokens, targets }
+        }
     }
 }
 
@@ -162,6 +199,7 @@ impl Trainer {
         let mut rng = Rng::new(cfg.seed);
         let params = init_params(&contract.params, &mut rng);
         let data = make_data(&contract, cfg.seed, 0);
+        let eval_data = make_eval_data(&contract, cfg.seed, 0);
 
         let opt = build_optimizer(&cfg);
         let run_name = format!("{}_{}_{}", cfg.model, cfg.format, cfg.optimizer.name());
@@ -172,6 +210,7 @@ impl Trainer {
             backend,
             opt,
             data,
+            eval_data,
             contract,
             rng,
             steps_done: 0,
@@ -191,17 +230,7 @@ impl Trainer {
     }
 
     fn sample_batch(&mut self) -> Batch {
-        let [b, d] = self.contract.data_shape;
-        match &mut self.data {
-            DataSource::Classification(ds) => {
-                let (xs, ys) = ds.batch(b);
-                Batch::Classification { shape: [b, d], xs, ys }
-            }
-            DataSource::Lm(ds) => {
-                let (tokens, targets) = ds.batch(b, d);
-                Batch::Lm { shape: [b, d], tokens, targets }
-            }
-        }
+        sample_from(&mut self.data, &self.contract)
     }
 
     /// One training step on an explicit batch: fwd/bwd on the backend,
@@ -242,14 +271,16 @@ impl Trainer {
         self.step_on(&batch)
     }
 
-    /// Held-out evaluation (if the backend has an eval path). Checks
-    /// before sampling so a missing eval path never consumes the
-    /// seeded data stream.
+    /// Held-out evaluation (if the backend has an eval path). Eval
+    /// batches come from `eval_data` — an independently-seeded stream —
+    /// so calling this never advances (or otherwise perturbs) the
+    /// training stream: per-step train batches are bit-identical at any
+    /// `--eval-every` cadence.
     pub fn evaluate(&mut self) -> Result<Option<(f32, Option<f32>)>> {
         if !self.backend.has_eval() {
             return Ok(None);
         }
-        let batch = self.sample_batch();
+        let batch = sample_from(&mut self.eval_data, &self.contract);
         let out = self.backend.eval_step(&self.params, &batch);
         // Eval forwards also execute on the lns-int datapath; drain
         // them into the run total here so they are never misattributed
@@ -330,6 +361,7 @@ impl Trainer {
         }
         self.steps_done = step;
         self.data = make_data(&self.contract, self.cfg.seed, step as u64);
+        self.eval_data = make_eval_data(&self.contract, self.cfg.seed, step as u64);
         Ok(())
     }
 

@@ -27,4 +27,5 @@ pub mod lns;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -480,6 +480,57 @@ pub fn quantize_flat_stochastic(xs: &mut [f32], fmt: LnsFormat, rng: &mut Rng, w
     quantize_with(xs, n, 1, fmt, Scaling::PerTensor, &scales, Some(crng), workers);
 }
 
+/// Decode sign/code planes back to f32 through the process-cached LUT
+/// — the serve weight store's read path. Bit-identical to per-element
+/// `LnsFormat::decode(LnsValue { sign, code }, scale)` at any worker
+/// count: the LUT entry is the exact-libm `exp2` the scalar path
+/// computes, and the band split is by whole rows (each element's value
+/// is a pure function of its own sign/code), so parallelism is pure
+/// wall-clock. A `sign` of 0 decodes to exactly 0.0.
+pub fn decode_rows_into(
+    out: &mut [f32],
+    signs: &[i8],
+    codes: &[u32],
+    fmt: LnsFormat,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    workers: usize,
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    debug_assert_eq!(signs.len(), out.len());
+    debug_assert_eq!(codes.len(), out.len());
+    let lut = decode_lut_opt(fmt);
+    let decode_band = |row0: usize, band: &mut [f32]| {
+        let base = row0 * cols;
+        let s = &signs[base..base + band.len()];
+        let c = &codes[base..base + band.len()];
+        match &lut {
+            Some(lut) => {
+                for ((o, &sg), &cd) in band.iter_mut().zip(s).zip(c) {
+                    *o = if sg == 0 {
+                        0.0
+                    } else {
+                        sg as f32 * scale * lut[cd as usize]
+                    };
+                }
+            }
+            None => {
+                let gamma = fmt.gamma as f32;
+                for ((o, &sg), &cd) in band.iter_mut().zip(s).zip(c) {
+                    *o = if sg == 0 {
+                        0.0
+                    } else {
+                        sg as f32 * scale * (cd as f32 / gamma).exp2()
+                    };
+                }
+            }
+        }
+    };
+    let workers = effective_workers(workers, out.len());
+    pool::partition_rows(out, rows, cols, workers, decode_band);
+}
+
 /// Encode a row-major buffer into sign/code planes with the fused fast
 /// path — the datapath's encode front-end. `scales` must come from
 /// [`group_scales_into`] (or `quant::group_scales`) for the same
@@ -891,6 +942,51 @@ mod tests {
             assert_eq!(c0, c1, "{rows}x{cols} code planes diverged");
         }
         set_mode(SimdMode::Auto).unwrap();
+    }
+
+    #[test]
+    fn decode_rows_bit_identical_to_scalar_decode_at_any_workers() {
+        let fmt = LnsFormat::PAPER8;
+        let mut rng = Rng::new(23);
+        // Big enough to clear the per-worker element floor, so the
+        // multi-band path genuinely executes.
+        let (rows, cols) = (96, 64);
+        let mut data = rng.normal_vec(rows * cols);
+        data[0] = 0.0; // exercise the zero lane
+        let absmax = data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = fmt.scale_for_absmax(absmax);
+        let mut signs = vec![0i8; data.len()];
+        let mut codes = vec![0u32; data.len()];
+        let scales = [scale];
+        encode_rows_into(
+            &mut signs,
+            &mut codes,
+            &data,
+            rows,
+            cols,
+            fmt,
+            Scaling::PerTensor,
+            Rounding::Nearest,
+            None,
+            &scales,
+            1,
+        );
+        let want: Vec<f32> = signs
+            .iter()
+            .zip(codes.iter())
+            .map(|(&s, &c)| fmt.decode(LnsValue { sign: s, code: c }, scale))
+            .collect();
+        for workers in [1usize, 2, 3, 8] {
+            let mut out = vec![f32::NAN; data.len()];
+            decode_rows_into(&mut out, &signs, &codes, fmt, scale, rows, cols, workers);
+            for (i, (a, b)) in out.iter().zip(want.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "workers={workers} idx={i}: {a} vs {b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -13,13 +13,21 @@
 //!                             # Table 8 energy report + measured
 //!                             # datapath profile
 //!   lns-madam quant-error     # Fig. 4 quantization-error study
+//!   lns-madam serve --ckpt path [--port P] [--bits B] [--gamma G]
+//!                   [--parallelism P] [--simd auto|off|force]
+//!                   [--max-new-cap N] [--max-requests N]
+//!                             # batched char-LM inference over the
+//!                             # compact LNS weight store (127.0.0.1)
+//!   lns-madam serve-bench --addr host:port [--clients C]
+//!                   [--requests R] [--max-new N]
+//!                             # concurrent-client latency harness
 //!
 //! Arg parsing is hand-rolled (no clap offline); flags are --key value.
 
 use anyhow::{bail, Result};
 use lns_madam::backend::native::builtin_presets;
 use lns_madam::backend::BackendKind;
-use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::coordinator::{OptKind, ServeConfig, TrainConfig, Trainer};
 use lns_madam::hw::{measure_gemm_opcounts, table8_workloads, EnergyModel, PeFormat};
 use lns_madam::lns::{ConvertMode, MacConfig, Parallelism};
 use lns_madam::optim::error::fig4_sweep;
@@ -122,6 +130,67 @@ fn cmd_train(args: &[String]) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut cfg = ServeConfig::default();
+    for (k, v) in &flags {
+        match k.as_str() {
+            "ckpt" => cfg.ckpt_path = v.clone(),
+            "port" => cfg.port = v.parse()?,
+            "bits" => cfg.bits = v.parse()?,
+            "gamma" => cfg.gamma = v.parse()?,
+            "parallelism" => cfg.parallelism = v.parse()?,
+            "simd" => cfg.simd = v.clone(),
+            "max-new-cap" => cfg.max_new_cap = v.parse()?,
+            "max-requests" => cfg.max_requests = v.parse()?,
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    simd::set_mode(simd::SimdMode::parse(&cfg.simd)?)?;
+    lns_madam::serve::run(&cfg)
+}
+
+fn cmd_serve_bench(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut addr = String::new();
+    let mut clients = 4usize;
+    let mut requests = 8usize;
+    let mut max_new = 16usize;
+    for (k, v) in &flags {
+        match k.as_str() {
+            "addr" => addr = v.clone(),
+            "clients" => clients = v.parse()?,
+            "requests" => requests = v.parse()?,
+            "max-new" => max_new = v.parse()?,
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    if addr.is_empty() {
+        bail!("serve-bench: --addr host:port is required");
+    }
+    if clients == 0 || requests == 0 {
+        bail!("serve-bench: --clients and --requests must be >= 1");
+    }
+    let per_client = requests.div_ceil(clients);
+    let prompt = [1u32, 2, 3];
+    let stats = lns_madam::serve::bench_clients(&addr, clients, per_client, &prompt, max_new)?;
+    println!(
+        "{} client(s) x {} request(s): p50 {:.3} ms, p99 {:.3} ms, {:.1} req/s, {:.1} tok/s",
+        stats.clients,
+        per_client,
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.throughput_rps(),
+        stats.tokens_per_s()
+    );
+    if stats.consistent {
+        println!("responses consistent across clients");
+        Ok(())
+    } else {
+        bail!("responses DIVERGED across clients — bit-exactness contract broken");
+    }
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {
@@ -248,8 +317,10 @@ fn main() -> Result<()> {
         Some("info") => cmd_info(&args[1..]),
         Some("energy") => cmd_energy(&args[1..]),
         Some("quant-error") => cmd_quant_error(),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("serve-bench") => cmd_serve_bench(&args[1..]),
         _ => {
-            eprintln!("usage: lns-madam <train|info|energy|quant-error> [flags]");
+            eprintln!("usage: lns-madam <train|info|energy|quant-error|serve|serve-bench> [flags]");
             std::process::exit(2);
         }
     }

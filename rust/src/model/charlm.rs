@@ -17,7 +17,9 @@
 use crate::backend::{Batch, ModelContract, ModelFamily, Param, StepOutput};
 use crate::lns::datapath::OpCounts;
 use crate::lns::exec::ExecTier;
-use crate::model::{gemm_nn, gemm_nt, gemm_tn, softmax_inplace, NativeModel, TrainQuant, Workspace};
+use crate::model::{
+    gemm_nn, gemm_nt, gemm_tn, softmax_inplace, NativeModel, QuantKind, TrainQuant, Workspace,
+};
 use crate::util::tensor::Tensor;
 use anyhow::{bail, Result};
 
@@ -271,6 +273,56 @@ impl CharLmModel {
             grads: vec![gtok, gpos, gw1.data, gb1, ghead.data],
         })
     }
+}
+
+/// Batched serving forward, stage 1: embedded rows -> hidden rows.
+/// One row per active sequence (the char-LM is position-local: the
+/// next-token distribution depends only on the last token and its
+/// position, so serving never re-runs the prompt). Quantizes `x` in
+/// place with `act`, runs GEMM 1 against already-LNS-grid weights
+/// (`w1f` comes decoded from the serve weight store, so no Q_W pass),
+/// adds the bias, applies ReLU, and quantizes the hidden rows.
+///
+/// Bit-exactness contract: `act` must be a per-row quantizer — every
+/// output row is then a pure function of that row's inputs and the
+/// weights (per-row scales, row-independent GEMM accumulation), so
+/// responses are identical for any batch composition and worker count.
+pub(crate) fn serve_hidden_rows(
+    x: &mut Tensor,
+    w1f: &Tensor,
+    b1: &[f32],
+    act: &QuantKind,
+    workers: usize,
+    ws: &mut Workspace,
+) -> Tensor {
+    act.apply_into(x, workers, &mut ws.quant);
+    let mut h = ws.tensor_for_gemm(x.rows, w1f.cols);
+    gemm_nn(x, w1f, &mut h, ExecTier::F32Exact, act, workers, ws);
+    for r in 0..h.rows {
+        let row = &mut h.data[r * h.cols..(r + 1) * h.cols];
+        for (v, &b) in row.iter_mut().zip(b1.iter()) {
+            *v = (*v + b).max(0.0);
+        }
+    }
+    act.apply_into(&mut h, workers, &mut ws.quant);
+    h
+}
+
+/// Batched serving forward, stage 2: hidden rows -> per-row next-token
+/// distributions (GEMM 2 + row softmax). Split from stage 1 so the
+/// caller can stage `w1f` and `headf` through one shared decode
+/// scratch instead of keeping both resident in f32.
+pub(crate) fn serve_probs_rows(
+    h: &Tensor,
+    headf: &Tensor,
+    act: &QuantKind,
+    workers: usize,
+    ws: &mut Workspace,
+) -> Tensor {
+    let mut probs = ws.tensor_for_gemm(h.rows, headf.cols);
+    gemm_nn(h, headf, &mut probs, ExecTier::F32Exact, act, workers, ws);
+    softmax_inplace(&mut probs);
+    probs
 }
 
 /// Cached forward tensors for backprop.

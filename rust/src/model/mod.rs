@@ -30,6 +30,7 @@ pub mod charlm;
 pub mod sweep;
 
 pub use charlm::CharLmModel;
+pub(crate) use charlm::{serve_hidden_rows, serve_probs_rows};
 
 /// A quantizer assignment for one side of training.
 #[derive(Clone, Copy, Debug, PartialEq)]

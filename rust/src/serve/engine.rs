@@ -1,0 +1,331 @@
+//! The batching core: coalesces concurrent char-LM generation
+//! requests into batched forward passes against the LNS weight store.
+//!
+//! Continuous batching: every [`tick`](ServeEngine::tick) advances all
+//! active sequences by one token in a single batched forward (one row
+//! per sequence — the char-LM is position-local, so the next-token
+//! distribution depends only on each sequence's last token and its
+//! position). Finished sequences retire between ticks and new ones
+//! join, without draining the batch.
+//!
+//! Bit-exactness contract (extends DESIGN.md §Performance to serving):
+//! every generated token is a pure function of its own sequence's
+//! `(last token, position)` and the store — identical for any batch
+//! composition and any worker count. The activation quantizer is
+//! per-row (a per-tensor scale would couple rows through the batch
+//! absmax), GEMM rows accumulate independently in a fixed k-order, and
+//! softmax/argmax are row-local. Weights come off the store already on
+//! the LNS grid — exactly the values `Q_W` would produce — so no
+//! weight-side re-quantization happens at serving time.
+//!
+//! Memory discipline: resident parameters are the packed store
+//! (~28% of f32 at 8 bits). Per tick, `w1` and `head` decode into one
+//! shared scratch buffer (sequentially — GEMM 1 consumes `w1f` before
+//! `head` overwrites it) and embedding rows decode on demand per
+//! sequence; no full f32 weight copy ever persists. The steady state
+//! allocates nothing: all intermediates come from the model
+//! [`Workspace`] pool and the scratch keeps its capacity across ticks.
+
+use crate::backend::Param;
+use crate::lns::{LnsFormat, Scaling};
+use crate::model::{serve_hidden_rows, serve_probs_rows, QuantKind, Workspace};
+use crate::serve::store::LnsWeightStore;
+use crate::util::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// One in-flight generation request.
+pub struct Sequence {
+    pub id: u64,
+    /// Last token fed to the model (prompt tail, then each generated
+    /// token in turn).
+    pub last: u32,
+    /// Stream position of `last` (wraps modulo the model's trained
+    /// sequence length at embed time).
+    pub pos: usize,
+    /// Tokens still to generate.
+    pub remaining: usize,
+    /// Generated tokens so far (the response payload).
+    pub generated: Vec<u32>,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: &[u32], max_new: usize) -> Result<Sequence> {
+        let Some(&last) = prompt.last() else {
+            bail!("empty prompt");
+        };
+        Ok(Sequence {
+            id,
+            last,
+            pos: prompt.len() - 1,
+            remaining: max_new,
+            generated: Vec::with_capacity(max_new),
+        })
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+/// The serving engine: weight store + batched forward state.
+pub struct ServeEngine {
+    store: LnsWeightStore,
+    /// Per-row activation quantizer (see module docs for why per-row).
+    act: QuantKind,
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    workers: usize,
+    ws: Workspace,
+    /// Shared weight decode scratch (`w1f`, then `headf`, per tick).
+    wbuf: Vec<f32>,
+    i_tok: usize,
+    i_pos: usize,
+    i_w1: usize,
+    i_b1: usize,
+    i_head: usize,
+}
+
+impl ServeEngine {
+    /// Build from checkpoint params (the char-LM param set, in spec
+    /// order). Dims derive from the shapes; the store encodes every
+    /// payload once here and the f32 data is dropped by the caller.
+    pub fn from_params(params: &[Param], fmt: LnsFormat, workers: usize) -> Result<ServeEngine> {
+        let store = LnsWeightStore::from_params(params, fmt, workers)?;
+        let find = |name: &str| {
+            store
+                .index_of(name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint has no '{name}' tensor (not a char-LM checkpoint?)"))
+        };
+        let (i_tok, i_pos, i_w1, i_b1, i_head) =
+            (find("tok_emb")?, find("pos_emb")?, find("w1")?, find("b1")?, find("head")?);
+        let (vocab, d_model) = (store.planes()[i_tok].rows(), store.planes()[i_tok].cols());
+        let seq = store.planes()[i_pos].rows();
+        let d_ff = store.planes()[i_w1].cols();
+        let shape_of = |i: usize| (store.planes()[i].rows(), store.planes()[i].cols());
+        if shape_of(i_pos).1 != d_model
+            || shape_of(i_w1) != (d_model, d_ff)
+            || shape_of(i_b1) != (1, d_ff)
+            || shape_of(i_head) != (d_ff, vocab)
+        {
+            bail!(
+                "inconsistent char-LM shapes: tok_emb {:?}, pos_emb {:?}, w1 {:?}, b1 {:?}, head {:?}",
+                shape_of(i_tok), shape_of(i_pos), shape_of(i_w1), shape_of(i_b1), shape_of(i_head)
+            );
+        }
+        Ok(ServeEngine {
+            store,
+            act: QuantKind::Lns { fmt, scaling: Scaling::PerRow },
+            vocab,
+            seq,
+            d_model,
+            d_ff,
+            workers: workers.max(1),
+            ws: Workspace::new(),
+            wbuf: Vec::new(),
+            i_tok,
+            i_pos,
+            i_w1,
+            i_b1,
+            i_head,
+        })
+    }
+
+    pub fn store(&self) -> &LnsWeightStore {
+        &self.store
+    }
+
+    pub fn set_parallelism(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    /// Reject a prompt the model cannot embed (server turns this into
+    /// a wire error response instead of dropping the connection).
+    pub fn check_prompt(&self, prompt: &[u32]) -> Result<()> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= self.vocab) {
+            bail!("token {bad} out of vocab {}", self.vocab);
+        }
+        Ok(())
+    }
+
+    /// Advance every active sequence by one token in a single batched
+    /// forward. Callers retire `done()` sequences between ticks.
+    pub fn tick(&mut self, seqs: &mut [Sequence]) -> Result<()> {
+        let n = seqs.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let mut ws = std::mem::take(&mut self.ws);
+        let mut wbuf = std::mem::take(&mut self.wbuf);
+        let result = self.tick_inner(seqs, &mut ws, &mut wbuf);
+        self.ws = ws;
+        self.wbuf = wbuf;
+        result
+    }
+
+    fn tick_inner(
+        &self,
+        seqs: &mut [Sequence],
+        ws: &mut Workspace,
+        wbuf: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = seqs.len();
+        let d = self.d_model;
+
+        // Embed: one row per sequence, decoded on demand from the
+        // store (tok_emb row + pos_emb row; no f32 table resident).
+        let mut x = ws.tensor_for_gemm(n, d);
+        for (r, s) in seqs.iter().enumerate() {
+            if s.last as usize >= self.vocab {
+                bail!("token {} out of vocab {}", s.last, self.vocab);
+            }
+            let row = &mut x.data[r * d..(r + 1) * d];
+            self.store.decode_row_into(self.i_tok, s.last as usize, row);
+            self.store.decode_row_add(self.i_pos, s.pos % self.seq, row);
+        }
+
+        // GEMM 1 against w1 decoded into the shared scratch.
+        wbuf.resize(self.d_model * self.d_ff, 0.0);
+        self.store.decode_into(self.i_w1, wbuf, self.workers);
+        let w1f = Tensor::from_vec(self.d_model, self.d_ff, std::mem::take(wbuf));
+        let mut b1 = ws.grab_zeroed(self.d_ff);
+        self.store.decode_into(self.i_b1, &mut b1, 1);
+        let h = serve_hidden_rows(&mut x, &w1f, &b1, &self.act, self.workers, ws);
+        ws.recycle(b1);
+
+        // GEMM 2: head reuses the same scratch w1 just vacated.
+        let mut buf = w1f.data;
+        buf.resize(self.d_ff * self.vocab, 0.0);
+        self.store.decode_into(self.i_head, &mut buf, self.workers);
+        let headf = Tensor::from_vec(self.d_ff, self.vocab, buf);
+        let probs = serve_probs_rows(&h, &headf, &self.act, self.workers, ws);
+        *wbuf = headf.data;
+
+        // Greedy decode per row (total_cmp: a NaN row must surface as
+        // a deterministic token choice, not a comparator panic).
+        for (r, s) in seqs.iter_mut().enumerate() {
+            let row = &probs.data[r * self.vocab..(r + 1) * self.vocab];
+            let tok = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0 as u32;
+            s.generated.push(tok);
+            s.last = tok;
+            s.pos += 1;
+            s.remaining -= 1;
+        }
+
+        for t in [x, h, probs] {
+            ws.recycle_tensor(t);
+        }
+        Ok(())
+    }
+
+    /// One-at-a-time generation (the reference path the batching
+    /// invariance tests compare against; also the `serve-bench`
+    /// warm-up).
+    pub fn generate(&mut self, id: u64, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
+        self.check_prompt(prompt)?;
+        let mut seqs = vec![Sequence::new(id, prompt, max_new)?];
+        while !seqs[0].done() {
+            self.tick(&mut seqs)?;
+        }
+        Ok(seqs.pop().unwrap().generated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::util::rng::Rng;
+
+    fn mk_engine(workers: usize) -> ServeEngine {
+        let specs: Vec<(String, Vec<usize>)> = vec![
+            ("tok_emb".into(), vec![16, 8]),
+            ("pos_emb".into(), vec![12, 8]),
+            ("w1".into(), vec![8, 16]),
+            ("b1".into(), vec![16]),
+            ("head".into(), vec![16, 16]),
+        ];
+        let mut rng = Rng::new(42);
+        let params = init_params(&specs, &mut rng);
+        ServeEngine::from_params(&params, LnsFormat::PAPER8, workers).unwrap()
+    }
+
+    #[test]
+    fn dims_derive_from_shapes() {
+        let e = mk_engine(1);
+        assert_eq!((e.vocab, e.seq, e.d_model, e.d_ff), (16, 12, 8, 16));
+    }
+
+    #[test]
+    fn batched_ticks_match_one_at_a_time() {
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![7], vec![0, 15, 4, 9], vec![5, 5]];
+        let mut solo = mk_engine(1);
+        let want: Vec<Vec<u32>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| solo.generate(i as u64, p, 6).unwrap())
+            .collect();
+
+        // Same requests coalesced into one continuously-batched run,
+        // with staggered lengths so sequences retire mid-flight.
+        let mut batched = mk_engine(1);
+        let mut active: Vec<Sequence> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Sequence::new(i as u64, p, if i % 2 == 0 { 6 } else { 3 }).unwrap())
+            .collect();
+        let mut out: Vec<(u64, Vec<u32>)> = Vec::new();
+        while !active.is_empty() {
+            batched.tick(&mut active).unwrap();
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].done() {
+                    let s = active.swap_remove(i);
+                    out.push((s.id, s.generated));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for (id, got) in out {
+            let want = &want[id as usize];
+            assert_eq!(
+                &got[..],
+                &want[..got.len()],
+                "sequence {id} diverged under batching"
+            );
+        }
+    }
+
+    #[test]
+    fn responses_bit_identical_across_worker_counts() {
+        let prompt = vec![3u32, 1, 4, 1, 5];
+        let mut ref_engine = mk_engine(1);
+        let want = ref_engine.generate(0, &prompt, 8).unwrap();
+        for workers in [2usize, 4, 8] {
+            let mut e = mk_engine(workers);
+            assert_eq!(
+                e.generate(0, &prompt, 8).unwrap(),
+                want,
+                "diverged at {workers} workers"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_prompts() {
+        let e = mk_engine(1);
+        assert!(e.check_prompt(&[]).is_err());
+        assert!(e.check_prompt(&[16]).is_err(), "vocab is 16, token 16 invalid");
+        assert!(e.check_prompt(&[15]).is_ok());
+    }
+}

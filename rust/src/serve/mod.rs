@@ -1,0 +1,12 @@
+//! LNS-native inference serving (ROADMAP item 3): a compact LNS
+//! weight store, a zero-alloc wire protocol, a continuous-batching
+//! engine, and the localhost TCP serve loop. See DESIGN.md §Serving.
+
+pub mod engine;
+pub mod server;
+pub mod store;
+pub mod wire;
+
+pub use engine::{Sequence, ServeEngine};
+pub use server::{bench_clients, run, serve_listener, BenchStats};
+pub use store::LnsWeightStore;

@@ -1,0 +1,335 @@
+//! The serve loop: a localhost TCP listener feeding the batching
+//! engine, plus the concurrent-client bench harness behind
+//! `lns-madam serve-bench`.
+//!
+//! Threading: one acceptor thread, one reader thread per connection,
+//! and the engine loop on the caller's thread. Readers parse requests
+//! with the zero-alloc wire layer and hand `(id, prompt, reply
+//! handle)` to the engine over a channel; the engine admits pending
+//! requests between ticks (continuous batching) and writes each
+//! response as its sequence finishes. Responses are bit-identical for
+//! any admission interleaving — see `serve::engine`.
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::config::ServeConfig;
+use crate::lns::{LnsFormat, Parallelism};
+use crate::serve::engine::{Sequence, ServeEngine};
+use crate::serve::wire;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One admitted request on its way to the engine.
+struct Inbound {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    conn: Arc<Mutex<TcpStream>>,
+}
+
+/// Run the server until `max_requests` responses have been written
+/// (0 = forever). Binds 127.0.0.1 only — this is a local inference
+/// endpoint, not an internet-facing service.
+pub fn run(cfg: &ServeConfig) -> Result<()> {
+    cfg.validate()?;
+    let (params, step, _meta) = checkpoint::load(Path::new(&cfg.ckpt_path))
+        .with_context(|| format!("loading checkpoint {}", cfg.ckpt_path))?;
+    let fmt = LnsFormat::new(cfg.bits, cfg.gamma);
+    let workers = Parallelism::from_knob(cfg.parallelism).worker_count();
+    let mut engine = ServeEngine::from_params(&params, fmt, workers)?;
+    drop(params); // the f32 payloads are gone; only LNS planes stay resident
+
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    let port = listener.local_addr()?.port();
+    let store = engine.store();
+    println!(
+        "serving {} (step {step}) on 127.0.0.1:{port} — vocab {}, seq {}, d_model {}, d_ff {}",
+        cfg.ckpt_path, engine.vocab, engine.seq, engine.d_model, engine.d_ff
+    );
+    println!(
+        "weight store: {} bytes resident vs {} f32 ({:.1}%), lns {}b gamma {}, {} worker(s)",
+        store.resident_bytes(),
+        store.f32_bytes(),
+        100.0 * store.resident_bytes() as f64 / store.f32_bytes() as f64,
+        fmt.bits,
+        fmt.gamma,
+        workers
+    );
+    std::io::stdout().flush().ok();
+    serve_listener(listener, &mut engine, cfg.max_new_cap, cfg.max_requests)
+}
+
+/// Serve on an already-bound listener (tests bind port 0 themselves to
+/// learn the port before starting the loop).
+pub fn serve_listener(
+    listener: TcpListener,
+    engine: &mut ServeEngine,
+    max_new_cap: usize,
+    max_requests: usize,
+) -> Result<()> {
+    let (tx, rx) = channel::<Inbound>();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(conn) = conn else { continue };
+            let tx = tx.clone();
+            std::thread::spawn(move || reader_loop(conn, tx));
+        }
+    });
+    engine_loop(engine, &rx, max_new_cap, max_requests)
+}
+
+/// Per-connection reader: newline-delimited requests in, parse
+/// failures answered immediately, good requests queued to the engine.
+fn reader_loop(stream: TcpStream, tx: Sender<Inbound>) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let conn = Arc::new(Mutex::new(write_half));
+    let mut reader = BufReader::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    let mut scratch = wire::RequestScratch::default();
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        line.clear();
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) | Err(_) => return, // connection closed
+            Ok(_) => {}
+        }
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            continue;
+        }
+        match wire::parse_request(&line, &mut scratch) {
+            Ok(req) => {
+                let inbound = Inbound {
+                    id: req.id,
+                    prompt: req.prompt.to_vec(),
+                    max_new: req.max_new,
+                    conn: Arc::clone(&conn),
+                };
+                if tx.send(inbound).is_err() {
+                    return; // engine gone: server shutting down
+                }
+            }
+            Err(e) => {
+                out.clear();
+                wire::write_error(&mut out, 0, &format!("bad request: {e}"));
+                if conn.lock().map(|mut c| c.write_all(&out).is_err()).unwrap_or(true) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The batching loop: admit pending requests, tick, retire finished
+/// sequences to their connections.
+fn engine_loop(
+    engine: &mut ServeEngine,
+    rx: &Receiver<Inbound>,
+    max_new_cap: usize,
+    max_requests: usize,
+) -> Result<()> {
+    let mut active: Vec<Sequence> = Vec::new();
+    let mut conns: Vec<Arc<Mutex<TcpStream>>> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    let mut answered = 0usize;
+    loop {
+        if max_requests > 0 && answered >= max_requests {
+            println!("answered {answered} request(s); exiting");
+            return Ok(());
+        }
+        // Admission: block when idle, drain without blocking while
+        // sequences are in flight (continuous batching).
+        if active.is_empty() {
+            match rx.recv() {
+                Ok(inbound) => admit(engine, inbound, max_new_cap, &mut active, &mut conns, &mut out, &mut answered),
+                Err(_) => return Ok(()), // all senders gone
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(inbound) => admit(engine, inbound, max_new_cap, &mut active, &mut conns, &mut out, &mut answered),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        println!("tick batch={}", active.len());
+        engine.tick(&mut active)?;
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].done() {
+                let seq = active.swap_remove(i);
+                let conn = conns.swap_remove(i);
+                out.clear();
+                wire::write_response(&mut out, seq.id, &seq.generated);
+                if let Ok(mut c) = conn.lock() {
+                    c.write_all(&out).ok();
+                }
+                answered += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Validate and enqueue one request; bad prompts and zero-length
+/// generations answer immediately.
+fn admit(
+    engine: &ServeEngine,
+    inbound: Inbound,
+    max_new_cap: usize,
+    active: &mut Vec<Sequence>,
+    conns: &mut Vec<Arc<Mutex<TcpStream>>>,
+    out: &mut Vec<u8>,
+    answered: &mut usize,
+) {
+    let Inbound { id, prompt, max_new, conn } = inbound;
+    out.clear();
+    if let Err(e) = engine.check_prompt(&prompt) {
+        wire::write_error(out, id, &e.to_string());
+    } else if max_new == 0 {
+        wire::write_response(out, id, &[]);
+    } else {
+        let seq = Sequence::new(id, &prompt, max_new.min(max_new_cap))
+            .expect("checked prompt is non-empty");
+        active.push(seq);
+        conns.push(conn);
+        return;
+    }
+    if let Ok(mut c) = conn.lock() {
+        c.write_all(out).ok();
+    }
+    *answered += 1;
+}
+
+/// Latency/throughput stats from one bench run.
+pub struct BenchStats {
+    pub clients: usize,
+    pub requests: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub elapsed_s: f64,
+    pub tokens_generated: usize,
+    /// All clients sharing a prompt received byte-identical token
+    /// streams (the serving bit-exactness contract, observed on the
+    /// wire).
+    pub consistent: bool,
+}
+
+impl BenchStats {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.elapsed_s
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.elapsed_s
+    }
+}
+
+/// Concurrent-client harness: `clients` threads each send
+/// `per_client` identical requests (sequentially per thread, so the
+/// server sees up to `clients` concurrent sequences) and check every
+/// response against the first. Used by `serve-bench` and the CI smoke.
+pub fn bench_clients(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    prompt: &[u32],
+    max_new: usize,
+) -> Result<BenchStats> {
+    let start = Instant::now();
+    let results: Vec<Result<(Vec<f64>, Vec<Vec<u32>>)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                s.spawn(move || -> Result<(Vec<f64>, Vec<Vec<u32>>)> {
+                    let stream = TcpStream::connect(addr)
+                        .with_context(|| format!("connecting to {addr}"))?;
+                    let mut reader = BufReader::new(stream.try_clone()?);
+                    let mut stream = stream;
+                    let mut latencies = Vec::with_capacity(per_client);
+                    let mut streams = Vec::with_capacity(per_client);
+                    let mut req: Vec<u8> = Vec::new();
+                    let mut line = String::new();
+                    for ri in 0..per_client {
+                        req.clear();
+                        wire::write_request(&mut req, (ci * per_client + ri) as u64, prompt, max_new);
+                        let t0 = Instant::now();
+                        stream.write_all(&req)?;
+                        line.clear();
+                        reader.read_line(&mut line)?;
+                        latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+                        streams.push(parse_tokens(&line)?);
+                    }
+                    Ok((latencies, streams))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut all_streams: Vec<Vec<u32>> = Vec::new();
+    for r in results {
+        let (lat, streams) = r?;
+        latencies.extend(lat);
+        all_streams.extend(streams);
+    }
+    let consistent = all_streams.windows(2).all(|w| w[0] == w[1]);
+    let tokens_generated = all_streams.iter().map(Vec::len).sum();
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    Ok(BenchStats {
+        clients,
+        requests: latencies.len(),
+        p50_ms: percentile(&latencies, 50.0),
+        p99_ms: percentile(&latencies, 99.0),
+        elapsed_s,
+        tokens_generated,
+        consistent,
+    })
+}
+
+/// Client-side response parse (allocating tree parser is fine here —
+/// the zero-alloc discipline is for the server hot loop).
+fn parse_tokens(line: &str) -> Result<Vec<u32>> {
+    use crate::util::json::Json;
+    let j = Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("bad response {line:?}: {e}"))?;
+    if let Some(err) = j.get("error").and_then(Json::as_str) {
+        anyhow::bail!("server error: {err}");
+    }
+    j.get("tokens")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|t| t.as_f64().map(|v| v as u32)).collect())
+        .ok_or_else(|| anyhow::anyhow!("response missing tokens: {line:?}"))
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

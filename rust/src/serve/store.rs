@@ -1,0 +1,376 @@
+//! Compact LNS-native weight store for inference serving.
+//!
+//! Checkpoint `Param` f32 payloads are encoded once at load into
+//! per-tensor LNS code planes and decoded on demand through the
+//! process-cached kernel LUT (`lns::kernels::decode_lut`). One element
+//! packs as `sign_bit << (W-1) | code` in a `u8` (bits <= 8) or `u16`
+//! (bits <= 16) — the exponent code always fits in W-1 bits because
+//! `max_code = 2^(B-1)-1` — plus one bit in a separate zero bitmap
+//! (sign 0 is a 257th state at B = 8, so it cannot share the packed
+//! word). At the paper's 8-bit format that is 9 bits per parameter,
+//! 1.125 bytes — ~28% of f32, under the <= 1/3 serving budget.
+//!
+//! Decoding is bit-identical to `LnsFormat::decode` of the
+//! `LnsFormat::encode` codes: the LUT entry *is* the exact-libm exp2
+//! the scalar path computes, and the multiply order matches
+//! (`sign as f32 * scale * exp2`). Parallel decode bands by whole
+//! rows; every element is a pure function of its own packed word, so
+//! worker count is pure wall-clock.
+
+use crate::backend::Param;
+use crate::lns::kernels::{decode_lut, encode_rows_into, group_scales_into};
+use crate::lns::{LnsFormat, Rounding, Scaling};
+use crate::util::pool;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Packed sign+code plane; width picked from the format bitwidth.
+enum CodePlane {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+impl CodePlane {
+    /// (sign, code) of element `i`; sign here is never 0 (zeros live
+    /// in the bitmap).
+    #[inline]
+    fn sign_code(&self, i: usize) -> (i8, u32) {
+        match self {
+            CodePlane::U8(v) => {
+                let w = v[i];
+                (if w & 0x80 != 0 { -1 } else { 1 }, (w & 0x7f) as u32)
+            }
+            CodePlane::U16(v) => {
+                let w = v[i];
+                (if w & 0x8000 != 0 { -1 } else { 1 }, (w & 0x7fff) as u32)
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            CodePlane::U8(v) => v.len(),
+            CodePlane::U16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// One encoded tensor: name + shape + per-tensor scale + packed codes
+/// + zero bitmap (bit i set = element i is exactly 0.0).
+pub struct Plane {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub scale: f32,
+    rows: usize,
+    cols: usize,
+    codes: CodePlane,
+    zeros: Vec<u64>,
+}
+
+impl Plane {
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn is_zero(&self, i: usize) -> bool {
+        self.zeros[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+
+    /// Resident bytes of this plane's parameter payload (codes +
+    /// zero bitmap; the f32 scale and shape header are O(1)).
+    fn payload_bytes(&self) -> usize {
+        self.codes.bytes() + self.zeros.len() * 8
+    }
+}
+
+/// The full store: every checkpoint tensor as a [`Plane`], plus the
+/// shared decode LUT for the serving format.
+pub struct LnsWeightStore {
+    pub fmt: LnsFormat,
+    planes: Vec<Plane>,
+    lut: Arc<Vec<f32>>,
+}
+
+impl LnsWeightStore {
+    /// Encode checkpoint params into the store. Each tensor gets a
+    /// per-tensor scale from the kernel scale fold (the same fold the
+    /// training quantizer uses), then nearest-rounded codes from
+    /// `encode_rows_into` — bit-identical to per-element
+    /// `LnsFormat::encode` at any worker count.
+    pub fn from_params(params: &[Param], fmt: LnsFormat, workers: usize) -> Result<Self> {
+        if fmt.bits > 16 {
+            bail!(
+                "weight store packs codes into u8/u16 planes; {} bits exceeds 16",
+                fmt.bits
+            );
+        }
+        let mut planes = Vec::with_capacity(params.len());
+        let mut signs: Vec<i8> = Vec::new();
+        let mut codes: Vec<u32> = Vec::new();
+        let mut scales: Vec<f32> = Vec::new();
+        for p in params {
+            let (rows, cols) = match p.shape.len() {
+                2 => (p.shape[0], p.shape[1]),
+                _ => (1, p.data.len()),
+            };
+            if rows * cols != p.data.len() {
+                bail!(
+                    "param '{}': shape {:?} does not cover {} elements",
+                    p.name,
+                    p.shape,
+                    p.data.len()
+                );
+            }
+            group_scales_into(&mut scales, &p.data, rows, cols, fmt, Scaling::PerTensor);
+            let scale = scales[0];
+            signs.clear();
+            signs.resize(p.data.len(), 0);
+            codes.clear();
+            codes.resize(p.data.len(), 0);
+            encode_rows_into(
+                &mut signs,
+                &mut codes,
+                &p.data,
+                rows,
+                cols,
+                fmt,
+                Scaling::PerTensor,
+                Rounding::Nearest,
+                None,
+                &scales,
+                workers,
+            );
+            let mut zeros = vec![0u64; p.data.len().div_ceil(64)];
+            let plane = if fmt.bits <= 8 {
+                let mut packed = Vec::with_capacity(p.data.len());
+                for (i, (&s, &c)) in signs.iter().zip(codes.iter()).enumerate() {
+                    if s == 0 {
+                        zeros[i >> 6] |= 1u64 << (i & 63);
+                        packed.push(0u8);
+                    } else {
+                        packed.push(if s < 0 { 0x80 } else { 0 } | c as u8);
+                    }
+                }
+                CodePlane::U8(packed)
+            } else {
+                let mut packed = Vec::with_capacity(p.data.len());
+                for (i, (&s, &c)) in signs.iter().zip(codes.iter()).enumerate() {
+                    if s == 0 {
+                        zeros[i >> 6] |= 1u64 << (i & 63);
+                        packed.push(0u16);
+                    } else {
+                        packed.push(if s < 0 { 0x8000 } else { 0 } | c as u16);
+                    }
+                }
+                CodePlane::U16(packed)
+            };
+            planes.push(Plane {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                scale,
+                rows,
+                cols,
+                codes: plane,
+                zeros,
+            });
+        }
+        Ok(LnsWeightStore { fmt, planes, lut: decode_lut(fmt) })
+    }
+
+    pub fn planes(&self) -> &[Plane] {
+        &self.planes
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.planes.iter().position(|p| p.name == name)
+    }
+
+    /// Decode one whole plane into `out` (len must match). Banded by
+    /// rows on the pool; bit-identical at any worker count.
+    pub fn decode_into(&self, idx: usize, out: &mut [f32], workers: usize) {
+        let p = &self.planes[idx];
+        assert_eq!(out.len(), p.len(), "decode buffer mismatch for '{}'", p.name);
+        let lut = &self.lut;
+        let workers = pool::effective_workers(workers, p.len(), pool::quant_elems_floor());
+        pool::partition_rows(out, p.rows, p.cols, workers, |row0, band| {
+            let base = row0 * p.cols;
+            for (j, o) in band.iter_mut().enumerate() {
+                let i = base + j;
+                *o = if p.is_zero(i) {
+                    0.0
+                } else {
+                    let (s, c) = p.codes.sign_code(i);
+                    s as f32 * p.scale * lut[c as usize]
+                };
+            }
+        });
+    }
+
+    /// Decode one row of a plane into `out` — the embedding-gather
+    /// path (rows decode on demand; the table is never materialized
+    /// in f32).
+    pub fn decode_row_into(&self, idx: usize, row: usize, out: &mut [f32]) {
+        let p = &self.planes[idx];
+        assert_eq!(out.len(), p.cols, "row buffer mismatch for '{}'", p.name);
+        let base = row * p.cols;
+        for (j, o) in out.iter_mut().enumerate() {
+            let i = base + j;
+            *o = if p.is_zero(i) {
+                0.0
+            } else {
+                let (s, c) = p.codes.sign_code(i);
+                s as f32 * p.scale * self.lut[c as usize]
+            };
+        }
+    }
+
+    /// Decode one row of a plane and add it into `out` elementwise —
+    /// the `x = tok_emb[tok] + pos_emb[pos]` embed without a staging
+    /// buffer.
+    pub fn decode_row_add(&self, idx: usize, row: usize, out: &mut [f32]) {
+        let p = &self.planes[idx];
+        assert_eq!(out.len(), p.cols, "row buffer mismatch for '{}'", p.name);
+        let base = row * p.cols;
+        for (j, o) in out.iter_mut().enumerate() {
+            let i = base + j;
+            if !p.is_zero(i) {
+                let (s, c) = p.codes.sign_code(i);
+                *o += s as f32 * p.scale * self.lut[c as usize];
+            }
+        }
+    }
+
+    /// Resident parameter bytes of the store (what replaces the f32
+    /// payloads at serving time).
+    pub fn resident_bytes(&self) -> usize {
+        self.planes.iter().map(|p| p.payload_bytes()).sum()
+    }
+
+    /// What the same parameters occupy as f32.
+    pub fn f32_bytes(&self) -> usize {
+        self.planes.iter().map(|p| p.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk_params(rng: &mut Rng) -> Vec<Param> {
+        vec![
+            Param {
+                name: "w".into(),
+                shape: vec![24, 16],
+                data: rng.normal_vec(24 * 16),
+            },
+            Param {
+                name: "b".into(),
+                shape: vec![16],
+                data: vec![0.0; 16], // zero-init bias: the all-zero lane
+            },
+        ]
+    }
+
+    #[test]
+    fn round_trip_is_bitwise_encode_decode() {
+        let fmt = LnsFormat::PAPER8;
+        let mut rng = Rng::new(5);
+        let params = mk_params(&mut rng);
+        let store = LnsWeightStore::from_params(&params, fmt, 1).unwrap();
+        for (idx, p) in params.iter().enumerate() {
+            let absmax = p.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = fmt.scale_for_absmax(absmax);
+            let want: Vec<f32> = p.data.iter().map(|&x| fmt.quantize(x, scale)).collect();
+            let mut got = vec![f32::NAN; p.data.len()];
+            store.decode_into(idx, &mut got, 1);
+            for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "'{}' idx {i}: {a} vs {b}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_bit_identical_across_workers_and_rows() {
+        let fmt = LnsFormat::PAPER8;
+        let mut rng = Rng::new(6);
+        let params = vec![Param {
+            name: "w".into(),
+            shape: vec![96, 64],
+            data: rng.normal_vec(96 * 64),
+        }];
+        let store = LnsWeightStore::from_params(&params, fmt, 1).unwrap();
+        let mut ref1 = vec![0.0f32; 96 * 64];
+        store.decode_into(0, &mut ref1, 1);
+        for workers in [2usize, 4, 8] {
+            let mut out = vec![f32::NAN; 96 * 64];
+            store.decode_into(0, &mut out, workers);
+            assert!(
+                out.iter().zip(ref1.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "decode diverged at {workers} workers"
+            );
+        }
+        // Row decode agrees with the full-plane decode.
+        let mut row = vec![0.0f32; 64];
+        store.decode_row_into(0, 17, &mut row);
+        assert!(row
+            .iter()
+            .zip(ref1[17 * 64..18 * 64].iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // decode_row_add really adds.
+        let mut acc = row.clone();
+        store.decode_row_add(0, 17, &mut acc);
+        for (a, r) in acc.iter().zip(row.iter()) {
+            assert_eq!(*a, r * 2.0);
+        }
+    }
+
+    #[test]
+    fn resident_bytes_under_a_third_of_f32() {
+        let fmt = LnsFormat::PAPER8;
+        let mut rng = Rng::new(7);
+        let params = mk_params(&mut rng);
+        let store = LnsWeightStore::from_params(&params, fmt, 1).unwrap();
+        let ratio = store.resident_bytes() as f64 / store.f32_bytes() as f64;
+        assert!(ratio <= 1.0 / 3.0, "store ratio {ratio:.3} exceeds 1/3");
+    }
+
+    #[test]
+    fn wide_formats_pack_into_u16() {
+        let fmt = LnsFormat::new(12, 16);
+        let mut rng = Rng::new(8);
+        let params = vec![Param { name: "w".into(), shape: vec![8, 8], data: rng.normal_vec(64) }];
+        let store = LnsWeightStore::from_params(&params, fmt, 1).unwrap();
+        let absmax = params[0].data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = fmt.scale_for_absmax(absmax);
+        let mut got = vec![0.0f32; 64];
+        store.decode_into(0, &mut got, 1);
+        for (a, &x) in got.iter().zip(params[0].data.iter()) {
+            assert_eq!(a.to_bits(), fmt.quantize(x, scale).to_bits());
+        }
+        // 17 bits/elem (u16 + zero bit) is ~53% of f32 — wide formats
+        // still shrink the resident set, but only u8-packed formats
+        // (bits <= 8) meet the 1/3 serving budget.
+        assert!(store.resident_bytes() * 5 < store.f32_bytes() * 3);
+    }
+
+    #[test]
+    fn rejects_unpackable_bitwidth() {
+        let fmt = LnsFormat::new(20, 16);
+        let params = vec![Param { name: "w".into(), shape: vec![2, 2], data: vec![1.0; 4] }];
+        assert!(LnsWeightStore::from_params(&params, fmt, 1).is_err());
+    }
+}

@@ -1,0 +1,378 @@
+//! Zero-alloc streaming JSON request/response layer for the serve
+//! loop, in the picojson-rs discipline (SNIPPETS.md §2): a pull-style
+//! parser over byte slices — no recursion, no tree materialization, no
+//! per-request allocation. The caller owns a [`RequestScratch`] whose
+//! prompt buffer is cleared and reused across requests, so a warm
+//! connection parses and answers without touching the allocator.
+//!
+//! Wire format (newline-delimited JSON, one object per line):
+//!
+//!   -> {"id": 7, "prompt": [3, 1, 4], "max_new": 16}
+//!   <- {"id": 7, "tokens": [9, 2, ...]}
+//!   <- {"id": 7, "error": "..."}            (on a rejected request)
+//!
+//! The allocating `util::json` tree parser stays the right tool for
+//! config/bench files; the serve hot loop deliberately does not use it
+//! (cross-validated against it in the tests below).
+
+/// Parse failure: a static message plus the byte offset it was
+/// detected at.
+#[derive(Debug, PartialEq, Eq)]
+pub struct WireError {
+    pub msg: &'static str,
+    pub pos: usize,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.pos)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One parsed generation request. `prompt` borrows the scratch buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Request<'a> {
+    pub id: u64,
+    pub prompt: &'a [u32],
+    pub max_new: usize,
+}
+
+/// Reusable per-connection parse state (the only buffer the request
+/// path ever needs).
+#[derive(Default)]
+pub struct RequestScratch {
+    prompt: Vec<u32>,
+}
+
+/// Byte-slice pull cursor.
+struct Cursor<'b> {
+    buf: &'b [u8],
+    pos: usize,
+}
+
+impl<'b> Cursor<'b> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.buf.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\r' || b == b'\n' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn err(&self, msg: &'static str) -> WireError {
+        WireError { msg, pos: self.pos }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.buf.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8, msg: &'static str) -> Result<(), WireError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// A JSON string with no escapes (keys on this wire are plain
+    /// identifiers; escaped keys are rejected, not silently mangled).
+    fn key(&mut self) -> Result<&'b [u8], WireError> {
+        self.expect(b'"', "expected key string")?;
+        let start = self.pos;
+        loop {
+            match self.buf.get(self.pos) {
+                Some(b'"') => {
+                    let s = &self.buf[start..self.pos];
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => return Err(self.err("escaped keys unsupported")),
+                Some(_) => self.pos += 1,
+                None => return Err(self.err("unterminated key")),
+            }
+        }
+    }
+
+    /// A non-negative decimal integer bounded by `max`.
+    fn uint(&mut self, max: u64) -> Result<u64, WireError> {
+        self.skip_ws();
+        let start = self.pos;
+        let mut v: u64 = 0;
+        while let Some(&b) = self.buf.get(self.pos) {
+            match b {
+                b'0'..=b'9' => {
+                    v = v
+                        .checked_mul(10)
+                        .and_then(|v| v.checked_add((b - b'0') as u64))
+                        .ok_or(WireError { msg: "integer overflow", pos: start })?;
+                    if v > max {
+                        return Err(WireError { msg: "integer out of range", pos: start });
+                    }
+                    self.pos += 1;
+                }
+                b'-' | b'.' | b'e' | b'E' | b'+' => {
+                    return Err(self.err("expected non-negative integer"))
+                }
+                _ => break,
+            }
+        }
+        if self.pos == start {
+            return Err(self.err("expected integer"));
+        }
+        Ok(v)
+    }
+}
+
+/// Parse one request line. Keys may appear in any order; `id` and
+/// `prompt` are required, `max_new` defaults to 1. Unknown keys are
+/// rejected (fail-closed wire).
+pub fn parse_request<'s>(
+    line: &[u8],
+    scratch: &'s mut RequestScratch,
+) -> Result<Request<'s>, WireError> {
+    let mut c = Cursor { buf: line, pos: 0 };
+    scratch.prompt.clear();
+    let mut id: Option<u64> = None;
+    let mut max_new: usize = 1;
+    let mut saw_prompt = false;
+    c.expect(b'{', "expected '{'")?;
+    if c.peek() != Some(b'}') {
+        loop {
+            let key = c.key()?;
+            c.expect(b':', "expected ':'")?;
+            match key {
+                b"id" => id = Some(c.uint(u64::MAX)?),
+                b"max_new" => max_new = c.uint(1 << 20)? as usize,
+                b"prompt" => {
+                    saw_prompt = true;
+                    c.expect(b'[', "expected '['")?;
+                    if c.peek() == Some(b']') {
+                        c.pos += 1;
+                    } else {
+                        loop {
+                            scratch.prompt.push(c.uint(u32::MAX as u64)? as u32);
+                            match c.peek() {
+                                Some(b',') => c.pos += 1,
+                                Some(b']') => {
+                                    c.pos += 1;
+                                    break;
+                                }
+                                _ => return Err(c.err("expected ',' or ']'")),
+                            }
+                        }
+                    }
+                }
+                _ => return Err(c.err("unknown key")),
+            }
+            match c.peek() {
+                Some(b',') => c.pos += 1,
+                Some(b'}') => break,
+                _ => return Err(c.err("expected ',' or '}'")),
+            }
+        }
+    }
+    c.expect(b'}', "expected '}'")?;
+    c.skip_ws();
+    if c.pos != line.len() {
+        return Err(c.err("trailing bytes after object"));
+    }
+    let id = id.ok_or(WireError { msg: "missing 'id'", pos: line.len() })?;
+    if !saw_prompt {
+        return Err(WireError { msg: "missing 'prompt'", pos: line.len() });
+    }
+    Ok(Request { id, prompt: &scratch.prompt, max_new })
+}
+
+/// Append a decimal integer without allocating.
+fn push_uint(out: &mut Vec<u8>, mut v: u64) {
+    let mut digits = [0u8; 20];
+    let mut n = 0;
+    loop {
+        digits[n] = b'0' + (v % 10) as u8;
+        v /= 10;
+        n += 1;
+        if v == 0 {
+            break;
+        }
+    }
+    while n > 0 {
+        n -= 1;
+        out.push(digits[n]);
+    }
+}
+
+/// Append `{"id":N,"tokens":[...]}\n` to `out` (a reusable buffer).
+pub fn write_response(out: &mut Vec<u8>, id: u64, tokens: &[u32]) {
+    out.extend_from_slice(b"{\"id\":");
+    push_uint(out, id);
+    out.extend_from_slice(b",\"tokens\":[");
+    for (i, &t) in tokens.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        push_uint(out, t as u64);
+    }
+    out.extend_from_slice(b"]}\n");
+}
+
+/// Append `{"id":N,"prompt":[...],"max_new":M}\n` — the client half of
+/// the wire (the `serve-bench` harness and tests).
+pub fn write_request(out: &mut Vec<u8>, id: u64, prompt: &[u32], max_new: usize) {
+    out.extend_from_slice(b"{\"id\":");
+    push_uint(out, id);
+    out.extend_from_slice(b",\"prompt\":[");
+    for (i, &t) in prompt.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        push_uint(out, t as u64);
+    }
+    out.extend_from_slice(b"],\"max_new\":");
+    push_uint(out, max_new as u64);
+    out.extend_from_slice(b"}\n");
+}
+
+/// Append `{"id":N,"error":"..."}\n`. The message is escaped minimally
+/// (quotes/backslashes/control bytes), enough for the static messages
+/// this crate produces.
+pub fn write_error(out: &mut Vec<u8>, id: u64, msg: &str) {
+    out.extend_from_slice(b"{\"id\":");
+    push_uint(out, id);
+    out.extend_from_slice(b",\"error\":\"");
+    for &b in msg.as_bytes() {
+        match b {
+            b'"' | b'\\' => {
+                out.push(b'\\');
+                out.push(b);
+            }
+            0x00..=0x1f => {
+                out.extend_from_slice(b"\\u00");
+                const HEX: &[u8; 16] = b"0123456789abcdef";
+                out.push(HEX[(b >> 4) as usize]);
+                out.push(HEX[(b & 0xf) as usize]);
+            }
+            _ => out.push(b),
+        }
+    }
+    out.extend_from_slice(b"\"}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn parses_full_request() {
+        let mut s = RequestScratch::default();
+        let r = parse_request(br#" {"id": 7, "prompt": [3, 1, 4], "max_new": 16} "#, &mut s)
+            .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, &[3, 1, 4]);
+        assert_eq!(r.max_new, 16);
+    }
+
+    #[test]
+    fn key_order_is_free_and_max_new_defaults() {
+        let mut s = RequestScratch::default();
+        let r = parse_request(br#"{"prompt":[],"id":1}"#, &mut s).unwrap();
+        assert_eq!(r.id, 1);
+        assert!(r.prompt.is_empty());
+        assert_eq!(r.max_new, 1);
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_leak_previous_prompt() {
+        let mut s = RequestScratch::default();
+        parse_request(br#"{"id":1,"prompt":[9,9,9,9]}"#, &mut s).unwrap();
+        let r = parse_request(br#"{"id":2,"prompt":[5]}"#, &mut s).unwrap();
+        assert_eq!(r.prompt, &[5]);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let cases: &[&[u8]] = &[
+            b"",
+            b"[]",
+            br#"{"id":1}"#,                          // missing prompt
+            br#"{"prompt":[1]}"#,                    // missing id
+            br#"{"id":-1,"prompt":[1]}"#,            // negative id
+            br#"{"id":1,"prompt":[1.5]}"#,           // float token
+            br#"{"id":1,"prompt":[1],"zap":2}"#,     // unknown key
+            br#"{"id":1,"prompt":[1]} extra"#,       // trailing bytes
+            br#"{"id":1,"prompt":[1,]}"#,            // dangling comma
+            br#"{"id":99999999999999999999,"prompt":[1]}"#, // u64 overflow
+        ];
+        for c in cases {
+            let mut s = RequestScratch::default();
+            assert!(
+                parse_request(c, &mut s).is_err(),
+                "accepted malformed {:?}",
+                String::from_utf8_lossy(c)
+            );
+        }
+    }
+
+    #[test]
+    fn responses_cross_validate_against_tree_parser() {
+        let mut out = Vec::new();
+        write_response(&mut out, 42, &[7, 0, 123456]);
+        let line = std::str::from_utf8(&out).unwrap();
+        let j = Json::parse(line.trim_end()).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(42.0));
+        let toks: Vec<f64> = j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap())
+            .collect();
+        assert_eq!(toks, vec![7.0, 0.0, 123456.0]);
+
+        out.clear();
+        write_error(&mut out, 3, "token 99 out of vocab \"16\"");
+        let j = Json::parse(std::str::from_utf8(&out).unwrap().trim_end()).unwrap();
+        assert_eq!(
+            j.get("error").and_then(Json::as_str),
+            Some("token 99 out of vocab \"16\"")
+        );
+    }
+
+    #[test]
+    fn request_writer_roundtrips_through_pull_parser() {
+        let mut out = Vec::new();
+        write_request(&mut out, 11, &[4, 0, 4000000000], 8);
+        let mut s = RequestScratch::default();
+        let r = parse_request(&out, &mut s).unwrap();
+        assert_eq!((r.id, r.prompt, r.max_new), (11, &[4u32, 0, 4000000000][..], 8));
+    }
+
+    #[test]
+    fn request_roundtrips_through_tree_dumper() {
+        // A request emitted by the allocating tree dumper parses on
+        // the pull parser — the two layers agree on the wire.
+        let j = Json::Obj(
+            [
+                ("id".to_string(), Json::Num(9.0)),
+                (
+                    "prompt".to_string(),
+                    Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]),
+                ),
+                ("max_new".to_string(), Json::Num(4.0)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+        .dump();
+        let mut s = RequestScratch::default();
+        let r = parse_request(j.as_bytes(), &mut s).unwrap();
+        assert_eq!((r.id, r.prompt, r.max_new), (9, &[1u32, 2][..], 4));
+    }
+}

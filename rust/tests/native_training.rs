@@ -277,6 +277,34 @@ fn lns_int_tier_with_non_lns_format_is_a_clear_error() {
 }
 
 #[test]
+fn train_stream_is_bit_identical_for_any_eval_cadence() {
+    // Regression for the eval-stream bug: `evaluate()` used to draw
+    // from the *training* DataSource, so two runs differing only in
+    // `eval_every` trained on different batches. With the independent
+    // eval stream, per-step train losses must be bitwise identical for
+    // eval_every 0 vs 50.
+    let losses = |eval_every: usize| -> Vec<u64> {
+        let mut cfg = native_cfg("mlp_tiny", "lns", OptKind::Madam, 120);
+        cfg.eval_every = eval_every;
+        let mut trainer = Trainer::new(cfg).unwrap();
+        trainer.run().unwrap();
+        trainer
+            .log
+            .rows
+            .iter()
+            .filter_map(|r| r.values.get("loss").map(|l| l.to_bits()))
+            .collect()
+    };
+    let no_eval = losses(0);
+    let with_eval = losses(50);
+    assert_eq!(no_eval.len(), 120);
+    assert_eq!(
+        no_eval, with_eval,
+        "train losses diverged between eval_every 0 and 50"
+    );
+}
+
+#[test]
 fn unknown_native_model_is_a_clear_error() {
     let err = Trainer::new(native_cfg("resnet50", "lns", OptKind::Madam, 1)).unwrap_err();
     assert!(err.to_string().contains("presets"), "unexpected error: {err}");

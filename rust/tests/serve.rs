@@ -1,0 +1,170 @@
+//! End-to-end tests for the LNS-native serving path: train a tiny
+//! char-LM natively, checkpoint it, and serve it — asserting the
+//! weight-store round-trip, the batching/worker bit-exactness
+//! contract, and the TCP wire behavior with concurrent clients.
+//!
+//! This suite has NO skip paths (see tests/native_training.rs header).
+
+use lns_madam::backend::BackendKind;
+use lns_madam::coordinator::{checkpoint, OptKind, Param, TrainConfig, Trainer};
+use lns_madam::lns::LnsFormat;
+use lns_madam::serve::{bench_clients, serve_listener, LnsWeightStore, Sequence, ServeEngine};
+use std::path::PathBuf;
+
+/// Train charlm_tiny for a few steps and return its checkpoint params.
+fn trained_params(tag: &str) -> (Vec<Param>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("lns_serve_test_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("m.ckpt");
+    let cfg = TrainConfig {
+        model: "charlm_tiny".into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 30,
+        eval_every: 0,
+        backend: BackendKind::Native,
+        ckpt_path: ckpt.to_str().unwrap().into(),
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg).unwrap();
+    trainer.run().unwrap();
+    let (params, step, _) = checkpoint::load(&ckpt).unwrap();
+    assert_eq!(step, 30);
+    (params, ckpt)
+}
+
+#[test]
+fn weight_store_round_trips_a_trained_checkpoint_bitwise() {
+    let (params, _) = trained_params("roundtrip");
+    let fmt = LnsFormat::PAPER8;
+    let store = LnsWeightStore::from_params(&params, fmt, 2).unwrap();
+    assert!(
+        store.resident_bytes() * 3 <= store.f32_bytes(),
+        "store {} bytes vs f32 {} exceeds the 1/3 budget",
+        store.resident_bytes(),
+        store.f32_bytes()
+    );
+    for (idx, p) in params.iter().enumerate() {
+        // Independent scalar reference: per-element LnsFormat
+        // encode/decode with the per-tensor scale.
+        let absmax = p.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = fmt.scale_for_absmax(absmax);
+        let want: Vec<u32> = p
+            .data
+            .iter()
+            .map(|&x| fmt.decode(fmt.encode(x, scale), scale).to_bits())
+            .collect();
+        let mut got = vec![0.0f32; p.data.len()];
+        store.decode_into(idx, &mut got, 3);
+        let got: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "store round-trip diverged for '{}'", p.name);
+    }
+}
+
+#[test]
+fn batched_serving_matches_one_at_a_time_on_a_trained_model() {
+    // The batching-invariance property, over a *trained* checkpoint
+    // (engine unit tests cover random init): responses identical
+    // whether requests run solo or coalesced, at any worker count.
+    let (params, _) = trained_params("batching");
+    let prompts: Vec<Vec<u32>> =
+        vec![vec![0, 1, 2], vec![7, 6], vec![3], vec![1, 1, 1, 1], vec![5, 0, 2]];
+    let mut solo = ServeEngine::from_params(&params, LnsFormat::PAPER8, 1).unwrap();
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| solo.generate(i as u64, p, 7).unwrap())
+        .collect();
+
+    for workers in [1usize, 2, 4] {
+        let mut engine = ServeEngine::from_params(&params, LnsFormat::PAPER8, workers).unwrap();
+        let mut active: Vec<Sequence> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Sequence::new(i as u64, p, 7).unwrap())
+            .collect();
+        for _ in 0..7 {
+            engine.tick(&mut active).unwrap();
+        }
+        for s in &active {
+            assert_eq!(
+                s.generated, want[s.id as usize],
+                "sequence {} diverged (workers {workers})",
+                s.id
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_serving_answers_concurrent_clients_consistently() {
+    let (params, _) = trained_params("tcp");
+    let mut engine = ServeEngine::from_params(&params, LnsFormat::PAPER8, 2).unwrap();
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    // 3 clients x 2 requests each = 6 responses, then the loop exits.
+    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, 64, 6));
+    let stats = bench_clients(&addr, 3, 2, &[1, 2, 3], 5).unwrap();
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.tokens_generated, 30);
+    assert!(stats.consistent, "identical prompts got different responses");
+    assert!(stats.p50_ms.is_finite() && stats.p99_ms >= stats.p50_ms);
+}
+
+#[test]
+fn tcp_serving_rejects_bad_requests_without_dying() {
+    use std::io::{BufRead, BufReader, Write};
+    let (params, _) = trained_params("badreq");
+    let mut engine = ServeEngine::from_params(&params, LnsFormat::PAPER8, 1).unwrap();
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    // Malformed-JSON errors are answered by the reader thread and do
+    // not count toward max_requests; engine-level rejections and real
+    // responses do. Budget: out-of-vocab rejection + good request = 2.
+    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, 64, 2));
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    // Malformed JSON -> wire error, connection stays up.
+    stream.write_all(b"{\"id\":1,\"prompt\":[1,]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "wanted wire error, got {line:?}");
+
+    // Out-of-vocab token -> engine rejection with the request id.
+    line.clear();
+    stream.write_all(b"{\"id\":2,\"prompt\":[9999]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("\"id\":2") && line.contains("out of vocab"),
+        "wanted vocab rejection, got {line:?}"
+    );
+
+    // The same connection still serves a good request.
+    line.clear();
+    stream.write_all(b"{\"id\":3,\"prompt\":[1],\"max_new\":2}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("\"id\":3") && line.contains("tokens"),
+        "wanted tokens, got {line:?}"
+    );
+    drop(stream);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn serve_cli_config_rejects_missing_checkpoint_file() {
+    use lns_madam::coordinator::ServeConfig;
+    let cfg = ServeConfig {
+        ckpt_path: "definitely_missing.ckpt".into(),
+        ..ServeConfig::default()
+    };
+    let err = lns_madam::serve::run(&cfg).unwrap_err();
+    assert!(
+        err.to_string().contains("definitely_missing.ckpt"),
+        "unexpected error: {err}"
+    );
+}
