@@ -7,7 +7,9 @@
 //! the native backend) vs weight update (rust), the ISSUE-5 dispatch
 //! (`"pool"`) and packed-GEMM (`"gemm_kernel"`) microbenches, the
 //! ISSUE-7 scalar-vs-AVX2 kernel comparison (`"simd"`), the ISSUE-8
-//! batched-serving latency/throughput sweep (`"serving"`), and the
+//! batched-serving latency/throughput sweep (`"serving"`), the ISSUE-9
+//! data-parallel step-time grid and gradient-exchange byte accounting
+//! (`"ddp"`, with run provenance under `"meta"`), and the
 //! native training throughput sweep across thread counts, which emits
 //! the machine-readable `BENCH_native_training.json` (the repo's
 //! recorded perf trajectory — see DESIGN.md §Performance & testing).
@@ -20,8 +22,10 @@
 //! overrides the JSON path. Unknown flags are ignored (cargo may pass
 //! its own).
 
-use lns_madam::backend::BackendKind;
-use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::backend::{Batch, BackendKind, ExecBackend};
+use lns_madam::coordinator::ddp::DdpEngine;
+use lns_madam::coordinator::{OptKind, SyntheticClassification, TrainConfig, Trainer};
+use lns_madam::model::init_params;
 use lns_madam::lns::kernels::{self, QuantScratch};
 use lns_madam::lns::quant::quantize_slice;
 use lns_madam::lns::{
@@ -32,6 +36,7 @@ use lns_madam::util::bench::Bencher;
 use lns_madam::util::json::Json;
 use lns_madam::util::pool;
 use lns_madam::util::rng::Rng;
+use lns_madam::util::simd;
 use lns_madam::util::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -82,6 +87,162 @@ fn time_native_training(
     }
     let secs = t0.elapsed().as_secs_f64();
     (losses, measure as f64 / secs)
+}
+
+/// Like [`time_native_training`] but through the data-parallel engine:
+/// `replicas` shard every global batch, each replica running `workers`
+/// pool workers, with the default 8-bit lns gradient exchange.
+fn time_ddp_training(
+    preset: &str,
+    replicas: usize,
+    workers: usize,
+    warmup: usize,
+    measure: usize,
+) -> (Vec<f32>, f64) {
+    let cfg = TrainConfig {
+        model: preset.into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 1,
+        eval_every: 0,
+        qu_bits: 16,
+        backend: BackendKind::Native,
+        replicas,
+        parallelism: workers,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg).expect("ddp trainer");
+    let mut losses = Vec::with_capacity(warmup + measure);
+    for _ in 0..warmup {
+        losses.push(trainer.step().expect("ddp warmup step").0);
+    }
+    let t0 = Instant::now();
+    for _ in 0..measure {
+        losses.push(trainer.step().expect("ddp measured step").0);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (losses, measure as f64 / secs)
+}
+
+/// Run provenance for the BENCH json: which commit and which machine
+/// produced this trajectory point. Written as the top-level `"meta"`
+/// block; CI greps for it so a schema regression fails the smoke run.
+fn meta_section() -> BTreeMap<String, Json> {
+    let git_sha = std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let mut m = BTreeMap::new();
+    m.insert("git_sha".to_string(), Json::Str(git_sha));
+    m.insert("isa".to_string(), Json::Str(simd::isa_name().into()));
+    m.insert("simd_tier".to_string(), Json::Str(simd::tier_name().into()));
+    m.insert("host_cores".to_string(), Json::Num(Parallelism::Auto.worker_count() as f64));
+    m
+}
+
+/// ISSUE-9 section: step time across the replicas x workers grid
+/// (asserting every point is bit-identical to the single-replica
+/// baseline before trusting its timing), plus the measured gradient
+/// exchange bytes of the compressed 8-bit wire against what an f32
+/// exchange of the same tensors would have moved.
+fn ddp_section(smoke: bool) -> BTreeMap<String, Json> {
+    let preset = if smoke { "mlp_tiny" } else { "mlp" };
+    let grid: &[(usize, usize)] = if smoke {
+        &[(1, 1), (2, 1)]
+    } else {
+        &[(1, 1), (2, 1), (2, 2), (4, 1), (4, 2)]
+    };
+    let (warmup, measure) = if smoke { (1, 1) } else { (2, 6) };
+
+    println!("\n--- data-parallel training (fixed-tree 8-bit lns exchange) ---");
+    let mut reference: Option<Vec<u32>> = None;
+    let mut results = Vec::new();
+    for &(replicas, workers) in grid {
+        let (losses, sps) = time_ddp_training(preset, replicas, workers, warmup, measure);
+        let bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => assert_eq!(
+                want, &bits,
+                "{preset}: ddp losses at {replicas} replicas x {workers} workers diverged"
+            ),
+        }
+        println!(
+            "ddp {preset:12} replicas={replicas} workers={workers}  {sps:8.2} steps/s  ({:.2} ms/step)",
+            1e3 / sps
+        );
+        let mut m = BTreeMap::new();
+        m.insert("replicas".to_string(), Json::Num(replicas as f64));
+        m.insert("workers_per_replica".to_string(), Json::Num(workers as f64));
+        m.insert("steps_per_sec".to_string(), Json::Num(sps));
+        m.insert("ms_per_step".to_string(), Json::Num(1e3 / sps));
+        results.push(Json::Obj(m));
+    }
+
+    // Exchange accounting: drive the engine directly for a few steps so
+    // the byte counters cover exactly the traffic we report.
+    let cfg = TrainConfig {
+        model: preset.into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 1,
+        eval_every: 0,
+        qu_bits: 16,
+        backend: BackendKind::Native,
+        replicas: 2,
+        parallelism: 1,
+        ..TrainConfig::default()
+    };
+    let mut engine = DdpEngine::new(&cfg).expect("ddp engine");
+    let contract = engine.contract().clone();
+    let params = init_params(&contract.params, &mut Rng::new(9));
+    let [rows, dim] = contract.data_shape;
+    let mut source = SyntheticClassification::new(dim, contract.n_out, 0.1, 9);
+    for _ in 0..3 {
+        let (xs, ys) = source.batch(rows);
+        let batch = Batch::Classification { shape: [rows, dim], xs, ys };
+        engine.train_step(&params, &batch).expect("ddp step");
+    }
+    let stats = engine.exchange_stats();
+    assert!(stats.payload_bytes > 0 && stats.f32_bytes > 0 && stats.steps == 3);
+    // The ISSUE-9 acceptance bound: an 8-bit code plane is exactly a
+    // quarter of the f32 it replaces, so compressed <= 25% holds with
+    // equality (scales travel separately and are reported separately).
+    assert!(
+        stats.payload_bytes * 4 <= stats.f32_bytes,
+        "8-bit wire must move <= 25% of the f32 exchange bytes ({} vs {})",
+        stats.payload_bytes,
+        stats.f32_bytes
+    );
+    let ratio = (stats.payload_bytes + stats.scale_bytes) as f64 / stats.f32_bytes as f64;
+    println!(
+        "ddp exchange: {} code bytes + {} scale bytes vs {} f32 bytes over {} steps ({:.1}% of f32)",
+        stats.payload_bytes,
+        stats.scale_bytes,
+        stats.f32_bytes,
+        stats.steps,
+        100.0 * ratio
+    );
+
+    let mut json = BTreeMap::new();
+    json.insert("smoke".to_string(), Json::Bool(smoke));
+    json.insert("preset".to_string(), Json::Str(preset.into()));
+    json.insert("wire".to_string(), Json::Str("lns".into()));
+    json.insert("results".to_string(), Json::Arr(results));
+    let mut ex = BTreeMap::new();
+    ex.insert("payload_bytes".to_string(), Json::Num(stats.payload_bytes as f64));
+    ex.insert("scale_bytes".to_string(), Json::Num(stats.scale_bytes as f64));
+    ex.insert("f32_bytes".to_string(), Json::Num(stats.f32_bytes as f64));
+    ex.insert("steps".to_string(), Json::Num(stats.steps as f64));
+    ex.insert("compressed_ratio".to_string(), Json::Num(ratio));
+    json.insert("exchange".to_string(), Json::Obj(ex));
+    json
 }
 
 /// Quantizer bench results, merged into the BENCH json by
@@ -885,6 +1046,11 @@ fn native_training_section(
     // ISSUE-8 section: batched LNS-native serving latency/throughput
     // vs concurrent clients at each worker count.
     root.insert("serving".to_string(), Json::Obj(serving_json));
+    // ISSUE-9 sections: data-parallel step time + exchange bytes, and
+    // the provenance block that says which commit/machine produced
+    // this trajectory point.
+    root.insert("ddp".to_string(), Json::Obj(ddp_section(smoke)));
+    root.insert("meta".to_string(), Json::Obj(meta_section()));
     let json = Json::Obj(root).dump();
     std::fs::write(out_path, json).expect("write bench json");
     let shown = std::fs::canonicalize(out_path)

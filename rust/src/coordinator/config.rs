@@ -97,6 +97,18 @@ pub struct TrainConfig {
     /// bit-identical by contract (see DESIGN.md §SIMD kernels); the
     /// `LNS_MADAM_SIMD` env var overrides this knob for CI.
     pub simd: String,
+    /// Data-parallel replica count: 0 (default) = off, the single
+    /// monolithic backend; N >= 1 shards every global batch across N
+    /// model replicas with a fixed-tree gradient all-reduce. Because
+    /// the engine always decomposes the batch into the same logical
+    /// shards, `--replicas 1` and `--replicas 4` are bit-identical
+    /// (see DESIGN.md §Data-parallel); `replicas = 0` keeps the
+    /// legacy unsharded numerics. Requires the native backend.
+    pub replicas: usize,
+    /// Gradient-exchange precision between replicas: "lns" (default)
+    /// ships Q_G-compressed 8/16-bit code planes, "f32" ships raw
+    /// floats (the reference oracle).
+    pub ddp_wire: String,
 }
 
 impl Default for TrainConfig {
@@ -122,6 +134,8 @@ impl Default for TrainConfig {
             parallelism: 0,
             exec_tier: "f32-exact".into(),
             simd: "auto".into(),
+            replicas: 0,
+            ddp_wire: "lns".into(),
         }
     }
 }
@@ -186,6 +200,8 @@ impl TrainConfig {
             parallelism: non_negative("train", "parallelism", d.parallelism as i64)? as usize,
             exec_tier: cfg.str_or("train", "exec_tier", &d.exec_tier),
             simd: cfg.str_or("train", "simd", &d.simd),
+            replicas: non_negative("train", "replicas", d.replicas as i64)? as usize,
+            ddp_wire: cfg.str_or("train", "ddp_wire", &d.ddp_wire),
         })
     }
 
@@ -283,6 +299,8 @@ mod tests {
         assert_eq!(t.gamma_fwd, 8.0);
         assert_eq!(t.exec_tier, "f32-exact");
         assert_eq!(t.simd, "auto");
+        assert_eq!(t.replicas, 0, "data parallelism defaults to off");
+        assert_eq!(t.ddp_wire, "lns", "compressed exchange is the default wire");
         assert_eq!(TrainConfig::maxexp(8), 127.0);
     }
 
@@ -343,6 +361,15 @@ mod tests {
     fn rejects_negative_parallelism() {
         let err = load_toml("neg_par.toml", "[train]\nparallelism = -2\n").unwrap_err();
         assert!(err.to_string().contains("parallelism"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn parses_and_range_checks_ddp_knobs() {
+        let t = load_toml("ddp.toml", "[train]\nreplicas = 4\nddp_wire = \"f32\"\n").unwrap();
+        assert_eq!(t.replicas, 4);
+        assert_eq!(t.ddp_wire, "f32");
+        let err = load_toml("neg_rep.toml", "[train]\nreplicas = -4\n").unwrap_err();
+        assert!(err.to_string().contains("replicas"), "unexpected: {err}");
     }
 
     #[test]

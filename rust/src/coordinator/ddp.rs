@@ -1,0 +1,743 @@
+//! Deterministic single-process data-parallel training with a
+//! Q_G-compressed gradient exchange (ROADMAP item 4).
+//!
+//! [`DdpEngine`] wraps N independent [`NativeBackend`] replicas behind
+//! the same [`ExecBackend`] trait the trainer already drives. Each
+//! global batch decomposes into a **canonical set of logical shards**
+//! whose count depends only on the batch size — never on the replica
+//! count — and each replica runs fwd/bwd over its contiguous block of
+//! shards. Per-shard gradients are encoded to LNS code planes (the
+//! paper's Q_G applied to communication instead of computation), the
+//! root decodes all shard planes **in shard order**, and reduces them
+//! through a fixed gap-doubling pairwise tree. Because the shard
+//! decomposition, the per-shard quantization, and the reduction order
+//! are all functions of the batch alone, the resulting step is
+//! bit-identical for any replica count and any worker count — the
+//! PR 3–5 determinism contract extended to distribution.
+//!
+//! The wire format flushes the bottom exponent code to zero so one
+//! element fits one `u8` at the paper's 8-bit format (`u16` up to 16
+//! bits): byte `0x00` is exact zero (including flushed underflow),
+//! otherwise the top bit is the sign and the low bits the code in
+//! `1..=max_code`. That is 255 of 256 states used — exactly 25% of an
+//! f32 exchange — versus the 257-state `LnsValue` domain that forces
+//! `serve/store.rs` to carry a separate zeros bitmap. A flushed
+//! element's absolute error is at most `scale` (the bottom-code
+//! magnitude), far below the Lemma-1 relative bound everywhere else.
+//! The uncompressed f32 exchange is retained as `--ddp-wire f32`, the
+//! oracle the tests hold the compressed path against.
+
+use crate::backend::{Batch, ExecBackend, ModelContract, NativeBackend, Param, StepOutput};
+use crate::coordinator::config::TrainConfig;
+use crate::lns::kernels::{decode_lut, encode_rows_into, group_scales_into};
+use crate::lns::{LnsFormat, OpCounts, Parallelism, Rounding, Scaling};
+use crate::util::pool;
+use anyhow::{bail, Result};
+
+/// Number of logical micro-shards a global batch decomposes into: the
+/// largest of {8, 4, 2, 1} dividing the row count. A function of the
+/// batch size only, so the shard boundaries — and therefore every
+/// per-shard quantization scale and the reduction tree shape — are
+/// identical no matter how many replicas the shards land on.
+pub fn logical_shards(batch_rows: usize) -> usize {
+    for l in [8usize, 4, 2] {
+        if batch_rows % l == 0 {
+            return l;
+        }
+    }
+    1
+}
+
+/// Exchange precision for the gradient all-reduce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireKind {
+    /// LNS code planes (Q_G on the wire): `u8` per element up to
+    /// 8-bit formats, `u16` up to 16-bit.
+    Lns(LnsFormat),
+    /// Uncompressed f32 — the reference oracle.
+    F32,
+}
+
+impl WireKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireKind::Lns(_) => "lns",
+            WireKind::F32 => "f32",
+        }
+    }
+}
+
+/// One tensor's packed exchange payload.
+pub enum WirePlane {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    F32(Vec<f32>),
+}
+
+impl WirePlane {
+    /// Bytes this plane ships across the (simulated) wire.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            WirePlane::U8(v) => v.len() as u64,
+            WirePlane::U16(v) => 2 * v.len() as u64,
+            WirePlane::F32(v) => 4 * v.len() as u64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            WirePlane::U8(v) => v.len(),
+            WirePlane::U16(v) => v.len(),
+            WirePlane::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One encoded gradient tensor: the per-shard-per-tensor group scale
+/// plus the packed code plane.
+pub struct WireTensor {
+    pub scale: f32,
+    pub plane: WirePlane,
+}
+
+/// Reusable encode scratch (sign/code lanes + the scale vector), one
+/// per replica thread.
+#[derive(Default)]
+pub struct WireScratch {
+    signs: Vec<i8>,
+    codes: Vec<u32>,
+    scales: Vec<f32>,
+}
+
+/// Encode one gradient tensor for the exchange. LNS planes use the
+/// existing `encode_rows_into` kernel (per-tensor scale, nearest
+/// rounding — exactly the training-time Q_G pipeline) and then pack
+/// sign+code into one word with the bottom code flushed to zero:
+/// `0x00` = zero, else `sign << (W-1) | code` with `code >= 1`.
+pub fn encode_wire(grad: &[f32], kind: WireKind, ws: &mut WireScratch) -> WireTensor {
+    encode_wire_rounded(grad, kind, Rounding::Nearest, None, ws)
+}
+
+/// [`encode_wire`] with an explicit rounding mode: the engine ships
+/// nearest (matching the training-time Q_G), but the wire property
+/// suite exercises the stochastic path too, keyed by the same
+/// `CounterRng` derivation as the fake-quant kernels so both sides of
+/// the comparison draw identical uniforms.
+pub fn encode_wire_rounded(
+    grad: &[f32],
+    kind: WireKind,
+    rounding: Rounding,
+    rng: Option<&mut crate::util::rng::Rng>,
+    ws: &mut WireScratch,
+) -> WireTensor {
+    let fmt = match kind {
+        WireKind::F32 => {
+            return WireTensor { scale: 1.0, plane: WirePlane::F32(grad.to_vec()) };
+        }
+        WireKind::Lns(fmt) => fmt,
+    };
+    let n = grad.len();
+    ws.signs.clear();
+    ws.signs.resize(n, 0);
+    ws.codes.clear();
+    ws.codes.resize(n, 0);
+    group_scales_into(&mut ws.scales, grad, 1, n, fmt, Scaling::PerTensor);
+    let scale = ws.scales[0];
+    // Workers fixed at 1: the encode runs inside a replica thread and
+    // is bit-identical at any worker count anyway, so there is nothing
+    // to gain from nesting pool dispatch here.
+    encode_rows_into(
+        &mut ws.signs,
+        &mut ws.codes,
+        grad,
+        1,
+        n,
+        fmt,
+        Scaling::PerTensor,
+        rounding,
+        rng,
+        &ws.scales,
+        1,
+    );
+    let plane = if fmt.bits <= 8 {
+        let mut p = Vec::with_capacity(n);
+        for (&s, &c) in ws.signs.iter().zip(ws.codes.iter()) {
+            p.push(if s == 0 || c == 0 {
+                0u8
+            } else {
+                (if s < 0 { 0x80u8 } else { 0 }) | c as u8
+            });
+        }
+        WirePlane::U8(p)
+    } else {
+        let mut p = Vec::with_capacity(n);
+        for (&s, &c) in ws.signs.iter().zip(ws.codes.iter()) {
+            p.push(if s == 0 || c == 0 {
+                0u16
+            } else {
+                (if s < 0 { 1u16 << 15 } else { 0 }) | c as u16
+            });
+        }
+        WirePlane::U16(p)
+    };
+    WireTensor { scale, plane }
+}
+
+/// Decode one wire tensor into a caller-owned f32 buffer, through the
+/// same process-cached LUT (and the same `sign * scale * lut[code]`
+/// product order) as `decode_rows_into`, so the compressed exchange
+/// decodes bit-identically to the training-time Q_G round-trip for
+/// every non-flushed element.
+pub fn decode_wire_into(out: &mut [f32], wt: &WireTensor, kind: WireKind) {
+    assert_eq!(out.len(), wt.plane.len(), "wire decode length mismatch");
+    match (&wt.plane, kind) {
+        (WirePlane::F32(v), _) => out.copy_from_slice(v),
+        (WirePlane::U8(p), WireKind::Lns(fmt)) => {
+            let lut = decode_lut(fmt);
+            for (o, &b) in out.iter_mut().zip(p.iter()) {
+                *o = if b == 0 {
+                    0.0
+                } else {
+                    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+                    sign * wt.scale * lut[(b & 0x7f) as usize]
+                };
+            }
+        }
+        (WirePlane::U16(p), WireKind::Lns(fmt)) => {
+            let lut = decode_lut(fmt);
+            for (o, &w) in out.iter_mut().zip(p.iter()) {
+                *o = if w == 0 {
+                    0.0
+                } else {
+                    let sign = if w & (1 << 15) != 0 { -1.0f32 } else { 1.0 };
+                    sign * wt.scale * lut[(w & 0x7fff) as usize]
+                };
+            }
+        }
+        _ => unreachable!("LNS plane decoded with an f32 wire kind"),
+    }
+}
+
+/// Fixed-order pairwise tree reduction over equal-length buffers,
+/// in place into `bufs[0]`: gap-doubling pairing (`bufs[i] +=
+/// bufs[i+gap]` for gap = 1, 2, 4, ...), which for a power-of-two
+/// buffer count is exactly the balanced binary tree
+/// `((b0+b1)+(b2+b3))+...`. This order is the determinism contract:
+/// the root always reduces the logical shards this way, so the sum is
+/// one fixed floating-point expression regardless of which replica
+/// produced which shard.
+pub fn tree_reduce_into(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            let (dst, rest) = bufs.split_at_mut(i + gap);
+            let (dst, src) = (&mut dst[i], &rest[0]);
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
+/// The scalar form of [`tree_reduce_into`] (same pairing), for shard
+/// losses and accuracies.
+pub fn tree_reduce_scalars(vals: &[f32]) -> f32 {
+    let mut v = vals.to_vec();
+    let n = v.len();
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            v[i] += v[i + gap];
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    v.first().copied().unwrap_or(0.0)
+}
+
+/// Copy one contiguous row range out of a batch (both families carry
+/// their shape in the value, so shard-sized batches flow through the
+/// models unchanged).
+fn shard_batch(batch: &Batch, start: usize, rows: usize) -> Batch {
+    match batch {
+        Batch::Classification { shape, xs, ys } => {
+            let d = shape[1];
+            Batch::Classification {
+                shape: [rows, d],
+                xs: xs[start * d..(start + rows) * d].to_vec(),
+                ys: ys[start..start + rows].to_vec(),
+            }
+        }
+        Batch::Lm { shape, tokens, targets } => {
+            let d = shape[1];
+            Batch::Lm {
+                shape: [rows, d],
+                tokens: tokens[start * d..(start + rows) * d].to_vec(),
+                targets: targets[start * d..(start + rows) * d].to_vec(),
+            }
+        }
+    }
+}
+
+/// Cumulative exchange-volume counters, for the `"ddp"` bench section.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeStats {
+    /// Code-plane (or f32) payload bytes shipped shard→root.
+    pub payload_bytes: u64,
+    /// Per-(shard, tensor) f32 group scales riding alongside the LNS
+    /// planes (zero on the f32 wire).
+    pub scale_bytes: u64,
+    /// What the same exchange would ship uncompressed.
+    pub f32_bytes: u64,
+    /// Train steps the counters cover.
+    pub steps: u64,
+}
+
+/// Resolve the `replicas × per-replica-workers` layout for a config:
+/// the requested worker knob is scaled down through
+/// `pool::effective_workers` when `replicas × workers` would
+/// oversubscribe the host cores. Returns `(replicas, workers per
+/// replica)`; the train banner prints exactly this.
+pub fn resolved_layout(cfg: &TrainConfig) -> (usize, usize) {
+    let replicas = cfg.replicas.max(1);
+    let requested = Parallelism::from_knob(cfg.parallelism).worker_count();
+    let cores = Parallelism::Auto.worker_count();
+    (replicas, pool::effective_workers(requested, cores, replicas))
+}
+
+/// Per-shard fwd/bwd output plus its encoded exchange payload.
+struct ShardResult {
+    loss: f32,
+    acc: Option<f32>,
+    wires: Vec<WireTensor>,
+}
+
+/// N-replica data-parallel engine over [`NativeBackend`]s. See the
+/// module docs for the determinism argument.
+pub struct DdpEngine {
+    replicas: Vec<NativeBackend>,
+    contract: ModelContract,
+    wire: WireKind,
+    workers_per_replica: usize,
+    stats: ExchangeStats,
+}
+
+impl DdpEngine {
+    pub fn new(cfg: &TrainConfig) -> Result<DdpEngine> {
+        let n = cfg.replicas;
+        if n == 0 {
+            bail!("DdpEngine requires --replicas >= 1");
+        }
+        let wire = match cfg.ddp_wire.as_str() {
+            "f32" => WireKind::F32,
+            "lns" => {
+                // Match the Q_G (backward) format when training in LNS;
+                // otherwise exchange in the paper's 8/8 format.
+                let fmt = if cfg.format == "lns" {
+                    let g = cfg.gamma_bwd.round() as u32;
+                    if g == 0 || !g.is_power_of_two() {
+                        bail!("lns gamma must be a power of two, got {}", cfg.gamma_bwd);
+                    }
+                    if !(2..=16).contains(&cfg.bits_bwd) {
+                        bail!(
+                            "--ddp-wire lns packs codes into u8/u16 planes, so bits_bwd \
+                             must be in 2..=16 (got {}); use --ddp-wire f32 above that",
+                            cfg.bits_bwd
+                        );
+                    }
+                    LnsFormat::new(cfg.bits_bwd, g)
+                } else {
+                    LnsFormat::new(8, 8)
+                };
+                WireKind::Lns(fmt)
+            }
+            other => bail!("unknown --ddp-wire '{other}' (expected lns|f32)"),
+        };
+        // Satellite guard: never oversubscribe the host — each replica
+        // gets at most cores/replicas workers of the requested knob.
+        let (_, per) = resolved_layout(cfg);
+        let rcfg = TrainConfig { parallelism: per, ..cfg.clone() };
+        let mut replicas = Vec::with_capacity(n);
+        for _ in 0..n {
+            replicas.push(NativeBackend::new(&rcfg)?);
+        }
+        let contract = replicas[0].contract().clone();
+        let rows = contract.data_shape[0];
+        let shards = logical_shards(rows);
+        if shards % n != 0 {
+            let valid: Vec<usize> = (1..=shards).filter(|r| shards % r == 0).collect();
+            bail!(
+                "--replicas {n} must divide the {shards} logical shard(s) of batch {rows} \
+                 (valid replica counts here: {valid:?})"
+            );
+        }
+        Ok(DdpEngine {
+            replicas,
+            contract,
+            wire,
+            workers_per_replica: per,
+            stats: ExchangeStats::default(),
+        })
+    }
+
+    pub fn wire(&self) -> WireKind {
+        self.wire
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn workers_per_replica(&self) -> usize {
+        self.workers_per_replica
+    }
+
+    /// Cumulative exchange volume since construction.
+    pub fn exchange_stats(&self) -> ExchangeStats {
+        self.stats
+    }
+}
+
+impl ExecBackend for DdpEngine {
+    fn name(&self) -> &'static str {
+        "native-ddp"
+    }
+
+    fn contract(&self) -> &ModelContract {
+        &self.contract
+    }
+
+    fn train_step(&mut self, params: &[Param], batch: &Batch) -> Result<StepOutput> {
+        let rows = match batch {
+            Batch::Classification { shape, .. } | Batch::Lm { shape, .. } => shape[0],
+        };
+        let shards = logical_shards(rows);
+        let n = self.replicas.len();
+        if shards % n != 0 {
+            bail!("--replicas {n} must divide the {shards} logical shard(s) of batch {rows}");
+        }
+        let per = shards / n;
+        let shard_rows = rows / shards;
+        let wire = self.wire;
+        // Replica r computes the contiguous shard block [r*per,
+        // (r+1)*per) and encodes each shard's gradients locally (the
+        // "send"); spawn-per-replica threads so each replica's inner
+        // GEMMs still dispatch onto the shared persistent pool.
+        let tasks: Vec<Box<dyn FnOnce() -> Result<Vec<ShardResult>> + Send + '_>> = self
+            .replicas
+            .iter_mut()
+            .enumerate()
+            .map(|(r, backend)| {
+                let task: Box<dyn FnOnce() -> Result<Vec<ShardResult>> + Send + '_> =
+                    Box::new(move || {
+                        let mut ws = WireScratch::default();
+                        let mut out = Vec::with_capacity(per);
+                        for s in r * per..(r + 1) * per {
+                            let shard = shard_batch(batch, s * shard_rows, shard_rows);
+                            let StepOutput { loss, acc, grads } =
+                                backend.train_step(params, &shard)?;
+                            let wires =
+                                grads.iter().map(|g| encode_wire(g, wire, &mut ws)).collect();
+                            out.push(ShardResult { loss, acc, wires });
+                        }
+                        Ok(out)
+                    });
+                task
+            })
+            .collect();
+        // Flatten replica blocks back into global shard order — the
+        // root sees shard 0..shards in the same order at any N.
+        let mut shard_results = Vec::with_capacity(shards);
+        for r in pool::join_all_spawning(tasks) {
+            shard_results.extend(r?);
+        }
+        // Root: decode every shard plane in shard order, reduce through
+        // the fixed tree, and rescale by 1/shards (a power of two, so
+        // the mean-of-means is exact).
+        let inv = 1.0 / shards as f32;
+        let mut grads = Vec::with_capacity(params.len());
+        for (t, p) in params.iter().enumerate() {
+            let len = p.data.len();
+            let mut bufs: Vec<Vec<f32>> = shard_results
+                .iter()
+                .map(|sh| {
+                    let mut buf = vec![0.0f32; len];
+                    decode_wire_into(&mut buf, &sh.wires[t], wire);
+                    buf
+                })
+                .collect();
+            for sh in &shard_results {
+                self.stats.payload_bytes += sh.wires[t].plane.payload_bytes();
+                if matches!(wire, WireKind::Lns(_)) {
+                    self.stats.scale_bytes += 4;
+                }
+                self.stats.f32_bytes += 4 * len as u64;
+            }
+            tree_reduce_into(&mut bufs);
+            let mut g = bufs.swap_remove(0);
+            for x in g.iter_mut() {
+                *x *= inv;
+            }
+            grads.push(g);
+        }
+        self.stats.steps += 1;
+        let losses: Vec<f32> = shard_results.iter().map(|s| s.loss).collect();
+        let loss = tree_reduce_scalars(&losses) * inv;
+        let acc = if shard_results.iter().all(|s| s.acc.is_some()) {
+            let accs: Vec<f32> = shard_results.iter().map(|s| s.acc.unwrap()).collect();
+            Some(tree_reduce_scalars(&accs) * inv)
+        } else {
+            None
+        };
+        Ok(StepOutput { loss, acc, grads })
+    }
+
+    fn eval_step(&mut self, params: &[Param], batch: &Batch) -> Result<Option<(f32, Option<f32>)>> {
+        // Eval is monolithic on replica 0: a forward pass has no
+        // exchange to compress, and running it unsharded keeps eval
+        // numerics identical to the single-backend path.
+        self.replicas[0].eval_step(params, batch)
+    }
+
+    fn take_op_counts(&mut self) -> Option<OpCounts> {
+        // Drain every replica; u64 counter adds are order-independent,
+        // so the merged totals are deterministic too.
+        let mut total = OpCounts::default();
+        for r in &mut self.replicas {
+            if let Some(c) = r.take_op_counts() {
+                total.add(&c);
+            }
+        }
+        Some(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::model::init_params;
+    use crate::util::rng::Rng;
+
+    fn ddp_cfg(replicas: usize) -> TrainConfig {
+        TrainConfig {
+            model: "mlp_tiny".into(),
+            backend: BackendKind::Native,
+            replicas,
+            parallelism: 1,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn mlp_tiny_batch(rows: usize) -> Batch {
+        let d = 16;
+        let xs: Vec<f32> = (0..rows * d).map(|i| ((i * 37) % 23) as f32 * 0.1 - 1.0).collect();
+        let ys: Vec<i32> = (0..rows).map(|i| (i % 16) as i32).collect();
+        Batch::Classification { shape: [rows, d], xs, ys }
+    }
+
+    #[test]
+    fn logical_shards_depends_only_on_batch_size() {
+        assert_eq!(logical_shards(128), 8);
+        assert_eq!(logical_shards(32), 8);
+        assert_eq!(logical_shards(16), 8);
+        assert_eq!(logical_shards(8), 8);
+        assert_eq!(logical_shards(12), 4);
+        assert_eq!(logical_shards(6), 2);
+        assert_eq!(logical_shards(7), 1);
+        assert_eq!(logical_shards(1), 1);
+    }
+
+    #[test]
+    fn wire_roundtrip_hits_zero_sign_and_ftz_cases() {
+        let fmt = LnsFormat::new(8, 8);
+        let kind = WireKind::Lns(fmt);
+        let mut ws = WireScratch::default();
+        // absmax 4.0 maps onto the top code; 1e-9 is ~32 binades below
+        // it, far under the bottom code, so it must flush to zero.
+        let data = [0.0f32, 4.0, -4.0, 1.0, -0.25, 1e-9];
+        let wt = encode_wire(&data, kind, &mut ws);
+        match &wt.plane {
+            WirePlane::U8(p) => {
+                assert_eq!(p.len(), data.len());
+                assert_eq!(p[0], 0, "exact zero must ship as 0x00");
+                assert_eq!(p[1], 127, "absmax maps to the positive top code");
+                assert_eq!(p[2], 0x80 | 127, "negative absmax sets the sign bit");
+                assert_eq!(p[5], 0, "sub-bottom-code magnitude flushes to zero");
+            }
+            _ => panic!("8-bit format must pack into a u8 plane"),
+        }
+        let mut out = vec![0.0f32; data.len()];
+        decode_wire_into(&mut out, &wt, kind);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[5], 0.0);
+        assert_eq!(out[1], -out[2], "sign symmetry through the wire");
+        for (&x, &y) in data.iter().zip(out.iter()).take(5) {
+            if x != 0.0 {
+                let rel = ((y - x) / x).abs();
+                let bound = (1.0f32 / 16.0).exp2() - 1.0; // 2^(1/(2*gamma)) - 1
+                assert!(rel <= bound * 1.001, "roundtrip {x} -> {y}, rel {rel} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_packs_u16_above_8_bits() {
+        let fmt = LnsFormat::new(12, 128);
+        let kind = WireKind::Lns(fmt);
+        let mut ws = WireScratch::default();
+        let data = [1.5f32, -2.0, 0.0, 0.125];
+        let wt = encode_wire(&data, kind, &mut ws);
+        assert!(matches!(wt.plane, WirePlane::U16(_)), "12-bit codes need a u16 plane");
+        assert_eq!(wt.plane.payload_bytes(), 8);
+        let mut out = vec![0.0f32; data.len()];
+        decode_wire_into(&mut out, &wt, kind);
+        assert_eq!(out[2], 0.0);
+        for (&x, &y) in data.iter().zip(out.iter()) {
+            if x != 0.0 {
+                let bound = (1.0f32 / 256.0).exp2() - 1.0;
+                assert!(((y - x) / x).abs() <= bound * 1.001, "{x} -> {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_wire_is_a_bitwise_passthrough() {
+        let mut ws = WireScratch::default();
+        let data = [1.5f32, -2.0e-38, 0.0, f32::MIN_POSITIVE / 2.0, 3.0e38];
+        let wt = encode_wire(&data, WireKind::F32, &mut ws);
+        assert_eq!(wt.plane.payload_bytes(), 20);
+        let mut out = vec![0.0f32; data.len()];
+        decode_wire_into(&mut out, &wt, WireKind::F32);
+        for (x, y) in data.iter().zip(out.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_balanced_recursion_bitwise() {
+        fn recursive(bufs: &[Vec<f32>]) -> Vec<f32> {
+            if bufs.len() == 1 {
+                return bufs[0].clone();
+            }
+            let mid = bufs.len() / 2;
+            let (a, b) = (recursive(&bufs[..mid]), recursive(&bufs[mid..]));
+            a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+        }
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 4, 8] {
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..33).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let want = recursive(&bufs);
+            let mut got = bufs.clone();
+            tree_reduce_into(&mut got);
+            for (w, g) in want.iter().zip(got[0].iter()) {
+                assert_eq!(w.to_bits(), g.to_bits(), "tree order drifted at n={n}");
+            }
+            // The scalar form follows the exact same pairing.
+            let scalars: Vec<f32> = bufs.iter().map(|b| b[0]).collect();
+            assert_eq!(tree_reduce_scalars(&scalars).to_bits(), got[0][0].to_bits());
+        }
+    }
+
+    #[test]
+    fn shard_batch_slices_contiguous_rows() {
+        let b = mlp_tiny_batch(8);
+        let s = shard_batch(&b, 2, 2);
+        match (&b, &s) {
+            (
+                Batch::Classification { xs, ys, .. },
+                Batch::Classification { shape, xs: sx, ys: sy },
+            ) => {
+                assert_eq!(*shape, [2, 16]);
+                assert_eq!(&xs[32..64], &sx[..]);
+                assert_eq!(&ys[2..4], &sy[..]);
+            }
+            _ => unreachable!(),
+        }
+        let lm = Batch::Lm {
+            shape: [4, 3],
+            tokens: (0..12).collect(),
+            targets: (100..112).collect(),
+        };
+        match shard_batch(&lm, 1, 2) {
+            Batch::Lm { shape, tokens, targets } => {
+                assert_eq!(shape, [2, 3]);
+                assert_eq!(tokens, vec![3, 4, 5, 6, 7, 8]);
+                assert_eq!(targets, vec![103, 104, 105, 106, 107, 108]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn engine_is_bit_identical_across_replica_counts() {
+        let batch = mlp_tiny_batch(32);
+        let mut outs = Vec::new();
+        for replicas in [1usize, 2, 4] {
+            let mut engine = DdpEngine::new(&ddp_cfg(replicas)).unwrap();
+            let params = init_params(&engine.contract().params.clone(), &mut Rng::new(3));
+            let out = engine.train_step(&params, &batch).unwrap();
+            outs.push(out);
+        }
+        let base = &outs[0];
+        for (i, out) in outs.iter().enumerate().skip(1) {
+            assert_eq!(base.loss.to_bits(), out.loss.to_bits(), "loss drifted at {i}");
+            for (g0, g1) in base.grads.iter().zip(out.grads.iter()) {
+                for (a, b) in g0.iter().zip(g1.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad drifted at replicas[{i}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_rejects_replica_counts_that_do_not_divide_the_shards() {
+        // mlp_tiny's batch of 32 decomposes into 8 logical shards.
+        let err = DdpEngine::new(&ddp_cfg(3)).unwrap_err();
+        assert!(err.to_string().contains("logical shard"), "unexpected: {err}");
+        assert!(DdpEngine::new(&ddp_cfg(0)).is_err());
+        assert!(DdpEngine::new(&ddp_cfg(8)).is_ok());
+    }
+
+    #[test]
+    fn engine_rejects_unknown_wire_and_wide_lns_bits() {
+        let cfg = TrainConfig { ddp_wire: "zstd".into(), ..ddp_cfg(2) };
+        assert!(DdpEngine::new(&cfg).unwrap_err().to_string().contains("ddp-wire"));
+        let cfg = TrainConfig { bits_bwd: 24, gamma_bwd: 1024.0, ..ddp_cfg(2) };
+        assert!(DdpEngine::new(&cfg).unwrap_err().to_string().contains("bits_bwd"));
+        // The f32 wire has no bit-width constraint.
+        let cfg = TrainConfig {
+            bits_bwd: 24,
+            gamma_bwd: 1024.0,
+            ddp_wire: "f32".into(),
+            ..ddp_cfg(2)
+        };
+        assert!(DdpEngine::new(&cfg).is_ok());
+    }
+
+    #[test]
+    fn exchange_stats_hit_the_8bit_compression_target() {
+        let batch = mlp_tiny_batch(32);
+        let mut engine = DdpEngine::new(&ddp_cfg(2)).unwrap();
+        let params = init_params(&engine.contract().params.clone(), &mut Rng::new(3));
+        engine.train_step(&params, &batch).unwrap();
+        let s = engine.exchange_stats();
+        assert_eq!(s.steps, 1);
+        assert!(s.f32_bytes > 0);
+        // The acceptance bar: 8-bit code planes are exactly 25% of f32.
+        assert_eq!(s.payload_bytes * 4, s.f32_bytes);
+        assert!(s.scale_bytes > 0 && s.scale_bytes < s.payload_bytes);
+    }
+}

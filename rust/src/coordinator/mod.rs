@@ -6,6 +6,7 @@
 pub mod checkpoint;
 pub mod config;
 pub mod data;
+pub mod ddp;
 pub mod metrics;
 pub mod trainer;
 

@@ -158,7 +158,15 @@ static FALLBACK_NOTICE: Once = Once::new();
 
 /// Resolve `cfg.backend` to a live backend. `Auto` prefers PJRT and
 /// falls back to native with a one-line notice (printed once).
+/// `--replicas N >= 1` engages the data-parallel engine, which is
+/// built on native replicas only (PJRT has no sharded path).
 pub fn resolve_backend(cfg: &TrainConfig) -> Result<Box<dyn ExecBackend>> {
+    if cfg.replicas >= 1 {
+        if cfg.backend == BackendKind::Pjrt {
+            bail!("--replicas requires the native backend (got --backend pjrt)");
+        }
+        return Ok(Box::new(crate::coordinator::ddp::DdpEngine::new(cfg)?));
+    }
     match cfg.backend {
         BackendKind::Native => Ok(Box::new(NativeBackend::new(cfg)?)),
         BackendKind::Pjrt => pjrt_backend(cfg),

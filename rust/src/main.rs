@@ -8,6 +8,8 @@
 //!                   [--save-ckpt path] [--resume path]
 //!                   [--parallelism P]   # 0 = auto, 1 = sequential
 //!                   [--simd auto|off|force]  # kernel tier; see DESIGN.md
+//!                   [--replicas N]      # data-parallel replicas (0 = off)
+//!                   [--ddp-wire lns|f32]  # gradient-exchange precision
 //!   lns-madam info            # list artifacts + native model presets
 //!   lns-madam energy [--parallelism P] [--simd auto|off|force]
 //!                             # Table 8 energy report + measured
@@ -80,6 +82,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "qu-bits" => cfg.qu_bits = v.parse()?,
             "seed" => cfg.seed = v.parse()?,
             "parallelism" => cfg.parallelism = v.parse()?,
+            "replicas" => cfg.replicas = v.parse()?,
+            "ddp-wire" => cfg.ddp_wire = v.clone(),
             "backend" => cfg.backend = BackendKind::parse(v)?,
             "exec-tier" => cfg.exec_tier = v.clone(),
             "simd" => cfg.simd = v.clone(),
@@ -99,6 +103,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     // without AVX2+FMA is a clear startup error, not a kernel panic.
     simd::set_mode(simd::SimdMode::parse(&cfg.simd)?)?;
     let workers = Parallelism::from_knob(cfg.parallelism).worker_count();
+    // Resolved replicas × workers layout (the oversubscription guard
+    // caps per-replica workers at cores/replicas), printed up front
+    // like the --parallelism line below.
+    let ddp_layout = (cfg.replicas >= 1).then(|| {
+        let (replicas, per) = lns_madam::coordinator::ddp::resolved_layout(&cfg);
+        (replicas, per, cfg.ddp_wire.clone())
+    });
     let mut trainer = Trainer::new(cfg)?;
     println!(
         "backend: {} ({} worker thread(s), isa: {}, simd: {})",
@@ -107,6 +118,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         simd::isa_name(),
         simd::tier_name()
     );
+    if let Some((replicas, per, wire)) = ddp_layout {
+        println!(
+            "ddp: {replicas} replica(s) x {per} worker(s) per replica \
+             (requested {workers}, host cores {}), {wire} gradient exchange",
+            Parallelism::Auto.worker_count()
+        );
+    }
     if trainer.steps_done > 0 {
         println!("resumed at step {}", trainer.steps_done);
     }

@@ -1,0 +1,170 @@
+//! Data-parallel training tests: the N-replica engine must be
+//! bit-identical to the 1-replica engine at matched global batch, for
+//! every wire precision and worker count, and checkpoints must resume
+//! across replica counts without perturbing a single bit of the
+//! subsequent trajectory (ISSUE 9 acceptance matrix).
+//!
+//! This suite has NO skip paths — every test runs in every environment.
+
+use lns_madam::coordinator::{OptKind, TrainConfig, Trainer};
+use lns_madam::backend::BackendKind;
+
+fn ddp_cfg(model: &str, replicas: usize, workers: usize, steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps,
+        eval_every: 0,
+        backend: BackendKind::Native,
+        replicas,
+        parallelism: workers,
+        ..TrainConfig::default()
+    }
+}
+
+/// Drive a trainer for `steps` fresh-sampled steps and return every
+/// per-step loss (the data stream is a function of the seed alone, so
+/// two configs with the same seed see the same batches).
+fn losses(cfg: TrainConfig) -> (Vec<f32>, Trainer) {
+    let steps = cfg.steps;
+    let mut t = Trainer::new(cfg).expect("ddp trainer");
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (loss, _) = t.step().expect("step");
+        out.push(loss);
+    }
+    (out, t)
+}
+
+fn assert_bitwise_equal(a: &(Vec<f32>, Trainer), b: &(Vec<f32>, Trainer), label: &str) {
+    for (i, (x, y)) in a.0.iter().zip(b.0.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: loss diverged at step {i}: {x} vs {y}");
+    }
+    for (p, q) in a.1.params.iter().zip(b.1.params.iter()) {
+        assert_eq!(p.name, q.name);
+        for (x, y) in p.data.iter().zip(q.data.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: param {} diverged", p.name);
+        }
+    }
+}
+
+#[test]
+fn replica_count_is_bit_identical_on_mlp() {
+    // The acceptance matrix: N in {1, 2, 4} x workers in {1, 4}, all
+    // against the (replicas=1, workers=1) baseline, compressed wire on
+    // (the default).
+    let base = losses(ddp_cfg("mlp_tiny", 1, 1, 6));
+    for (replicas, workers) in [(2, 1), (2, 4), (4, 1), (4, 4)] {
+        let run = losses(ddp_cfg("mlp_tiny", replicas, workers, 6));
+        assert_bitwise_equal(&base, &run, &format!("mlp r{replicas} w{workers}"));
+    }
+    assert!(base.0[0].is_finite());
+}
+
+#[test]
+fn replica_count_is_bit_identical_on_charlm() {
+    let base = losses(ddp_cfg("charlm_tiny", 1, 1, 4));
+    let run = losses(ddp_cfg("charlm_tiny", 4, 2, 4));
+    assert_bitwise_equal(&base, &run, "charlm r4 w2");
+}
+
+#[test]
+fn f32_oracle_wire_is_also_replica_invariant() {
+    let mk = |replicas| TrainConfig {
+        ddp_wire: "f32".into(),
+        ..ddp_cfg("mlp_tiny", replicas, 1, 5)
+    };
+    let base = losses(mk(1));
+    let run = losses(mk(4));
+    assert_bitwise_equal(&base, &run, "f32 wire r4");
+    // The compressed wire quantizes the exchanged gradients, so it is
+    // a different (still N-invariant) trajectory than the oracle —
+    // check they actually diverge, i.e. the lns wire is really on by
+    // default and not silently falling back to f32.
+    let lns = losses(ddp_cfg("mlp_tiny", 1, 1, 5));
+    let diverged = lns
+        .1
+        .params
+        .iter()
+        .zip(base.1.params.iter())
+        .any(|(p, q)| p.data.iter().zip(q.data.iter()).any(|(x, y)| x.to_bits() != y.to_bits()));
+    assert!(diverged, "lns wire produced exactly the f32-oracle params — is Q_G applied?");
+}
+
+#[test]
+fn invalid_replica_count_is_a_clear_startup_error() {
+    // mlp_tiny's batch of 32 decomposes into 8 logical shards; 3 does
+    // not divide 8.
+    let err = Trainer::new(ddp_cfg("mlp_tiny", 3, 1, 1)).unwrap_err();
+    assert!(err.to_string().contains("logical shard"), "unexpected error: {err}");
+    let err = Trainer::new(TrainConfig {
+        backend: BackendKind::Pjrt,
+        ..ddp_cfg("mlp_tiny", 2, 1, 1)
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("native"), "unexpected error: {err}");
+}
+
+#[test]
+fn checkpoint_resumes_bit_identically_across_replica_counts() {
+    let dir = std::env::temp_dir().join("lns_ddp_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Both directions of the satellite: save under 4 replicas and
+    // resume under 1, then save under 1 and resume under 4.
+    for (save_replicas, resume_replicas) in [(4usize, 1usize), (1, 4)] {
+        let path = dir.join(format!("ddp_{save_replicas}_{resume_replicas}.ckpt"));
+        let mut cfg = ddp_cfg("mlp_tiny", save_replicas, 1, 5);
+        cfg.ckpt_path = path.to_str().unwrap().to_string();
+        let mut t = Trainer::new(cfg).expect("trainer");
+        t.run().expect("train to step 5");
+        assert_eq!(t.steps_done, 5);
+
+        // Resume twice — once per replica count — and step both in
+        // lockstep: the restored params, the reseeded data stream, and
+        // the shard decomposition are all replica-count-independent,
+        // so every subsequent loss must match bitwise.
+        let mut resume = |replicas: usize| {
+            let mut cfg = ddp_cfg("mlp_tiny", replicas, 1, 5);
+            cfg.resume_from = path.to_str().unwrap().to_string();
+            Trainer::new(cfg).expect("resumed trainer")
+        };
+        let mut a = resume(resume_replicas);
+        let mut b = resume(save_replicas);
+        assert_eq!(a.steps_done, 5, "resume restores the step counter");
+        for _ in 0..5 {
+            let (la, _) = a.step().unwrap();
+            let (lb, _) = b.step().unwrap();
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "{save_replicas}->{resume_replicas}: post-resume losses diverged"
+            );
+        }
+        for (p, q) in a.params.iter().zip(b.params.iter()) {
+            for (x, y) in p.data.iter().zip(q.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "post-resume param {} diverged", p.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn ddp_trainer_reduces_loss_and_reports_eval() {
+    // The sharded engine is still a working trainer, not just a
+    // determinism fixture: loss goes down and eval works (monolithic
+    // on replica 0).
+    let mut trainer = Trainer::new(ddp_cfg("mlp_tiny", 4, 1, 60)).unwrap();
+    assert_eq!(trainer.backend_name(), "native-ddp");
+    let (first, _) = trainer.step().unwrap();
+    for _ in 1..60 {
+        trainer.step().unwrap();
+    }
+    let last = trainer.final_loss(10);
+    assert!(first.is_finite());
+    assert!(last < (first as f64) * 0.9, "ddp loss {first} -> {last} did not decrease");
+    let (eval_loss, acc) = trainer.evaluate().unwrap().expect("native eval");
+    assert!(eval_loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc.expect("acc reported")));
+}

@@ -781,3 +781,156 @@ fn packed_gemm_bit_identical_to_reference_property() {
         );
     });
 }
+
+#[test]
+fn ddp_wire_reduce_matches_fake_quant_and_tree_order_is_bit_identical() {
+    // The Q_G wire contract (ISSUE 9): encode -> reduce -> decode of
+    // gradient-shaped shard tensors (zeros, subnormals, +-extreme
+    // magnitudes, both roundings) matches applying the Q_G fake-quant
+    // then reducing in f32, within the Lemma-1 bound — the only
+    // difference is the wire's flush-to-zero of the bottom code, whose
+    // per-shard cost is at most one `scale`. And the whole pipeline is
+    // a pure function of the shard tensors: re-running it (as a
+    // different replica grouping would) reproduces every bit.
+    use lns_madam::coordinator::ddp::{
+        decode_wire_into, encode_wire_rounded, tree_reduce_into, WireKind, WireScratch,
+    };
+    for fmt in [LnsFormat::new(8, 8), LnsFormat::new(8, 4), LnsFormat::new(12, 128)] {
+        let kind = WireKind::Lns(fmt);
+        for rounding in [Rounding::Nearest, Rounding::Stochastic] {
+            // Nearest stays within Lemma 1; stochastic may take the far
+            // neighbor, doubling the log-step.
+            let bound = match rounding {
+                Rounding::Nearest => fmt.max_rel_error(),
+                Rounding::Stochastic => (1.0 / fmt.gamma as f64).exp2() - 1.0,
+            } as f32;
+            property(50, |g| {
+                let shards = [1usize, 2, 4, 8][g.usize_in(0, 3)];
+                let len = g.usize_in(1, 40);
+                let bufs: Vec<Vec<f32>> = (0..shards)
+                    .map(|_| {
+                        (0..len)
+                            .map(|_| {
+                                let sign = if g.bool() { -1.0f32 } else { 1.0 };
+                                match g.usize_in(0, 9) {
+                                    0 => 0.0,
+                                    // Subnormals: must flush cleanly, never panic.
+                                    1 => sign * f32::from_bits(g.usize_in(1, 0x7f_ffff) as u32),
+                                    // +-extreme magnitudes near f32::MAX.
+                                    2 => sign * 3.0e38,
+                                    3..=5 => g.normal_f32(),
+                                    _ => g.lns_value(),
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let seed = 0xD0D0 ^ g.case as u64;
+
+                // Wire path: per-shard encode (the "send"), root decode
+                // in shard order, fixed-tree reduce, exact 1/L rescale.
+                let run_wire = || {
+                    let mut ws = WireScratch::default();
+                    let mut rng = Rng::new(seed);
+                    let wires: Vec<_> = bufs
+                        .iter()
+                        .map(|b| encode_wire_rounded(b, kind, rounding, Some(&mut rng), &mut ws))
+                        .collect();
+                    let decoded: Vec<Vec<f32>> = wires
+                        .iter()
+                        .map(|w| {
+                            let mut out = vec![0.0f32; len];
+                            decode_wire_into(&mut out, w, kind);
+                            out
+                        })
+                        .collect();
+                    (wires, decoded)
+                };
+                let (wires, decoded) = run_wire();
+
+                // Reference: the same Q_G fake-quant kernel (identically
+                // seeded, so stochastic draws match), reduced in f32.
+                let mut scratch = QuantScratch::default();
+                let mut rng = Rng::new(seed);
+                let fq: Vec<Vec<f32>> = bufs
+                    .iter()
+                    .map(|b| {
+                        let mut d = b.clone();
+                        kernels::quantize_rows_into_rounded(
+                            &mut d,
+                            1,
+                            len,
+                            fmt,
+                            Scaling::PerTensor,
+                            rounding,
+                            Some(&mut rng),
+                            1,
+                            &mut scratch,
+                        );
+                        d
+                    })
+                    .collect();
+
+                // Elementwise: the wire is the fake-quant value, except
+                // the bottom code flushes to exact zero (|x| <= about
+                // one scale there).
+                for ((buf, dec), (w, q)) in
+                    bufs.iter().zip(decoded.iter()).zip(wires.iter().zip(fq.iter()))
+                {
+                    for ((&x, &d), &qv) in buf.iter().zip(dec.iter()).zip(q.iter()) {
+                        if d == 0.0 {
+                            // scale == 0.0 happens when the shard absmax
+                            // is itself a tiny subnormal (the scale
+                            // underflows); everything flushes there.
+                            assert!(
+                                w.scale == 0.0 || x.abs() <= w.scale * (1.0 + bound) * 1.01,
+                                "{fmt:?}/{rounding:?}: flushed non-bottom value {x} (scale {})",
+                                w.scale
+                            );
+                        } else {
+                            let rel = ((d - x) / x).abs();
+                            assert!(
+                                rel <= bound * 1.01,
+                                "{fmt:?}/{rounding:?}: wire {x} -> {d}, rel {rel} > {bound}"
+                            );
+                            assert!(
+                                (d - qv).abs() <= 2e-6 * qv.abs().max(1e-30),
+                                "{fmt:?}/{rounding:?}: wire {d} vs fake-quant {qv}"
+                            );
+                        }
+                    }
+                }
+
+                // Reduced means agree within the accumulated FTZ slack.
+                let inv = 1.0 / shards as f32;
+                let mut a = decoded.clone();
+                let mut b = fq.clone();
+                tree_reduce_into(&mut a);
+                tree_reduce_into(&mut b);
+                let slack: f32 =
+                    wires.iter().map(|w| w.scale).sum::<f32>() * inv * (1.0 + bound) * 1.01;
+                for (x, y) in a[0].iter().zip(b[0].iter()) {
+                    let (x, y) = (x * inv, y * inv);
+                    assert!(
+                        (x - y).abs() <= slack + 2e-6 * y.abs(),
+                        "{fmt:?}/{rounding:?}: reduced {x} vs fake-quant {y} (slack {slack})"
+                    );
+                }
+
+                // Fixed tree order: the pipeline is a pure function of
+                // the shard tensors, so a second run (any replica
+                // grouping) reproduces the reduced gradient bitwise.
+                let (_, decoded2) = run_wire();
+                let mut c = decoded2;
+                tree_reduce_into(&mut c);
+                for (x, y) in a[0].iter().zip(c[0].iter()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{fmt:?}/{rounding:?}: wire reduce is not deterministic"
+                    );
+                }
+            });
+        }
+    }
+}
