@@ -7,11 +7,12 @@
 //! of resuming training from garbage.
 
 use crate::coordinator::trainer::Param;
+use crate::util::fault;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"LNSMADAM";
 const VERSION: u32 = 1;
@@ -65,6 +66,14 @@ pub fn save(path: &Path, params: &[Param], step: usize, meta: &BTreeMap<String, 
     let mut tmp_name = path.as_os_str().to_os_string();
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
+    if fault::should_fire("ckpt_write") {
+        // Simulate a process dying mid-write: leave exactly what a
+        // crash could leave — a truncated temp sibling, the final path
+        // untouched — then fail the save.
+        std::fs::write(&tmp, &out[..out.len() / 2])
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        bail!("injected fault: ckpt_write (crashed mid-write to {})", tmp.display());
+    }
     {
         let mut f = std::fs::File::create(&tmp)
             .with_context(|| format!("creating {}", tmp.display()))?;
@@ -79,6 +88,7 @@ pub fn save(path: &Path, params: &[Param], step: usize, meta: &BTreeMap<String, 
 
 /// Deserialize a checkpoint. Returns (params, step, metadata).
 pub fn load(path: &Path) -> Result<(Vec<Param>, usize, BTreeMap<String, String>)> {
+    fault::fire_err("ckpt_read")?;
     let mut buf = Vec::new();
     std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?
@@ -163,6 +173,148 @@ pub fn load(path: &Path) -> Result<(Vec<Param>, usize, BTreeMap<String, String>)
         })
         .unwrap_or_default();
     Ok((params, step, meta))
+}
+
+// ---------------------------------------------------------------------------
+// Generation retention (`--save-every` / `--resume auto`)
+//
+// Periodic checkpoints live next to the configured base path as
+// `<base>.step<N>` siblings plus an atomically-replaced `<base>.latest`
+// pointer file naming the newest generation. Retention is keep-K by
+// step; auto-resume walks newest-first and falls back a generation
+// when a file fails its checksum (see DESIGN.md §Fault tolerance).
+// ---------------------------------------------------------------------------
+
+/// `<base>.step<N>`: where the generation checkpoint for `step` lives.
+pub fn generation_path(base: &Path, step: usize) -> PathBuf {
+    let mut name = base.as_os_str().to_os_string();
+    name.push(format!(".step{step}"));
+    PathBuf::from(name)
+}
+
+fn latest_path(base: &Path) -> PathBuf {
+    let mut name = base.as_os_str().to_os_string();
+    name.push(".latest");
+    PathBuf::from(name)
+}
+
+fn parent_dir(base: &Path) -> &Path {
+    match base.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    }
+}
+
+/// Write the retained generation checkpoint for `step`: the
+/// `<base>.step<N>` image (crash-atomic, like [`save`]), then the
+/// `<base>.latest` pointer (also tmp+rename so a crash never leaves a
+/// half-written pointer), then prune to the newest `keep` generations.
+/// Returns the generation path.
+pub fn save_generation(
+    base: &Path,
+    params: &[Param],
+    step: usize,
+    meta: &BTreeMap<String, String>,
+    keep: usize,
+) -> Result<PathBuf> {
+    let gen = generation_path(base, step);
+    save(&gen, params, step, meta)?;
+    let latest = latest_path(base);
+    let mut tmp_name = latest.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    let name = gen
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("generation path has no utf-8 file name")?;
+    std::fs::write(&tmp, name.as_bytes())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &latest)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), latest.display()))?;
+    prune_generations(base, keep.max(1));
+    Ok(gen)
+}
+
+/// Every `<base>.step<N>` sibling on disk, ascending by step. Names
+/// with trailing junk after the step (e.g. an in-flight `.tmp`) are
+/// not generations and are skipped.
+pub fn list_generations(base: &Path) -> Vec<(usize, PathBuf)> {
+    let Some(stem) = base.file_name().and_then(|n| n.to_str()) else {
+        return Vec::new();
+    };
+    let dir = parent_dir(base);
+    let prefix = format!("{stem}.step");
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(suffix) = name.strip_prefix(&prefix) {
+                if let Ok(step) = suffix.parse::<usize>() {
+                    out.push((step, dir.join(name)));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Delete all but the newest `keep` generations. Best-effort: a file
+/// that cannot be removed must not fail the save that triggered the
+/// prune.
+fn prune_generations(base: &Path, keep: usize) {
+    let gens = list_generations(base);
+    if gens.len() > keep {
+        for (_, p) in &gens[..gens.len() - keep] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+/// Resolve `--resume auto` under `base`: the newest checkpoint whose
+/// checksum verifies, or `None` for a fresh start. Candidates, newest
+/// preferred: the `<base>.latest` pointer target and `base` itself
+/// (the end-of-run image can be newer than the last generation); if
+/// both are missing or corrupt, fall back through the retained
+/// generations newest-first. Unreadable candidates are logged and
+/// skipped — corruption costs at most one generation of progress.
+pub fn load_auto(
+    base: &Path,
+) -> Result<Option<(Vec<Param>, usize, BTreeMap<String, String>, PathBuf)>> {
+    let mut tried: Vec<PathBuf> = Vec::new();
+    let mut best: Option<(Vec<Param>, usize, BTreeMap<String, String>, PathBuf)> = None;
+    let mut consider = |path: PathBuf, best: &mut Option<_>| {
+        if tried.contains(&path) || !path.exists() {
+            return;
+        }
+        tried.push(path.clone());
+        match load(&path) {
+            Ok((params, step, meta)) => {
+                let newer = match best.as_ref() {
+                    Some((_, s, _, _)) => step > *s,
+                    None => true,
+                };
+                if newer {
+                    *best = Some((params, step, meta, path));
+                }
+            }
+            Err(e) => eprintln!("warn: skipping unreadable checkpoint {}: {e}", path.display()),
+        }
+    };
+    if let Ok(name) = std::fs::read_to_string(latest_path(base)) {
+        consider(parent_dir(base).join(name.trim()), &mut best);
+    }
+    consider(base.to_path_buf(), &mut best);
+    if best.is_none() {
+        for (_, path) in list_generations(base).into_iter().rev() {
+            consider(path, &mut best);
+            if best.is_some() {
+                break;
+            }
+        }
+    }
+    Ok(best)
 }
 
 #[cfg(test)]
@@ -270,6 +422,76 @@ mod tests {
         assert_eq!(step, 8);
         assert!(!tmp.exists(), "temp sibling consumed by rename");
     }
+
+    fn gen_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lns_ckpt_gen_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn generation_retention_keeps_k_and_updates_latest() {
+        let dir = gen_dir("retention");
+        let base = dir.join("run.ckpt");
+        for step in [4usize, 8, 12] {
+            save_generation(&base, &mk_params(), step, &BTreeMap::new(), 2).unwrap();
+        }
+        let gens = list_generations(&base);
+        assert_eq!(
+            gens.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![8, 12],
+            "keep-2 prunes the oldest generation"
+        );
+        let pointer = std::fs::read_to_string(dir.join("run.ckpt.latest")).unwrap();
+        assert_eq!(pointer.trim(), "run.ckpt.step12");
+        let (_, step, _, from) = load_auto(&base).unwrap().expect("a checkpoint exists");
+        assert_eq!(step, 12);
+        assert_eq!(from, generation_path(&base, 12));
+    }
+
+    #[test]
+    fn load_auto_falls_back_one_generation_on_corruption() {
+        let dir = gen_dir("fallback");
+        let base = dir.join("run.ckpt");
+        save_generation(&base, &mk_params(), 4, &BTreeMap::new(), 3).unwrap();
+        save_generation(&base, &mk_params(), 8, &BTreeMap::new(), 3).unwrap();
+        // Corrupt the newest generation's payload; the pointer still
+        // names it, so auto-resume must detect the bad checksum and
+        // fall back to step 4.
+        let newest = generation_path(&base, 8);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        bytes[40] ^= 0xff;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (_, step, _, from) = load_auto(&base).unwrap().expect("older generation survives");
+        assert_eq!(step, 4);
+        assert_eq!(from, generation_path(&base, 4));
+    }
+
+    #[test]
+    fn load_auto_prefers_the_newer_of_pointer_target_and_base() {
+        // The end-of-run image at `base` can be newer than the last
+        // generation (steps not divisible by save_every).
+        let dir = gen_dir("base_newer");
+        let base = dir.join("run.ckpt");
+        save_generation(&base, &mk_params(), 8, &BTreeMap::new(), 3).unwrap();
+        save(&base, &mk_params(), 10, &BTreeMap::new()).unwrap();
+        let (_, step, _, from) = load_auto(&base).unwrap().expect("base image exists");
+        assert_eq!(step, 10);
+        assert_eq!(from, base);
+    }
+
+    #[test]
+    fn load_auto_is_a_fresh_start_when_nothing_exists() {
+        let dir = gen_dir("fresh");
+        let base = dir.join("run.ckpt");
+        assert!(load_auto(&base).unwrap().is_none());
+    }
+
+    // Injected ckpt_write/ckpt_read crash scenarios live in
+    // tests/fault.rs: the registry is process-global, and enabling a
+    // production site here would race the other lib tests that save
+    // checkpoints concurrently.
 
     #[test]
     fn wrong_magic_rejected() {

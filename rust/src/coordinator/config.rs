@@ -71,10 +71,27 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     /// Metrics output path ("" = stdout only).
     pub log_path: String,
-    /// Checkpoint written after `run()` completes ("" = none).
+    /// Checkpoint written after `run()` completes ("" = none). Also
+    /// the base path for `save_every` generations and `resume = auto`.
     pub ckpt_path: String,
-    /// Checkpoint to restore before training ("" = fresh init).
+    /// Checkpoint to restore before training ("" = fresh init). The
+    /// special value "auto" restores the newest checksum-verified
+    /// checkpoint under `ckpt_path` (falling back one generation on
+    /// corruption), or starts fresh when none exists — so the same
+    /// command line works for the first launch and every relaunch.
     pub resume_from: String,
+    /// Periodic checkpoint cadence in steps; 0 (default) = only the
+    /// end-of-run write. Every `save_every` steps the trainer writes a
+    /// `<ckpt>.step<N>` generation plus the `<ckpt>.latest` pointer
+    /// and reseeds the data streams at the boundary — in interrupted
+    /// and uninterrupted runs alike, which is what makes a killed run
+    /// resumed via `resume = auto` bit-identical to one that never
+    /// died (DESIGN.md §Fault tolerance). Requires `ckpt_path`.
+    pub save_every: usize,
+    /// Generations retained under `save_every` (keep-K, pruned after
+    /// each boundary save). Keep >= 2 so auto-resume always has one
+    /// generation to fall back to on corruption.
+    pub keep_ckpts: usize,
     /// Host-thread knob for the rust-side hot paths: 0 = auto (one
     /// worker per core), 1 = sequential, n = exactly n workers.
     /// Drives the native backend's fwd/bwd GEMMs (`NativeModel::
@@ -131,6 +148,8 @@ impl Default for TrainConfig {
             log_path: String::new(),
             ckpt_path: String::new(),
             resume_from: String::new(),
+            save_every: 0,
+            keep_ckpts: 3,
             parallelism: 0,
             exec_tier: "f32-exact".into(),
             simd: "auto".into(),
@@ -197,6 +216,14 @@ impl TrainConfig {
             log_path: cfg.str_or("paths", "log", &d.log_path),
             ckpt_path: cfg.str_or("paths", "checkpoint", &d.ckpt_path),
             resume_from: cfg.str_or("paths", "resume", &d.resume_from),
+            save_every: non_negative("train", "save_every", d.save_every as i64)? as usize,
+            keep_ckpts: {
+                let k = non_negative("train", "keep_ckpts", d.keep_ckpts as i64)? as usize;
+                if k == 0 {
+                    bail!("[train] keep_ckpts = 0: must retain at least one generation");
+                }
+                k
+            },
             parallelism: non_negative("train", "parallelism", d.parallelism as i64)? as usize,
             exec_tier: cfg.str_or("train", "exec_tier", &d.exec_tier),
             simd: cfg.str_or("train", "simd", &d.simd),
@@ -239,8 +266,31 @@ pub struct ServeConfig {
     /// more are clamped).
     pub max_new_cap: usize,
     /// Exit after answering this many requests (0 = run forever) — the
-    /// CI smoke harness uses this for a clean shutdown.
+    /// CI smoke harness uses this for a clean shutdown. Reaching the
+    /// cap drains in-flight sequences before exiting.
     pub max_requests: usize,
+    /// Hard cap on one request line's bytes. The reader never buffers
+    /// past it: an oversized line is answered with a wire error and
+    /// the connection closed (after the remainder of the frame is
+    /// discarded through a fixed scratch, so the error reaches the
+    /// client), instead of `read_until` growing without limit.
+    pub max_request_bytes: usize,
+    /// Mid-request stall budget in milliseconds: a connection that has
+    /// sent part of a line and then nothing for this long is answered
+    /// with a timeout error and closed. Idle connections (no partial
+    /// frame) may sit forever. 0 disables.
+    pub read_timeout_ms: u64,
+    /// Per-write socket timeout in milliseconds, so a client that
+    /// stops reading cannot wedge the engine loop on `write_all`.
+    /// 0 disables.
+    pub write_timeout_ms: u64,
+    /// Concurrent-connection ceiling; connections beyond it are
+    /// answered `busy` and closed at accept.
+    pub max_conns: usize,
+    /// Bounded inbound-queue depth between the readers and the engine;
+    /// when full, readers answer `busy` instead of queueing without
+    /// limit (explicit backpressure).
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -255,6 +305,11 @@ impl Default for ServeConfig {
             simd: "auto".into(),
             max_new_cap: 256,
             max_requests: 0,
+            max_request_bytes: 1 << 20,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 10_000,
+            max_conns: 256,
+            queue_cap: 128,
         }
     }
 }
@@ -274,6 +329,18 @@ impl ServeConfig {
         }
         if self.max_new_cap == 0 {
             bail!("serve: --max-new-cap must be >= 1");
+        }
+        if self.max_request_bytes < 64 {
+            bail!(
+                "serve: --max-request-bytes {} too small (even an empty request needs ~40 bytes)",
+                self.max_request_bytes
+            );
+        }
+        if self.max_conns == 0 {
+            bail!("serve: --max-conns must be >= 1");
+        }
+        if self.queue_cap == 0 {
+            bail!("serve: --queue-cap must be >= 1");
         }
         Ok(())
     }
@@ -417,6 +484,40 @@ mod tests {
         s.gamma = 8;
         s.ckpt_path.clear();
         assert!(s.validate().is_err(), "missing checkpoint rejected");
+    }
+
+    #[test]
+    fn serve_config_validates_hardening_limits() {
+        let ok = ServeConfig { ckpt_path: "c.ckpt".into(), ..ServeConfig::default() };
+        assert!(ok.validate().is_ok());
+        let tiny = ServeConfig { max_request_bytes: 16, ..ok.clone() };
+        assert!(tiny.validate().is_err(), "sub-minimal request cap rejected");
+        let no_conns = ServeConfig { max_conns: 0, ..ok.clone() };
+        assert!(no_conns.validate().is_err(), "zero connection ceiling rejected");
+        let no_queue = ServeConfig { queue_cap: 0, ..ok.clone() };
+        assert!(no_queue.validate().is_err(), "zero queue depth rejected");
+        // Timeouts of 0 mean disabled, not invalid.
+        let no_timeouts = ServeConfig { read_timeout_ms: 0, write_timeout_ms: 0, ..ok };
+        assert!(no_timeouts.validate().is_ok());
+    }
+
+    #[test]
+    fn parses_and_range_checks_checkpoint_cadence() {
+        let t = load_toml(
+            "cadence.toml",
+            "[train]\nsave_every = 50\nkeep_ckpts = 4\n[paths]\nresume = \"auto\"\n",
+        )
+        .unwrap();
+        assert_eq!(t.save_every, 50);
+        assert_eq!(t.keep_ckpts, 4);
+        assert_eq!(t.resume_from, "auto");
+        let d = TrainConfig::default();
+        assert_eq!(d.save_every, 0, "periodic checkpoints default to off");
+        assert_eq!(d.keep_ckpts, 3);
+        let err = load_toml("neg_save.toml", "[train]\nsave_every = -5\n").unwrap_err();
+        assert!(err.to_string().contains("save_every"), "unexpected: {err}");
+        let err = load_toml("zero_keep.toml", "[train]\nkeep_ckpts = 0\n").unwrap_err();
+        assert!(err.to_string().contains("keep_ckpts"), "unexpected: {err}");
     }
 
     #[test]

@@ -408,6 +408,18 @@ impl DdpEngine {
     }
 }
 
+/// Best-effort text from a caught panic payload (`panic!` carries a
+/// `&str` or `String` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
 impl ExecBackend for DdpEngine {
     fn name(&self) -> &'static str {
         "native-ddp"
@@ -440,17 +452,34 @@ impl ExecBackend for DdpEngine {
             .map(|(r, backend)| {
                 let task: Box<dyn FnOnce() -> Result<Vec<ShardResult>> + Send + '_> =
                     Box::new(move || {
-                        let mut ws = WireScratch::default();
-                        let mut out = Vec::with_capacity(per);
-                        for s in r * per..(r + 1) * per {
-                            let shard = shard_batch(batch, s * shard_rows, shard_rows);
-                            let StepOutput { loss, acc, grads } =
-                                backend.train_step(params, &shard)?;
-                            let wires =
-                                grads.iter().map(|g| encode_wire(g, wire, &mut ws)).collect();
-                            out.push(ShardResult { loss, acc, wires });
+                        // Contain replica panics (including injected
+                        // ones) to a clean Err: the pool re-raises
+                        // worker panics, so without this one bad
+                        // replica would abort the whole process
+                        // instead of leaving training restartable
+                        // from its last checkpoint.
+                        let body = move || -> Result<Vec<ShardResult>> {
+                            if crate::util::fault::should_fire("replica_panic") {
+                                panic!("injected fault: replica_panic (replica {r})");
+                            }
+                            let mut ws = WireScratch::default();
+                            let mut out = Vec::with_capacity(per);
+                            for s in r * per..(r + 1) * per {
+                                let shard = shard_batch(batch, s * shard_rows, shard_rows);
+                                let StepOutput { loss, acc, grads } =
+                                    backend.train_step(params, &shard)?;
+                                let wires =
+                                    grads.iter().map(|g| encode_wire(g, wire, &mut ws)).collect();
+                                out.push(ShardResult { loss, acc, wires });
+                            }
+                            Ok(out)
+                        };
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)) {
+                            Ok(res) => res,
+                            Err(payload) => {
+                                bail!("replica {r} panicked: {}", panic_message(payload.as_ref()))
+                            }
                         }
-                        Ok(out)
                     });
                 task
             })

@@ -11,15 +11,27 @@ pub struct MetricRow {
     pub values: BTreeMap<String, f64>,
 }
 
+/// Incremental CSV sink: every recorded row is appended and flushed so
+/// a killed run keeps a parseable prefix of its step history instead
+/// of losing everything to the end-of-run rewrite (ISSUE 10).
+struct CsvStream {
+    path: String,
+    /// Column order of the header already on disk.
+    keys: Vec<String>,
+    out: std::io::BufWriter<std::fs::File>,
+    rows_written: usize,
+}
+
 #[derive(Default)]
 pub struct MetricsLog {
     pub run_name: String,
     pub rows: Vec<MetricRow>,
+    stream: Option<CsvStream>,
 }
 
 impl MetricsLog {
     pub fn new(run_name: &str) -> Self {
-        MetricsLog { run_name: run_name.to_string(), rows: Vec::new() }
+        MetricsLog { run_name: run_name.to_string(), rows: Vec::new(), stream: None }
     }
 
     pub fn record(&mut self, step: usize, pairs: &[(&str, f64)]) {
@@ -28,6 +40,92 @@ impl MetricsLog {
             values.insert(k.to_string(), *v);
         }
         self.rows.push(MetricRow { step, values });
+        self.stream_last_row();
+    }
+
+    /// Start streaming rows to `path`. Rows already recorded are
+    /// written immediately; from here on every `record` appends one
+    /// line and flushes. A row introducing a key the on-disk header
+    /// has not seen (e.g. the first eval row) triggers a truncate-and-
+    /// rewrite from the retained rows — rare, at most once per metric
+    /// kind — after which the file again matches [`to_csv`] exactly.
+    ///
+    /// [`to_csv`]: MetricsLog::to_csv
+    pub fn stream_to(&mut self, path: &str) -> anyhow::Result<()> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating metrics stream {path}: {e}"))?;
+        self.stream = Some(CsvStream {
+            path: path.to_string(),
+            keys: Vec::new(),
+            out: std::io::BufWriter::new(f),
+            rows_written: 0,
+        });
+        // Write the header (plus any rows recorded before streaming
+        // started) right away, so even a run killed on step 0 leaves
+        // valid CSV behind.
+        self.rewrite_stream()
+            .map_err(|e| anyhow::anyhow!("writing metrics stream {path}: {e}"))?;
+        Ok(())
+    }
+
+    /// Whether an incremental CSV stream is active (the end-of-run
+    /// `save_csv` is redundant then).
+    pub fn is_streaming(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// First-seen-order union of row keys — the CSV column order.
+    fn csv_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for k in r.values.keys() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        keys
+    }
+
+    fn stream_last_row(&mut self) {
+        let Some(stream) = self.stream.as_ref() else { return };
+        let Some(row) = self.rows.last() else { return };
+        let needs_rewrite = stream.rows_written == 0
+            || row.values.keys().any(|k| !stream.keys.contains(k));
+        let result = if needs_rewrite {
+            self.rewrite_stream()
+        } else {
+            let mut line = row.step.to_string();
+            for k in &stream.keys {
+                line.push(',');
+                if let Some(v) = row.values.get(k) {
+                    line.push_str(&format!("{v}"));
+                }
+            }
+            line.push('\n');
+            let stream = self.stream.as_mut().expect("checked above");
+            stream.rows_written += 1;
+            stream.out.write_all(line.as_bytes()).and_then(|()| stream.out.flush())
+        };
+        if let Err(e) = result {
+            let path = self.stream.take().map(|s| s.path).unwrap_or_default();
+            eprintln!("warn: metrics stream to {path} failed ({e}); falling back to end-of-run save");
+        }
+    }
+
+    /// Truncate and rewrite the stream file from the retained rows,
+    /// leaving the writer positioned for appends.
+    fn rewrite_stream(&mut self) -> std::io::Result<()> {
+        let csv = self.to_csv();
+        let keys = self.csv_keys();
+        let n = self.rows.len();
+        let stream = self.stream.as_mut().expect("only called while streaming");
+        let f = std::fs::File::create(&stream.path)?;
+        stream.out = std::io::BufWriter::new(f);
+        stream.keys = keys;
+        stream.rows_written = n;
+        stream.out.write_all(csv.as_bytes())?;
+        stream.out.flush()
     }
 
     pub fn last(&self, key: &str) -> Option<f64> {
@@ -51,14 +149,7 @@ impl MetricsLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut keys: Vec<String> = Vec::new();
-        for r in &self.rows {
-            for k in r.values.keys() {
-                if !keys.contains(k) {
-                    keys.push(k.clone());
-                }
-            }
-        }
+        let keys = self.csv_keys();
         let mut out = String::from("step");
         for k in &keys {
             out.push(',');
@@ -131,6 +222,53 @@ mod tests {
         assert_eq!(log.last("loss"), Some(9.0));
         assert_eq!(log.tail_mean("loss", 2), Some(8.5));
         assert_eq!(log.last("nope"), None);
+    }
+
+    fn stream_path(tag: &str) -> String {
+        let dir = std::env::temp_dir().join("lns_metrics_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.csv")).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn stream_appends_and_flushes_each_row() {
+        let path = stream_path("append");
+        let mut log = MetricsLog::new("t");
+        log.stream_to(&path).unwrap();
+        assert!(log.is_streaming());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "step\n", "header lands immediately");
+        log.record(0, &[("loss", 2.5)]);
+        log.record(1, &[("loss", 1.5)]);
+        // Mid-run (no save_csv yet): every recorded row is on disk.
+        let mid = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(mid, "step,loss\n0,2.5\n1,1.5\n");
+        log.record(2, &[("loss", 1.25)]);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), log.to_csv());
+    }
+
+    #[test]
+    fn stream_rewrites_once_when_a_new_key_appears() {
+        let path = stream_path("rewrite");
+        let mut log = MetricsLog::new("t");
+        log.stream_to(&path).unwrap();
+        log.record(0, &[("loss", 2.0)]);
+        // First eval row introduces a new column: the file is rewritten
+        // with the union header and stays append-consistent after.
+        log.record(0, &[("eval_loss", 3.0)]);
+        log.record(1, &[("loss", 1.0)]);
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, log.to_csv());
+        assert_eq!(got, "step,loss,eval_loss\n0,2,\n0,,3\n1,1,\n");
+    }
+
+    #[test]
+    fn stream_catches_up_rows_recorded_before_streaming() {
+        let path = stream_path("catchup");
+        let mut log = MetricsLog::new("t");
+        log.record(0, &[("loss", 5.0)]);
+        log.stream_to(&path).unwrap();
+        log.record(1, &[("loss", 4.0)]);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), log.to_csv());
     }
 
     #[test]

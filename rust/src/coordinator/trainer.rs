@@ -21,6 +21,7 @@ use crate::lns::OpCounts;
 use crate::model::init_params;
 use crate::optim::{Adam, FusedMadamQu, Madam, Optimizer, QuantizedUpdate, Sgd, UpdateQuantizer};
 use crate::runtime::{artifacts_available, Manifest, Runtime};
+use crate::util::fault;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -224,7 +225,9 @@ impl Trainer {
             steps_done: 0,
             op_counts: OpCounts::default(),
         };
-        if !trainer.cfg.resume_from.is_empty() {
+        if trainer.cfg.resume_from == "auto" {
+            trainer.resume_auto()?;
+        } else if !trainer.cfg.resume_from.is_empty() {
             let path = trainer.cfg.resume_from.clone();
             trainer
                 .restore(Path::new(&path))
@@ -299,9 +302,19 @@ impl Trainer {
         out
     }
 
-    /// Run the configured number of steps with periodic eval + logging,
-    /// then save a checkpoint if the config asks for one.
+    /// Run the configured number of steps with periodic eval + logging
+    /// (streamed incrementally to `log_path` so a killed run keeps its
+    /// step history), periodic generation checkpoints at `save_every`
+    /// cadence, then the end-of-run checkpoint if the config asks for
+    /// one.
     pub fn run(&mut self) -> Result<()> {
+        if self.cfg.save_every > 0 && self.cfg.ckpt_path.is_empty() {
+            bail!("--save-every requires --save-ckpt <path> (the checkpoint base path)");
+        }
+        if !self.cfg.log_path.is_empty() && !self.log.is_streaming() {
+            let path = self.cfg.log_path.clone();
+            self.log.stream_to(&path)?;
+        }
         for _ in 0..self.cfg.steps {
             let (loss, _acc) = self.step()?;
             // Global (resume-aware) index of the step just taken, so
@@ -320,8 +333,18 @@ impl Trainer {
                     );
                 }
             }
+            // Chaos-harness kill point: occurrence index = steps taken
+            // this run, so e.g. `train_crash:6` dies right after the
+            // 7th step — between boundaries, the worst case for resume
+            // (tests/fault.rs proves resumed == uninterrupted anyway).
+            if fault::should_fire("train_crash") {
+                bail!("injected fault: train_crash after step {}", self.steps_done);
+            }
+            if self.cfg.save_every > 0 && done % self.cfg.save_every == 0 {
+                self.checkpoint_boundary()?;
+            }
         }
-        if !self.cfg.log_path.is_empty() {
+        if !self.cfg.log_path.is_empty() && !self.log.is_streaming() {
             self.log.save_csv(&self.cfg.log_path)?;
         }
         if !self.cfg.ckpt_path.is_empty() {
@@ -331,14 +354,61 @@ impl Trainer {
         Ok(())
     }
 
-    /// Serialize the parameter state + run metadata.
-    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+    /// One `--save-every` boundary: write the retained generation
+    /// checkpoint (+ `latest` pointer, keep-K prune), then reset every
+    /// piece of training state the checkpoint does not capture — the
+    /// data streams reseed from the boundary step and the optimizer
+    /// rebuilds from the config. The reset happens in interrupted and
+    /// uninterrupted runs alike, so a run killed *anywhere* and
+    /// auto-resumed from its last boundary replays exactly the batches
+    /// and updates the uninterrupted run computed — the
+    /// crash-equivalence invariant (DESIGN.md §Fault tolerance,
+    /// enforced bit-for-bit by tests/fault.rs). With `save_every = 0`
+    /// (the default) no boundary ever fires and behavior is unchanged.
+    fn checkpoint_boundary(&mut self) -> Result<()> {
+        let base = self.cfg.ckpt_path.clone();
+        checkpoint::save_generation(
+            Path::new(&base),
+            &self.params,
+            self.steps_done,
+            &self.ckpt_meta(),
+            self.cfg.keep_ckpts.max(1),
+        )
+        .with_context(|| format!("periodic checkpoint at step {}", self.steps_done))?;
+        self.reset_boundary_state(self.steps_done as u64);
+        Ok(())
+    }
+
+    /// The boundary state barrier shared by the periodic-checkpoint
+    /// path and checkpoint adoption (both must agree byte-for-byte for
+    /// crash equivalence): reseed the train + eval streams and rebuild
+    /// the optimizer, whose accumulator state (second moments,
+    /// stochastic-rounding draws) is deliberately not serialized.
+    fn reset_boundary_state(&mut self, step: u64) {
+        self.opt = build_optimizer(&self.cfg);
+        self.reseed_streams(step);
+    }
+
+    fn ckpt_meta(&self) -> BTreeMap<String, String> {
         let mut meta = BTreeMap::new();
         meta.insert("model".to_string(), self.cfg.model.clone());
         meta.insert("format".to_string(), self.cfg.format.clone());
         meta.insert("optimizer".to_string(), self.cfg.optimizer.name().to_string());
         meta.insert("backend".to_string(), self.backend.name().to_string());
-        checkpoint::save(path, &self.params, self.steps_done, &meta)
+        meta
+    }
+
+    /// Reseed the train + eval streams at a step boundary (shared by
+    /// restore, auto-resume, and the periodic-checkpoint path — all
+    /// three must agree for crash equivalence to hold).
+    fn reseed_streams(&mut self, step: u64) {
+        self.data = make_data(&self.contract, self.cfg.seed, step);
+        self.eval_data = make_eval_data(&self.contract, self.cfg.seed, step);
+    }
+
+    /// Serialize the parameter state + run metadata.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        checkpoint::save(path, &self.params, self.steps_done, &self.ckpt_meta())
     }
 
     /// Restore parameters + step counter from a checkpoint. Names and
@@ -348,6 +418,34 @@ impl Trainer {
     /// never re-trains on batches the original run already consumed.
     pub fn restore(&mut self, path: &Path) -> Result<()> {
         let (params, step, _meta) = checkpoint::load(path)?;
+        self.adopt(params, step)
+    }
+
+    /// `--resume auto`: restore the newest checkpoint under
+    /// `ckpt_path` whose checksum verifies (one-generation fallback on
+    /// corruption); start fresh when none exists yet. This is what
+    /// makes the same command line re-runnable after a crash.
+    pub fn resume_auto(&mut self) -> Result<()> {
+        if self.cfg.ckpt_path.is_empty() {
+            bail!("--resume auto requires --save-ckpt <path> (the checkpoint base path)");
+        }
+        let base = Path::new(&self.cfg.ckpt_path).to_path_buf();
+        match checkpoint::load_auto(&base)? {
+            Some((params, step, _meta, from)) => {
+                self.adopt(params, step)
+                    .with_context(|| format!("auto-resuming from {}", from.display()))?;
+                println!("auto-resume: restored step {step} from {}", from.display());
+            }
+            None => {
+                println!("auto-resume: no checkpoint under {}; fresh start", base.display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Adopt restored parameter state: validate names/shapes against
+    /// the contract, set the step counter, reseed the data streams.
+    fn adopt(&mut self, params: Vec<Param>, step: usize) -> Result<()> {
         if params.len() != self.params.len() {
             bail!(
                 "checkpoint has {} params, model expects {}",
@@ -368,8 +466,7 @@ impl Trainer {
             cur.data = new.data;
         }
         self.steps_done = step;
-        self.data = make_data(&self.contract, self.cfg.seed, step as u64);
-        self.eval_data = make_eval_data(&self.contract, self.cfg.seed, step as u64);
+        self.reset_boundary_state(step as u64);
         Ok(())
     }
 

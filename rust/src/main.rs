@@ -5,7 +5,9 @@
 //!                   [--gamma-fwd G] [--gamma-bwd G] [--qu-bits B]
 //!                   [--backend auto|native|pjrt]
 //!                   [--exec-tier f32-exact|lns-int]
-//!                   [--save-ckpt path] [--resume path]
+//!                   [--save-ckpt path] [--resume path|auto]
+//!                   [--save-every N]    # periodic checkpoint cadence
+//!                   [--keep-ckpts K]    # generation retention (default 3)
 //!                   [--parallelism P]   # 0 = auto, 1 = sequential
 //!                   [--simd auto|off|force]  # kernel tier; see DESIGN.md
 //!                   [--replicas N]      # data-parallel replicas (0 = off)
@@ -18,6 +20,9 @@
 //!   lns-madam serve --ckpt path [--port P] [--bits B] [--gamma G]
 //!                   [--parallelism P] [--simd auto|off|force]
 //!                   [--max-new-cap N] [--max-requests N]
+//!                   [--max-request-bytes B] [--read-timeout-ms T]
+//!                   [--write-timeout-ms T] [--max-conns C]
+//!                   [--queue-cap Q]
 //!                             # batched char-LM inference over the
 //!                             # compact LNS weight store (127.0.0.1)
 //!   lns-madam serve-bench --addr host:port [--clients C]
@@ -25,6 +30,10 @@
 //!                             # concurrent-client latency harness
 //!
 //! Arg parsing is hand-rolled (no clap offline); flags are --key value.
+//!
+//! Deterministic fault injection (chaos harness) is enabled by the
+//! LNS_MADAM_FAULTS env var for `train` and `serve`; see `util::fault`
+//! and DESIGN.md §Fault tolerance. Off by default, zero cost when off.
 
 use anyhow::{bail, Result};
 use lns_madam::backend::native::builtin_presets;
@@ -91,10 +100,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "log" => cfg.log_path = v.clone(),
             "save-ckpt" => cfg.ckpt_path = v.clone(),
             "resume" => cfg.resume_from = v.clone(),
+            "save-every" => cfg.save_every = v.parse()?,
+            "keep-ckpts" => cfg.keep_ckpts = v.parse()?,
             "eval-every" => cfg.eval_every = v.parse()?,
             other => bail!("unknown flag --{other}"),
         }
     }
+    announce_faults()?;
     println!(
         "training {} [{}] with {} (lr {}), {} steps, Q_U {} bits",
         cfg.model, cfg.format, cfg.optimizer.name(), cfg.lr, cfg.steps, cfg.qu_bits
@@ -163,11 +175,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             "simd" => cfg.simd = v.clone(),
             "max-new-cap" => cfg.max_new_cap = v.parse()?,
             "max-requests" => cfg.max_requests = v.parse()?,
+            "max-request-bytes" => cfg.max_request_bytes = v.parse()?,
+            "read-timeout-ms" => cfg.read_timeout_ms = v.parse()?,
+            "write-timeout-ms" => cfg.write_timeout_ms = v.parse()?,
+            "max-conns" => cfg.max_conns = v.parse()?,
+            "queue-cap" => cfg.queue_cap = v.parse()?,
             other => bail!("unknown flag --{other}"),
         }
     }
+    announce_faults()?;
     simd::set_mode(simd::SimdMode::parse(&cfg.simd)?)?;
     lns_madam::serve::run(&cfg)
+}
+
+/// Arm the chaos harness from LNS_MADAM_FAULTS (if set) and make the
+/// armed plan impossible to miss in the logs — an injected fault must
+/// never masquerade as an organic failure.
+fn announce_faults() -> Result<()> {
+    if lns_madam::util::fault::init_from_env()? {
+        if let Some(summary) = lns_madam::util::fault::active_summary() {
+            println!("fault injection ACTIVE: {summary}");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_serve_bench(args: &[String]) -> Result<()> {

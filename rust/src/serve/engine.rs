@@ -159,6 +159,10 @@ impl ServeEngine {
         if n == 0 {
             return Ok(());
         }
+        // Chaos-harness site: an injected engine failure must flush
+        // errors to the in-flight connections, not hang them (the
+        // engine loop handles the Err — see serve::server).
+        crate::util::fault::fire_err("serve_tick")?;
         let mut ws = std::mem::take(&mut self.ws);
         let mut wbuf = std::mem::take(&mut self.wbuf);
         let result = self.tick_inner(seqs, &mut ws, &mut wbuf);

@@ -8,5 +8,5 @@ pub mod store;
 pub mod wire;
 
 pub use engine::{Sequence, ServeEngine};
-pub use server::{bench_clients, run, serve_listener, BenchStats};
+pub use server::{bench_clients, run, serve_listener, BenchStats, ServeLimits};
 pub use store::LnsWeightStore;

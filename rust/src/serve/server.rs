@@ -9,19 +9,32 @@
 //! requests between ticks (continuous batching) and writes each
 //! response as its sequence finishes. Responses are bit-identical for
 //! any admission interleaving — see `serve::engine`.
+//!
+//! Hardening ([`ServeLimits`], ISSUE 10): request lines are capped at
+//! `max_request_bytes` (oversized → wire error + close, never
+//! unbounded buffering), a partial frame that stalls past
+//! `read_timeout` is answered and closed while idle connections may
+//! sit, the reader→engine queue is bounded with an explicit `busy`
+//! backpressure response when full, concurrent connections are capped
+//! with `busy` at accept, the acceptor backs off on accept errors
+//! (EMFILE must not spin), and shutdown — request budget exhausted,
+//! or ctrl-c — stops admitting, drains in-flight sequences, flushes
+//! their responses, and joins the acceptor + every reader thread.
 
 use crate::coordinator::checkpoint;
 use crate::coordinator::config::ServeConfig;
 use crate::lns::{LnsFormat, Parallelism};
 use crate::serve::engine::{Sequence, ServeEngine};
 use crate::serve::wire;
+use crate::util::fault;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One admitted request on its way to the engine.
 struct Inbound {
@@ -31,11 +44,99 @@ struct Inbound {
     conn: Arc<Mutex<TcpStream>>,
 }
 
+/// How often blocked reads wake up to check the shutdown flag and the
+/// per-frame stall budget. Short enough that shutdown joins promptly.
+const POLL_TICK: Duration = Duration::from_millis(200);
+/// Nonblocking-accept poll cadence.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Accept-error backoff window (EMFILE and friends must not spin).
+const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(10);
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_secs(1);
+
+/// Hard serving limits + lifecycle knobs for [`serve_listener`],
+/// resolved from [`ServeConfig`] by the CLI (tests build one
+/// directly). Zero timeouts mean disabled.
+#[derive(Clone, Debug)]
+pub struct ServeLimits {
+    /// Per-request generated-token clamp.
+    pub max_new_cap: usize,
+    /// Answer this many requests, drain in-flight, exit (0 = forever).
+    pub max_requests: usize,
+    /// Hard cap on one request line's bytes.
+    pub max_request_bytes: usize,
+    /// Mid-frame stall budget (idle connections are exempt).
+    pub read_timeout: Duration,
+    /// Per-write socket timeout on the response path.
+    pub write_timeout: Duration,
+    /// Concurrent-connection ceiling.
+    pub max_conns: usize,
+    /// Reader→engine queue depth; `busy` response when full.
+    pub queue_cap: usize,
+}
+
+impl ServeLimits {
+    pub fn from_config(cfg: &ServeConfig) -> ServeLimits {
+        ServeLimits {
+            max_new_cap: cfg.max_new_cap,
+            max_requests: cfg.max_requests,
+            max_request_bytes: cfg.max_request_bytes,
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms),
+            write_timeout: Duration::from_millis(cfg.write_timeout_ms),
+            max_conns: cfg.max_conns,
+            queue_cap: cfg.queue_cap,
+        }
+    }
+
+    /// Test/smoke shorthand: default limits plus the two knobs every
+    /// harness sets.
+    pub fn smoke(max_new_cap: usize, max_requests: usize) -> ServeLimits {
+        ServeLimits { max_new_cap, max_requests, ..ServeLimits::default() }
+    }
+}
+
+impl Default for ServeLimits {
+    fn default() -> Self {
+        // Mirror the ServeConfig defaults exactly (ckpt_path is not a
+        // limit; any value works here).
+        ServeLimits::from_config(&ServeConfig::default())
+    }
+}
+
+/// Process-wide ctrl-c latch. [`run`] installs a SIGINT handler that
+/// only flips this flag (the async-signal-safe subset); the engine
+/// loop polls it and performs the graceful drain on the main thread.
+/// Tests never install the handler, so the latch stays false there.
+static SIGINT_HIT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_sigint_handler() {
+    use std::sync::Once;
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        extern "C" fn on_sigint(_sig: i32) {
+            SIGINT_HIT.store(true, Ordering::SeqCst);
+        }
+        // The build vendors no libc crate, so bind signal(2) directly;
+        // the handler body is a single atomic store.
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        unsafe {
+            signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+        }
+    });
+}
+
+#[cfg(not(unix))]
+fn install_sigint_handler() {}
+
 /// Run the server until `max_requests` responses have been written
 /// (0 = forever). Binds 127.0.0.1 only — this is a local inference
 /// endpoint, not an internet-facing service.
 pub fn run(cfg: &ServeConfig) -> Result<()> {
     cfg.validate()?;
+    install_sigint_handler();
     let (params, step, _meta) = checkpoint::load(Path::new(&cfg.ckpt_path))
         .with_context(|| format!("loading checkpoint {}", cfg.ckpt_path))?;
     let fmt = LnsFormat::new(cfg.bits, cfg.gamma);
@@ -59,48 +160,237 @@ pub fn run(cfg: &ServeConfig) -> Result<()> {
         fmt.gamma,
         workers
     );
+    println!(
+        "limits: {} conn(s), queue {}, {} request bytes, read timeout {} ms, write timeout {} ms",
+        cfg.max_conns,
+        cfg.queue_cap,
+        cfg.max_request_bytes,
+        cfg.read_timeout_ms,
+        cfg.write_timeout_ms
+    );
     std::io::stdout().flush().ok();
-    serve_listener(listener, &mut engine, cfg.max_new_cap, cfg.max_requests)
+    serve_listener(listener, &mut engine, &ServeLimits::from_config(cfg))
 }
 
 /// Serve on an already-bound listener (tests bind port 0 themselves to
-/// learn the port before starting the loop).
+/// learn the port before starting the loop). Returns only after the
+/// acceptor and every reader thread have been joined: nothing spawned
+/// here outlives the call.
 pub fn serve_listener(
     listener: TcpListener,
     engine: &mut ServeEngine,
-    max_new_cap: usize,
-    max_requests: usize,
+    limits: &ServeLimits,
 ) -> Result<()> {
-    let (tx, rx) = channel::<Inbound>();
-    std::thread::spawn(move || {
-        for conn in listener.incoming() {
-            let Ok(conn) = conn else { continue };
-            let tx = tx.clone();
-            std::thread::spawn(move || reader_loop(conn, tx));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = sync_channel::<Inbound>(limits.queue_cap.max(1));
+    let acceptor = {
+        let shutdown = Arc::clone(&shutdown);
+        let limits = limits.clone();
+        std::thread::spawn(move || acceptor_loop(listener, tx, limits, shutdown))
+    };
+    let result = engine_loop(engine, &rx, limits, &shutdown);
+    shutdown.store(true, Ordering::SeqCst);
+    acceptor.join().ok();
+    result
+}
+
+/// Accept connections until shutdown: enforce the connection ceiling
+/// (excess answered `busy` at accept), back off on accept errors
+/// instead of spinning, and join every reader on the way out.
+fn acceptor_loop(
+    listener: TcpListener,
+    tx: SyncSender<Inbound>,
+    limits: ServeLimits,
+    shutdown: Arc<AtomicBool>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        eprintln!("warn: serve acceptor cannot poll the listener; refusing all connections");
+        return;
+    }
+    let conns = Arc::new(AtomicUsize::new(0));
+    let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut backoff = ACCEPT_BACKOFF_MIN;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((conn, _peer)) => {
+                backoff = ACCEPT_BACKOFF_MIN;
+                // The listener is nonblocking; accepted sockets must
+                // not inherit that (readers poll via read timeouts).
+                if conn.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                if conns.load(Ordering::SeqCst) >= limits.max_conns {
+                    let mut conn = conn;
+                    let mut out = Vec::new();
+                    wire::write_error(&mut out, 0, "busy: connection limit reached");
+                    conn.write_all(&out).ok();
+                    continue; // dropping `conn` closes it
+                }
+                conns.fetch_add(1, Ordering::SeqCst);
+                let tx = tx.clone();
+                let limits = limits.clone();
+                let shutdown = Arc::clone(&shutdown);
+                let conns = Arc::clone(&conns);
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(conn, &tx, &limits, &shutdown);
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                }));
+                // Reap finished readers so the handle list stays
+                // bounded by the connection ceiling, not by history.
+                readers.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                // EMFILE and friends: log once per attempt and back
+                // off exponentially so the acceptor never busy-spins.
+                eprintln!("warn: accept failed: {e}; retrying in {backoff:?}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
+            }
         }
-    });
-    engine_loop(engine, &rx, max_new_cap, max_requests)
+    }
+    // Readers observe the shutdown flag within one poll tick.
+    for h in readers {
+        h.join().ok();
+    }
+}
+
+/// Write a wire error to the connection; false when the write fails
+/// (connection already dead).
+fn answer_error(conn: &Mutex<TcpStream>, out: &mut Vec<u8>, id: u64, msg: &str) -> bool {
+    out.clear();
+    wire::write_error(out, id, msg);
+    match conn.lock() {
+        Ok(mut c) => c.write_all(out).is_ok(),
+        Err(_) => false,
+    }
+}
+
+/// Consume the remainder of an oversized frame through a fixed scratch
+/// (bounded memory) before closing. Closing with unread bytes still
+/// queued would send RST, which can destroy the error response sitting
+/// in the client's receive buffer; draining to the delimiter (or EOF,
+/// or the stall budget) lets the close be a clean FIN instead.
+fn discard_frame<R: Read>(reader: &mut std::io::Take<R>, budget: Duration) {
+    let budget = if budget.is_zero() {
+        Duration::from_secs(5) // drain bound when the read timeout is disabled
+    } else {
+        budget
+    };
+    let t0 = Instant::now();
+    let mut scratch = [0u8; 8192];
+    reader.set_limit(u64::MAX);
+    loop {
+        match reader.read(&mut scratch) {
+            Ok(0) => return, // EOF
+            Ok(n) => {
+                if scratch[..n].contains(&b'\n') {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if t0.elapsed() >= budget {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
 }
 
 /// Per-connection reader: newline-delimited requests in, parse
 /// failures answered immediately, good requests queued to the engine.
-fn reader_loop(stream: TcpStream, tx: Sender<Inbound>) {
+///
+/// Hardened: each frame is capped at `max_request_bytes` (oversized →
+/// error, drain, close), a frame that stalls past `read_timeout` after
+/// its first byte is answered and closed (idle connections are
+/// exempt), a full queue answers `busy`, and the shutdown flag is
+/// checked every poll tick so `serve_listener` can join this thread.
+fn reader_loop(
+    stream: TcpStream,
+    tx: &SyncSender<Inbound>,
+    limits: &ServeLimits,
+    shutdown: &AtomicBool,
+) {
     let Ok(write_half) = stream.try_clone() else {
         return;
     };
+    // Short poll-tick read timeout; the real stall budget is tracked
+    // per frame below so idle connections never expire.
+    if stream.set_read_timeout(Some(POLL_TICK)).is_err() {
+        return;
+    }
+    if !limits.write_timeout.is_zero() {
+        // Timeouts apply to the file description, which try_clone
+        // shares — this also covers the engine's response writes.
+        stream.set_write_timeout(Some(limits.write_timeout)).ok();
+    }
     let conn = Arc::new(Mutex::new(write_half));
-    let mut reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream).take(0);
     let mut line: Vec<u8> = Vec::new();
     let mut scratch = wire::RequestScratch::default();
     let mut out: Vec<u8> = Vec::new();
     loop {
         line.clear();
-        match reader.read_until(b'\n', &mut line) {
-            Ok(0) | Err(_) => return, // connection closed
-            Ok(_) => {}
-        }
+        // cap + 1: a frame of exactly cap content bytes plus its
+        // newline fits; one more byte without a newline is oversized.
+        reader.set_limit(limits.max_request_bytes as u64 + 1);
+        let mut frame_started: Option<Instant> = None;
+        // Accumulate one newline-terminated frame across poll ticks.
+        let at_eof = loop {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match reader.read_until(b'\n', &mut line) {
+                Ok(0) if line.is_empty() => return, // clean EOF between frames
+                Ok(_) if line.last() == Some(&b'\n') => break false,
+                Ok(_) => {
+                    if line.len() > limits.max_request_bytes {
+                        answer_error(
+                            &conn,
+                            &mut out,
+                            0,
+                            &format!(
+                                "request exceeds {} byte cap",
+                                limits.max_request_bytes
+                            ),
+                        );
+                        discard_frame(&mut reader, limits.read_timeout);
+                        return;
+                    }
+                    break true; // EOF half-close with a newline-less final frame
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    // Poll tick; read_until keeps partial bytes in
+                    // `line`, so the frame survives across ticks. Only
+                    // a started frame runs down the stall budget.
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let t0 = *frame_started.get_or_insert_with(Instant::now);
+                    if !limits.read_timeout.is_zero() && t0.elapsed() >= limits.read_timeout {
+                        answer_error(&conn, &mut out, 0, "timed out mid-request");
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        };
         if line.iter().all(|b| b.is_ascii_whitespace()) {
+            if at_eof {
+                return;
+            }
             continue;
+        }
+        // Chaos sites: a reader that stalls after a complete frame,
+        // and a connection torn down before its request is queued.
+        if fault::should_fire("serve_read_stall") {
+            std::thread::sleep(Duration::from_millis(250));
+        }
+        if fault::should_fire("serve_conn_drop") {
+            return;
         }
         match wire::parse_request(&line, &mut scratch) {
             Ok(req) => {
@@ -110,66 +400,121 @@ fn reader_loop(stream: TcpStream, tx: Sender<Inbound>) {
                     max_new: req.max_new,
                     conn: Arc::clone(&conn),
                 };
-                if tx.send(inbound).is_err() {
-                    return; // engine gone: server shutting down
+                match tx.try_send(inbound) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(ib)) => {
+                        // Bounded queue: explicit backpressure rather
+                        // than unbounded buffering. The connection
+                        // stays open so the client can retry.
+                        if !answer_error(&conn, &mut out, ib.id, "busy: request queue full") {
+                            return;
+                        }
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        return; // engine gone: server shutting down
+                    }
                 }
             }
             Err(e) => {
-                out.clear();
-                wire::write_error(&mut out, 0, &format!("bad request: {e}"));
-                if conn.lock().map(|mut c| c.write_all(&out).is_err()).unwrap_or(true) {
+                if !answer_error(&conn, &mut out, 0, &format!("bad request: {e}")) {
                     return;
                 }
             }
+        }
+        if at_eof {
+            return; // half-closed client: response is still deliverable
         }
     }
 }
 
 /// The batching loop: admit pending requests, tick, retire finished
-/// sequences to their connections.
+/// sequences to their connections. On shutdown (request budget spent,
+/// listener shutdown flag, or ctrl-c) it stops admitting, drains the
+/// in-flight sequences, flushes their responses, then returns.
 fn engine_loop(
     engine: &mut ServeEngine,
     rx: &Receiver<Inbound>,
-    max_new_cap: usize,
-    max_requests: usize,
+    limits: &ServeLimits,
+    shutdown: &AtomicBool,
 ) -> Result<()> {
     let mut active: Vec<Sequence> = Vec::new();
     let mut conns: Vec<Arc<Mutex<TcpStream>>> = Vec::new();
     let mut out: Vec<u8> = Vec::new();
     let mut answered = 0usize;
+    let mut draining = false;
     loop {
-        if max_requests > 0 && answered >= max_requests {
+        // Chaos site: a wedged engine loop must surface as `busy` at
+        // the readers (bounded queue), not as unbounded buffering.
+        if fault::should_fire("serve_engine_stall") {
+            std::thread::sleep(Duration::from_millis(500));
+        }
+        let stop = (limits.max_requests > 0 && answered >= limits.max_requests)
+            || shutdown.load(Ordering::SeqCst)
+            || SIGINT_HIT.load(Ordering::SeqCst);
+        if stop && !draining {
+            draining = true;
+            if !active.is_empty() {
+                println!("draining {} in-flight sequence(s)", active.len());
+            }
+        }
+        if draining && active.is_empty() {
             println!("answered {answered} request(s); exiting");
             return Ok(());
         }
-        // Admission: block when idle, drain without blocking while
-        // sequences are in flight (continuous batching).
-        if active.is_empty() {
-            match rx.recv() {
-                Ok(inbound) => admit(engine, inbound, max_new_cap, &mut active, &mut conns, &mut out, &mut answered),
-                Err(_) => return Ok(()), // all senders gone
+        if !draining {
+            // Admission: wait briefly when idle (keeps the stop
+            // conditions responsive), then drain without blocking
+            // while sequences are in flight (continuous batching).
+            if active.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(ib) => {
+                        admit(engine, ib, limits, &mut active, &mut conns, &mut out, &mut answered)
+                    }
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        println!("answered {answered} request(s); exiting");
+                        return Ok(());
+                    }
+                }
             }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(inbound) => admit(engine, inbound, max_new_cap, &mut active, &mut conns, &mut out, &mut answered),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            while let Ok(ib) = rx.try_recv() {
+                admit(engine, ib, limits, &mut active, &mut conns, &mut out, &mut answered);
             }
         }
         if active.is_empty() {
             continue;
         }
         println!("tick batch={}", active.len());
-        engine.tick(&mut active)?;
+        if let Err(e) = engine.tick(&mut active) {
+            // Flush an error to every in-flight connection before
+            // surfacing the failure: never leave clients hanging on a
+            // dead engine.
+            for (seq, conn) in active.iter().zip(&conns) {
+                out.clear();
+                wire::write_error(&mut out, seq.id, "engine failure; request aborted");
+                if let Ok(mut c) = conn.lock() {
+                    c.write_all(&out).ok();
+                }
+            }
+            return Err(e);
+        }
         let mut i = 0;
         while i < active.len() {
             if active[i].done() {
                 let seq = active.swap_remove(i);
                 let conn = conns.swap_remove(i);
-                out.clear();
-                wire::write_response(&mut out, seq.id, &seq.generated);
-                if let Ok(mut c) = conn.lock() {
-                    c.write_all(&out).ok();
+                // Chaos site: a client whose socket dies right before
+                // its response; the loop must carry on serving others.
+                if fault::should_fire("serve_write_fail") {
+                    if let Ok(c) = conn.lock() {
+                        c.shutdown(std::net::Shutdown::Both).ok();
+                    }
+                } else {
+                    out.clear();
+                    wire::write_response(&mut out, seq.id, &seq.generated);
+                    if let Ok(mut c) = conn.lock() {
+                        c.write_all(&out).ok();
+                    }
                 }
                 answered += 1;
             } else {
@@ -184,7 +529,7 @@ fn engine_loop(
 fn admit(
     engine: &ServeEngine,
     inbound: Inbound,
-    max_new_cap: usize,
+    limits: &ServeLimits,
     active: &mut Vec<Sequence>,
     conns: &mut Vec<Arc<Mutex<TcpStream>>>,
     out: &mut Vec<u8>,
@@ -197,7 +542,7 @@ fn admit(
     } else if max_new == 0 {
         wire::write_response(out, id, &[]);
     } else {
-        let seq = Sequence::new(id, &prompt, max_new.min(max_new_cap))
+        let seq = Sequence::new(id, &prompt, max_new.min(limits.max_new_cap))
             .expect("checked prompt is non-empty");
         active.push(seq);
         conns.push(conn);

@@ -1,0 +1,337 @@
+//! Deterministic fault injection in the `CounterRng` discipline.
+//!
+//! A *site* is a named point in the code (`"ckpt_write"`,
+//! `"serve_read_stall"`, ...) that asks [`should_fire`] whether the
+//! injected failure should happen *this* time. Each site keeps a hit
+//! counter, and the fire decision for hit `i` is a pure function of
+//! `(site name, seed, i)` — the same construction as
+//! `CounterRng::uniform_f32_at`, so a chaos run is exactly
+//! reproducible from its spec + seed, independent of thread
+//! interleaving everywhere a site is only reached from one thread
+//! (multi-threaded sites like the DDP replicas still fire a
+//! deterministic *count*, just on a nondeterministic replica).
+//!
+//! The registry is off by default and [`should_fire`] compiles down to
+//! one relaxed atomic load on the disabled path, so production and
+//! benchmark behavior is bit-for-bit unchanged when no spec is
+//! installed. Specs come from `LNS_MADAM_FAULTS` (see
+//! [`init_from_env`]) or [`configure`] in tests:
+//!
+//! ```text
+//! LNS_MADAM_FAULTS="ckpt_write:0.1,serve_read_stall:0.05,replica_panic:3"
+//! ```
+//!
+//! A value containing a `.` is a per-hit probability in `[0, 1]`
+//! (`"1.0"` = every hit); a bare integer is a 0-based occurrence
+//! index (`"3"` = exactly the fourth hit). `LNS_MADAM_FAULT_SEED`
+//! (default 0) salts the probability draws.
+//!
+//! Sites threaded through the codebase (see DESIGN.md §Fault
+//! tolerance): `ckpt_write`, `ckpt_read`, `train_crash`,
+//! `replica_panic`, `serve_read_stall`, `serve_conn_drop`,
+//! `serve_write_fail`, `serve_tick`, `serve_engine_stall`.
+
+use crate::util::rng::CounterRng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// How one site decides whether hit `i` fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Fire each hit independently with this probability, drawn from
+    /// `CounterRng::new(fnv1a(site) ^ seed).uniform_f32_at(hit)`.
+    Prob(f32),
+    /// Fire exactly the N-th hit (0-based) and no other.
+    Nth(u64),
+}
+
+struct Site {
+    spec: FaultSpec,
+    hits: u64,
+    fired: u64,
+}
+
+struct Plan {
+    sites: BTreeMap<String, Site>,
+    seed: u64,
+}
+
+/// Fast-path gate: false means `should_fire` returns without touching
+/// the plan lock. Only `configure`/`clear` flip it.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Plan>> = Mutex::new(None);
+
+fn lock_plan() -> MutexGuard<'static, Option<Plan>> {
+    // A panicking injection site never holds this lock (decisions are
+    // returned before the caller panics), but recover from poison
+    // anyway so one broken chaos test can't wedge the whole suite.
+    PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// FNV-1a over the site name: a stable, dependency-free hash to key
+/// the per-site counter stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Install a fault plan from a `site:value,site:value` spec string.
+/// An empty spec (or one with only empty segments) disables injection,
+/// same as [`clear`].
+pub fn configure(spec: &str, seed: u64) -> Result<()> {
+    let mut sites = BTreeMap::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = part.split_once(':') else {
+            bail!("fault spec '{part}': expected <site>:<prob-or-occurrence>");
+        };
+        let (name, value) = (name.trim(), value.trim());
+        if name.is_empty() {
+            bail!("fault spec '{part}': empty site name");
+        }
+        let parsed = if value.contains('.') {
+            let p: f32 = value
+                .parse()
+                .with_context(|| format!("fault spec '{part}': bad probability '{value}'"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault spec '{part}': probability {p} outside [0, 1]");
+            }
+            FaultSpec::Prob(p)
+        } else {
+            let n: u64 = value.parse().with_context(|| {
+                format!("fault spec '{part}': bad occurrence index '{value}'")
+            })?;
+            FaultSpec::Nth(n)
+        };
+        sites.insert(name.to_string(), Site { spec: parsed, hits: 0, fired: 0 });
+    }
+    let active = !sites.is_empty();
+    *lock_plan() = if active { Some(Plan { sites, seed }) } else { None };
+    ENABLED.store(active, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Remove the fault plan: every site goes back to never firing and
+/// `should_fire` back to its one-atomic-load fast path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *lock_plan() = None;
+}
+
+/// Install a plan from `LNS_MADAM_FAULTS` / `LNS_MADAM_FAULT_SEED`.
+/// Returns whether injection is now active; unset/empty env means no.
+pub fn init_from_env() -> Result<bool> {
+    let Ok(spec) = std::env::var("LNS_MADAM_FAULTS") else {
+        return Ok(false);
+    };
+    if spec.trim().is_empty() {
+        return Ok(false);
+    }
+    let seed = match std::env::var("LNS_MADAM_FAULT_SEED") {
+        Ok(s) => s
+            .trim()
+            .parse::<u64>()
+            .with_context(|| format!("LNS_MADAM_FAULT_SEED '{s}': expected u64"))?,
+        Err(_) => 0,
+    };
+    configure(&spec, seed).context("parsing LNS_MADAM_FAULTS")?;
+    Ok(is_active())
+}
+
+/// Whether any fault plan is installed.
+pub fn is_active() -> bool {
+    ENABLED.load(Ordering::SeqCst)
+}
+
+/// `"site:spec site:spec"` summary of the installed plan, for the
+/// startup banner.
+pub fn active_summary() -> Option<String> {
+    let guard = lock_plan();
+    let plan = guard.as_ref()?;
+    let parts: Vec<String> = plan
+        .sites
+        .iter()
+        .map(|(name, site)| match site.spec {
+            FaultSpec::Prob(p) => format!("{name}:{p}"),
+            FaultSpec::Nth(n) => format!("{name}:#{n}"),
+        })
+        .collect();
+    Some(format!("{} (seed {})", parts.join(" "), plan.seed))
+}
+
+/// Should the injected fault at `site` happen on this hit? Counts the
+/// hit (when the site is configured) and decides deterministically.
+/// The disabled path is a single relaxed atomic load.
+#[inline]
+pub fn should_fire(site: &str) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_fire_slow(site)
+}
+
+#[cold]
+fn should_fire_slow(site: &str) -> bool {
+    let mut guard = lock_plan();
+    let Some(plan) = guard.as_mut() else {
+        return false;
+    };
+    let seed = plan.seed;
+    let Some(s) = plan.sites.get_mut(site) else {
+        return false;
+    };
+    let i = s.hits;
+    s.hits += 1;
+    let fire = match s.spec {
+        FaultSpec::Nth(n) => i == n,
+        FaultSpec::Prob(p) => CounterRng::new(fnv1a(site) ^ seed).uniform_f32_at(i) < p,
+    };
+    if fire {
+        s.fired += 1;
+    }
+    fire
+}
+
+/// `should_fire` packaged as an injected I/O-style error, for sites
+/// inside `Result` plumbing.
+pub fn fire_err(site: &str) -> Result<()> {
+    if should_fire(site) {
+        bail!("injected fault: {site}");
+    }
+    Ok(())
+}
+
+/// How many times `site` has been evaluated under the current plan.
+pub fn hit_count(site: &str) -> u64 {
+    lock_plan().as_ref().and_then(|p| p.sites.get(site)).map_or(0, |s| s.hits)
+}
+
+/// How many of those evaluations fired.
+pub fn fire_count(site: &str) -> u64 {
+    lock_plan().as_ref().and_then(|p| p.sites.get(site)).map_or(0, |s| s.fired)
+}
+
+/// Test-only serialization for the process-global registry: lib tests
+/// run in parallel threads, so every test (in any module) that
+/// configures faults must hold this guard, which also clears the plan
+/// on entry and on drop. Not compiled into the production lib.
+#[cfg(test)]
+pub fn test_guard() -> impl Drop {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    struct Cleared(#[allow(dead_code)] MutexGuard<'static, ()>);
+    impl Drop for Cleared {
+        fn drop(&mut self) {
+            clear();
+        }
+    }
+
+    let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    clear();
+    Cleared(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serial() -> impl Drop {
+        test_guard()
+    }
+
+    #[test]
+    fn disabled_by_default_and_after_clear() {
+        let _g = serial();
+        assert!(!is_active());
+        assert!(!should_fire("anything"));
+        configure("x:1.0", 0).unwrap();
+        assert!(is_active());
+        clear();
+        assert!(!is_active());
+        assert!(!should_fire("x"));
+        assert_eq!(hit_count("x"), 0, "hits are not counted while disabled");
+    }
+
+    #[test]
+    fn nth_spec_fires_exactly_once() {
+        let _g = serial();
+        configure("boom:2", 7).unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| should_fire("boom")).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(hit_count("boom"), 6);
+        assert_eq!(fire_count("boom"), 1);
+    }
+
+    #[test]
+    fn probability_stream_is_deterministic_in_spec_and_seed() {
+        let _g = serial();
+        configure("p:0.3", 42).unwrap();
+        let a: Vec<bool> = (0..64).map(|_| should_fire("p")).collect();
+        configure("p:0.3", 42).unwrap();
+        let b: Vec<bool> = (0..64).map(|_| should_fire("p")).collect();
+        assert_eq!(a, b, "same spec + seed must replay the same decisions");
+        assert!(a.iter().any(|f| *f), "p=0.3 over 64 hits should fire at least once");
+        assert!(a.iter().any(|f| !*f), "...and not on every hit");
+
+        configure("p:0.3", 43).unwrap();
+        let c: Vec<bool> = (0..64).map(|_| should_fire("p")).collect();
+        assert_ne!(a, c, "a different seed gives a different decision stream");
+    }
+
+    #[test]
+    fn sites_count_independently_and_unknown_sites_never_fire() {
+        let _g = serial();
+        configure("a:0, b:1.0", 0).unwrap();
+        assert!(should_fire("a"), "a fires on hit 0");
+        assert!(!should_fire("a"), "and never again");
+        assert!(should_fire("b") && should_fire("b"), "b fires every hit");
+        assert!(!should_fire("unlisted"));
+        assert_eq!(hit_count("a"), 2);
+        assert_eq!(hit_count("b"), 2);
+        assert_eq!(hit_count("unlisted"), 0);
+    }
+
+    #[test]
+    fn prob_one_fires_every_hit_and_prob_zero_never() {
+        let _g = serial();
+        configure("always:1.0,never:0.0", 5).unwrap();
+        for _ in 0..32 {
+            assert!(should_fire("always"));
+            assert!(!should_fire("never"));
+        }
+        assert_eq!(fire_count("always"), 32);
+        assert_eq!(fire_count("never"), 0);
+    }
+
+    #[test]
+    fn fire_err_carries_the_site_name() {
+        let _g = serial();
+        configure("io_site:0", 0).unwrap();
+        let err = fire_err("io_site").unwrap_err();
+        assert!(err.to_string().contains("io_site"), "unexpected: {err}");
+        assert!(fire_err("io_site").is_ok(), "only the first hit fires");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let _g = serial();
+        for bad in ["noseparator", "x:", "x:1.5", "x:-0.5", ":3", "x:abc", "x:1e3"] {
+            assert!(configure(bad, 0).is_err(), "spec {bad:?} must be rejected");
+            assert!(!is_active(), "a rejected spec must not half-install");
+        }
+        // Empty / whitespace specs are a no-op disable, not an error.
+        configure("", 0).unwrap();
+        assert!(!is_active());
+        configure(" , ", 0).unwrap();
+        assert!(!is_active());
+    }
+}

@@ -10,6 +10,7 @@
 pub mod bench;
 pub mod config;
 pub mod fastmath;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod proptest;

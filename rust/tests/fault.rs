@@ -1,0 +1,519 @@
+//! Chaos suite (ISSUE 10): deterministic fault injection against the
+//! real training and serving stacks, enforcing the headline invariant —
+//! a run killed at an injected point and auto-resumed is bit-identical
+//! (losses, params, checkpoint bytes) to the uninterrupted run — plus
+//! crash containment and serving hardening under hostile clients.
+//!
+//! The fault registry is process-global, so EVERY test here serializes
+//! on [`faults_lock`], which also clears the plan on entry and on drop
+//! (a panicking test must not leave faults armed for the next one).
+//! Production-site chaos tests live only in this file for exactly that
+//! reason (see util::fault).
+
+use lns_madam::backend::BackendKind;
+use lns_madam::coordinator::{checkpoint, OptKind, TrainConfig, Trainer};
+use lns_madam::lns::LnsFormat;
+use lns_madam::serve::{bench_clients, serve_listener, ServeEngine, ServeLimits};
+use lns_madam::util::fault;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Serialize the suite and guarantee a clean registry on both sides of
+/// every test, even one that panics mid-flight.
+struct FaultGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn faults_lock() -> FaultGuard {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::clear();
+    FaultGuard(g)
+}
+
+/// Fresh scratch dir per test run.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lns_fault_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The chaos training config: 12 steps, a checkpoint boundary every 4,
+/// eval every 5 (so eval rows cross the kill point), streaming CSV.
+fn chaos_cfg(model: &str, replicas: usize, dir: &Path) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 12,
+        eval_every: 5,
+        save_every: 4,
+        keep_ckpts: 3,
+        replicas,
+        backend: BackendKind::Native,
+        ckpt_path: dir.join("run.ckpt").to_str().unwrap().into(),
+        log_path: dir.join("metrics.csv").to_str().unwrap().into(),
+        ..TrainConfig::default()
+    }
+}
+
+fn loss_bits(t: &Trainer, key: &str) -> BTreeMap<usize, u64> {
+    t.log
+        .rows
+        .iter()
+        .filter_map(|r| r.values.get(key).map(|v| (r.step, v.to_bits())))
+        .collect()
+}
+
+fn param_bits(t: &Trainer) -> Vec<Vec<u32>> {
+    t.params.iter().map(|p| p.data.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// Every CSV line must have the header's column count — the incremental
+/// stream's "parseable prefix after a kill" contract.
+fn assert_parseable_csv(path: &Path, min_rows: usize) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().expect("csv has a header");
+    assert!(header.starts_with("step"), "unexpected header {header:?}");
+    let cols = header.split(',').count();
+    let mut rows = 0;
+    for l in lines {
+        assert_eq!(l.split(',').count(), cols, "ragged csv line {l:?}");
+        rows += 1;
+    }
+    assert!(rows >= min_rows, "crashed csv kept {rows} rows, wanted >= {min_rows}");
+}
+
+/// The headline invariant, end to end: train a reference run to
+/// completion; train an identical run killed by an injected crash
+/// between checkpoint boundaries; auto-resume it from the newest
+/// generation; assert per-step losses, eval losses, final params, and
+/// the checkpoint files themselves are bit-identical to the reference.
+fn kill_and_resume_matches_uninterrupted(model: &str, replicas: usize, tag: &str) {
+    let _g = faults_lock();
+
+    // Uninterrupted reference (faults disabled).
+    let ref_dir = scratch_dir(&format!("{tag}_ref"));
+    let mut reference = Trainer::new(chaos_cfg(model, replicas, &ref_dir)).unwrap();
+    reference.run().unwrap();
+    assert_eq!(reference.steps_done, 12);
+
+    // Killed run: the injected crash lands after the 7th step — mid
+    // checkpoint interval, the worst case for resume.
+    let crash_dir = scratch_dir(&format!("{tag}_crash"));
+    fault::configure("train_crash:6", 0).unwrap();
+    let mut crashed = Trainer::new(chaos_cfg(model, replicas, &crash_dir)).unwrap();
+    let err = crashed.run().unwrap_err();
+    assert!(err.to_string().contains("train_crash"), "unexpected: {err}");
+    assert_eq!(crashed.steps_done, 7);
+    fault::clear();
+
+    // The streamed CSV holds a parseable prefix of the killed run
+    // (checked before the resumed run truncates and rewrites it).
+    assert_parseable_csv(&crash_dir.join("metrics.csv"), 7);
+
+    // Auto-resume picks the newest verified generation (step 4) and
+    // finishes the remaining steps under the same command line.
+    let mut cfg = chaos_cfg(model, replicas, &crash_dir);
+    cfg.resume_from = "auto".into();
+    cfg.steps = 12 - 4;
+    let mut resumed = Trainer::new(cfg).unwrap();
+    assert_eq!(resumed.steps_done, 4, "auto-resume should restore the step-4 boundary");
+    resumed.run().unwrap();
+    assert_eq!(resumed.steps_done, 12);
+
+    // Losses: every step the resumed run took must match the reference
+    // bit-for-bit (eval rows included).
+    for key in ["loss", "eval_loss"] {
+        let want = loss_bits(&reference, key);
+        let got = loss_bits(&resumed, key);
+        assert!(!got.is_empty(), "resumed run recorded no {key} rows");
+        for (step, bits) in &got {
+            assert_eq!(
+                Some(bits),
+                want.get(step),
+                "{key} diverged at step {step} ({model}, replicas {replicas})"
+            );
+        }
+    }
+
+    // Parameters: bit-identical final state.
+    assert_eq!(
+        param_bits(&reference),
+        param_bits(&resumed),
+        "final params diverged ({model}, replicas {replicas})"
+    );
+
+    // Checkpoint artifacts: the end-of-run file, the retained
+    // generations, and the latest pointer are byte-identical.
+    let artifacts =
+        ["run.ckpt", "run.ckpt.step4", "run.ckpt.step8", "run.ckpt.step12", "run.ckpt.latest"];
+    for name in artifacts {
+        let a = std::fs::read(ref_dir.join(name)).unwrap();
+        let b = std::fs::read(crash_dir.join(name)).unwrap();
+        assert_eq!(a, b, "{name} differs between reference and resumed runs");
+    }
+}
+
+#[test]
+fn mlp_kill_and_resume_is_bit_identical_r1() {
+    kill_and_resume_matches_uninterrupted("mlp_tiny", 1, "mlp_r1");
+}
+
+#[test]
+fn mlp_kill_and_resume_is_bit_identical_r4() {
+    kill_and_resume_matches_uninterrupted("mlp_tiny", 4, "mlp_r4");
+}
+
+#[test]
+fn charlm_kill_and_resume_is_bit_identical_r1() {
+    kill_and_resume_matches_uninterrupted("charlm_tiny", 1, "charlm_r1");
+}
+
+#[test]
+fn charlm_kill_and_resume_is_bit_identical_r4() {
+    kill_and_resume_matches_uninterrupted("charlm_tiny", 4, "charlm_r4");
+}
+
+/// A crashed run whose newest generation was corrupted on disk resumes
+/// from the one before it (checksum verification + one-generation
+/// fallback), instead of dying or silently training on garbage.
+#[test]
+fn auto_resume_falls_back_one_generation_when_newest_is_corrupt() {
+    let _g = faults_lock();
+    let dir = scratch_dir("corrupt_gen");
+    fault::configure("train_crash:9", 0).unwrap();
+    let mut t = Trainer::new(chaos_cfg("mlp_tiny", 0, &dir)).unwrap();
+    t.run().unwrap_err();
+    assert_eq!(t.steps_done, 10, "crash should land after step 10 (boundaries 4 and 8 done)");
+    fault::clear();
+
+    let base = dir.join("run.ckpt");
+    let gen8 = checkpoint::generation_path(&base, 8);
+    let mut bytes = std::fs::read(&gen8).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&gen8, &bytes).unwrap();
+
+    let mut cfg = chaos_cfg("mlp_tiny", 0, &dir);
+    cfg.resume_from = "auto".into();
+    let resumed = Trainer::new(cfg).unwrap();
+    assert_eq!(resumed.steps_done, 4, "should fall back to the step-4 generation");
+}
+
+/// An injected crash *during* a periodic checkpoint write leaves only
+/// a half-written temp file behind; the previous generation and the
+/// latest pointer stay intact and the run resumes from them.
+#[test]
+fn checkpoint_write_crash_resumes_from_previous_generation() {
+    let _g = faults_lock();
+    let dir = scratch_dir("ckpt_write");
+    // Boundary saves are ckpt_write hits 0 (step 4) and 1 (step 8);
+    // firing hit 1 kills the run mid-write at the step-8 boundary.
+    fault::configure("ckpt_write:1", 0).unwrap();
+    let mut t = Trainer::new(chaos_cfg("mlp_tiny", 0, &dir)).unwrap();
+    let err = t.run().unwrap_err();
+    assert!(err.to_string().contains("ckpt_write"), "unexpected: {err}");
+    fault::clear();
+
+    let base = dir.join("run.ckpt");
+    assert!(!checkpoint::generation_path(&base, 8).exists(), "step-8 gen must not exist");
+    let mut cfg = chaos_cfg("mlp_tiny", 0, &dir);
+    cfg.resume_from = "auto".into();
+    let resumed = Trainer::new(cfg).unwrap();
+    assert_eq!(resumed.steps_done, 4, "should resume from the intact step-4 generation");
+}
+
+/// An injected read failure on the newest checkpoint falls through to
+/// the next generation (the fallback path handles I/O errors the same
+/// way it handles corruption).
+#[test]
+fn injected_checkpoint_read_falls_back_to_an_older_generation() {
+    let _g = faults_lock();
+    let dir = scratch_dir("ckpt_read");
+    fault::configure("train_crash:9", 0).unwrap();
+    Trainer::new(chaos_cfg("mlp_tiny", 0, &dir)).unwrap().run().unwrap_err();
+
+    // ckpt_read hit 0 = the pointer target (step 8): injected failure;
+    // the step-4 generation loads on hit 1.
+    fault::configure("ckpt_read:0", 0).unwrap();
+    let mut cfg = chaos_cfg("mlp_tiny", 0, &dir);
+    cfg.resume_from = "auto".into();
+    let resumed = Trainer::new(cfg).unwrap();
+    assert_eq!(resumed.steps_done, 4);
+}
+
+/// A panicking DDP replica surfaces as a clean error on the training
+/// thread — not a process abort — and the harness stays usable.
+#[test]
+fn replica_panic_is_contained_as_an_error() {
+    let _g = faults_lock();
+    fault::configure("replica_panic:0", 0).unwrap();
+    let cfg = TrainConfig {
+        model: "mlp_tiny".into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 2,
+        eval_every: 0,
+        replicas: 4,
+        backend: BackendKind::Native,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let err = t.step().unwrap_err();
+    assert!(
+        err.to_string().contains("panicked"),
+        "wanted contained panic, got: {err}"
+    );
+    fault::clear();
+
+    // The same process trains fine afterwards.
+    let mut t2 = Trainer::new(cfg).unwrap();
+    t2.run().unwrap();
+    assert_eq!(t2.steps_done, 2);
+}
+
+/// Train a small char-LM and hand back its params for the serve tests.
+fn serve_params() -> Vec<lns_madam::coordinator::Param> {
+    let cfg = TrainConfig {
+        model: "charlm_tiny".into(),
+        format: "lns".into(),
+        optimizer: OptKind::Madam,
+        lr: OptKind::Madam.default_lr(),
+        steps: 10,
+        eval_every: 0,
+        backend: BackendKind::Native,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    t.params
+}
+
+fn spawn_server(
+    params: &[lns_madam::coordinator::Param],
+    limits: ServeLimits,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let mut engine = ServeEngine::from_params(params, LnsFormat::PAPER8, 1).unwrap();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    let handle = std::thread::spawn(move || serve_listener(listener, &mut engine, &limits));
+    (addr, handle)
+}
+
+fn send_line(stream: &mut TcpStream, line: &[u8]) {
+    stream.write_all(line).unwrap();
+}
+
+/// Under injected read stalls on every frame, the server still answers
+/// every request, keeps responses bit-identical across clients, drains
+/// in-flight work at the request budget, and joins all its threads.
+#[test]
+fn serve_drains_gracefully_under_injected_read_stalls() {
+    let _g = faults_lock();
+    let params = serve_params();
+    fault::configure("serve_read_stall:1.0", 0).unwrap();
+    let (addr, server) = spawn_server(&params, ServeLimits::smoke(8, 6));
+    let stats = bench_clients(&addr, 3, 2, &[1, 2, 3], 4).unwrap();
+    assert!(
+        fault::hit_count("serve_read_stall") >= 6,
+        "every frame should have passed the stall site"
+    );
+    fault::clear();
+    server.join().unwrap().unwrap();
+    assert_eq!(stats.requests, 6);
+    assert!(stats.consistent, "stalled readers must not perturb responses");
+}
+
+/// Hostile connections — an oversized frame, malformed frames, and a
+/// half-frame staller — must not perturb a well-formed client: its
+/// responses are byte-identical to a clean run over the same weights.
+#[test]
+fn hostile_clients_do_not_perturb_well_formed_responses() {
+    let _g = faults_lock();
+    let params = serve_params();
+
+    let well_formed = |addr: &str| -> Vec<String> {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut lines = Vec::new();
+        for id in [41u64, 42] {
+            let mut req = Vec::new();
+            lns_madam::serve::wire::write_request(&mut req, id, &[1, 2, 3], 3);
+            send_line(&mut s, &req);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            lines.push(line);
+        }
+        lines
+    };
+
+    // Clean reference pass.
+    let (addr, server) = spawn_server(&params, ServeLimits::smoke(8, 2));
+    let want = well_formed(&addr);
+    server.join().unwrap().unwrap();
+    assert!(want.iter().all(|l| l.contains("tokens")), "reference run failed: {want:?}");
+
+    // Hostile pass: stalls injected, abusers connected.
+    fault::configure("serve_read_stall:0.5", 7).unwrap();
+    let mut limits = ServeLimits::smoke(8, 2);
+    limits.max_request_bytes = 4096;
+    let (addr, server) = spawn_server(&params, limits);
+
+    // Oversized frame: error + close.
+    let mut big = TcpStream::connect(&addr).unwrap();
+    let mut payload = vec![b'1'; 64 * 1024];
+    payload.push(b'\n');
+    big.write_all(&payload).unwrap();
+    let mut line = String::new();
+    BufReader::new(big.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("cap"), "wanted cap error, got {line:?}");
+
+    // Malformed frames: each answered with an error, connection lives.
+    let mut bad = TcpStream::connect(&addr).unwrap();
+    let mut badr = BufReader::new(bad.try_clone().unwrap());
+    for frame in [&b"not json at all\n"[..], &b"{\"id\":1,\"prompt\":[1,]}\n"[..]] {
+        send_line(&mut bad, frame);
+        let mut l = String::new();
+        badr.read_line(&mut l).unwrap();
+        assert!(l.contains("error"), "wanted wire error, got {l:?}");
+    }
+
+    // Half-frame staller: sends a prefix and then goes quiet.
+    let mut staller = TcpStream::connect(&addr).unwrap();
+    staller.write_all(b"{\"id\":9,\"prompt\":[1").unwrap();
+
+    // The well-formed client sees byte-identical responses anyway.
+    let got = well_formed(&addr);
+    assert_eq!(got, want, "hostile traffic perturbed well-formed responses");
+    fault::clear();
+    drop(staller);
+    server.join().unwrap().unwrap();
+}
+
+/// With the engine loop wedged (injected stall) and a queue of depth 1,
+/// a flood of requests gets explicit `busy` backpressure instead of
+/// unbounded buffering — and the one admitted request is still served.
+#[test]
+fn full_queue_answers_busy_instead_of_buffering() {
+    let _g = faults_lock();
+    let params = serve_params();
+    fault::configure("serve_engine_stall:1.0", 0).unwrap();
+    let mut limits = ServeLimits::smoke(8, 1);
+    limits.queue_cap = 1;
+    let (addr, server) = spawn_server(&params, limits);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let mut flood = Vec::new();
+    for id in 0..10u64 {
+        lns_madam::serve::wire::write_request(&mut flood, id, &[1], 2);
+    }
+    s.write_all(&flood).unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let (mut busy, mut tokens) = (0, 0);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break;
+        }
+        if line.contains("busy: request queue full") {
+            busy += 1;
+        }
+        if line.contains("tokens") {
+            tokens += 1;
+        }
+    }
+    fault::clear();
+    server.join().unwrap().unwrap();
+    assert!(busy >= 1, "flood never saw backpressure");
+    assert_eq!(tokens, 1, "exactly the admitted request should be answered");
+}
+
+/// Connections beyond the ceiling are refused with `busy` at accept;
+/// the connection inside the ceiling is unaffected.
+#[test]
+fn connection_ceiling_refuses_excess_connections() {
+    let _g = faults_lock();
+    let params = serve_params();
+    let mut limits = ServeLimits::smoke(8, 1);
+    limits.max_conns = 1;
+    let (addr, server) = spawn_server(&params, limits);
+
+    let mut first = TcpStream::connect(&addr).unwrap();
+    // Give the acceptor time to register the first reader.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let second = TcpStream::connect(&addr).unwrap();
+    let mut line = String::new();
+    let mut r2 = BufReader::new(second);
+    r2.read_line(&mut line).unwrap();
+    assert!(line.contains("connection limit"), "wanted ceiling busy, got {line:?}");
+    line.clear();
+    assert_eq!(r2.read_line(&mut line).unwrap(), 0, "excess connection should be closed");
+
+    // The admitted connection still gets served.
+    let mut req = Vec::new();
+    lns_madam::serve::wire::write_request(&mut req, 5, &[1], 2);
+    send_line(&mut first, &req);
+    line.clear();
+    BufReader::new(first.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("tokens"), "wanted tokens, got {line:?}");
+    server.join().unwrap().unwrap();
+}
+
+/// A final frame with no trailing newline (client half-closes after
+/// writing) is still parsed, served, and answered.
+#[test]
+fn missing_newline_at_eof_is_still_served() {
+    let _g = faults_lock();
+    let params = serve_params();
+    let (addr, server) = spawn_server(&params, ServeLimits::smoke(8, 1));
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"{\"id\":9,\"prompt\":[1],\"max_new\":2}").unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(
+        line.contains("\"id\":9") && line.contains("tokens"),
+        "wanted tokens for the newline-less frame, got {line:?}"
+    );
+    server.join().unwrap().unwrap();
+}
+
+/// An injected engine failure flushes an error to every in-flight
+/// connection before the server surfaces it — clients are never left
+/// hanging on a dead engine.
+#[test]
+fn engine_failure_flushes_errors_to_in_flight_clients() {
+    let _g = faults_lock();
+    let params = serve_params();
+    fault::configure("serve_tick:0", 0).unwrap();
+    let (addr, server) = spawn_server(&params, ServeLimits::smoke(8, 4));
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let mut req = Vec::new();
+    lns_madam::serve::wire::write_request(&mut req, 3, &[1, 2], 4);
+    send_line(&mut s, &req);
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    fault::clear();
+    assert!(
+        line.contains("\"id\":3") && line.contains("aborted"),
+        "wanted flushed engine error, got {line:?}"
+    );
+    let err = server.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("serve_tick"), "unexpected: {err}");
+}

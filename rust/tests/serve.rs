@@ -8,7 +8,9 @@
 use lns_madam::backend::BackendKind;
 use lns_madam::coordinator::{checkpoint, OptKind, Param, TrainConfig, Trainer};
 use lns_madam::lns::LnsFormat;
-use lns_madam::serve::{bench_clients, serve_listener, LnsWeightStore, Sequence, ServeEngine};
+use lns_madam::serve::{
+    bench_clients, serve_listener, LnsWeightStore, Sequence, ServeEngine, ServeLimits,
+};
 use std::path::PathBuf;
 
 /// Train charlm_tiny for a few steps and return its checkpoint params.
@@ -104,7 +106,8 @@ fn tcp_serving_answers_concurrent_clients_consistently() {
     let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
     // 3 clients x 2 requests each = 6 responses, then the loop exits.
-    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, 64, 6));
+    let limits = ServeLimits::smoke(64, 6);
+    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, &limits));
     let stats = bench_clients(&addr, 3, 2, &[1, 2, 3], 5).unwrap();
     server.join().unwrap().unwrap();
     assert_eq!(stats.requests, 6);
@@ -123,7 +126,8 @@ fn tcp_serving_rejects_bad_requests_without_dying() {
     // Malformed-JSON errors are answered by the reader thread and do
     // not count toward max_requests; engine-level rejections and real
     // responses do. Budget: out-of-vocab rejection + good request = 2.
-    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, 64, 2));
+    let limits = ServeLimits::smoke(64, 2);
+    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, &limits));
 
     let mut stream = std::net::TcpStream::connect(&addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -152,6 +156,48 @@ fn tcp_serving_rejects_bad_requests_without_dying() {
         "wanted tokens, got {line:?}"
     );
     drop(stream);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn tcp_serving_caps_oversized_requests_without_buffering_them() {
+    use std::io::{BufRead, BufReader, Write};
+    let (params, _) = trained_params("oversize");
+    let mut engine = ServeEngine::from_params(&params, LnsFormat::PAPER8, 1).unwrap();
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+    let mut limits = ServeLimits::smoke(64, 1);
+    limits.max_request_bytes = 4096;
+    let server = std::thread::spawn(move || serve_listener(listener, &mut engine, &limits));
+
+    // A multi-megabyte line: the reader must answer and close at the
+    // 4 KiB cap — never buffer the whole thing (the old reader's
+    // unbounded read_until would have).
+    let mut abuser = std::net::TcpStream::connect(&addr).unwrap();
+    let mut payload = vec![b'7'; 3 * 1024 * 1024];
+    payload.push(b'\n');
+    abuser.write_all(&payload).unwrap();
+    let mut reader = BufReader::new(abuser.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(
+        reply.contains("error") && reply.contains("cap"),
+        "wanted byte-cap error, got {reply:?}"
+    );
+    // The connection is then closed cleanly (EOF, not a reset that
+    // could have destroyed the error response above).
+    reply.clear();
+    assert_eq!(reader.read_line(&mut reply).unwrap(), 0, "connection should be closed");
+
+    // A fresh well-formed client is still served.
+    let mut good = std::net::TcpStream::connect(&addr).unwrap();
+    good.write_all(b"{\"id\":5,\"prompt\":[1],\"max_new\":2}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(good.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(
+        line.contains("\"id\":5") && line.contains("tokens"),
+        "wanted tokens, got {line:?}"
+    );
     server.join().unwrap().unwrap();
 }
 
